@@ -1,0 +1,119 @@
+//! Mesh-refinement workload (the paper's motivating application class,
+//! §VI.C: "computer geometry and triangular mesh refinement" — Hatipoglu
+//! & Özturan-style longest-edge bisection).
+//!
+//! Each refinement sweep visits every triangle and, based on a local
+//! error estimate, emits 1, 2 or 4 children — the output size is unknown
+//! until the kernel runs. A static array must provision the 4× worst
+//! case every sweep; GGArray grows to the actual size.
+//!
+//! ```sh
+//! cargo run --release --example mesh_refinement
+//! ```
+
+use ggarray::ggarray::array::{GgArray, GgConfig};
+use ggarray::insertion::InsertionKind;
+use ggarray::sim::spec::DeviceSpec;
+use ggarray::util::rng::Rng;
+use ggarray::util::tables::fmt_bytes;
+
+/// A triangle: packed vertex ids + a refinement level (toy encoding — the
+/// point is the dynamic fan-out, not the geometry).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+struct Tri {
+    id: u32,
+    level: u8,
+}
+
+// GGArray stores Copy+Default values; pack Tri into u64.
+fn pack(t: Tri) -> u64 {
+    ((t.level as u64) << 32) | t.id as u64
+}
+
+fn unpack(x: u64) -> Tri {
+    Tri { id: (x & 0xFFFF_FFFF) as u32, level: (x >> 32) as u8 }
+}
+
+/// Refinement rule: how many children a triangle emits this sweep.
+/// Mimics an error estimator: refine probability decays with level.
+fn fanout(t: Tri, rng: &mut Rng) -> usize {
+    let p = 0.45 / (1.0 + t.level as f64);
+    if rng.bernoulli(p) {
+        if rng.bernoulli(0.5) {
+            4 // full bisection of all three edges
+        } else {
+            2 // longest-edge bisection
+        }
+    } else {
+        1 // unchanged
+    }
+}
+
+fn main() {
+    let spec = DeviceSpec::a100();
+    let sweeps = 6;
+    let initial = 20_000u32;
+    let mut rng = Rng::new(2026);
+
+    // Current generation lives in one GGArray; each sweep pushes the next
+    // generation into a fresh one (classic double-buffered refinement).
+    let cfg = GgConfig::new(64).with_first_bucket(256);
+    let mut cur: GgArray<u64> = GgArray::new(cfg.clone(), spec.clone());
+    cur.insert_bulk(
+        &(0..initial).map(|id| pack(Tri { id, level: 0 })).collect::<Vec<_>>(),
+        InsertionKind::WarpScan,
+    )
+    .unwrap();
+
+    println!("== mesh refinement: {sweeps} sweeps from {initial} triangles ==");
+    println!(
+        "{:<6} {:>10} {:>10} {:>12} {:>12} {:>12} {:>9}",
+        "sweep", "tris", "children", "gg_alloc", "static_worst", "saving", "sim_ms"
+    );
+
+    let mut worst_case_static = initial as u64; // static must hold 4^k growth
+    let mut total_sim_ms = 0.0;
+    for sweep in 1..=sweeps {
+        let tris = cur.to_vec();
+        // The "kernel": every thread (triangle) computes its fan-out and
+        // pushes children — slot assignment is the scan-based insertion.
+        let mut children: Vec<u64> = Vec::new();
+        for &t in &tris {
+            let tri = unpack(t);
+            for c in 0..fanout(tri, &mut rng) {
+                children.push(pack(Tri { id: tri.id.wrapping_mul(4).wrapping_add(c as u32), level: tri.level + 1 }));
+            }
+        }
+        let mut next: GgArray<u64> = GgArray::new(cfg.clone(), spec.clone());
+        let rep = next.insert_bulk(&children, InsertionKind::WarpScan).unwrap();
+        let rw = next.read_write_block(30.0, |_| {}); // error-estimate pass
+        total_sim_ms += rep.total_ms() + rw.total_ms();
+
+        // Memory comparison: static array must be provisioned for 4× per
+        // sweep (the worst case), compounding.
+        worst_case_static *= 4;
+        let gg_alloc = next.allocated_bytes();
+        let static_alloc = worst_case_static * 8;
+        println!(
+            "{:<6} {:>10} {:>10} {:>12} {:>12} {:>11.1}x {:>9.3}",
+            sweep,
+            tris.len(),
+            children.len(),
+            fmt_bytes(gg_alloc),
+            fmt_bytes(static_alloc),
+            static_alloc as f64 / gg_alloc as f64,
+            rep.total_ms() + rw.total_ms(),
+        );
+        // Sanity: the structure really holds the children.
+        assert_eq!(next.len(), children.len());
+        assert!(next.overhead_ratio() < 2.5, "overhead {:.2}", next.overhead_ratio());
+        cur = next;
+    }
+    println!("total simulated GPU time: {total_sim_ms:.2} ms");
+    println!(
+        "final mesh: {} triangles; GGArray stayed ≤2.5x live data while static worst-case \
+         provisioning compounds 4x per sweep",
+        cur.len()
+    );
+    println!("mesh_refinement OK");
+}

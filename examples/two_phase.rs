@@ -1,0 +1,115 @@
+//! **End-to-end driver** (paper §VI.D / Fig 6): the two-phase application
+//! through the full stack — Rust coordinator → routed/batched inserts →
+//! AOT-compiled Pallas work kernel via PJRT → flatten — on a real
+//! workload, reporting wall-clock latency/throughput, PJRT execution
+//! counts, simulated GPU time, and the Fig 6 speedup shape.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example two_phase
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::time::{Duration, Instant};
+
+use ggarray::coordinator::batcher::BatchConfig;
+use ggarray::coordinator::request::{Request, Response};
+use ggarray::coordinator::service::{Coordinator, CoordinatorConfig};
+use ggarray::experiments::fig6;
+use ggarray::runtime::ArtifactManifest;
+use ggarray::sim::spec::DeviceSpec;
+
+const PHASES: u32 = 5;
+const START: usize = 8_192; // grows ×2 per phase → ~262k final
+const WORK_CALLS: u32 = 3;
+
+fn main() {
+    let artifacts = ArtifactManifest::available();
+    println!("== two-phase end-to-end driver ==");
+    println!("artifacts available: {artifacts} (PJRT work kernel {})", if artifacts { "ON" } else { "OFF — host fallback" });
+
+    let cfg = CoordinatorConfig {
+        blocks: 128,
+        first_bucket_size: 64,
+        use_artifacts: artifacts,
+        batch: BatchConfig { max_values: 1 << 14, max_delay: Duration::from_millis(1) },
+        ..CoordinatorConfig::default()
+    };
+    let work_iters = cfg.work_iters;
+    let c = Coordinator::start(cfg);
+
+    let t0 = Instant::now();
+    let mut size = 0usize;
+    let mut inserts = START;
+    let mut total_inserted = 0usize;
+    for phase in 1..=PHASES {
+        // --- insert phase: many small client requests, batched ---
+        let t_phase = Instant::now();
+        let mut sent = 0;
+        while sent < inserts {
+            let n = 1024.min(inserts - sent);
+            let values: Vec<f32> = (0..n).map(|i| (total_inserted + sent + i) as f32).collect();
+            c.call(Request::Insert { values });
+            sent += n;
+        }
+        size += inserts;
+        total_inserted += inserts;
+        let t_insert = t_phase.elapsed();
+
+        // --- work phase: the +1×30 kernel, WORK_CALLS times ---
+        let t_work0 = Instant::now();
+        let (sim_us, pjrt) = match c.call(Request::Work { calls: WORK_CALLS }) {
+            Response::Worked { sim_us, pjrt_executions, .. } => (sim_us, pjrt_executions),
+            other => panic!("work failed: {other:?}"),
+        };
+        let t_work = t_work0.elapsed();
+
+        // --- flatten for the next static-speed phase ---
+        let (flat_len, flat_checksum) = match c.call(Request::Flatten) {
+            Response::Flattened { len, checksum, .. } => (len, checksum),
+            other => panic!("flatten failed: {other:?}"),
+        };
+        assert_eq!(flat_len as usize, size);
+
+        println!(
+            "phase {phase}: size {size:>7}  insert {:>7.1} ms  work {:>7.1} ms (sim {:>8.2} ms, {pjrt} PJRT execs)  flatten ok (checksum {:#018x})",
+            t_insert.as_secs_f64() * 1e3,
+            t_work.as_secs_f64() * 1e3,
+            sim_us / 1e3,
+            flat_checksum,
+        );
+        inserts = size; // duplicate next phase
+    }
+    let wall = t0.elapsed();
+
+    // --- verification: element 0 went through PHASES × WORK_CALLS work
+    // passes of +1×work_iters each ---
+    let expect0 = (PHASES * WORK_CALLS * work_iters) as f32;
+    let got0 = c.call(Request::Query { index: 0 }).expect_value().unwrap();
+    assert_eq!(got0, expect0, "element 0 must accumulate every work pass");
+    println!("numeric check: element[0] = {got0} == {expect0} ✓");
+
+    if let Response::Stats(s) = c.call(Request::Stats) {
+        println!("--- coordinator metrics ---\n{s}");
+        println!(
+            "throughput: {:.0} inserts/s wall, batching {:.1} req/batch",
+            s.elements_inserted as f64 / wall.as_secs_f64(),
+            s.coalescing()
+        );
+        assert!(s.overhead_ratio() < 2.3, "memory overhead bound violated");
+        if artifacts {
+            assert!(s.pjrt_executions > 0, "expected real PJRT executions");
+        }
+    }
+    c.shutdown();
+
+    // --- Fig 6 shape from the calibrated model, for the record ---
+    let p = fig6::Params::default();
+    let spec = DeviceSpec::a100();
+    print!("Fig 6 speedup (A100 model, k=1): ");
+    for w in [1u32, 10, 100, 1000] {
+        let (mm, gg) = fig6::two_phase_times(&spec, &p, 1, w);
+        print!("w={w}: {:.3}  ", mm / gg);
+    }
+    println!("\ntwo_phase end-to-end OK ({:.2} s wall)", wall.as_secs_f64());
+}

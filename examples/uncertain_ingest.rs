@@ -1,0 +1,82 @@
+//! Fig 3 in action: ingestion under a VRAM budget when the total volume
+//! is only known as a distribution (LogNormal(0, σ) × base size).
+//!
+//! The static array must provision the 99th percentile to keep its
+//! failure rate at 1%; under a tight budget that allocation *itself*
+//! fails. GGArray grows to the realised size and survives every run that
+//! physically fits.
+//!
+//! ```sh
+//! cargo run --release --example uncertain_ingest
+//! ```
+
+use ggarray::baselines::static_array::StaticArray;
+use ggarray::ggarray::array::{GgArray, GgConfig};
+use ggarray::insertion::InsertionKind;
+use ggarray::sim::memory::VramHeap;
+use ggarray::sim::spec::DeviceSpec;
+use ggarray::util::math::lognormal_quantile;
+use ggarray::util::rng::Rng;
+use ggarray::util::tables::fmt_bytes;
+use ggarray::workload::synth_values;
+
+fn main() {
+    let spec = DeviceSpec::a100();
+    let base: usize = 50_000; // expected ingest size (elements)
+    let budget: u64 = 1_200_000; // bytes of VRAM granted to this tenant
+    let runs = 200;
+    let mut rng = Rng::new(7);
+
+    println!("== uncertain ingestion: base {base} elements, budget {} ==", fmt_bytes(budget));
+    println!("{:<8} {:>14} {:>14} {:>10}", "sigma", "static_ok", "ggarray_ok", "gg_mean_ovh");
+
+    for sigma in [0.25, 0.5, 1.0, 1.5, 2.0] {
+        // Static tenant: must pre-allocate q99 of the distribution.
+        let p99_elems = (base as f64 * lognormal_quantile(0.99, 0.0, sigma)).ceil() as usize;
+        let mut static_ok = 0u32;
+        let mut gg_ok = 0u32;
+        let mut ovh_sum = 0.0;
+        let mut ovh_n = 0u32;
+        for _ in 0..runs {
+            let actual = ((base as f64) * if sigma == 0.0 { 1.0 } else { rng.lognormal(0.0, sigma) })
+                .max(1.0) as usize;
+
+            // --- static: allocate p99 up front, then ingest ---
+            if let Ok(mut st) = StaticArray::<u32>::try_new(spec.clone(), p99_elems, budget) {
+                use ggarray::baselines::GrowableArray;
+                if actual <= p99_elems {
+                    st.insert_bulk(&synth_values(0, actual), InsertionKind::WarpScan).unwrap();
+                    static_ok += 1;
+                } // else: the 1% tail — segfault in the paper's terms
+            } // else: the p99 allocation itself exceeds the budget
+
+            // --- GGArray: grow to the realised size ---
+            let heap = VramHeap::with_capacity(spec.clone(), budget);
+            let mut gg: GgArray<u32> = GgArray::with_heap(
+                GgConfig::new(16).with_first_bucket(64),
+                spec.clone(),
+                heap,
+            );
+            if gg.insert_bulk(&synth_values(0, actual), InsertionKind::WarpScan).is_ok() {
+                gg_ok += 1;
+                ovh_sum += gg.overhead_ratio();
+                ovh_n += 1;
+            }
+        }
+        println!(
+            "{:<8} {:>12}/{runs} {:>12}/{runs} {:>9.2}x",
+            sigma,
+            static_ok,
+            gg_ok,
+            if ovh_n > 0 { ovh_sum / ovh_n as f64 } else { f64::NAN },
+        );
+    }
+
+    println!(
+        "\nreading: as σ grows the static tenant's q99 provision ({}× base at σ=2) stops \
+         fitting the budget at all, while GGArray keeps succeeding whenever the *realised* \
+         data fits — at ≤2x overhead. This is the paper's Fig 3 argument as a running system.",
+        lognormal_quantile(0.99, 0.0, 2.0).round()
+    );
+    println!("uncertain_ingest OK");
+}

@@ -1,0 +1,106 @@
+"""AOT pipeline: lower every L2 graph at every artifact size to HLO
+**text** + write `manifest.json`.
+
+HLO text (not `HloModuleProto.serialize()`) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts [--small]``
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Size families per graph. Power-of-two sizes let the Rust executor pick
+#: the smallest fitting artifact and zero-pad.
+FULL_SIZES = {
+    "scan_warp_i32": [1024, 4096, 16384, 65536],
+    "scan_mxu_i32": [1024, 4096, 16384, 65536],
+    "work_f32": [1024, 16384, 262144, 1048576],
+    "insert_pack_f32": [1024, 4096, 16384],
+    "flatten_f32": [8192, 65536],  # 64 blocks × {128, 1024} cap
+}
+#: Reduced set for quick CI runs (--small).
+SMALL_SIZES = {
+    "scan_warp_i32": [1024, 4096],
+    "scan_mxu_i32": [1024, 4096],
+    "work_f32": [1024, 16384],
+    "insert_pack_f32": [1024],
+    "flatten_f32": [8192],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple=True so the
+    Rust side can uniformly `to_tuple()`)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"int32": "i32", "uint32": "u32", "float32": "f32", "bfloat16": "bf16"}.get(
+        str(dt), str(dt)
+    )
+
+
+def lower_entry(name: str, fn, specs):
+    """Lower one jitted graph; returns (hlo_text, manifest_entry_dict)."""
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    out_avals = lowered.out_info
+    outputs = [
+        {"shape": list(o.shape), "dtype": _dtype_name(o.dtype)}
+        for o in jax.tree_util.tree_leaves(out_avals)
+    ]
+    inputs = [{"shape": list(s.shape), "dtype": _dtype_name(s.dtype)} for s in specs]
+    return text, {"inputs": inputs, "outputs": outputs}
+
+
+def build(out_dir: str, sizes_by_graph: dict, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = {}
+    for gname, factory in model.GRAPHS.items():
+        for n in sizes_by_graph[gname]:
+            entry_name = f"{gname}_{n}"
+            fn, specs = factory(n)
+            text, entry = lower_entry(entry_name, fn, specs)
+            fname = f"{entry_name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entry["file"] = fname
+            entry["graph"] = gname
+            entries[entry_name] = entry
+            if verbose:
+                print(f"[aot] {entry_name}: {len(text)} chars -> {fname}")
+    manifest = {"version": 1, "jax": jax.__version__, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if verbose:
+        print(f"[aot] manifest: {len(entries)} entries -> {out_dir}/manifest.json")
+    return manifest
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument("--small", action="store_true", help="reduced size set (CI)")
+    p.add_argument("--quiet", action="store_true")
+    args = p.parse_args(argv)
+    sizes = SMALL_SIZES if args.small else FULL_SIZES
+    build(args.out, sizes, verbose=not args.quiet)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

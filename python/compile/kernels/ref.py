@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every kernel — the build-time correctness signal.
+
+Each Pallas kernel in this package must match its oracle bit-exactly on
+integer data (and to fp tolerance on floats); `python/tests/` sweeps
+shapes and distributions with hypothesis.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_scan_inclusive(x):
+    """Inclusive prefix sum (any 1-D integer/float array)."""
+    return jnp.cumsum(x, dtype=x.dtype)
+
+
+def ref_scan_exclusive(x):
+    """Exclusive prefix sum."""
+    incl = ref_scan_inclusive(x)
+    return incl - x
+
+
+def ref_work(x, iters: int = 30):
+    """The +1×iters work op."""
+    return x + jnp.asarray(iters, dtype=x.dtype)
+
+
+def ref_insert_pack(mask, values):
+    """Offsets + packed output of a masked parallel insertion.
+
+    Returns (offsets, packed, total): offsets[i] is the slot thread i
+    writes (meaningful only where mask), packed is the dense result
+    (padded with zeros), total the number of packed elements.
+    """
+    counts = mask.astype(jnp.int32)
+    offsets = ref_scan_exclusive(counts)
+    total = counts.sum()
+    n = values.shape[0]
+    positions = jnp.where(mask.astype(bool), offsets, n)  # n = drop
+    packed = jnp.zeros_like(values).at[positions].set(values, mode="drop")
+    return offsets, packed, total
+
+
+def ref_flatten(blocks, sizes):
+    """Flatten a bucketed (B, cap) array into block-major contiguous order.
+
+    Returns (flat, total): flat has shape (B*cap,) with the first `total`
+    entries valid.
+    """
+    b, cap = blocks.shape
+    starts = ref_scan_exclusive(sizes.astype(jnp.int32))
+    col = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    valid = col < sizes[:, None]
+    positions = jnp.where(valid, starts[:, None] + col, b * cap)
+    flat = (
+        jnp.zeros(b * cap, dtype=blocks.dtype)
+        .at[positions.reshape(-1)]
+        .set(blocks.reshape(-1), mode="drop")
+    )
+    return flat, sizes.sum()

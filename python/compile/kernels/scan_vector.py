@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: hierarchical blocked inclusive prefix-sum (i32).
+
+The TPU analogue of the paper's warp-shuffle scan (§III.B.2): CUDA does a
+Hillis–Steele scan with ``__shfl_up_sync`` inside each 32-lane warp, then
+scans the warp totals. Here the 128-lane VPU register row plays the warp:
+
+1. Hillis–Steele along the 128-lane axis (7 shift+add steps — each step is
+   the vector-unit equivalent of a warp shuffle);
+2. row totals form the "warp sums"; a second Hillis–Steele along the
+   sublane axis scans them;
+3. the exclusive row carry is broadcast-added back.
+
+Everything stays in VMEM for the sizes we AOT (≤ 64 Ki i32 = 256 KiB,
+comfortably under the ~16 MiB VMEM budget). ``interpret=True`` is
+mandatory on the CPU backend — real TPU lowering emits a Mosaic
+custom-call the CPU PJRT client cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The VPU register row width — the "warp size" of this adaptation.
+LANES = 128
+
+
+def _hillis_steele(x: jax.Array, axis: int, size: int) -> jax.Array:
+    """Inclusive scan along ``axis`` by log2(size) shift+add steps.
+
+    The shift is a zero-padded slice — exactly what ``__shfl_up_sync``
+    gives a CUDA warp (lanes below the shift distance receive 0 via the
+    predicate).
+    """
+    d = 1
+    while d < size:
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (d, 0)
+        shifted = jnp.pad(x, pad)
+        # Drop the overflow at the tail of `axis`.
+        idx = [slice(None)] * x.ndim
+        idx[axis] = slice(0, size)
+        x = x + shifted[tuple(idx)]
+        d *= 2
+    return x
+
+
+def _scan_kernel(x_ref, o_ref):
+    """Pallas kernel body: (R, 128) i32 → inclusive scan in row-major order."""
+    x = x_ref[...]
+    rows = x.shape[0]
+    # Phase 1: scan within each 128-lane row (the "warp scan").
+    intra = _hillis_steele(x, axis=1, size=LANES)
+    # Phase 2: scan the row totals (the "warp sums" scan).
+    totals = intra[:, LANES - 1 :]  # (R, 1)
+    tot_incl = _hillis_steele(totals, axis=0, size=rows)
+    carry = tot_incl - totals  # exclusive carry per row
+    # Phase 3: broadcast-add the carry.
+    o_ref[...] = intra + carry
+
+
+def scan_vector(x: jax.Array) -> jax.Array:
+    """Inclusive prefix sum of a 1-D i32 array (length divisible by 128)."""
+    n = x.shape[0]
+    if n % LANES != 0:
+        raise ValueError(f"scan_vector needs n % {LANES} == 0, got {n}")
+    rows = n // LANES
+    x2 = x.reshape(rows, LANES)
+    out = pl.pallas_call(
+        _scan_kernel,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), x.dtype),
+        interpret=True,  # CPU backend: Mosaic custom-calls are TPU-only
+    )(x2)
+    return out.reshape(n)
+
+
+@functools.partial(jax.jit, static_argnums=())
+def scan_vector_jit(x: jax.Array) -> jax.Array:
+    return scan_vector(x)
+
+
+def vmem_bytes(n: int, itemsize: int = 4) -> int:
+    """Estimated VMEM footprint: input + intra + totals + output.
+
+    Used by DESIGN.md §Perf for the TPU feasibility estimate (interpret
+    mode gives no hardware numbers).
+    """
+    return 2 * n * itemsize + 2 * (n // LANES) * itemsize

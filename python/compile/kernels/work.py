@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: the paper's work-phase op — "+1, 30 times, to each
+element" (§VI.C). Deliberately compute-light so the pass is memory-bound,
+exactly like the paper's kernel.
+
+Uses a real BlockSpec grid: (8, 128) f32 tiles streamed HBM→VMEM→HBM, one
+grid step per tile row — the schedule a real TPU would pipeline. The 30
+additions run as a fori_loop in registers.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+SUBLANES = 8
+#: Rows per grid step. 256×128 f32 = 128 KiB per buffer — a realistic
+#: streaming tile (≈1.6% of a v4 core's VMEM with double buffering) that
+#: also keeps the *interpret-mode* grid short: interpret lowers the grid
+#: to a sequential while-loop with whole-array dynamic-update-slices, so
+#: per-step overhead is O(array); 8-row tiles made the AOT work kernel
+#: ~25 ms per execute at 262 Ki elements, 256-row tiles ~1 ms (perf pass,
+#: EXPERIMENTS.md §Perf).
+TILE_ROWS = 256
+#: +1 iterations per call, from the paper.
+DEFAULT_ITERS = 30
+
+
+def _work_kernel(x_ref, o_ref, *, iters: int):
+    x = x_ref[...]
+    x = jax.lax.fori_loop(0, iters, lambda _, v: v + 1.0, x)
+    o_ref[...] = x
+
+
+def work(x: jax.Array, iters: int = DEFAULT_ITERS) -> jax.Array:
+    """Apply the +1×iters op to a 1-D f32 array (length % 1024 == 0)."""
+    n = x.shape[0]
+    tile = SUBLANES * LANES
+    if n % tile != 0:
+        raise ValueError(f"work needs n % {tile} == 0, got {n}")
+    rows = n // LANES
+    # Largest power-of-two tile ≤ TILE_ROWS that divides rows (rows is a
+    # multiple of 8 by the check above; our AOT sizes are powers of two).
+    tile_rows = min(rows, TILE_ROWS)
+    while rows % tile_rows != 0:
+        tile_rows //= 2
+    x2 = x.reshape(rows, LANES)
+    grid = rows // tile_rows
+    out = pl.pallas_call(
+        functools.partial(_work_kernel, iters=iters),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), x.dtype),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((tile_rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_rows, LANES), lambda i: (i, 0)),
+        interpret=True,
+    )(x2)
+    return out.reshape(n)
+
+
+def vmem_bytes() -> int:
+    """Per-grid-step VMEM: one (TILE_ROWS,128) f32 tile in + one out,
+    double-buffered by the pipeline → ×2."""
+    return 2 * 2 * TILE_ROWS * LANES * 4
+
+
+def arithmetic_intensity(iters: int = DEFAULT_ITERS) -> float:
+    """FLOPs per byte moved: iters adds / 8 bytes (read+write f32).
+
+    30/8 ≈ 3.75 — far below the ~240 FLOP/byte ridge of a TPU, so the
+    kernel is memory-bound, matching the paper's static-array r/w numbers.
+    """
+    return iters / 8.0

@@ -1,0 +1,106 @@
+"""Layer 2: the JAX compute graphs composed from the L1 Pallas kernels.
+
+These are the *whole programs* the Rust coordinator executes via PJRT —
+the scan-based insertion step, the work phase and the flatten step.
+Python runs only at build time (`make artifacts`); the lowered HLO is the
+runtime interface.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import scan_mxu, scan_vector, work
+
+
+def scan_warp_graph(n: int):
+    """Inclusive i32 scan of a length-n vector (warp/VPU algorithm)."""
+
+    def fn(x):
+        return (scan_vector.scan_vector(x),)
+
+    return fn, (jax.ShapeDtypeStruct((n,), jnp.int32),)
+
+
+def scan_mxu_graph(n: int):
+    """Inclusive i32 scan of a length-n vector (MXU matmul algorithm)."""
+
+    def fn(x):
+        return (scan_mxu.scan_mxu(x),)
+
+    return fn, (jax.ShapeDtypeStruct((n,), jnp.int32),)
+
+
+def work_graph(n: int, iters: int = work.DEFAULT_ITERS):
+    """The +1×iters work phase over a length-n f32 vector."""
+
+    def fn(x):
+        return (work.work(x, iters=iters),)
+
+    return fn, (jax.ShapeDtypeStruct((n,), jnp.float32),)
+
+
+def insert_pack_graph(n: int, scan: str = "warp"):
+    """Full insertion step: mask + values → (offsets, packed, total).
+
+    Fuses the scan kernel with the scatter so one executable performs the
+    whole index-assignment + placement (the L2 composition the paper's
+    insertion algorithms implement in one CUDA kernel).
+    """
+    scan_fn = scan_vector.scan_vector if scan == "warp" else scan_mxu.scan_mxu
+
+    def fn(mask, values):
+        counts = mask.astype(jnp.int32)
+        incl = scan_fn(counts)
+        offsets = incl - counts  # exclusive
+        total = incl[n - 1]
+        positions = jnp.where(mask.astype(bool), offsets, n)
+        packed = jnp.zeros_like(values).at[positions].set(values, mode="drop")
+        return offsets, packed, total.reshape(1)
+
+    return fn, (
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+
+
+def flatten_graph(blocks: int, cap: int):
+    """Bucketed (B, cap) + sizes → block-major flat array + total."""
+
+    def fn(vals, sizes):
+        counts = sizes.astype(jnp.int32)
+        incl = jnp.cumsum(counts)
+        starts = incl - counts
+        col = jnp.arange(cap, dtype=jnp.int32)[None, :]
+        valid = col < counts[:, None]
+        positions = jnp.where(valid, starts[:, None] + col, blocks * cap)
+        flat = (
+            jnp.zeros(blocks * cap, dtype=vals.dtype)
+            .at[positions.reshape(-1)]
+            .set(vals.reshape(-1), mode="drop")
+        )
+        return flat, incl[blocks - 1].reshape(1)
+
+    return fn, (
+        jax.ShapeDtypeStruct((blocks, cap), jnp.float32),
+        jax.ShapeDtypeStruct((blocks,), jnp.int32),
+    )
+
+
+#: Blocks used by the AOT'd flatten graphs (cap = n // FLATTEN_BLOCKS).
+FLATTEN_BLOCKS = 64
+
+
+def _flatten_by_total(n: int):
+    assert n % FLATTEN_BLOCKS == 0, n
+    return flatten_graph(FLATTEN_BLOCKS, n // FLATTEN_BLOCKS)
+
+
+#: Entry-point registry: name → factory(n). Names double as the family
+#: prefixes the Rust Executor's `pick_size` uses.
+GRAPHS = {
+    "scan_warp_i32": scan_warp_graph,
+    "scan_mxu_i32": scan_mxu_graph,
+    "work_f32": work_graph,
+    "insert_pack_f32": insert_pack_graph,
+    "flatten_f32": _flatten_by_total,
+}

@@ -1,0 +1,59 @@
+"""AOT pipeline: manifest integrity + HLO text sanity + the 64-bit-id
+pitfall guard (text, not serialized protos)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    sizes = {k: v[:1] for k, v in aot.SMALL_SIZES.items()}  # 1 size each: fast
+    manifest = aot.build(str(out), sizes, verbose=False)
+    return out, manifest
+
+
+def test_manifest_structure(built):
+    out, manifest = built
+    assert manifest["version"] == 1
+    assert len(manifest["entries"]) == len(aot.SMALL_SIZES)
+    on_disk = json.loads((out / "manifest.json").read_text())
+    assert on_disk["entries"].keys() == manifest["entries"].keys()
+    for name, e in on_disk["entries"].items():
+        assert (out / e["file"]).exists(), name
+        assert e["inputs"] and e["outputs"], name
+        for t in e["inputs"] + e["outputs"]:
+            assert t["dtype"] in {"i32", "f32"}
+            assert all(isinstance(d, int) for d in t["shape"])
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    out, manifest = built
+    for name, e in manifest["entries"].items():
+        text = (out / e["file"]).read_text()
+        assert "ENTRY" in text, f"{name} doesn't look like HLO text"
+        assert "HloModule" in text
+        # Tuple return (rust side calls to_tuple()).
+        assert "tuple" in text or "ROOT" in text
+
+
+def test_scan_entry_shapes(built):
+    _, manifest = built
+    e = manifest["entries"]["scan_warp_i32_1024"]
+    assert e["inputs"] == [{"shape": [1024], "dtype": "i32"}]
+    assert e["outputs"] == [{"shape": [1024], "dtype": "i32"}]
+
+
+def test_sizes_families_cover_rust_needs():
+    # The Rust coordinator picks from these families; make sure the
+    # full build includes the sizes the service relies on.
+    assert 65536 in aot.FULL_SIZES["scan_warp_i32"]
+    assert 1048576 in aot.FULL_SIZES["work_f32"]
+    for fam, sizes in aot.FULL_SIZES.items():
+        assert sizes == sorted(sizes), fam
+        for n in sizes:
+            assert n % 128 == 0, (fam, n)

@@ -1,0 +1,99 @@
+"""L1 correctness: both Pallas scan kernels vs the pure-jnp oracle.
+
+This is the core build-time correctness signal — hypothesis sweeps sizes,
+value ranges and distributions; every case must match bit-exactly.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, scan_mxu, scan_vector
+
+SIZES = [128, 256, 1024, 4096, 16384]
+KERNELS = {"warp": scan_vector.scan_vector, "mxu": scan_mxu.scan_mxu}
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("name", list(KERNELS))
+def test_scan_matches_cumsum_random(n, name):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.integers(0, 100, n), dtype=jnp.int32)
+    got = KERNELS[name](x)
+    want = ref.ref_scan_inclusive(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("name", list(KERNELS))
+def test_scan_zeros_and_ones(name):
+    n = 1024
+    np.testing.assert_array_equal(
+        np.asarray(KERNELS[name](jnp.zeros(n, jnp.int32))), np.zeros(n)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(KERNELS[name](jnp.ones(n, jnp.int32))), np.arange(1, n + 1)
+    )
+
+
+@pytest.mark.parametrize("name", list(KERNELS))
+def test_scan_mask_pattern(name):
+    # The insertion use case: 0/1 flags.
+    n = 4096
+    rng = np.random.default_rng(1)
+    mask = jnp.asarray(rng.integers(0, 2, n), dtype=jnp.int32)
+    got = KERNELS[name](mask)
+    np.testing.assert_array_equal(np.asarray(got), np.cumsum(np.asarray(mask)))
+
+
+@pytest.mark.parametrize("name", list(KERNELS))
+def test_scan_rejects_unaligned(name):
+    with pytest.raises(ValueError):
+        KERNELS[name](jnp.zeros(100, jnp.int32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    hi=st.sampled_from([1, 2, 7, 1000, 10_000]),
+)
+def test_scan_hypothesis_sweep(rows, seed, hi):
+    n = rows * 128
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, hi + 1, n), dtype=jnp.int32)
+    want = np.cumsum(np.asarray(x))
+    for name, k in KERNELS.items():
+        got = np.asarray(k(x))
+        np.testing.assert_array_equal(got, want, err_msg=f"{name} n={n} hi={hi}")
+
+
+def test_mxu_exactness_domain():
+    # f32 matmuls are exact below 2^24; the max total at our largest AOT
+    # size with worst-case per-thread counts must stay under it.
+    max_total = 65536 * 100  # 100 inserts/thread at the largest artifact
+    assert max_total < scan_mxu.EXACT_LIMIT
+    # And right at a large-total case the kernel stays exact:
+    n = 1024
+    x = jnp.full((n,), 1000, jnp.int32)  # total 1.024e6 < 2^24
+    got = np.asarray(scan_mxu.scan_mxu(x))
+    np.testing.assert_array_equal(got, np.cumsum(np.asarray(x)))
+
+
+def test_both_algorithms_identical():
+    # The paper's three insertion algorithms differ only in speed, never
+    # in result (§III.B) — enforce it for the two kernel variants.
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.integers(0, 50, 4096), dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(scan_vector.scan_vector(x)), np.asarray(scan_mxu.scan_mxu(x))
+    )
+
+
+def test_vmem_estimates_fit_budget():
+    # Structural perf check: the largest AOT'd scan fits VMEM (~16 MiB).
+    assert scan_vector.vmem_bytes(65536) < 16 * 1024 * 1024
+    # MXU utilisation estimate is in (0, 1] and ~0.5 for big n (upper
+    # triangle of U is half the issued MACs).
+    u = scan_mxu.mxu_utilisation_estimate(65536)
+    assert 0.4 < u <= 1.0

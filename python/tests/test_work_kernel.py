@@ -1,0 +1,58 @@
+"""L1 correctness: the +1×30 work kernel vs its oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, work
+
+
+def _iterative_f32(x, iters):
+    """Bit-exact oracle: the same 30 sequential f32 additions the kernel
+    performs (a single `x + 30` differs by rounding ULPs)."""
+    acc = np.asarray(x, dtype=np.float32).copy()
+    for _ in range(iters):
+        acc = acc + np.float32(1.0)
+    return acc
+
+
+@pytest.mark.parametrize("n", [1024, 2048, 16384])
+def test_work_adds_thirty(n):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=n), dtype=jnp.float32)
+    got = np.asarray(work.work(x))
+    # Bit-exact against the iterative oracle …
+    np.testing.assert_array_equal(got, _iterative_f32(x, 30))
+    # … and within fp tolerance of the semantic oracle (+30).
+    np.testing.assert_allclose(got, np.asarray(ref.ref_work(x, 30)), rtol=1e-6, atol=1e-5)
+
+
+def test_work_custom_iters():
+    x = jnp.zeros(1024, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(work.work(x, iters=7)), np.full(1024, 7.0))
+    np.testing.assert_array_equal(np.asarray(work.work(x, iters=0)), np.zeros(1024))
+
+
+def test_work_rejects_unaligned():
+    with pytest.raises(ValueError):
+        work.work(jnp.zeros(1000, jnp.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_work_hypothesis(tiles, seed):
+    n = tiles * 1024
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1e6, 1e6, n), dtype=jnp.float32)
+    got = np.asarray(work.work(x))
+    np.testing.assert_array_equal(got, _iterative_f32(x, 30))
+
+
+def test_memory_bound_by_design():
+    # Paper's work op must be memory-bound: arithmetic intensity far below
+    # the TPU ridge point (~240 FLOP/byte for bf16 MXU, ~40 for VPU f32).
+    assert work.arithmetic_intensity(30) < 10

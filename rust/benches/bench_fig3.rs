@@ -1,0 +1,40 @@
+//! Bench target for Fig 3: regenerates the theoretical memory-usage
+//! curves and times the Monte-Carlo engine itself.
+//! Run: `cargo bench --bench bench_fig3`
+
+use ggarray::experiments::fig3;
+use ggarray::theory::memory_model;
+use ggarray::util::benchkit::{black_box, BenchSuite};
+use ggarray::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("fig3 — theoretic memory usage (GGArray vs static/semi-static)");
+    suite.banner();
+
+    // Regenerate the figure (the deliverable) and record headline values.
+    let rep = fig3::run(&fig3::Params::default());
+    rep.save(std::path::Path::new("reports")).expect("save fig3");
+    let table = &rep.sections[0].table;
+    for probe_sigma in ["0.500", "1.000", "2.000"] {
+        if let Some(row) = table.rows().iter().find(|r| r[0] == probe_sigma) {
+            let opt: f64 = row[1].parse().unwrap();
+            let stat: f64 = row[2].parse().unwrap();
+            let gg: f64 = row[5].parse().unwrap();
+            suite.record(&format!("sigma={probe_sigma} static_p99/optimal ratio"), stat / opt * 1000.0);
+            suite.record(&format!("sigma={probe_sigma} ggarray/optimal ratio"), gg / opt * 1000.0);
+        }
+    }
+
+    // Wall-clock of the Monte-Carlo engine (the real computation here).
+    let mut rng = Rng::new(99);
+    suite.bench("expected_usage sigma=1.0 draws=2000", || {
+        black_box(memory_model::expected_usage(1.0, 1_000_000, 512, 64, 2000, &mut rng));
+    });
+    suite.bench("sweep 11 points x 500 draws", || {
+        black_box(memory_model::sweep(2.0, 10, 1_000_000, 512, 64, 500, 7));
+    });
+
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/bench_fig3.md", suite.markdown()).unwrap();
+    eprintln!("wrote reports/bench_fig3.md and fig3 CSVs");
+}

@@ -1,0 +1,49 @@
+//! Bench target for Fig 4: regenerates all three columns (insertion
+//! algorithms / grow+insert vs #LFVectors / rw vs #LFVectors) from the
+//! calibrated model, and cross-checks with real small-scale structure
+//! runs (wall clock + simulated clock agreement on ordering).
+//! Run: `cargo bench --bench bench_fig4`
+
+use ggarray::experiments::fig4;
+use ggarray::ggarray::array::{GgArray, GgConfig};
+use ggarray::insertion::InsertionKind;
+use ggarray::sim::spec::DeviceSpec;
+use ggarray::util::benchkit::{black_box, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("fig4 — insertion algorithms and #LFVectors sweeps");
+    suite.banner();
+
+    let rep = fig4::run(&fig4::Params::default());
+    rep.save(std::path::Path::new("reports")).expect("save fig4");
+
+    // Col 1 headline (A100, final iteration): modeled ms per algorithm.
+    let spec = DeviceSpec::a100();
+    let n = 512_000_000u64;
+    let shape = ggarray::insertion::InsertShape::static_array(&spec, n, n, 4);
+    for kind in InsertionKind::ALL {
+        suite.record(
+            &format!("modeled insert 5.12e8 ({})", kind.name()),
+            ggarray::insertion::cost_us(&spec, kind, &shape),
+        );
+    }
+
+    // Real small-scale: the same ordering must hold on the simulated
+    // clock with real data movement (1e6 elements).
+    let data: Vec<u32> = (0..1_000_000u32).collect();
+    for kind in InsertionKind::ALL {
+        let mut gg: GgArray<u32> = GgArray::new(GgConfig::new(512), spec.clone());
+        let rep = gg.insert_bulk(&data, kind).unwrap();
+        suite.record(&format!("sim insert 1e6 via GGArray512 ({})", kind.name()), rep.us);
+    }
+
+    // Wall-clock of the real data path (what the host actually does).
+    suite.bench("host insert_bulk 1e6 u32 into GGArray512", || {
+        let mut gg: GgArray<u32> = GgArray::new(GgConfig::new(512), spec.clone());
+        black_box(gg.insert_bulk(&data, InsertionKind::WarpScan).unwrap());
+    });
+
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/bench_fig4.md", suite.markdown()).unwrap();
+    eprintln!("wrote reports/bench_fig4.md and fig4 CSVs");
+}

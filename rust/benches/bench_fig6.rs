@@ -1,0 +1,68 @@
+//! Bench target for Fig 6: regenerates the two-phase speedup curves and
+//! runs the real (reduced-scale) two-phase pipeline through the
+//! coordinator, reporting wall-clock throughput.
+//! Run: `cargo bench --bench bench_fig6`
+
+use std::time::Duration;
+
+use ggarray::coordinator::batcher::BatchConfig;
+use ggarray::coordinator::request::{Request, Response};
+use ggarray::coordinator::service::{Coordinator, CoordinatorConfig};
+use ggarray::experiments::fig6;
+use ggarray::sim::spec::DeviceSpec;
+use ggarray::util::benchkit::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("fig6 — two-phase application speedup (GGArray vs memMap)");
+    suite.banner();
+
+    let rep = fig6::run(&fig6::Params::default());
+    rep.save(std::path::Path::new("reports")).expect("save fig6");
+
+    // Headline speedups (A100 model), ×1000 so they read as milli-units.
+    let p = fig6::Params::default();
+    let spec = DeviceSpec::a100();
+    for w in [1u32, 10, 100, 1000] {
+        let (mm, gg) = fig6::two_phase_times(&spec, &p, 1, w);
+        suite.record(&format!("speedup x1000 (k=1, w={w})"), mm / gg * 1000.0);
+    }
+
+    // Real two-phase run through the coordinator (reduced scale).
+    let mk_cfg = || CoordinatorConfig {
+        blocks: 64,
+        first_bucket_size: 64,
+        use_artifacts: ggarray::runtime::ArtifactManifest::available(),
+        batch: BatchConfig { max_values: 1 << 14, max_delay: Duration::from_millis(1) },
+        ..CoordinatorConfig::default()
+    };
+    // One long-running service (compiled artifacts stay warm — the
+    // serving scenario); each iteration is a full two-phase cycle.
+    let c = Coordinator::start(mk_cfg());
+    suite.bench("coordinator two-phase 3x(insert 20k + work 2 + flatten)", || {
+        for phase in 0..3 {
+            let values: Vec<f32> = (0..20_000).map(|i| (phase * 20_000 + i) as f32).collect();
+            c.call(Request::Insert { values });
+            match c.call(Request::Work { calls: 2 }) {
+                Response::Worked { .. } => {}
+                other => panic!("{other:?}"),
+            }
+            c.call(Request::Flatten);
+        }
+        match c.call(Request::Clear) {
+            Response::Cleared => {}
+            other => panic!("{other:?}"),
+        }
+    });
+    // Cold-start cost, measured separately (was folded into every
+    // iteration before the perf pass).
+    suite.bench("coordinator cold start + shutdown", || {
+        let c = Coordinator::start(mk_cfg());
+        c.call(Request::Insert { values: vec![1.0; 128] });
+        c.shutdown();
+    });
+    c.shutdown();
+
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/bench_fig6.md", suite.markdown()).unwrap();
+    eprintln!("wrote reports/bench_fig6.md and fig6 CSVs");
+}

@@ -1,0 +1,95 @@
+//! §Perf hot-path microbenches: the *real* (wall-clock) cost of every
+//! operation on the request path — LFVector appends, routing, prefix
+//! lookups, rw passes, flatten, and PJRT execution. These are the numbers
+//! the performance pass optimises; before/after lands in EXPERIMENTS.md.
+//! Run: `cargo bench --bench bench_hotpath`
+
+use ggarray::coordinator::router::{self, Policy};
+use ggarray::ggarray::array::{GgArray, GgConfig};
+use ggarray::ggarray::flatten::flatten;
+use ggarray::ggarray::index::PrefixIndex;
+use ggarray::ggarray::lfvector::LfVector;
+use ggarray::insertion::InsertionKind;
+use ggarray::runtime::{ArtifactManifest, Executor};
+use ggarray::sim::clock::Clock;
+use ggarray::sim::memory::VramHeap;
+use ggarray::sim::spec::DeviceSpec;
+use ggarray::util::benchkit::{black_box, BenchSuite};
+use ggarray::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("hotpath — real wall-clock of the request-path operations");
+    suite.banner();
+    let spec = DeviceSpec::a100();
+
+    // --- LFVector bulk append (1e6 u32) ---
+    let data: Vec<u32> = (0..1_000_000u32).collect();
+    suite.bench("lfvector push_back_bulk 1e6 u32", || {
+        let mut heap = VramHeap::new(spec.clone());
+        let mut clock = Clock::new();
+        let mut v: LfVector<u32> = LfVector::new(1024);
+        black_box(v.push_back_bulk(&data, &mut heap, &mut clock).unwrap());
+    });
+
+    // --- GGArray insert (512 blocks) ---
+    suite.bench("ggarray insert_bulk 1e6 u32 (512 blocks)", || {
+        let mut gg: GgArray<u32> = GgArray::new(GgConfig::new(512), spec.clone());
+        black_box(gg.insert_bulk(&data, InsertionKind::WarpScan).unwrap());
+    });
+
+    // --- rw_b over 1e6 ---
+    let mut gg: GgArray<u32> = GgArray::new(GgConfig::new(512), spec.clone());
+    gg.insert_bulk(&data, InsertionKind::WarpScan).unwrap();
+    suite.bench("ggarray rw_b 1e6 (+1)", || {
+        black_box(gg.read_write_block(30.0, |x| *x = x.wrapping_add(1)));
+    });
+
+    // --- flatten 1e6 ---
+    suite.bench("ggarray flatten 1e6", || {
+        black_box(flatten(&mut gg).unwrap());
+    });
+
+    // --- prefix index lookups ---
+    let mut idx = PrefixIndex::new();
+    idx.rebuild((0..512).map(|_| 2000u64));
+    let mut rng = Rng::new(3);
+    let probes: Vec<u64> = (0..10_000).map(|_| rng.below(512 * 2000)).collect();
+    suite.bench("prefix locate x10k (512 blocks)", || {
+        for &p in &probes {
+            black_box(idx.locate(p));
+        }
+    });
+
+    // --- router ---
+    let sizes: Vec<u64> = (0..512).map(|i| (i * 37) as u64 % 5000).collect();
+    for policy in [Policy::Even, Policy::LeastLoaded, Policy::Hash] {
+        suite.bench(&format!("route 1e5 into 512 blocks ({})", policy.name()), || {
+            black_box(router::route(policy, &sizes, 100_000, 42));
+        });
+    }
+
+    // --- PJRT execution (the real AOT kernels) ---
+    if ArtifactManifest::available() {
+        let exec = Executor::from_default_dir().unwrap();
+        exec.warm_up().unwrap();
+        let counts: Vec<i32> = vec![3; 1024];
+        suite.bench("pjrt scan_warp_i32_1024 execute", || {
+            black_box(exec.run_i32("scan_warp_i32_1024", &[&counts], 1024).unwrap());
+        });
+        let xs: Vec<f32> = vec![1.0; 16384];
+        suite.bench("pjrt work_f32_16384 execute", || {
+            black_box(exec.run_f32("work_f32_16384", &[&xs], 16384).unwrap());
+        });
+        if exec.manifest().get("scan_mxu_i32_1024").is_some() {
+            suite.bench("pjrt scan_mxu_i32_1024 execute", || {
+                black_box(exec.run_i32("scan_mxu_i32_1024", &[&counts], 1024).unwrap());
+            });
+        }
+    } else {
+        eprintln!("  (artifacts missing — PJRT benches skipped; run `make artifacts`)");
+    }
+
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/bench_hotpath.md", suite.markdown()).unwrap();
+    eprintln!("wrote reports/bench_hotpath.md");
+}

@@ -1,0 +1,55 @@
+//! Bench target for Table II: regenerates the table (modeled vs paper)
+//! and asserts the fidelity bands hold — this bench doubles as a
+//! regression gate on the cost-model calibration.
+//! Run: `cargo bench --bench bench_table2`
+
+use ggarray::experiments::table2;
+use ggarray::util::benchkit::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("table2 — duplicate 5.12e8 elements, last iteration, A100 model");
+    suite.banner();
+
+    let rep = table2::run();
+    rep.save(std::path::Path::new("reports")).expect("save table2");
+    println!("{}", rep.markdown());
+
+    let rows = rep.sections[0].table.rows().to_vec();
+    for row in &rows {
+        let name = &row[0];
+        for (col, label) in [(1usize, "grow"), (2, "insert"), (3, "rw")] {
+            if let Ok(ms) = row[col].parse::<f64>() {
+                suite.record(&format!("{name} {label} (modeled ms→µs)"), ms * 1e3);
+            }
+        }
+    }
+
+    // Fidelity gate (mirrors the unit test so `cargo bench` alone also
+    // validates calibration).
+    let cell = |name: &str, col: usize| -> f64 {
+        rows.iter().find(|r| r[0] == name).unwrap()[col].parse().unwrap_or(f64::NAN)
+    };
+    let checks = [
+        ("static insert", cell("static", 2), 7.07),
+        ("static rw", cell("static", 3), 6.27),
+        ("memMap grow", cell("memMap", 1), 5.21),
+        ("GGArray512 grow", cell("GGArray512", 1), 8.76),
+        ("GGArray512 insert", cell("GGArray512", 2), 11.79),
+        ("GGArray512 rw", cell("GGArray512", 3), 69.73),
+        ("GGArray32 grow", cell("GGArray32", 1), 0.52),
+        ("GGArray32 insert", cell("GGArray32", 2), 27.90),
+    ];
+    let mut worst: (f64, &str) = (0.0, "");
+    for (name, model, paper) in checks {
+        let rel = (model - paper).abs() / paper;
+        if rel > worst.0 {
+            worst = (rel, name);
+        }
+        assert!(rel < 0.35, "calibration drift: {name} modeled {model} vs paper {paper}");
+    }
+    eprintln!("calibration OK — worst relative error {:.1}% ({})", worst.0 * 100.0, worst.1);
+
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/bench_table2.md", suite.markdown()).unwrap();
+    eprintln!("wrote reports/bench_table2.md");
+}

@@ -1,0 +1,120 @@
+//! Comparison structures from the paper (§III.A):
+//!
+//! * [`static_array`] — flat pre-allocated array; insertions in-kernel,
+//!   no resize possible (must be provisioned for the worst case);
+//! * [`semistatic`] — host-resized doubling array (allocate 2×, copy,
+//!   free) — the classic `device_vector` pattern;
+//! * [`memmap`] — semi-static over the CUDA virtual-memory-management
+//!   API: VA reserved once, physical pages mapped on growth, **no copy**
+//!   (Perry & Sakharnykh 2020). The paper's strongest baseline.
+//!
+//! All three implement [`GrowableArray`] so experiments can sweep
+//! structures uniformly.
+
+pub mod memmap;
+pub mod semistatic;
+pub mod static_array;
+
+use crate::ggarray::array::OpReport;
+use crate::insertion::InsertionKind;
+use crate::sim::memory::OomError;
+
+/// Uniform interface over the comparison structures (and implemented by
+/// `GgArray` wrappers in the experiment harness).
+pub trait GrowableArray<T: Copy + Default> {
+    /// Structure name for reports ("static", "memMap", …).
+    fn name(&self) -> &'static str;
+
+    /// Live elements.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Allocated element slots.
+    fn capacity(&self) -> usize;
+
+    /// Bytes of (simulated) VRAM held.
+    fn allocated_bytes(&self) -> u64;
+
+    /// Grow phase: make room for `extra` more elements. Static arrays
+    /// return an error if `extra` exceeds the pre-allocated capacity.
+    fn grow_for(&mut self, extra: usize) -> Result<OpReport, OomError>;
+
+    /// Insertion phase: append `values` with algorithm `kind`.
+    fn insert_bulk(&mut self, values: &[T], kind: InsertionKind) -> Result<OpReport, OomError>;
+
+    /// Work phase: apply `f` to every element (`flops_per_elem` is the
+    /// modeled ALU work, e.g. 30 for the paper's +1×30 op).
+    fn read_write(&mut self, flops_per_elem: f64, f: &mut dyn FnMut(&mut T)) -> OpReport;
+
+    /// Read element `i`.
+    fn get(&self, i: u64) -> Option<T>;
+
+    /// Simulated time consumed so far (µs).
+    fn elapsed_us(&self) -> f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::memmap::MemMapArray;
+    use super::semistatic::SemiStaticArray;
+    use super::static_array::StaticArray;
+    use super::*;
+    use crate::sim::spec::DeviceSpec;
+
+    /// All baselines must agree on data semantics with each other.
+    #[test]
+    fn baselines_agree_on_contents() {
+        let spec = DeviceSpec::a100();
+        let mut structures: Vec<Box<dyn GrowableArray<u32>>> = vec![
+            Box::new(StaticArray::new(spec.clone(), 10_000)),
+            Box::new(SemiStaticArray::new(spec.clone(), 64)),
+            Box::new(MemMapArray::new(spec.clone(), 1 << 20)),
+        ];
+        let chunk1: Vec<u32> = (0..1000).collect();
+        let chunk2: Vec<u32> = (1000..2500).collect();
+        for s in structures.iter_mut() {
+            s.grow_for(chunk1.len()).unwrap();
+            s.insert_bulk(&chunk1, InsertionKind::WarpScan).unwrap();
+            s.grow_for(chunk2.len()).unwrap();
+            s.insert_bulk(&chunk2, InsertionKind::WarpScan).unwrap();
+            s.read_write(30.0, &mut |x| *x += 1);
+        }
+        for i in 0..2500u64 {
+            let want = i as u32 + 1;
+            for s in &structures {
+                assert_eq!(s.get(i), Some(want), "{} at {i}", s.name());
+            }
+        }
+        for s in &structures {
+            assert_eq!(s.len(), 2500);
+            assert_eq!(s.get(2500), None);
+            assert!(s.elapsed_us() > 0.0);
+        }
+    }
+
+    #[test]
+    fn memmap_grow_cheaper_than_semistatic_at_scale() {
+        // The VMM API's no-copy growth is the reason the paper uses it as
+        // the semi-static representative.
+        let spec = DeviceSpec::a100();
+        let n = 4 << 20; // 4 Mi elements = 16 MiB
+        let mut semi: SemiStaticArray<u32> = SemiStaticArray::new(spec.clone(), n);
+        let mut mm: MemMapArray<u32> = MemMapArray::new(spec.clone(), 1 << 30);
+        semi.insert_bulk(&vec![1u32; n], InsertionKind::WarpScan).unwrap();
+        mm.insert_bulk(&vec![1u32; n], InsertionKind::WarpScan).unwrap();
+        let t_semi = {
+            let t0 = semi.elapsed_us();
+            semi.grow_for(n).unwrap();
+            semi.elapsed_us() - t0
+        };
+        let t_mm = {
+            let t0 = mm.elapsed_us();
+            mm.grow_for(n).unwrap();
+            mm.elapsed_us() - t0
+        };
+        assert!(t_semi > t_mm, "semi {t_semi} !> memmap {t_mm}");
+    }
+}

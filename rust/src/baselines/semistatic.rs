@@ -1,0 +1,213 @@
+//! Semi-static baseline (paper §III.A.2, classic variant): a flat array
+//! resized **from the host** with the doubling scheme — allocate a new
+//! buffer of 2× capacity, copy all elements, free the old one. Every grow
+//! pays a host synchronisation round-trip plus the full copy, and the peak
+//! memory during a resize is `old + new = 3× the live data`.
+
+use crate::ggarray::array::OpReport;
+use crate::insertion::{self, InsertionKind, InsertShape};
+use crate::sim::clock::{Category, Clock, Phase};
+use crate::sim::kernel::{self, KernelProfile};
+use crate::sim::memory::{AllocId, OomError, VramHeap};
+use crate::sim::spec::DeviceSpec;
+
+use super::GrowableArray;
+
+/// Host-resized doubling array.
+#[derive(Debug)]
+pub struct SemiStaticArray<T> {
+    spec: DeviceSpec,
+    heap: VramHeap,
+    clock: Clock,
+    data: Vec<T>,
+    len: usize,
+    capacity: usize,
+    alloc: AllocId,
+    grows: u32,
+}
+
+impl<T: Copy + Default> SemiStaticArray<T> {
+    /// Start with `initial_capacity` slots (must be ≥ 1).
+    pub fn new(spec: DeviceSpec, initial_capacity: usize) -> SemiStaticArray<T> {
+        let initial_capacity = initial_capacity.max(1);
+        let mut heap = VramHeap::new(spec.clone());
+        let mut clock = Clock::new();
+        let alloc = heap
+            .alloc((initial_capacity * std::mem::size_of::<T>()) as u64, &mut clock)
+            .expect("initial capacity larger than device memory");
+        SemiStaticArray {
+            spec,
+            heap,
+            clock,
+            data: vec![T::default(); initial_capacity],
+            len: 0,
+            capacity: initial_capacity,
+            alloc,
+            grows: 0,
+        }
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// Peak simulated VRAM (includes the transient 3× during copies).
+    pub fn peak_bytes(&self) -> u64 {
+        self.heap.peak()
+    }
+
+    pub fn grows(&self) -> u32 {
+        self.grows
+    }
+
+    /// Double capacity until ≥ `target`, paying host sync + alloc + copy +
+    /// free per doubling step (costs follow the real pattern: one
+    /// host-initiated `cudaMalloc`+`cudaMemcpyDtoD`+`cudaFree` each).
+    fn grow_to(&mut self, target: usize) -> Result<(), OomError> {
+        while self.capacity < target {
+            let new_cap = (self.capacity * 2).max(target.min(self.capacity * 2));
+            // Host round-trip to orchestrate the resize.
+            self.clock.charge(Category::Host, self.spec.cost.host_sync_us);
+            let elem = std::mem::size_of::<T>();
+            let new_alloc = self.heap.alloc((new_cap * elem) as u64, &mut self.clock)?;
+            // Device-to-device copy of the live prefix.
+            let copy_bytes = (self.len * elem) as f64;
+            if copy_bytes > 0.0 {
+                let profile = KernelProfile::streaming(
+                    crate::util::math::ceil_div(self.len.max(1) as u64, 1024),
+                    1024,
+                    2.0 * copy_bytes, // read + write
+                    self.spec.cost.coalesced_eff,
+                );
+                kernel::launch(&self.spec, &mut self.clock, &profile);
+            }
+            let old = std::mem::replace(&mut self.alloc, new_alloc);
+            self.heap.free(old, &mut self.clock);
+            let mut new_data = vec![T::default(); new_cap];
+            new_data[..self.len].copy_from_slice(&self.data[..self.len]);
+            self.data = new_data;
+            self.capacity = new_cap;
+            self.grows += 1;
+        }
+        Ok(())
+    }
+}
+
+impl<T: Copy + Default> GrowableArray<T> for SemiStaticArray<T> {
+    fn name(&self) -> &'static str {
+        "semi-static"
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn allocated_bytes(&self) -> u64 {
+        (self.capacity * std::mem::size_of::<T>()) as u64
+    }
+
+    fn grow_for(&mut self, extra: usize) -> Result<OpReport, OomError> {
+        let phase = Phase::start(&self.clock);
+        self.grow_to(self.len + extra)?;
+        Ok(OpReport { us: phase.elapsed_us(&self.clock), buckets_allocated: 0, elements: extra as u64 })
+    }
+
+    fn insert_bulk(&mut self, values: &[T], kind: InsertionKind) -> Result<OpReport, OomError> {
+        self.grow_to(self.len + values.len())?;
+        let phase = Phase::start(&self.clock);
+        self.data[self.len..self.len + values.len()].copy_from_slice(values);
+        self.len += values.len();
+        let shape = InsertShape::static_array(
+            &self.spec,
+            values.len().max(self.len) as u64,
+            values.len() as u64,
+            std::mem::size_of::<T>() as u64,
+        );
+        kernel::launch(&self.spec, &mut self.clock, &insertion::profile(&self.spec, kind, &shape));
+        Ok(OpReport { us: phase.elapsed_us(&self.clock), buckets_allocated: 0, elements: values.len() as u64 })
+    }
+
+    fn read_write(&mut self, flops_per_elem: f64, f: &mut dyn FnMut(&mut T)) -> OpReport {
+        let phase = Phase::start(&self.clock);
+        for v in &mut self.data[..self.len] {
+            f(v);
+        }
+        let n = self.len as f64;
+        let elem = std::mem::size_of::<T>() as f64;
+        let profile = KernelProfile::streaming(
+            crate::util::math::ceil_div(self.len.max(1) as u64, 1024),
+            1024,
+            2.0 * elem * n,
+            self.spec.cost.coalesced_eff,
+        );
+        let mut p = profile;
+        p.flops_fp32 = flops_per_elem * n;
+        kernel::launch(&self.spec, &mut self.clock, &p);
+        OpReport { us: phase.elapsed_us(&self.clock), buckets_allocated: 0, elements: self.len as u64 }
+    }
+
+    fn get(&self, i: u64) -> Option<T> {
+        if (i as usize) < self.len {
+            Some(self.data[i as usize])
+        } else {
+            None
+        }
+    }
+
+    fn elapsed_us(&self) -> f64 {
+        self.clock.now_us()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doubles_until_fit() {
+        let mut s: SemiStaticArray<u32> = SemiStaticArray::new(DeviceSpec::a100(), 4);
+        s.insert_bulk(&(0..100).collect::<Vec<_>>(), InsertionKind::WarpScan).unwrap();
+        assert_eq!(s.len(), 100);
+        assert!(s.capacity() >= 100);
+        assert!(s.capacity() <= 256);
+        assert!(s.grows() >= 5, "4→128 needs ≥5 doublings, got {}", s.grows());
+        for i in 0..100 {
+            assert_eq!(s.get(i), Some(i as u32));
+        }
+    }
+
+    #[test]
+    fn peak_memory_hits_3x_during_copy() {
+        let spec = DeviceSpec::a100();
+        let n = 1 << 16;
+        let mut s: SemiStaticArray<u64> = SemiStaticArray::new(spec, n);
+        s.insert_bulk(&vec![1u64; n], InsertionKind::WarpScan).unwrap();
+        s.grow_for(1).unwrap(); // forces 2n alloc while n is live
+        let peak = s.peak_bytes() as f64;
+        let live = (n * 8) as f64;
+        assert!(peak >= 2.9 * live, "peak {peak} vs live {live}");
+    }
+
+    #[test]
+    fn grow_costs_scale_with_copy_size() {
+        let spec = DeviceSpec::a100();
+        let mut small: SemiStaticArray<u32> = SemiStaticArray::new(spec.clone(), 1 << 10);
+        let mut large: SemiStaticArray<u32> = SemiStaticArray::new(spec, 1 << 22);
+        small.insert_bulk(&vec![1; 1 << 10], InsertionKind::WarpScan).unwrap();
+        large.insert_bulk(&vec![1; 1 << 22], InsertionKind::WarpScan).unwrap();
+        let t_small = small.grow_for(1).unwrap().us;
+        let t_large = large.grow_for(1).unwrap().us;
+        assert!(t_large > t_small, "copy cost must grow: {t_small} vs {t_large}");
+    }
+
+    #[test]
+    fn host_sync_charged_on_grow() {
+        let mut s: SemiStaticArray<u32> = SemiStaticArray::new(DeviceSpec::a100(), 2);
+        s.insert_bulk(&[1, 2, 3, 4, 5], InsertionKind::WarpScan).unwrap();
+        assert!(s.clock().total(Category::Host) > 0.0);
+    }
+}

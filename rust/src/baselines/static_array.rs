@@ -1,0 +1,213 @@
+//! Static baseline (paper §III.A.1): a flat array `cudaMalloc`ed once at
+//! program start. In-kernel insertions work (parallel insertion algorithm
+//! over a global size counter) but the capacity can never change — the
+//! program must know the worst case up front or die with a segfault
+//! (here: a simulated OOM).
+
+use crate::ggarray::array::OpReport;
+use crate::insertion::{self, InsertionKind, InsertShape};
+use crate::sim::clock::{Clock, Phase};
+use crate::sim::kernel::{self, KernelProfile};
+use crate::sim::memory::{OomError, VramHeap};
+use crate::sim::spec::DeviceSpec;
+
+use super::GrowableArray;
+
+/// Pre-allocated flat device array.
+#[derive(Debug)]
+pub struct StaticArray<T> {
+    spec: DeviceSpec,
+    heap: VramHeap,
+    clock: Clock,
+    data: Vec<T>,
+    len: usize,
+    capacity: usize,
+}
+
+impl<T: Copy + Default> StaticArray<T> {
+    /// Allocate `capacity` slots up front.
+    pub fn new(spec: DeviceSpec, capacity: usize) -> StaticArray<T> {
+        let mut heap = VramHeap::new(spec.clone());
+        let mut clock = Clock::new();
+        heap.alloc((capacity * std::mem::size_of::<T>()) as u64, &mut clock)
+            .expect("static array larger than device memory");
+        StaticArray { spec, heap, clock, data: vec![T::default(); capacity], len: 0, capacity }
+    }
+
+    /// As [`new`](Self::new) but fallible (budget experiments).
+    pub fn try_new(spec: DeviceSpec, capacity: usize, heap_capacity: u64) -> Result<StaticArray<T>, OomError> {
+        let mut heap = VramHeap::with_capacity(spec.clone(), heap_capacity);
+        let mut clock = Clock::new();
+        heap.alloc((capacity * std::mem::size_of::<T>()) as u64, &mut clock)?;
+        Ok(StaticArray { spec, heap, clock, data: vec![T::default(); capacity], len: 0, capacity })
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    pub fn spec(&self) -> &DeviceSpec {
+        &self.spec
+    }
+
+    /// Peak simulated VRAM (= the full pre-allocation, by construction).
+    pub fn peak_bytes(&self) -> u64 {
+        self.heap.peak()
+    }
+
+    /// Direct slice access (flatten target, work-phase kernels).
+    pub fn as_slice(&self) -> &[T] {
+        &self.data[..self.len]
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data[..self.len]
+    }
+
+    /// Adopt `values` wholesale (used as the flatten destination).
+    pub fn fill_from(&mut self, values: &[T]) -> Result<(), OomError> {
+        if values.len() > self.capacity {
+            return Err(OomError {
+                requested: (values.len() * std::mem::size_of::<T>()) as u64,
+                free: ((self.capacity - self.len) * std::mem::size_of::<T>()) as u64,
+                capacity: (self.capacity * std::mem::size_of::<T>()) as u64,
+            });
+        }
+        self.data[..values.len()].copy_from_slice(values);
+        self.len = values.len();
+        Ok(())
+    }
+}
+
+impl<T: Copy + Default> GrowableArray<T> for StaticArray<T> {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn allocated_bytes(&self) -> u64 {
+        (self.capacity * std::mem::size_of::<T>()) as u64
+    }
+
+    /// Static arrays cannot grow: succeeds as a no-op when capacity
+    /// already suffices, otherwise reports the would-be segfault as OOM.
+    fn grow_for(&mut self, extra: usize) -> Result<OpReport, OomError> {
+        if self.len + extra <= self.capacity {
+            Ok(OpReport::default())
+        } else {
+            Err(OomError {
+                requested: (extra * std::mem::size_of::<T>()) as u64,
+                free: ((self.capacity - self.len) * std::mem::size_of::<T>()) as u64,
+                capacity: (self.capacity * std::mem::size_of::<T>()) as u64,
+            })
+        }
+    }
+
+    fn insert_bulk(&mut self, values: &[T], kind: InsertionKind) -> Result<OpReport, OomError> {
+        self.grow_for(values.len())?;
+        let phase = Phase::start(&self.clock);
+        self.data[self.len..self.len + values.len()].copy_from_slice(values);
+        self.len += values.len();
+        let shape = InsertShape::static_array(
+            &self.spec,
+            values.len().max(self.len) as u64,
+            values.len() as u64,
+            std::mem::size_of::<T>() as u64,
+        );
+        kernel::launch(&self.spec, &mut self.clock, &insertion::profile(&self.spec, kind, &shape));
+        Ok(OpReport { us: phase.elapsed_us(&self.clock), buckets_allocated: 0, elements: values.len() as u64 })
+    }
+
+    fn read_write(&mut self, flops_per_elem: f64, f: &mut dyn FnMut(&mut T)) -> OpReport {
+        let phase = Phase::start(&self.clock);
+        for v in &mut self.data[..self.len] {
+            f(v);
+        }
+        let n = self.len as f64;
+        let elem = std::mem::size_of::<T>() as f64;
+        let profile = KernelProfile {
+            blocks: crate::util::math::ceil_div(self.len.max(1) as u64, 1024),
+            threads_per_block: 1024,
+            bytes: 2.0 * elem * n,
+            coalescing_eff: self.spec.cost.coalesced_eff,
+            flops_fp32: flops_per_elem * n,
+            flops_mxu: 0.0,
+            mxu_utilisation: 1.0,
+            per_block_us: 0.0,
+            atomic_us: 0.0,
+            extra_us: 0.0,
+        };
+        kernel::launch(&self.spec, &mut self.clock, &profile);
+        OpReport { us: phase.elapsed_us(&self.clock), buckets_allocated: 0, elements: self.len as u64 }
+    }
+
+    fn get(&self, i: u64) -> Option<T> {
+        if (i as usize) < self.len {
+            Some(self.data[i as usize])
+        } else {
+            None
+        }
+    }
+
+    fn elapsed_us(&self) -> f64 {
+        self.clock.now_us()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_read() {
+        let mut s: StaticArray<u32> = StaticArray::new(DeviceSpec::a100(), 100);
+        s.insert_bulk(&[1, 2, 3], InsertionKind::Atomic).unwrap();
+        s.insert_bulk(&[4, 5], InsertionKind::WarpScan).unwrap();
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.get(0), Some(1));
+        assert_eq!(s.get(4), Some(5));
+        assert_eq!(s.get(5), None);
+        assert_eq!(s.capacity(), 100);
+    }
+
+    #[test]
+    fn overflow_is_simulated_segfault() {
+        let mut s: StaticArray<u8> = StaticArray::new(DeviceSpec::a100(), 4);
+        s.insert_bulk(&[1, 2, 3], InsertionKind::WarpScan).unwrap();
+        assert!(s.insert_bulk(&[4, 5], InsertionKind::WarpScan).is_err());
+        assert_eq!(s.len(), 3, "failed insert must not partially apply");
+    }
+
+    #[test]
+    fn grow_is_noop_within_capacity() {
+        let mut s: StaticArray<u64> = StaticArray::new(DeviceSpec::titan_rtx(), 10);
+        let rep = s.grow_for(10).unwrap();
+        assert_eq!(rep.us, 0.0);
+        assert!(s.grow_for(11).is_err());
+    }
+
+    #[test]
+    fn rw_applies_and_is_fast() {
+        let mut s: StaticArray<u32> = StaticArray::new(DeviceSpec::a100(), 1 << 20);
+        s.insert_bulk(&vec![10u32; 1 << 20], InsertionKind::WarpScan).unwrap();
+        let rep = s.read_write(30.0, &mut |x| *x += 1);
+        assert_eq!(s.get(0), Some(11));
+        assert!(rep.us > 0.0);
+    }
+
+    #[test]
+    fn fill_from_respects_capacity() {
+        let mut s: StaticArray<u32> = StaticArray::new(DeviceSpec::a100(), 4);
+        s.fill_from(&[9, 8, 7]).unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.as_slice(), &[9, 8, 7]);
+        assert!(s.fill_from(&[0; 5]).is_err());
+    }
+}

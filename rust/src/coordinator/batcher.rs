@@ -1,0 +1,161 @@
+//! Per-service insert batching: accumulate small insert requests into one
+//! device-sized batch, flushing on size or deadline — amortising kernel
+//! launches and the per-insert scan overhead exactly the way a serving
+//! router amortises prefill batches.
+
+use std::time::{Duration, Instant};
+
+/// Batching configuration.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Flush when this many values are pending.
+    pub max_values: usize,
+    /// Flush when the oldest pending value has waited this long.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> BatchConfig {
+        BatchConfig { max_values: 1 << 16, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// A flushed batch.
+#[derive(Debug)]
+pub struct Batch {
+    pub values: Vec<f32>,
+    /// How many client requests were coalesced.
+    pub requests: usize,
+    /// Age of the oldest request at flush time.
+    pub oldest_age: Duration,
+}
+
+/// Accumulator. Not thread-safe by itself — the service owns it inside
+/// its event loop.
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatchConfig,
+    pending: Vec<f32>,
+    requests: usize,
+    oldest: Option<Instant>,
+    flushes: u64,
+    coalesced_total: u64,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatchConfig) -> Batcher {
+        Batcher { cfg, pending: Vec::new(), requests: 0, oldest: None, flushes: 0, coalesced_total: 0 }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn flushes(&self) -> u64 {
+        self.flushes
+    }
+
+    /// Mean requests coalesced per flush (batching effectiveness metric).
+    pub fn mean_coalescing(&self) -> f64 {
+        if self.flushes == 0 {
+            0.0
+        } else {
+            self.coalesced_total as f64 / self.flushes as f64
+        }
+    }
+
+    /// Add values; returns a batch if the size threshold tripped.
+    pub fn push(&mut self, values: &[f32]) -> Option<Batch> {
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.extend_from_slice(values);
+        self.requests += 1;
+        if self.pending.len() >= self.cfg.max_values {
+            return Some(self.flush_now());
+        }
+        None
+    }
+
+    /// Deadline check — the event loop calls this on idle ticks.
+    pub fn poll_deadline(&mut self) -> Option<Batch> {
+        match self.oldest {
+            Some(t) if t.elapsed() >= self.cfg.max_delay && !self.pending.is_empty() => Some(self.flush_now()),
+            _ => None,
+        }
+    }
+
+    /// Unconditional flush (shutdown, explicit barrier before Work/
+    /// Flatten/Query so ordering is preserved).
+    pub fn flush(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.flush_now())
+        }
+    }
+
+    fn flush_now(&mut self) -> Batch {
+        let values = std::mem::take(&mut self.pending);
+        let requests = std::mem::replace(&mut self.requests, 0);
+        let oldest_age = self.oldest.take().map(|t| t.elapsed()).unwrap_or_default();
+        self.flushes += 1;
+        self.coalesced_total += requests as u64;
+        Batch { values, requests, oldest_age }
+    }
+
+    /// Time until the current deadline expires (event-loop park hint).
+    pub fn time_to_deadline(&self) -> Option<Duration> {
+        self.oldest.map(|t| self.cfg.max_delay.saturating_sub(t.elapsed()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_threshold_flushes() {
+        let mut b = Batcher::new(BatchConfig { max_values: 10, max_delay: Duration::from_secs(60) });
+        assert!(b.push(&[1.0; 4]).is_none());
+        assert!(b.push(&[2.0; 4]).is_none());
+        let batch = b.push(&[3.0; 4]).expect("threshold crossed");
+        assert_eq!(batch.values.len(), 12);
+        assert_eq!(batch.requests, 3);
+        assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.flushes(), 1);
+    }
+
+    #[test]
+    fn deadline_flushes() {
+        let mut b = Batcher::new(BatchConfig { max_values: 1000, max_delay: Duration::from_millis(1) });
+        b.push(&[1.0]);
+        assert!(b.poll_deadline().is_none() || b.poll_deadline().is_some()); // may or may not have expired yet
+        std::thread::sleep(Duration::from_millis(3));
+        let batch = b.poll_deadline().expect("deadline expired");
+        assert_eq!(batch.values, vec![1.0]);
+        assert!(batch.oldest_age >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn explicit_flush_and_empty() {
+        let mut b = Batcher::new(BatchConfig::default());
+        assert!(b.flush().is_none());
+        b.push(&[5.0, 6.0]);
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.values, vec![5.0, 6.0]);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn coalescing_metric() {
+        let mut b = Batcher::new(BatchConfig { max_values: 4, max_delay: Duration::from_secs(1) });
+        b.push(&[1.0]);
+        b.push(&[2.0]);
+        b.push(&[3.0]);
+        let _ = b.push(&[4.0]).unwrap(); // 4 requests → 1 flush
+        b.push(&[9.0; 4]).unwrap(); // 1 request → 1 flush
+        assert_eq!(b.flushes(), 2);
+        assert!((b.mean_coalescing() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,166 @@
+//! Service metrics: request counters, simulated-time ledger, wall-clock
+//! latency summaries.
+
+use std::time::Instant;
+
+use crate::util::stats::Welford;
+
+/// Live metrics owned by the service worker.
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    pub inserts_requested: u64,
+    pub elements_inserted: u64,
+    pub batches: u64,
+    pub work_calls: u64,
+    pub flattens: u64,
+    pub queries: u64,
+    pub errors: u64,
+    pub pjrt_executions: u64,
+    /// Simulated GPU µs per op class.
+    pub sim_insert_us: f64,
+    pub sim_work_us: f64,
+    pub sim_flatten_us: f64,
+    /// Wall-clock per-request latency (µs).
+    latency: Welford,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            inserts_requested: 0,
+            elements_inserted: 0,
+            batches: 0,
+            work_calls: 0,
+            flattens: 0,
+            queries: 0,
+            errors: 0,
+            pjrt_executions: 0,
+            sim_insert_us: 0.0,
+            sim_work_us: 0.0,
+            sim_flatten_us: 0.0,
+            latency: Welford::new(),
+        }
+    }
+
+    pub fn observe_latency_us(&mut self, us: f64) {
+        self.latency.push(us);
+    }
+
+    pub fn snapshot(&self, len: u64, capacity: u64, allocated_bytes: u64) -> MetricsSnapshot {
+        MetricsSnapshot {
+            uptime_s: self.started.elapsed().as_secs_f64(),
+            inserts_requested: self.inserts_requested,
+            elements_inserted: self.elements_inserted,
+            batches: self.batches,
+            work_calls: self.work_calls,
+            flattens: self.flattens,
+            queries: self.queries,
+            errors: self.errors,
+            pjrt_executions: self.pjrt_executions,
+            sim_insert_ms: self.sim_insert_us / 1e3,
+            sim_work_ms: self.sim_work_us / 1e3,
+            sim_flatten_ms: self.sim_flatten_us / 1e3,
+            mean_latency_us: self.latency.mean(),
+            p_latency_count: self.latency.count(),
+            len,
+            capacity,
+            allocated_bytes,
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Immutable snapshot returned by `Request::Stats`.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub uptime_s: f64,
+    pub inserts_requested: u64,
+    pub elements_inserted: u64,
+    pub batches: u64,
+    pub work_calls: u64,
+    pub flattens: u64,
+    pub queries: u64,
+    pub errors: u64,
+    pub pjrt_executions: u64,
+    pub sim_insert_ms: f64,
+    pub sim_work_ms: f64,
+    pub sim_flatten_ms: f64,
+    pub mean_latency_us: f64,
+    pub p_latency_count: u64,
+    pub len: u64,
+    pub capacity: u64,
+    pub allocated_bytes: u64,
+}
+
+impl MetricsSnapshot {
+    /// Memory overhead vs live data (the paper's ≤2× claim, observable
+    /// live).
+    pub fn overhead_ratio(&self) -> f64 {
+        if self.len == 0 {
+            return f64::NAN;
+        }
+        self.allocated_bytes as f64 / (self.len * 4) as f64
+    }
+
+    /// Mean batching effectiveness.
+    pub fn coalescing(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.inserts_requested as f64 / self.batches as f64
+        }
+    }
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "uptime               {:.2}s", self.uptime_s)?;
+        writeln!(f, "insert requests      {}", self.inserts_requested)?;
+        writeln!(f, "elements inserted    {}", self.elements_inserted)?;
+        writeln!(f, "batches (coalescing) {} ({:.1}×)", self.batches, self.coalescing())?;
+        writeln!(f, "work calls           {}", self.work_calls)?;
+        writeln!(f, "flattens             {}", self.flattens)?;
+        writeln!(f, "queries              {}", self.queries)?;
+        writeln!(f, "errors               {}", self.errors)?;
+        writeln!(f, "PJRT executions      {}", self.pjrt_executions)?;
+        writeln!(f, "sim insert/work/flat {:.2} / {:.2} / {:.2} ms", self.sim_insert_ms, self.sim_work_ms, self.sim_flatten_ms)?;
+        writeln!(f, "mean request latency {:.1} µs over {}", self.mean_latency_us, self.p_latency_count)?;
+        writeln!(f, "len / capacity       {} / {}", self.len, self.capacity)?;
+        write!(f, "allocated            {} (overhead {:.2}×)", crate::util::tables::fmt_bytes(self.allocated_bytes), self.overhead_ratio())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_carries_counters() {
+        let mut m = Metrics::new();
+        m.inserts_requested = 10;
+        m.batches = 4;
+        m.elements_inserted = 1000;
+        m.observe_latency_us(50.0);
+        m.observe_latency_us(150.0);
+        let s = m.snapshot(1000, 2000, 8000);
+        assert_eq!(s.inserts_requested, 10);
+        assert!((s.coalescing() - 2.5).abs() < 1e-12);
+        assert!((s.mean_latency_us - 100.0).abs() < 1e-9);
+        assert!((s.overhead_ratio() - 2.0).abs() < 1e-12);
+        let text = s.to_string();
+        assert!(text.contains("overhead 2.00×"));
+    }
+
+    #[test]
+    fn empty_overhead_is_nan() {
+        let m = Metrics::new();
+        assert!(m.snapshot(0, 0, 0).overhead_ratio().is_nan());
+    }
+}

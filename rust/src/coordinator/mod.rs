@@ -1,0 +1,11 @@
+//! Dynamic-memory workload coordinator (Layer 3 service).
+//!
+//! Routes insertion/work/flatten requests onto the GGArray's per-block
+//! LFVectors, batches them per block, and drives the AOT work kernels via
+//! the PJRT runtime. See `service` for the event loop.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod service;

@@ -1,0 +1,101 @@
+//! Request/response protocol of the coordinator service.
+
+use super::metrics::MetricsSnapshot;
+
+/// Operations a client can submit.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Append values to the growable array (routed + batched per block).
+    Insert { values: Vec<f32> },
+    /// Run the +1×30 work kernel `calls` times over the whole array
+    /// (through the AOT PJRT executable when artifacts are available).
+    Work { calls: u32 },
+    /// Flatten into a contiguous buffer (two-phase pattern); the array
+    /// keeps its contents.
+    Flatten,
+    /// Read one element by global index.
+    Query { index: u64 },
+    /// Metrics snapshot.
+    Stats,
+    /// Drop all contents (keeps the service and compiled artifacts warm).
+    Clear,
+    /// Drain and stop the worker.
+    Shutdown,
+}
+
+/// Replies, one per request.
+#[derive(Debug, Clone)]
+pub enum Response {
+    Inserted {
+        count: u64,
+        /// Simulated GPU time charged (µs).
+        sim_us: f64,
+        /// New total length.
+        len: u64,
+    },
+    Worked {
+        calls: u32,
+        sim_us: f64,
+        /// PJRT executions performed (0 on the host fallback path).
+        pjrt_executions: u64,
+    },
+    Flattened {
+        len: u64,
+        sim_us: f64,
+        /// Checksum of the flattened data (order-sensitive) for e2e
+        /// validation.
+        checksum: u64,
+    },
+    Value(Option<f32>),
+    Stats(MetricsSnapshot),
+    Cleared,
+    ShuttingDown,
+    Error(String),
+}
+
+impl Response {
+    /// Convenience for tests: panic unless the response is the expected
+    /// success variant.
+    pub fn expect_inserted(self) -> (u64, f64, u64) {
+        match self {
+            Response::Inserted { count, sim_us, len } => (count, sim_us, len),
+            other => panic!("expected Inserted, got {other:?}"),
+        }
+    }
+
+    pub fn expect_value(self) -> Option<f32> {
+        match self {
+            Response::Value(v) => v,
+            other => panic!("expected Value, got {other:?}"),
+        }
+    }
+}
+
+/// Order-sensitive checksum used by `Flattened` (FNV-1a over bit
+/// patterns).
+pub fn checksum(data: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for x in data {
+        h ^= x.to_bits() as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checksum_is_order_sensitive() {
+        assert_ne!(checksum(&[1.0, 2.0]), checksum(&[2.0, 1.0]));
+        assert_eq!(checksum(&[1.0, 2.0]), checksum(&[1.0, 2.0]));
+        assert_ne!(checksum(&[]), checksum(&[0.0]));
+    }
+
+    #[test]
+    #[should_panic(expected = "expected Inserted")]
+    fn expect_inserted_panics_on_error() {
+        Response::Error("nope".into()).expect_inserted();
+    }
+}

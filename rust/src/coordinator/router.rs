@@ -1,0 +1,172 @@
+//! Insertion routing: decide how a batch of new elements is split across
+//! the GGArray's LFVectors (thread blocks).
+//!
+//! The paper's insertions are even by construction (one per existing
+//! element). A service sees arbitrary batches, so the router also offers
+//! a least-loaded policy that keeps LFVector sizes balanced — important
+//! because the rw_b critical path is the *largest* LFVector, and the
+//! worst-contended per-block size counter bounds the atomic path.
+
+/// Routing policy for insert batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Split the batch evenly over all blocks (paper's scheme).
+    Even,
+    /// Fill the currently-smallest blocks first (rebalancing).
+    LeastLoaded,
+    /// Deterministic hash of a batch sequence number (decorrelates hot
+    /// spots across batches without tracking sizes).
+    Hash,
+}
+
+impl Policy {
+    pub fn by_name(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "even" => Some(Policy::Even),
+            "least_loaded" | "leastloaded" | "balance" => Some(Policy::LeastLoaded),
+            "hash" => Some(Policy::Hash),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Even => "even",
+            Policy::LeastLoaded => "least_loaded",
+            Policy::Hash => "hash",
+        }
+    }
+}
+
+/// Compute per-block insert counts for a batch of `n` elements given the
+/// current per-block sizes. Guarantees `sum(counts) == n` (conservation).
+pub fn route(policy: Policy, sizes: &[u64], n: usize, batch_seq: u64) -> Vec<usize> {
+    let b = sizes.len();
+    assert!(b > 0, "router needs at least one block");
+    match policy {
+        Policy::Even => {
+            (0..b).map(|i| n / b + usize::from(i < n % b)).collect()
+        }
+        Policy::LeastLoaded => {
+            // Water-filling: raise the lowest blocks to a common level.
+            let mut order: Vec<usize> = (0..b).collect();
+            order.sort_by_key(|&i| sizes[i]);
+            let mut counts = vec![0usize; b];
+            let mut remaining = n as u64;
+            // Level pass: bring each prefix up to the next block's size.
+            for k in 0..b {
+                if remaining == 0 {
+                    break;
+                }
+                let next_level = if k + 1 < b { sizes[order[k + 1]] } else { u64::MAX };
+                let cur_level = sizes[order[k]] + counts[order[k]] as u64;
+                if next_level > cur_level {
+                    let gap = (next_level - cur_level).min(remaining / (k as u64 + 1) + 1);
+                    // Fill the k+1 lowest blocks up by `gap` each (bounded
+                    // by remaining).
+                    for &i in &order[..=k] {
+                        let add = gap.min(remaining);
+                        counts[i] += add as usize;
+                        remaining -= add;
+                        if remaining == 0 {
+                            break;
+                        }
+                    }
+                }
+            }
+            // Distribute any tail evenly.
+            let mut i = 0;
+            while remaining > 0 {
+                counts[order[i % b]] += 1;
+                remaining -= 1;
+                i += 1;
+            }
+            counts
+        }
+        Policy::Hash => {
+            // Rotate the even split by a hash of the sequence number.
+            let even = route(Policy::Even, sizes, n, 0);
+            let shift = (batch_seq.wrapping_mul(0x9E3779B97F4A7C15) % b as u64) as usize;
+            (0..b).map(|i| even[(i + b - shift) % b]).collect()
+        }
+    }
+}
+
+/// Max/min block size after applying `counts` — the balance metric.
+pub fn imbalance_after(sizes: &[u64], counts: &[usize]) -> f64 {
+    let after: Vec<u64> = sizes.iter().zip(counts).map(|(&s, &c)| s + c as u64).collect();
+    let max = *after.iter().max().unwrap() as f64;
+    let min = *after.iter().min().unwrap() as f64;
+    if min == 0.0 {
+        if max == 0.0 {
+            1.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        max / min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conservation_all_policies() {
+        let sizes = vec![10u64, 0, 500, 30, 30, 2];
+        for policy in [Policy::Even, Policy::LeastLoaded, Policy::Hash] {
+            for n in [0usize, 1, 5, 6, 7, 1000, 12345] {
+                let counts = route(policy, &sizes, n, 7);
+                assert_eq!(counts.iter().sum::<usize>(), n, "{policy:?} n={n}");
+                assert_eq!(counts.len(), sizes.len());
+            }
+        }
+    }
+
+    #[test]
+    fn even_split_shape() {
+        let counts = route(Policy::Even, &[0; 4], 10, 0);
+        assert_eq!(counts, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn least_loaded_rebalances() {
+        let sizes = vec![100u64, 0, 0, 100];
+        let counts = route(Policy::LeastLoaded, &sizes, 200, 0);
+        let after: Vec<u64> = sizes.iter().zip(&counts).map(|(&s, &c)| s + c as u64).collect();
+        let max = *after.iter().max().unwrap();
+        let min = *after.iter().min().unwrap();
+        assert!(max - min <= 2, "after {after:?}");
+        // Strictly better balance than the even split.
+        let even = route(Policy::Even, &sizes, 200, 0);
+        assert!(imbalance_after(&sizes, &counts) < imbalance_after(&sizes, &even));
+    }
+
+    #[test]
+    fn least_loaded_handles_small_batches() {
+        let sizes = vec![5u64, 1, 9];
+        let counts = route(Policy::LeastLoaded, &sizes, 2, 0);
+        assert_eq!(counts.iter().sum::<usize>(), 2);
+        // Both go to the smallest block.
+        assert_eq!(counts[1], 2, "{counts:?}");
+    }
+
+    #[test]
+    fn hash_varies_with_sequence() {
+        let sizes = vec![0u64; 8];
+        let a = route(Policy::Hash, &sizes, 9, 1);
+        let b = route(Policy::Hash, &sizes, 9, 2);
+        assert_eq!(a.iter().sum::<usize>(), 9);
+        assert_eq!(b.iter().sum::<usize>(), 9);
+        assert_ne!(a, b, "different sequence numbers should rotate the split");
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [Policy::Even, Policy::LeastLoaded, Policy::Hash] {
+            assert_eq!(Policy::by_name(p.name()), Some(p));
+        }
+        assert_eq!(Policy::by_name("bogus"), None);
+    }
+}

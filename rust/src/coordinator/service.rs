@@ -1,0 +1,495 @@
+//! The coordinator service: a worker thread owning the GGArray, fed by an
+//! mpsc request channel. Insert requests are routed (per [`router`]) and
+//! batched (per [`batcher`]); Work/Flatten run through the PJRT runtime
+//! when AOT artifacts are available and fall back to host compute when
+//! not (the numerics are identical — the integration tests assert it).
+//!
+//! No async runtime is available offline; the event loop is a plain
+//! blocking channel with deadline-aware `recv_timeout`, which for an
+//! in-process service is equivalent to (and simpler than) a tokio
+//! single-worker runtime.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::ggarray::array::{GgArray, GgConfig};
+use crate::ggarray::flatten;
+use crate::insertion::InsertionKind;
+use crate::runtime::Executor;
+use crate::sim::spec::DeviceSpec;
+
+use super::batcher::{BatchConfig, Batcher};
+use super::metrics::Metrics;
+use super::request::{checksum, Request, Response};
+use super::router::{self, Policy};
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub device: DeviceSpec,
+    pub blocks: usize,
+    pub first_bucket_size: usize,
+    pub insertion: InsertionKind,
+    pub routing: Policy,
+    pub batch: BatchConfig,
+    /// Try to load AOT artifacts; fall back to host compute when absent.
+    pub use_artifacts: bool,
+    /// +1 iterations per work call (paper: 30).
+    pub work_iters: u32,
+    /// Simulated VRAM budget in bytes (None = the device's full memory).
+    /// Used by failure-injection tests and multi-tenant scenarios.
+    pub heap_capacity: Option<u64>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> CoordinatorConfig {
+        CoordinatorConfig {
+            device: DeviceSpec::a100(),
+            blocks: 512,
+            first_bucket_size: 1024,
+            insertion: InsertionKind::WarpScan,
+            routing: Policy::Even,
+            batch: BatchConfig::default(),
+            use_artifacts: true,
+            work_iters: 30,
+            heap_capacity: None,
+        }
+    }
+}
+
+enum Envelope {
+    Call(Request, mpsc::Sender<Response>),
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<Envelope>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the worker thread.
+    pub fn start(cfg: CoordinatorConfig) -> Coordinator {
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let worker = std::thread::Builder::new()
+            .name("ggarray-coordinator".into())
+            .spawn(move || Worker::new(cfg).run(rx))
+            .expect("spawn coordinator worker");
+        Coordinator { tx, worker: Some(worker) }
+    }
+
+    /// Synchronous call.
+    pub fn call(&self, req: Request) -> Response {
+        let (rtx, rrx) = mpsc::channel();
+        if self.tx.send(Envelope::Call(req, rtx)).is_err() {
+            return Response::Error("coordinator stopped".into());
+        }
+        rrx.recv().unwrap_or_else(|_| Response::Error("coordinator dropped reply".into()))
+    }
+
+    /// Fire-and-forget insert (no response wait) — throughput path.
+    pub fn insert_nowait(&self, values: Vec<f32>) {
+        let (rtx, _rrx) = mpsc::channel();
+        let _ = self.tx.send(Envelope::Call(Request::Insert { values }, rtx));
+    }
+
+    /// A cloneable client handle for concurrent callers (each thread gets
+    /// its own reply channel; the worker serialises requests).
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone() }
+    }
+
+    /// Graceful stop.
+    pub fn shutdown(mut self) {
+        let _ = self.call(Request::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if let Some(h) = self.worker.take() {
+            let (rtx, _r) = mpsc::channel();
+            let _ = self.tx.send(Envelope::Call(Request::Shutdown, rtx));
+            let _ = h.join();
+        }
+    }
+}
+
+/// Cloneable, `Send` handle to a running coordinator — hand one to each
+/// client thread.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<Envelope>,
+}
+
+impl Client {
+    /// Synchronous call (same contract as [`Coordinator::call`]).
+    pub fn call(&self, req: Request) -> Response {
+        let (rtx, rrx) = mpsc::channel();
+        if self.tx.send(Envelope::Call(req, rtx)).is_err() {
+            return Response::Error("coordinator stopped".into());
+        }
+        rrx.recv().unwrap_or_else(|_| Response::Error("coordinator dropped reply".into()))
+    }
+}
+
+struct Worker {
+    cfg: CoordinatorConfig,
+    gg: GgArray<f32>,
+    batcher: Batcher,
+    metrics: Metrics,
+    executor: Option<Executor>,
+    batch_seq: u64,
+}
+
+impl Worker {
+    fn new(cfg: CoordinatorConfig) -> Worker {
+        let gg_cfg = GgConfig {
+            num_blocks: cfg.blocks,
+            threads_per_block: 1024,
+            first_bucket_size: cfg.first_bucket_size,
+            insertion: cfg.insertion,
+        };
+        let executor = if cfg.use_artifacts {
+            match Executor::from_default_dir() {
+                Ok(e) => Some(e),
+                Err(err) => {
+                    eprintln!("[coordinator] artifacts unavailable, using host fallback: {err}");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        let gg = match cfg.heap_capacity {
+            Some(cap) => GgArray::with_heap(
+                gg_cfg,
+                cfg.device.clone(),
+                crate::sim::memory::VramHeap::with_capacity(cfg.device.clone(), cap),
+            ),
+            None => GgArray::new(gg_cfg, cfg.device.clone()),
+        };
+        Worker {
+            gg,
+            batcher: Batcher::new(cfg.batch.clone()),
+            metrics: Metrics::new(),
+            executor,
+            batch_seq: 0,
+            cfg,
+        }
+    }
+
+    fn run(mut self, rx: mpsc::Receiver<Envelope>) {
+        loop {
+            let wait = self
+                .batcher
+                .time_to_deadline()
+                .unwrap_or(Duration::from_millis(50))
+                .max(Duration::from_micros(100));
+            match rx.recv_timeout(wait) {
+                Ok(Envelope::Call(req, reply)) => {
+                    let t0 = Instant::now();
+                    let stop = matches!(req, Request::Shutdown);
+                    let resp = self.handle(req);
+                    self.metrics.observe_latency_us(t0.elapsed().as_secs_f64() * 1e6);
+                    let _ = reply.send(resp);
+                    if stop {
+                        return;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if let Some(batch) = self.batcher.poll_deadline() {
+                        self.apply_batch(batch.values, batch.requests);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+    }
+
+    /// Flush pending inserts before any op that observes array state.
+    fn barrier(&mut self) {
+        if let Some(batch) = self.batcher.flush() {
+            self.apply_batch(batch.values, batch.requests);
+        }
+    }
+
+    fn apply_batch(&mut self, values: Vec<f32>, requests: usize) {
+        let sizes = self.gg.block_sizes();
+        let counts = router::route(self.cfg.routing, &sizes, values.len(), self.batch_seq);
+        self.batch_seq += 1;
+        // Cross-check the per-block offsets against the AOT scan kernel
+        // when available (the real index-assignment path).
+        if let Some(exec) = &self.executor {
+            let counts_i32: Vec<i32> = counts.iter().map(|&c| c as i32).collect();
+            if let Ok((offsets, total)) = exec.scan_offsets("scan_warp_i32_", &counts_i32) {
+                debug_assert_eq!(total as usize, values.len());
+                let expect: Vec<i64> = {
+                    let (o, _) = crate::insertion::assign_indices(0, &counts.iter().map(|&c| c as u32).collect::<Vec<_>>());
+                    o.iter().map(|&x| x as i64).collect()
+                };
+                debug_assert_eq!(offsets, expect, "AOT scan disagrees with host oracle");
+                self.metrics.pjrt_executions += 1;
+            }
+        }
+        let sim0 = self.gg.clock().now_us();
+        let mut off = 0usize;
+        for (b, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if let Err(e) = self.gg.push_bulk_to_block(b, &values[off..off + c]) {
+                eprintln!("[coordinator] simulated OOM during insert: {e}");
+                self.metrics.errors += 1;
+                // Keep the index consistent with whatever landed before
+                // the OOM (no rollback — matches device semantics where
+                // earlier blocks' writes are already visible).
+                self.gg.rebuild_index_charged();
+                self.metrics.elements_inserted += off as u64;
+                return;
+            }
+            off += c;
+        }
+        // Charge the modeled insertion kernel + index rebuild.
+        let shape = crate::insertion::InsertShape {
+            threads: values.len().max(self.gg.len()) as u64,
+            inserts: values.len() as u64,
+            elem_bytes: 4,
+            blocks: self.cfg.blocks as u64,
+            threads_per_block: 1024,
+            counters: self.cfg.blocks as u64,
+            write_eff: self.cfg.device.cost.ggarray_insert_eff,
+        };
+        let profile = crate::insertion::profile(&self.cfg.device, self.cfg.insertion, &shape);
+        {
+            let (_, _, clock, spec, _, _) = self.gg.parts_mut();
+            crate::sim::kernel::launch(spec, clock, &profile);
+        }
+        self.gg.rebuild_index_charged();
+        self.metrics.sim_insert_us += self.gg.clock().now_us() - sim0;
+        self.metrics.batches += 1;
+        self.metrics.elements_inserted += values.len() as u64;
+        let _ = requests;
+    }
+
+    fn handle(&mut self, req: Request) -> Response {
+        match req {
+            Request::Insert { values } => {
+                self.metrics.inserts_requested += 1;
+                let count = values.len() as u64;
+                if let Some(batch) = self.batcher.push(&values) {
+                    self.apply_batch(batch.values, batch.requests);
+                }
+                Response::Inserted { count, sim_us: 0.0, len: self.gg.len() as u64 + self.batcher.pending_len() as u64 }
+            }
+            Request::Work { calls } => {
+                self.barrier();
+                let sim0 = self.gg.clock().now_us();
+                let mut pjrt = 0u64;
+                for _ in 0..calls {
+                    pjrt += self.one_work_pass();
+                    let _ = self.gg.read_write_block(self.cfg.work_iters as f64, |_| {});
+                }
+                self.metrics.work_calls += calls as u64;
+                self.metrics.pjrt_executions += pjrt;
+                let sim_us = self.gg.clock().now_us() - sim0;
+                self.metrics.sim_work_us += sim_us;
+                Response::Worked { calls, sim_us, pjrt_executions: pjrt }
+            }
+            Request::Flatten => {
+                self.barrier();
+                let sim0 = self.gg.clock().now_us();
+                match flatten::flatten(&mut self.gg) {
+                    Ok(flat) => {
+                        self.metrics.flattens += 1;
+                        let sim_us = self.gg.clock().now_us() - sim0;
+                        self.metrics.sim_flatten_us += sim_us;
+                        Response::Flattened { len: flat.data.len() as u64, sim_us, checksum: checksum(&flat.data) }
+                    }
+                    Err(e) => {
+                        self.metrics.errors += 1;
+                        Response::Error(format!("flatten OOM: {e}"))
+                    }
+                }
+            }
+            Request::Query { index } => {
+                self.barrier();
+                self.metrics.queries += 1;
+                Response::Value(self.gg.get(index))
+            }
+            Request::Stats => {
+                let snap = self.metrics.snapshot(
+                    self.gg.len() as u64,
+                    self.gg.capacity() as u64,
+                    self.gg.allocated_bytes(),
+                );
+                Response::Stats(snap)
+            }
+            Request::Clear => {
+                // Discard pending inserts too: Clear means "empty now".
+                let _ = self.batcher.flush();
+                self.gg.clear();
+                self.gg.rebuild_index_charged();
+                Response::Cleared
+            }
+            Request::Shutdown => {
+                self.barrier();
+                Response::ShuttingDown
+            }
+        }
+    }
+
+    /// Apply the real +1×`work_iters` numeric update, through the AOT
+    /// PJRT kernel when possible. Returns PJRT executions done.
+    fn one_work_pass(&mut self) -> u64 {
+        let n = self.gg.len();
+        if n == 0 {
+            return 0;
+        }
+        if let Some(exec) = &self.executor {
+            // Flatten (host copy), run through the artifact family in
+            // chunks, write back.
+            let data = self.gg.to_vec();
+            if let Ok(name) = exec.pick_chunking("work_f32_", data.len()) {
+                let spec_cap = exec.manifest().get(&name).map(|s| s.inputs[0].elements()).unwrap_or(0);
+                if spec_cap > 0 {
+                    let mut out = Vec::with_capacity(data.len());
+                    let mut execs = 0u64;
+                    let mut ok = true;
+                    for chunk in data.chunks(spec_cap) {
+                        match exec.run_f32(&name, &[chunk], chunk.len()) {
+                            Ok(mut r) => {
+                                out.extend(r.swap_remove(0));
+                                execs += 1;
+                            }
+                            Err(e) => {
+                                eprintln!("[coordinator] PJRT work failed, host fallback: {e}");
+                                ok = false;
+                                break;
+                            }
+                        }
+                    }
+                    if ok {
+                        self.gg.overwrite_from(&out);
+                        return execs;
+                    }
+                }
+            }
+        }
+        // Host fallback: identical numerics (30 sequential f32 adds, like
+        // the kernel), applied in place per block.
+        let iters = self.cfg.work_iters;
+        let (vectors, _, _, _, _, _) = self.gg.parts_mut();
+        for v in vectors.iter_mut() {
+            v.for_each_mut(|x| {
+                for _ in 0..iters {
+                    *x += 1.0;
+                }
+            });
+        }
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg(blocks: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            blocks,
+            first_bucket_size: 16,
+            use_artifacts: false, // unit tests must not depend on `make artifacts`
+            batch: BatchConfig { max_values: 64, max_delay: Duration::from_millis(1) },
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    #[test]
+    fn insert_query_roundtrip() {
+        let c = Coordinator::start(test_cfg(4));
+        c.call(Request::Insert { values: (0..100).map(|i| i as f32).collect() });
+        // Query barriers pending batches, so this is totally ordered.
+        let v = c.call(Request::Query { index: 0 }).expect_value();
+        assert_eq!(v, Some(0.0));
+        let v = c.call(Request::Query { index: 99 }).expect_value();
+        assert!(v.is_some());
+        let v = c.call(Request::Query { index: 100 }).expect_value();
+        assert_eq!(v, None);
+        c.shutdown();
+    }
+
+    #[test]
+    fn work_applies_numeric_update() {
+        let cfg = test_cfg(2);
+        let iters = cfg.work_iters as f32;
+        let c = Coordinator::start(cfg);
+        c.call(Request::Insert { values: vec![1.0, 2.0, 3.0] });
+        c.call(Request::Work { calls: 2 });
+        assert_eq!(c.call(Request::Query { index: 0 }).expect_value(), Some(1.0 + 2.0 * iters));
+        assert_eq!(c.call(Request::Query { index: 2 }).expect_value(), Some(3.0 + 2.0 * iters));
+        c.shutdown();
+    }
+
+    #[test]
+    fn flatten_checksum_stable() {
+        let c = Coordinator::start(test_cfg(4));
+        c.call(Request::Insert { values: (0..500).map(|i| i as f32).collect() });
+        let a = match c.call(Request::Flatten) {
+            Response::Flattened { checksum, len, .. } => {
+                assert_eq!(len, 500);
+                checksum
+            }
+            other => panic!("{other:?}"),
+        };
+        let b = match c.call(Request::Flatten) {
+            Response::Flattened { checksum, .. } => checksum,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(a, b);
+        c.shutdown();
+    }
+
+    #[test]
+    fn batching_coalesces_small_inserts() {
+        let c = Coordinator::start(test_cfg(4));
+        for i in 0..200 {
+            c.call(Request::Insert { values: vec![i as f32] });
+        }
+        // Barrier via query, then inspect stats.
+        let _ = c.call(Request::Query { index: 0 });
+        let snap = match c.call(Request::Stats) {
+            Response::Stats(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(snap.elements_inserted, 200);
+        assert!(snap.batches < 200, "batching should coalesce: {} batches", snap.batches);
+        assert!(snap.coalescing() > 1.5, "coalescing {:.2}", snap.coalescing());
+        assert_eq!(snap.len, 200);
+        c.shutdown();
+    }
+
+    #[test]
+    fn stats_overhead_bounded() {
+        let c = Coordinator::start(test_cfg(8));
+        c.call(Request::Insert { values: vec![1.0; 10_000] });
+        let _ = c.call(Request::Query { index: 0 });
+        let snap = match c.call(Request::Stats) {
+            Response::Stats(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert!(snap.overhead_ratio() < 2.3, "overhead {:.2}", snap.overhead_ratio());
+        c.shutdown();
+    }
+
+    #[test]
+    fn drop_without_shutdown_is_clean() {
+        let c = Coordinator::start(test_cfg(2));
+        c.call(Request::Insert { values: vec![1.0] });
+        drop(c); // Drop impl joins the worker
+    }
+}

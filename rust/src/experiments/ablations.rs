@@ -1,0 +1,290 @@
+//! Ablation studies over the design choices DESIGN.md calls out:
+//!
+//! * **A1 — first bucket size**: memory overhead vs grow cost (more,
+//!   smaller buckets track the live size tighter but pay more
+//!   allocations).
+//! * **A2 — insertion algorithm × structure**: the Fig 4 col-1 matrix
+//!   extended to GGArray shapes (per-block counters change the atomic
+//!   story).
+//! * **A3 — routing policy**: block-size imbalance (and therefore the
+//!   rw_b critical path) under skewed insert batches.
+//! * **A4 — batching**: simulated per-insert cost vs batch size — why
+//!   the coordinator amortises kernel launches.
+
+use crate::coordinator::router::{self, Policy};
+use crate::ggarray::array::{GgArray, GgConfig};
+use crate::insertion::{self, InsertionKind, InsertShape};
+use crate::sim::spec::DeviceSpec;
+use crate::util::csv::CsvTable;
+use crate::util::rng::Rng;
+
+use super::report::Report;
+
+/// A1: first-bucket-size sweep on a real 1e6-element structure.
+pub fn first_bucket_sweep() -> CsvTable {
+    let spec = DeviceSpec::a100();
+    let mut t = CsvTable::new(["first_bucket", "buckets_allocated", "grow+insert_sim_ms", "overhead_x"]);
+    let data: Vec<u32> = (0..1_000_000).collect();
+    for fbs in [64usize, 256, 1024, 4096, 16384] {
+        let mut gg: GgArray<u32> = GgArray::new(GgConfig::new(512).with_first_bucket(fbs), spec.clone());
+        let rep = gg.grow_and_insert(&data, InsertionKind::WarpScan);
+        t.push_display([
+            fbs.to_string(),
+            rep.buckets_allocated.to_string(),
+            format!("{:.4}", rep.total_ms()),
+            format!("{:.3}", gg.overhead_ratio()),
+        ]);
+    }
+    t
+}
+
+/// A2: insertion algorithm × (counters, write-eff) matrix at 5.12e8.
+pub fn insertion_matrix() -> CsvTable {
+    let spec = DeviceSpec::a100();
+    let n = 512_000_000u64;
+    let mut t = CsvTable::new(["structure", "atomic_ms", "warp_scan_ms", "mxu_scan_ms"]);
+    let shapes = [
+        ("static (1 counter)", InsertShape::static_array(&spec, n, n, 4)),
+        (
+            "GGArray512 (512 counters)",
+            InsertShape {
+                threads: n,
+                inserts: n,
+                elem_bytes: 4,
+                blocks: 512,
+                threads_per_block: 1024,
+                counters: 512,
+                write_eff: spec.cost.ggarray_insert_eff,
+            },
+        ),
+        (
+            "GGArray32 (32 counters)",
+            InsertShape {
+                threads: n,
+                inserts: n,
+                elem_bytes: 4,
+                blocks: 32,
+                threads_per_block: 1024,
+                counters: 32,
+                write_eff: spec.cost.ggarray_insert_eff,
+            },
+        ),
+    ];
+    for (name, shape) in shapes {
+        let ms = |k| insertion::cost_us(&spec, k, &shape) / 1e3;
+        t.push_display([
+            name.to_string(),
+            format!("{:.2}", ms(InsertionKind::Atomic)),
+            format!("{:.2}", ms(InsertionKind::WarpScan)),
+            format!("{:.2}", ms(InsertionKind::MxuScan)),
+        ]);
+    }
+    t
+}
+
+/// A3: routing policy vs imbalance under skewed batches.
+pub fn routing_imbalance() -> CsvTable {
+    let mut t = CsvTable::new(["policy", "batches", "final_max/min", "rw_b_critical_path_x"]);
+    for policy in [Policy::Even, Policy::LeastLoaded, Policy::Hash] {
+        let mut rng = Rng::new(77);
+        let blocks = 64usize;
+        let mut sizes = vec![0u64; blocks];
+        // Skew: batches arrive in bursts sized LogNormal, and between
+        // batches a random block gets hot direct appends (hot-key skew).
+        let batches = 200;
+        for seq in 0..batches {
+            let n = (rng.lognormal(0.0, 1.0) * 500.0).max(1.0) as usize;
+            let counts = router::route(policy, &sizes, n, seq);
+            for (b, c) in counts.iter().enumerate() {
+                sizes[b] += *c as u64;
+            }
+            // Hot-key appends bypassing the router (worst case for Even).
+            let hot = rng.below(blocks as u64) as usize;
+            sizes[hot] += rng.below(200);
+        }
+        let max = *sizes.iter().max().unwrap() as f64;
+        let min = *sizes.iter().min().unwrap() as f64;
+        let mean = sizes.iter().sum::<u64>() as f64 / blocks as f64;
+        t.push_display([
+            policy.name().to_string(),
+            batches.to_string(),
+            format!("{:.3}", max / min.max(1.0)),
+            // rw_b ends when the largest LFVector finishes.
+            format!("{:.3}", max / mean),
+        ]);
+    }
+    t
+}
+
+/// A4: batch size vs simulated per-element insert cost (launch/scan
+/// amortisation) at 512 blocks.
+pub fn batching_amortisation() -> CsvTable {
+    let spec = DeviceSpec::a100();
+    let mut t = CsvTable::new(["batch_size", "sim_us_per_batch", "sim_ns_per_element"]);
+    for batch in [64u64, 512, 4096, 32768, 262144, 2097152] {
+        let shape = InsertShape {
+            threads: batch,
+            inserts: batch,
+            elem_bytes: 4,
+            blocks: 512.min(batch / 32).max(1),
+            threads_per_block: 1024,
+            counters: 512,
+            write_eff: spec.cost.ggarray_insert_eff,
+        };
+        let us = insertion::cost_us(&spec, InsertionKind::WarpScan, &shape);
+        t.push_display([
+            batch.to_string(),
+            format!("{:.3}", us),
+            format!("{:.2}", us * 1e3 / batch as f64),
+        ]);
+    }
+    t
+}
+
+/// A5: bucket allocation through the buddy sub-allocator vs driver
+/// mallocs — the §II.D "memory managers can complement GGArray" claim,
+/// quantified on the grow phase.
+pub fn suballoc_grow() -> CsvTable {
+    use crate::sim::clock::Clock;
+    use crate::sim::memory::VramHeap;
+    use crate::sim::suballoc::BuddyAllocator;
+    let spec = DeviceSpec::a100();
+    let mut t = CsvTable::new(["buckets", "bucket_kib", "driver_ms", "buddy_ms", "speedup", "buddy_slab_allocs"]);
+    for (buckets, bucket_kib) in [(32u32, 4096u64), (512, 256), (2048, 64), (8192, 16)] {
+        let bytes = bucket_kib * 1024;
+        // Driver path: one cudaMalloc per bucket (what GGArray's
+        // new_bucket does today).
+        let mut heap = VramHeap::new(spec.clone());
+        let mut clock = Clock::new();
+        for _ in 0..buckets {
+            heap.alloc(bytes, &mut clock).unwrap();
+        }
+        let driver_us = clock.now_us();
+        // Buddy path: slabs of 64 MiB, device-side splits.
+        let mut heap2 = VramHeap::new(spec.clone());
+        let mut clock2 = Clock::new();
+        let mut buddy = BuddyAllocator::new(64 << 20, 4096);
+        for _ in 0..buckets {
+            buddy.alloc(bytes, &mut heap2, &mut clock2).unwrap();
+        }
+        let buddy_us = clock2.now_us();
+        t.push_display([
+            buckets.to_string(),
+            bucket_kib.to_string(),
+            format!("{:.3}", driver_us / 1e3),
+            format!("{:.3}", buddy_us / 1e3),
+            format!("{:.1}", driver_us / buddy_us),
+            buddy.slab_allocs().to_string(),
+        ]);
+    }
+    t
+}
+
+pub fn run() -> Report {
+    let mut rep = Report::new("ablations", "Design-choice ablations (first bucket, insertion, routing, batching)");
+    rep.add_with_notes(
+        "A1 first bucket size",
+        first_bucket_sweep(),
+        vec![
+            "Smaller first buckets → tighter memory but more allocations; 1024 balances both (the default).".into(),
+            "fbs=16384 at 512 blocks shows the floor pathology: min capacity B·fbs = 8.4M slots ≫ 1M live → 8.4× overhead.".into(),
+        ],
+    );
+    rep.add_with_notes(
+        "A2 insertion algorithm x structure",
+        insertion_matrix(),
+        vec![
+            "Single global counter (static): scan wins by ~4× — the paper's Fig 4 result.".into(),
+            "Per-LFVector counters dilute atomic contention ~B×, making atomic competitive again (it also skips the scan's aux traffic) — an insight the per-block design enables but the paper does not explore.".into(),
+        ],
+    );
+    rep.add_with_notes(
+        "A3 routing policy under skew",
+        routing_imbalance(),
+        vec!["LeastLoaded bounds the rw_b critical path under hot-key skew; Even does not.".into()],
+    );
+    rep.add_with_notes(
+        "A4 batching amortisation",
+        batching_amortisation(),
+        vec!["Per-element cost falls ~100x from 64-element to 2M-element batches — the batcher's reason to exist.".into()],
+    );
+    rep.add_with_notes(
+        "A5 buddy sub-allocator grow phase",
+        suballoc_grow(),
+        vec!["Slab + device-side buddy splits vs one driver malloc per bucket (§II.D: why allocator research complements GGArray). GGArray512's 8.76 ms grow drops to sub-ms.".into()],
+    );
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a1_fbs_tradeoff() {
+        let t = first_bucket_sweep();
+        let ovh: Vec<f64> = t.rows().iter().map(|r| r[3].parse().unwrap()).collect();
+        let allocs: Vec<f64> = t.rows().iter().map(|r| r[1].parse().unwrap()).collect();
+        // Bigger first buckets → fewer allocations...
+        for w in allocs.windows(2) {
+            assert!(w[1] <= w[0], "{allocs:?}");
+        }
+        // ...and overhead bounded by 2+ε while above the B·fbs floor
+        // (fbs ≤ 1024 at 512 blocks / 1e6 elements)...
+        for (row, o) in t.rows().iter().zip(&ovh) {
+            let fbs: usize = row[0].parse().unwrap();
+            if fbs <= 1024 {
+                assert!(*o < 2.2, "fbs {fbs}: {o}");
+            }
+        }
+        // ...but the floor pathology bites at fbs=16384: wasteful.
+        assert!(*ovh.last().unwrap() > 4.0, "{ovh:?}");
+    }
+
+    #[test]
+    fn a2_counter_count_changes_the_winner() {
+        let t = insertion_matrix();
+        // Single global counter (the paper's Fig 4 setting): scan wins.
+        let static_row = &t.rows()[0];
+        let (st_atomic, st_scan): (f64, f64) = (static_row[1].parse().unwrap(), static_row[2].parse().unwrap());
+        assert!(st_scan < st_atomic, "paper result must hold: {static_row:?}");
+        // Per-block counters relieve atomic contention by ~B×.
+        let gg512_atomic: f64 = t.rows()[1][1].parse().unwrap();
+        assert!(gg512_atomic < st_atomic / 2.0);
+        // And the scan's relative advantage disappears (the ablation's
+        // finding — aux traffic dominates once contention is gone).
+        let gg512_scan: f64 = t.rows()[1][2].parse().unwrap();
+        assert!(gg512_atomic < gg512_scan * 1.2, "atomic should be competitive: {gg512_atomic} vs {gg512_scan}");
+    }
+
+    #[test]
+    fn a3_least_loaded_best_balance() {
+        let t = routing_imbalance();
+        let get = |p: &str| -> f64 {
+            t.rows().iter().find(|r| r[0] == p).unwrap()[2].parse().unwrap()
+        };
+        assert!(get("least_loaded") < get("even"));
+        assert!(get("least_loaded") < get("hash"));
+    }
+
+    #[test]
+    fn a5_buddy_speedup_everywhere() {
+        let t = suballoc_grow();
+        for row in t.rows() {
+            let speedup: f64 = row[4].parse().unwrap();
+            assert!(speedup > 3.0, "{row:?}");
+            // Slab count far below bucket count (driver-path savings).
+            let buckets: f64 = row[0].parse().unwrap();
+            let slabs: f64 = row[5].parse().unwrap();
+            assert!(slabs < buckets / 4.0, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn a4_amortisation_two_orders() {
+        let t = batching_amortisation();
+        let first: f64 = t.rows().first().unwrap()[2].parse().unwrap();
+        let last: f64 = t.rows().last().unwrap()[2].parse().unwrap();
+        assert!(first / last > 50.0, "amortisation {first} → {last}");
+    }
+}

@@ -1,0 +1,187 @@
+//! Fig 6: speedup of GGArray over memMap in a two-phase application —
+//! insert phases grow the array to 1e9 elements over 5 iterations, each
+//! followed by a work phase of `w` calls of the +1 kernel (w ∈ [1, 1000]).
+//! GGArray flattens once per phase so the work runs at static-array speed.
+
+use crate::sim::spec::DeviceSpec;
+use crate::util::csv::CsvTable;
+
+use super::fig4::{modeled_grow_us, modeled_insert_us};
+use super::fig5::CapSim;
+use super::report::Report;
+use crate::insertion::{self, InsertionKind, InsertShape};
+use crate::sim::kernel;
+
+pub struct Params {
+    pub final_size: u64,
+    pub phases: u32,
+    pub blocks: u64,
+    pub first_bucket: u64,
+    pub elem_bytes: u64,
+    pub inserts_per_elem: Vec<u64>,
+    pub work_calls: Vec<u32>,
+}
+
+impl Default for Params {
+    fn default() -> Params {
+        Params {
+            final_size: 1_000_000_000,
+            phases: 5,
+            blocks: 512,
+            first_bucket: 1024,
+            elem_bytes: 4,
+            inserts_per_elem: vec![1, 3, 10],
+            work_calls: vec![1, 2, 5, 10, 20, 50, 100, 200, 500, 1000],
+        }
+    }
+}
+
+/// Total modeled time (µs) of the two-phase application on each structure.
+pub fn two_phase_times(spec: &DeviceSpec, p: &Params, k: u64, w: u32) -> (f64, f64) {
+    let growth = (k + 1).pow(p.phases);
+    let start = (p.final_size / growth).max(1);
+    let page = spec.cost.vmm_page_bytes;
+
+    // ---- memMap ----
+    let mut t_mm = 0.0;
+    {
+        let mut size = start;
+        let mut mapped_pages = crate::util::math::ceil_div(size * p.elem_bytes, page);
+        t_mm += spec.cost.vmm_reserve_us
+            + mapped_pages as f64 * spec.cost.vmm_map_page_us
+            + insertion::cost_us(
+                spec,
+                InsertionKind::WarpScan,
+                &InsertShape::static_array(spec, size, size, p.elem_bytes),
+            );
+        for _ in 0..p.phases {
+            let ins = size * k;
+            let need_pages = crate::util::math::ceil_div((size + ins) * p.elem_bytes, page);
+            t_mm += spec.cost.host_sync_us
+                + need_pages.saturating_sub(mapped_pages) as f64 * spec.cost.vmm_map_page_us;
+            mapped_pages = mapped_pages.max(need_pages);
+            t_mm += insertion::cost_us(
+                spec,
+                InsertionKind::WarpScan,
+                &InsertShape::static_array(spec, size.max(ins), ins, p.elem_bytes),
+            );
+            size += ins;
+            // Work phase on the contiguous array.
+            let rw = kernel::streaming_us(spec, 2.0 * (size * p.elem_bytes) as f64, spec.cost.coalesced_eff)
+                + spec.cost.kernel_launch_us;
+            t_mm += w as f64 * rw;
+        }
+    }
+
+    // ---- GGArray + flatten ----
+    let mut t_gg = 0.0;
+    {
+        let mut size = start;
+        let mut cap = CapSim::new(p.first_bucket);
+        let (nb, bytes) = cap.grow_to(crate::util::math::ceil_div(size, p.blocks), p.elem_bytes);
+        t_gg += modeled_grow_us(spec, p.blocks * nb.max(1) as u64, bytes * p.blocks)
+            + modeled_insert_us(spec, p.blocks, size, p.elem_bytes);
+        for _ in 0..p.phases {
+            let ins = size * k;
+            let (nb, bytes) = cap.grow_to(crate::util::math::ceil_div(size + ins, p.blocks), p.elem_bytes);
+            t_gg += if nb > 0 {
+                modeled_grow_us(spec, p.blocks * nb as u64, bytes * p.blocks)
+            } else {
+                spec.cost.kernel_launch_us
+            };
+            t_gg += modeled_insert_us(spec, p.blocks, ins, p.elem_bytes);
+            size += ins;
+            // Flatten once: read at block eff, write coalesced, + dst alloc.
+            let read = (size * p.elem_bytes) as f64;
+            let eff = crate::insertion::warp_scan::blended_eff(
+                read,
+                spec.cost.ggarray_block_eff,
+                read,
+                spec.cost.coalesced_eff,
+            );
+            t_gg += spec.cost.kernel_launch_us
+                + spec.cost.malloc_base_us
+                + 2.0 * read / (spec.bw_bytes_per_us() * eff);
+            // Work phase at static speed on the flattened buffer.
+            let rw = kernel::streaming_us(spec, 2.0 * (size * p.elem_bytes) as f64, spec.cost.coalesced_eff)
+                + spec.cost.kernel_launch_us;
+            t_gg += w as f64 * rw;
+        }
+    }
+    (t_mm, t_gg)
+}
+
+pub fn run(p: &Params) -> Report {
+    let mut rep = Report::new("fig6", "Two-phase application: speedup of GGArray over memMap");
+    for spec in [DeviceSpec::titan_rtx(), DeviceSpec::a100()] {
+        let mut t = CsvTable::new(["inserts_per_elem", "work_calls", "t_memmap_ms", "t_ggarray_ms", "speedup"]);
+        for &k in &p.inserts_per_elem {
+            for &w in &p.work_calls {
+                let (mm, gg) = two_phase_times(&spec, p, k, w);
+                t.push_display([
+                    k.to_string(),
+                    w.to_string(),
+                    format!("{:.2}", mm / 1e3),
+                    format!("{:.2}", gg / 1e3),
+                    format!("{:.4}", mm / gg),
+                ]);
+            }
+        }
+        rep.add_with_notes(
+            &format!("{} two-phase speedup", spec.name),
+            t,
+            vec![
+                "Expected: speedup < 1 at tiny work counts (structure overhead visible), → 1 as work dominates; k ∈ {1,3,10} barely moves the curve.".into(),
+            ],
+        );
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_approaches_one_with_work() {
+        let p = Params::default();
+        let spec = DeviceSpec::a100();
+        let (mm1, gg1) = two_phase_times(&spec, &p, 1, 1);
+        let (mm1000, gg1000) = two_phase_times(&spec, &p, 1, 1000);
+        let s1 = mm1 / gg1;
+        let s1000 = mm1000 / gg1000;
+        assert!(s1 < s1000, "s1 {s1} !< s1000 {s1000}");
+        assert!(s1 < 0.97, "overhead should be visible at w=1: {s1}");
+        assert!(s1000 > 0.975 && s1000 <= 1.001, "s1000 {s1000}");
+    }
+
+    #[test]
+    fn k_has_little_impact() {
+        // Paper: "Inserting 1, 3, or 10 times the size of the array each
+        // iteration does not have an impact on the speedup."
+        let p = Params::default();
+        let spec = DeviceSpec::a100();
+        let speeds: Vec<f64> = [1u64, 3, 10]
+            .iter()
+            .map(|&k| {
+                let (mm, gg) = two_phase_times(&spec, &p, k, 100);
+                mm / gg
+            })
+            .collect();
+        let max = speeds.iter().cloned().fold(f64::MIN, f64::max);
+        let min = speeds.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max - min < 0.05, "speedups {speeds:?}");
+    }
+
+    #[test]
+    fn five_repetitions_land_on_final_size() {
+        let p = Params::default();
+        for k in [1u64, 3, 10] {
+            let growth = (k + 1).pow(p.phases);
+            let start = p.final_size / growth;
+            let finals = start * growth;
+            let rel = (finals as f64 - 1e9).abs() / 1e9;
+            assert!(rel < 0.05, "k={k} final {finals}");
+        }
+    }
+}

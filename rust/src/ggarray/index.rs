@@ -1,0 +1,135 @@
+//! Prefix-sum index over the per-LFVector sizes (paper §IV).
+//!
+//! GGArray needs to answer "which LFVector holds global index *i*" for the
+//! `rw_g` access pattern. The paper keeps an exclusive prefix sum of all
+//! LFVector sizes in a plain device array — rebuilt with a (cheap, B-sized)
+//! scan after each insertion epoch — and binary-searches it per access.
+
+/// Exclusive prefix sums of the per-block sizes, plus the total.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixIndex {
+    /// `starts[b]` = global index of the first element of block `b`.
+    starts: Vec<u64>,
+    total: u64,
+}
+
+impl PrefixIndex {
+    pub fn new() -> PrefixIndex {
+        PrefixIndex::default()
+    }
+
+    /// Rebuild from per-block sizes.
+    pub fn rebuild(&mut self, sizes: impl Iterator<Item = u64>) {
+        self.starts.clear();
+        let mut acc = 0u64;
+        for s in sizes {
+            self.starts.push(acc);
+            acc += s;
+        }
+        self.total = acc;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.starts.len()
+    }
+
+    /// Global start of block `b`.
+    pub fn start_of(&self, b: usize) -> u64 {
+        self.starts[b]
+    }
+
+    /// Size of block `b`.
+    pub fn size_of(&self, b: usize) -> u64 {
+        let end = if b + 1 < self.starts.len() { self.starts[b + 1] } else { self.total };
+        end - self.starts[b]
+    }
+
+    /// Binary-search the block containing global index `i`, returning
+    /// `(block, local_index)`. `None` if `i ≥ total`.
+    ///
+    /// Exactly the lookup every `rw_g` thread performs on device; its
+    /// log2(B) pointer chases are what the cost model charges for.
+    #[inline]
+    pub fn locate(&self, i: u64) -> Option<(usize, u64)> {
+        if i >= self.total || self.starts.is_empty() {
+            return None;
+        }
+        // partition_point: first index with start > i, minus one.
+        let b = self.starts.partition_point(|&s| s <= i) - 1;
+        Some((b, i - self.starts[b]))
+    }
+
+    /// Number of binary-search steps per lookup (for the cost model).
+    pub fn search_depth(&self) -> u32 {
+        (self.starts.len().max(1) as f64).log2().ceil() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx(sizes: &[u64]) -> PrefixIndex {
+        let mut p = PrefixIndex::new();
+        p.rebuild(sizes.iter().copied());
+        p
+    }
+
+    #[test]
+    fn rebuild_and_totals() {
+        let p = idx(&[3, 0, 5, 2]);
+        assert_eq!(p.total(), 10);
+        assert_eq!(p.blocks(), 4);
+        assert_eq!(p.start_of(0), 0);
+        assert_eq!(p.start_of(1), 3);
+        assert_eq!(p.start_of(2), 3);
+        assert_eq!(p.start_of(3), 8);
+        assert_eq!(p.size_of(0), 3);
+        assert_eq!(p.size_of(1), 0);
+        assert_eq!(p.size_of(2), 5);
+        assert_eq!(p.size_of(3), 2);
+    }
+
+    #[test]
+    fn locate_every_index() {
+        let sizes = [3u64, 0, 5, 2];
+        let p = idx(&sizes);
+        let mut expect = vec![];
+        for (b, &s) in sizes.iter().enumerate() {
+            for l in 0..s {
+                expect.push((b, l));
+            }
+        }
+        for (i, want) in expect.iter().enumerate() {
+            assert_eq!(p.locate(i as u64), Some(*want), "i={i}");
+        }
+        assert_eq!(p.locate(10), None);
+        assert_eq!(p.locate(u64::MAX), None);
+    }
+
+    #[test]
+    fn empty_index() {
+        let p = PrefixIndex::new();
+        assert_eq!(p.total(), 0);
+        assert_eq!(p.locate(0), None);
+    }
+
+    #[test]
+    fn zero_leading_blocks() {
+        let p = idx(&[0, 0, 4]);
+        assert_eq!(p.locate(0), Some((2, 0)));
+        assert_eq!(p.locate(3), Some((2, 3)));
+    }
+
+    #[test]
+    fn search_depth_log2() {
+        assert_eq!(idx(&[1; 1]).search_depth(), 0);
+        assert_eq!(idx(&[1; 32]).search_depth(), 5);
+        assert_eq!(idx(&[1; 33]).search_depth(), 6);
+        assert_eq!(idx(&[1; 512]).search_depth(), 9);
+    }
+}

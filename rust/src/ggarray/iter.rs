@@ -1,0 +1,76 @@
+//! Iteration over GGArray contents in global (block-major) order.
+
+use super::array::GgArray;
+
+/// Immutable iterator over all elements in global index order.
+pub struct Iter<'a, T> {
+    gg: &'a GgArray<T>,
+    i: u64,
+    n: u64,
+}
+
+impl<'a, T: Copy + Default> Iterator for Iter<'a, T> {
+    type Item = T;
+
+    fn next(&mut self) -> Option<T> {
+        if self.i >= self.n {
+            return None;
+        }
+        let v = self.gg.get(self.i);
+        self.i += 1;
+        v
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = (self.n - self.i) as usize;
+        (rem, Some(rem))
+    }
+}
+
+impl<'a, T: Copy + Default> ExactSizeIterator for Iter<'a, T> {}
+
+impl<T: Copy + Default> GgArray<T> {
+    /// Iterate elements in global order. Requires the prefix index to be
+    /// current (`insert_bulk` rebuilds it; manual `push_to_block` callers
+    /// must call `rebuild_index_charged` first).
+    pub fn iter(&self) -> Iter<'_, T> {
+        Iter { gg: self, i: 0, n: self.len() as u64 }
+    }
+
+    /// Collect to a host Vec in global (block-major) order. Uses
+    /// per-bucket segment copies rather than per-element index lookups
+    /// (perf pass — this sits on the coordinator's work path).
+    pub fn to_vec(&self) -> Vec<T> {
+        let mut out = Vec::with_capacity(self.len());
+        for v in self.vectors() {
+            v.copy_into(&mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ggarray::array::{GgArray, GgConfig};
+    use crate::insertion::InsertionKind;
+    use crate::sim::spec::DeviceSpec;
+
+    #[test]
+    fn iter_matches_gets() {
+        let mut g: GgArray<u32> = GgArray::new(GgConfig::new(4).with_first_bucket(8), DeviceSpec::a100());
+        let data: Vec<u32> = (0..333).collect();
+        g.insert_bulk(&data, InsertionKind::WarpScan).unwrap();
+        let collected: Vec<u32> = g.iter().collect();
+        assert_eq!(collected.len(), 333);
+        for (i, v) in collected.iter().enumerate() {
+            assert_eq!(g.get(i as u64), Some(*v));
+        }
+        assert_eq!(g.iter().len(), 333);
+    }
+
+    #[test]
+    fn empty_iter() {
+        let g: GgArray<u8> = GgArray::new(GgConfig::new(2), DeviceSpec::titan_rtx());
+        assert_eq!(g.iter().count(), 0);
+    }
+}

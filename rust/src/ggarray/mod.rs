@@ -1,0 +1,23 @@
+//! The paper's contribution: **GGArray**, a dynamically growable GPU
+//! array built as an array of LFVectors — one LFVector per thread block —
+//! with a prefix-sum index for global addressing.
+//!
+//! Module map (paper section → code):
+//!
+//! * §IV Algorithm 1/2 (`push_back`, `new_bucket`)  → [`lfvector`]
+//! * §IV prefix-sum index + binary search            → [`index`]
+//! * §IV macro structure, grow/insert/rw_g/rw_b      → [`array`]
+//! * §VI.C flatten for two-phase applications        → [`flatten`]
+//!
+//! Every operation performs the *real* data movement on host-side buffers
+//! backed by the simulated VRAM heap, while charging modeled GPU time to
+//! the simulation clock (see [`crate::sim`]).
+
+pub mod array;
+pub mod flatten;
+pub mod index;
+pub mod iter;
+pub mod lfvector;
+
+pub use array::{GgArray, GgConfig, OpReport};
+pub use lfvector::LfVector;

@@ -1,0 +1,63 @@
+//! Atomic insertion (paper §III.B.1): every inserting thread performs
+//! `atomicAdd(&size, count)` to claim its slot. Simple, but the single
+//! counter serialises at the L2 atomic unit — warp aggregation divides the
+//! op count by 32, yet at Fig 4 sizes it is still the slowest algorithm by
+//! a wide margin.
+
+use super::InsertShape;
+use crate::sim::{atomicmodel, kernel::KernelProfile, spec::DeviceSpec};
+
+/// Cost profile of one atomic-insertion launch.
+pub fn profile(spec: &DeviceSpec, shape: &InsertShape) -> KernelProfile {
+    // Traffic: read source elements + write them (no scan aux arrays).
+    let read = (shape.inserts * shape.elem_bytes) as f64;
+    let write = (shape.inserts * shape.elem_bytes) as f64;
+    let eff = super::warp_scan::blended_eff(read, spec.cost.coalesced_eff, write, shape.write_eff);
+    // One warp-aggregated atomic per inserting thread, spread across the
+    // structure's size counters.
+    let atomic_us = atomicmodel::multi_addr_atomic_us(spec, shape.inserts, shape.counters, true);
+    KernelProfile {
+        blocks: shape.blocks,
+        threads_per_block: shape.threads_per_block,
+        bytes: read + write,
+        coalescing_eff: eff,
+        flops_fp32: 0.0,
+        flops_mxu: 0.0,
+        mxu_utilisation: 1.0,
+        per_block_us: 0.0,
+        atomic_us,
+        extra_us: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::insertion::InsertShape;
+
+    #[test]
+    fn atomic_dominated_at_scale() {
+        let spec = DeviceSpec::a100();
+        let n = 512_000_000u64;
+        let shape = InsertShape::static_array(&spec, n, n, 4);
+        let p = profile(&spec, &shape);
+        let b = crate::sim::kernel::model(&spec, &p);
+        // The atomic serialisation exceeds the streaming time.
+        assert!(b.atomic_us > b.memory_us, "atomic {} vs mem {}", b.atomic_us, b.memory_us);
+    }
+
+    #[test]
+    fn per_lfvector_counters_relieve_contention() {
+        // GGArray gives each LFVector its own size counter: 512 counters
+        // make the atomic path far cheaper than one global counter.
+        let spec = DeviceSpec::a100();
+        let n = 16_000_000u64;
+        let mut one = InsertShape::static_array(&spec, n, n, 4);
+        one.counters = 1;
+        let mut many = one;
+        many.counters = 512;
+        let t_one = crate::sim::kernel::model(&spec, &profile(&spec, &one)).total_us;
+        let t_many = crate::sim::kernel::model(&spec, &profile(&spec, &many)).total_us;
+        assert!(t_one > t_many * 2.0, "one {t_one} many {t_many}");
+    }
+}

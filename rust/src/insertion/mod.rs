@@ -1,0 +1,199 @@
+//! Parallel insertion algorithms (paper §III.B, evaluated in Fig 4 col 1).
+//!
+//! The job of an insertion algorithm is to hand every inserting thread a
+//! **unique index** `old_size ≤ i < new_size` and to update the size —
+//! i.e. to compute an exclusive prefix sum over the per-thread insertion
+//! counts. Three schemes from the paper:
+//!
+//! * [`atomic`] — one `atomicAdd(&size, count)` per inserting thread
+//!   (warp-aggregated by hardware/compiler), serialising at L2;
+//! * [`warp_scan`] — `__shfl_up_sync` hierarchical block scan + one atomic
+//!   per block for the global offset (the winner in Fig 4);
+//! * [`mxu_scan`] — the tensor-core matmul scan of Dakkak et al. (2019),
+//!   reproduced on the MXU: intra-tile `L·X` with a lower-triangular ones
+//!   matrix + inter-tile carry fix-up. At a 1:1 data:thread ratio only ⅛
+//!   of the warps do matmuls, which is why the paper measures it slower
+//!   than the shuffle scan (and closer on the A100, whose tensor-core
+//!   uplift is larger).
+//!
+//! Each algorithm provides (a) a **reference index assignment** on host
+//! data (used to validate the Pallas kernels and to actually place
+//! elements), and (b) a **cost profile** for the simulated device.
+//! [`assign_indices`] is shared: the semantics of all three algorithms are
+//! identical — only their cost differs — which the property tests assert.
+
+pub mod atomic;
+pub mod mxu_scan;
+pub mod warp_scan;
+
+use crate::sim::kernel::KernelProfile;
+use crate::sim::spec::DeviceSpec;
+
+/// Which insertion algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InsertionKind {
+    Atomic,
+    WarpScan,
+    MxuScan,
+}
+
+impl InsertionKind {
+    pub const ALL: [InsertionKind; 3] = [InsertionKind::Atomic, InsertionKind::WarpScan, InsertionKind::MxuScan];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InsertionKind::Atomic => "atomic",
+            InsertionKind::WarpScan => "warp_scan",
+            InsertionKind::MxuScan => "mxu_scan",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<InsertionKind> {
+        match name.to_ascii_lowercase().as_str() {
+            "atomic" => Some(InsertionKind::Atomic),
+            "warp_scan" | "scan" | "shuffle" | "warpscan" => Some(InsertionKind::WarpScan),
+            "mxu_scan" | "tensor" | "tensor_scan" | "mxuscan" => Some(InsertionKind::MxuScan),
+            _ => None,
+        }
+    }
+}
+
+/// Parameters describing one insertion kernel launch.
+#[derive(Debug, Clone, Copy)]
+pub struct InsertShape {
+    /// Threads participating (= current array size in the paper's tests:
+    /// even non-inserting threads join the scan and syncs).
+    pub threads: u64,
+    /// Elements actually inserted.
+    pub inserts: u64,
+    /// Element size in bytes.
+    pub elem_bytes: u64,
+    /// Grid blocks available (the GGArray's LFVector count, or a full
+    /// grid for the static-array tests).
+    pub blocks: u64,
+    /// Threads per block.
+    pub threads_per_block: u32,
+    /// Distinct size counters (1 for static/global, = #LFVectors for
+    /// GGArray where each block owns its own counter).
+    pub counters: u64,
+    /// Write-side bandwidth efficiency (coalesced for static, bucket
+    /// indirection for GGArray).
+    pub write_eff: f64,
+}
+
+impl InsertShape {
+    /// The paper's static-array insertion test shape: one thread per
+    /// element, saturating grid, one global counter.
+    pub fn static_array(spec: &DeviceSpec, threads: u64, inserts: u64, elem_bytes: u64) -> InsertShape {
+        let tpb = 1024u32;
+        InsertShape {
+            threads,
+            inserts,
+            elem_bytes,
+            blocks: crate::util::math::ceil_div(threads, tpb as u64),
+            threads_per_block: tpb,
+            counters: 1,
+            write_eff: spec.cost.coalesced_eff,
+        }
+    }
+}
+
+/// Exclusive-prefix-sum index assignment shared by all three algorithms:
+/// thread `t` with `counts[t]` items gets indices
+/// `[base + prefix[t], base + prefix[t] + counts[t])`.
+///
+/// Returns the per-thread start offsets and the new total. This is the
+/// semantic oracle the Pallas scan kernels are validated against.
+pub fn assign_indices(base: u64, counts: &[u32]) -> (Vec<u64>, u64) {
+    let mut offsets = Vec::with_capacity(counts.len());
+    let mut acc = base;
+    for &c in counts {
+        offsets.push(acc);
+        acc += c as u64;
+    }
+    (offsets, acc)
+}
+
+/// Cost profile for one insertion launch of the given algorithm.
+pub fn profile(spec: &DeviceSpec, kind: InsertionKind, shape: &InsertShape) -> KernelProfile {
+    match kind {
+        InsertionKind::Atomic => atomic::profile(spec, shape),
+        InsertionKind::WarpScan => warp_scan::profile(spec, shape),
+        InsertionKind::MxuScan => mxu_scan::profile(spec, shape),
+    }
+}
+
+/// Modeled time (µs) of one insertion launch.
+pub fn cost_us(spec: &DeviceSpec, kind: InsertionKind, shape: &InsertShape) -> f64 {
+    crate::sim::kernel::model(spec, &profile(spec, kind, shape)).total_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assign_indices_unique_and_dense() {
+        let counts = vec![1u32, 0, 3, 2, 0, 1];
+        let (offs, total) = assign_indices(100, &counts);
+        assert_eq!(total, 107);
+        assert_eq!(offs, vec![100, 101, 101, 104, 106, 106]);
+        // Expanded indices are exactly 100..107, each once.
+        let mut seen = vec![];
+        for (t, &c) in counts.iter().enumerate() {
+            for k in 0..c {
+                seen.push(offs[t] + k as u64);
+            }
+        }
+        seen.sort();
+        assert_eq!(seen, (100..107).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in InsertionKind::ALL {
+            assert_eq!(InsertionKind::by_name(k.name()), Some(k));
+        }
+        assert_eq!(InsertionKind::by_name("tensor"), Some(InsertionKind::MxuScan));
+        assert!(InsertionKind::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn fig4_ordering_on_both_gpus() {
+        // Fig 4 col 1: atomic slowest; shuffle scan fastest, tensor close.
+        for spec in [DeviceSpec::titan_rtx(), DeviceSpec::a100()] {
+            let n = 512_000_000u64;
+            let shape = InsertShape::static_array(&spec, n, n, 4);
+            let t_atomic = cost_us(&spec, InsertionKind::Atomic, &shape);
+            let t_scan = cost_us(&spec, InsertionKind::WarpScan, &shape);
+            let t_mxu = cost_us(&spec, InsertionKind::MxuScan, &shape);
+            assert!(t_atomic > t_scan, "{}: atomic {t_atomic} !> scan {t_scan}", spec.name);
+            assert!(t_atomic > t_mxu, "{}: atomic {t_atomic} !> mxu {t_mxu}", spec.name);
+            assert!(t_mxu >= t_scan, "{}: mxu {t_mxu} !>= scan {t_scan}", spec.name);
+        }
+    }
+
+    #[test]
+    fn tensor_gap_smaller_on_a100() {
+        // Paper: "the difference between the two scan versions is lower in
+        // the A100" (bigger tensor-core generation uplift).
+        let n = 512_000_000u64;
+        let gap = |spec: &DeviceSpec| {
+            let shape = InsertShape::static_array(spec, n, n, 4);
+            cost_us(spec, InsertionKind::MxuScan, &shape) / cost_us(spec, InsertionKind::WarpScan, &shape)
+        };
+        let titan = gap(&DeviceSpec::titan_rtx());
+        let a100 = gap(&DeviceSpec::a100());
+        assert!(a100 < titan, "gap a100 {a100} !< titan {titan}");
+    }
+
+    #[test]
+    fn insertion_scales_with_n() {
+        let spec = DeviceSpec::a100();
+        for kind in InsertionKind::ALL {
+            let small = cost_us(&spec, kind, &InsertShape::static_array(&spec, 1_000_000, 1_000_000, 4));
+            let large = cost_us(&spec, kind, &InsertShape::static_array(&spec, 512_000_000, 512_000_000, 4));
+            assert!(large > small * 50.0, "{}: small {small} large {large}", kind.name());
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Tensor-core / MXU matmul prefix-sum insertion (paper §III.B.3,
+//! following Dakkak et al. 2019, "Accelerating reduction and scan using
+//! tensor core units").
+//!
+//! Algorithm skeleton (reproduced as a real Pallas kernel in
+//! `python/compile/kernels/scan_mxu.py`):
+//!
+//! 1. reshape the count vector into 16×16 tiles;
+//! 2. intra-tile inclusive scan = `L · X` where `L` is the lower-
+//!    triangular ones matrix (one MMA per tile);
+//! 3. tile sums = last row of step 2; scan of tile sums = second small
+//!    matmul; broadcast-add carries.
+//!
+//! ≈ 64 FP16 FLOPs per element. At the paper's 1:1 data:thread ratio only
+//! one eighth of the warps own a tile, so effective tensor utilisation is
+//! ⅛ on Turing ([`DeviceSpec::cost::tensor_scan_utilisation`]); Ampere's
+//! per-instruction tensor throughput is ~4× Turing's, which shrinks the
+//! stall fraction — modeled as a higher utilisation, matching the paper's
+//! observation that the tensor-vs-shuffle gap is smaller on the A100.
+
+use super::InsertShape;
+use crate::sim::{atomicmodel, kernel::KernelProfile, spec::DeviceSpec};
+
+/// FP16 FLOPs per scanned element (two 16×16×16 MMAs per 256-element
+/// tile: 2 × 2·16³ / 256 = 64).
+pub const FLOPS_PER_ELEMENT: f64 = 64.0;
+
+/// Effective MXU utilisation for the scan on this device. Turing pays the
+/// full ⅛ warp-occupancy penalty; Ampere's fatter tensor pipes hide more
+/// of it.
+pub fn utilisation(spec: &DeviceSpec) -> f64 {
+    let base = spec.cost.tensor_scan_utilisation; // 1/8
+    if spec.name == "A100" {
+        base * 1.8 // Ampere 3rd-gen tensor cores: fewer issue stalls
+    } else {
+        base
+    }
+}
+
+/// Cost profile of one MXU-scan insertion launch.
+pub fn profile(spec: &DeviceSpec, shape: &InsertShape) -> KernelProfile {
+    let (bytes, eff) = super::warp_scan::scan_traffic(shape, spec);
+    let slots_per_wave = shape.blocks * shape.threads_per_block as u64;
+    let chunks = crate::util::math::ceil_div(shape.threads.max(1), slots_per_wave.max(1));
+    // Tile staging through shared memory adds a small per-block cost.
+    let per_block_us = chunks as f64
+        * crate::sim::block::smem_stage_us(spec, shape.threads_per_block as u64 * 4);
+    let atomic_us = atomicmodel::multi_addr_atomic_us(spec, shape.blocks * chunks, shape.counters, false);
+    // The matmul pipeline does not overlap the streaming traffic at a 1:1
+    // data:thread ratio (idle warps stall the memory pipeline too), so its
+    // cost is additive — folded into per-block path per chunk.
+    let mxu_flops = shape.threads as f64 * FLOPS_PER_ELEMENT;
+    let mxu_us_total = mxu_flops / (spec.fp16_flops_per_us() * utilisation(spec));
+    KernelProfile {
+        blocks: shape.blocks,
+        threads_per_block: shape.threads_per_block,
+        bytes,
+        coalescing_eff: eff,
+        flops_fp32: 0.0,
+        flops_mxu: 0.0, // accounted additively via extra_us
+        mxu_utilisation: 1.0,
+        per_block_us,
+        atomic_us,
+        extra_us: mxu_us_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::insertion::{cost_us, InsertionKind, InsertShape};
+
+    #[test]
+    fn utilisation_ordering() {
+        assert!(utilisation(&DeviceSpec::a100()) > utilisation(&DeviceSpec::titan_rtx()));
+        assert!(utilisation(&DeviceSpec::a100()) < 1.0);
+    }
+
+    #[test]
+    fn slower_than_shuffle_but_same_order() {
+        for spec in [DeviceSpec::titan_rtx(), DeviceSpec::a100()] {
+            let n = 128_000_000u64;
+            let shape = InsertShape::static_array(&spec, n, n, 4);
+            let mxu = cost_us(&spec, InsertionKind::MxuScan, &shape);
+            let scan = cost_us(&spec, InsertionKind::WarpScan, &shape);
+            let ratio = mxu / scan;
+            assert!(ratio > 1.0 && ratio < 3.0, "{}: ratio {ratio}", spec.name);
+        }
+    }
+}

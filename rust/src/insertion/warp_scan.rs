@@ -1,0 +1,91 @@
+//! Warp-shuffle prefix-sum insertion (paper §III.B.2) — the fastest
+//! algorithm in Fig 4 and the one GGArray uses by default.
+//!
+//! Scheme: each block scans its threads' insertion counts with
+//! `__shfl_up_sync` (3-phase block scan), the block leader reserves a
+//! global range with a single atomic, and every thread writes its
+//! element(s) at `block_base + local_prefix`. With fewer blocks than
+//! elements (GGArray with B LFVectors), blocks iterate over chunks with a
+//! running carry — "thread coarsening" in the paper's terms.
+
+use super::InsertShape;
+use crate::sim::{atomicmodel, block, kernel::KernelProfile, spec::DeviceSpec};
+
+/// Equivalent single-efficiency for split read/write traffic.
+pub(crate) fn blended_eff(read_bytes: f64, read_eff: f64, write_bytes: f64, write_eff: f64) -> f64 {
+    let total = read_bytes + write_bytes;
+    if total == 0.0 {
+        return 1.0;
+    }
+    total / (read_bytes / read_eff + write_bytes / write_eff)
+}
+
+/// Traffic common to the scan-based algorithms:
+/// * read per-thread insert flags/counts (4 B/thread),
+/// * write per-thread offsets (4 B/thread — kept for the r/w phase),
+/// * read source elements + write them at their assigned slots.
+pub(crate) fn scan_traffic(shape: &InsertShape, spec: &DeviceSpec) -> (f64, f64) {
+    let read = (shape.threads * 4 + shape.inserts * shape.elem_bytes) as f64;
+    let write = (shape.threads * 4 + shape.inserts * shape.elem_bytes) as f64;
+    let eff = blended_eff(read, spec.cost.coalesced_eff, write, shape.write_eff);
+    (read + write, eff)
+}
+
+/// Cost profile of one warp-scan insertion launch.
+pub fn profile(spec: &DeviceSpec, shape: &InsertShape) -> KernelProfile {
+    let (bytes, eff) = scan_traffic(shape, spec);
+    // Chunks each block must serially process (thread coarsening).
+    let slots_per_wave = shape.blocks * shape.threads_per_block as u64;
+    let chunks = crate::util::math::ceil_div(shape.threads.max(1), slots_per_wave.max(1));
+    let per_block_us = chunks as f64 * block::shfl_block_scan_us(spec, shape.threads_per_block);
+    // One global-offset atomic per block per chunk, spread over `counters`.
+    let atomic_us = atomicmodel::multi_addr_atomic_us(spec, shape.blocks * chunks, shape.counters, false);
+    KernelProfile {
+        blocks: shape.blocks,
+        threads_per_block: shape.threads_per_block,
+        bytes,
+        coalescing_eff: eff,
+        flops_fp32: 2.0 * shape.threads as f64, // shuffle adds
+        flops_mxu: 0.0,
+        mxu_utilisation: 1.0,
+        per_block_us,
+        atomic_us,
+        extra_us: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::insertion::InsertShape;
+
+    #[test]
+    fn blended_eff_bounds() {
+        let e = blended_eff(100.0, 0.8, 100.0, 0.2);
+        assert!(e > 0.2 && e < 0.8);
+        // All-read degenerates to read eff.
+        assert!((blended_eff(100.0, 0.8, 0.0, 0.1) - 0.8).abs() < 1e-12);
+        assert_eq!(blended_eff(0.0, 0.5, 0.0, 0.5), 1.0);
+    }
+
+    #[test]
+    fn static_insert_lands_near_table2() {
+        // Table II: static insert of 5.12e8 elements on A100 = 7.07 ms.
+        let spec = DeviceSpec::a100();
+        let n = 512_000_000u64;
+        let shape = InsertShape::static_array(&spec, n, n, 4);
+        let ms = crate::insertion::cost_us(&spec, crate::insertion::InsertionKind::WarpScan, &shape) / 1e3;
+        assert!((ms - 7.07).abs() < 1.2, "modeled {ms:.2} ms vs paper 7.07 ms");
+    }
+
+    #[test]
+    fn coarsening_multiplies_block_path() {
+        let spec = DeviceSpec::a100();
+        let mut shape = InsertShape::static_array(&spec, 1 << 20, 1 << 20, 4);
+        shape.blocks = 32; // heavy coarsening
+        let p = profile(&spec, &shape);
+        let full = InsertShape::static_array(&spec, 1 << 20, 1 << 20, 4);
+        let p_full = profile(&spec, &full);
+        assert!(p.per_block_us > p_full.per_block_us * 10.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! # GGArray — a dynamically growable GPU array
+//!
+//! Full-system reproduction of *"GGArray: A Dynamically Growable GPU
+//! Array"* (Meneses, Navarro, Ferrada — 2022) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the GGArray data structure (an array of
+//!   LFVectors, one per thread block), its baselines (static, semi-static,
+//!   memMap/VMM), the three parallel insertion algorithms, a calibrated
+//!   GPU execution cost model, and a coordinator service that drives
+//!   dynamic-memory workloads.
+//! * **Layer 2 (JAX, build time)** — the compute graphs (insert step, work
+//!   phase, flatten) lowered AOT to HLO text.
+//! * **Layer 1 (Pallas, build time)** — prefix-sum kernels (vector-unit
+//!   hierarchical scan and MXU matmul scan) and the work kernel; executed
+//!   at runtime through the PJRT CPU client by [`runtime`].
+//!
+//! See `DESIGN.md` for the experiment index and hardware-adaptation notes.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use ggarray::prelude::*;
+//!
+//! let spec = DeviceSpec::a100();
+//! let mut gg = GgArray::<u32>::new(GgConfig::new(32), spec);
+//! // Simulated in-kernel push_back of 1000 elements round-robin:
+//! let report = gg.grow_and_insert(&vec![1u32; 1000], InsertionKind::WarpScan);
+//! assert_eq!(gg.len(), 1000);
+//! println!("simulated insert time: {:.3} ms", report.total_ms());
+//! ```
+
+pub mod baselines;
+pub mod coordinator;
+pub mod experiments;
+pub mod ggarray;
+pub mod insertion;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod theory;
+pub mod util;
+pub mod workload;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::baselines::{
+        memmap::MemMapArray, semistatic::SemiStaticArray, static_array::StaticArray, GrowableArray,
+    };
+    pub use crate::coordinator::{
+        request::{Request, Response},
+        service::{Coordinator, CoordinatorConfig},
+    };
+    pub use crate::ggarray::{
+        array::{GgArray, GgConfig, OpReport},
+        lfvector::LfVector,
+    };
+    pub use crate::insertion::InsertionKind;
+    pub use crate::sim::spec::DeviceSpec;
+    pub use crate::util::rng::Rng;
+    pub use crate::workload::WorkloadSpec;
+}
+
+/// Crate-level result alias.
+pub type Result<T> = anyhow::Result<T>;

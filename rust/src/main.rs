@@ -1,0 +1,219 @@
+//! `repro` — CLI entry point: regenerate every paper figure/table, run the
+//! coordinator demo, or the quickstart.
+//!
+//! ```text
+//! repro table1                 # Table I (device models)
+//! repro fig3  [--steps 40 --draws 4000]
+//! repro fig4  [--doublings 10]
+//! repro fig5
+//! repro table2
+//! repro fig6
+//! repro all   [--out reports]
+//! repro quickstart
+//! repro serve [--blocks 512 --inserts 100000]
+//! ```
+
+use ggarray::experiments::{ablations, fig3, fig4, fig5, fig6, report::Report, table1, table2};
+use ggarray::util::argparse::{flag, opt, Cli, CmdSpec};
+
+fn cli() -> Cli {
+    Cli {
+        prog: "repro",
+        about: "GGArray paper reproduction (Rust + JAX + Pallas, AOT via PJRT)",
+        commands: vec![
+            CmdSpec { name: "table1", help: "Table I: GPU specifications", opts: vec![] },
+            CmdSpec {
+                name: "fig3",
+                help: "Fig 3: theoretic memory usage vs sigma",
+                opts: vec![
+                    opt("steps", Some("40"), "sigma sweep steps"),
+                    opt("draws", Some("4000"), "Monte-Carlo draws per point"),
+                    opt("blocks", Some("512"), "LFVectors"),
+                ],
+            },
+            CmdSpec {
+                name: "fig4",
+                help: "Fig 4: insertion algorithms; grow+insert and r/w vs #LFVectors",
+                opts: vec![opt("doublings", Some("10"), "duplication iterations")],
+            },
+            CmdSpec { name: "fig5", help: "Fig 5: grow/insert/rw per duplication iteration", opts: vec![] },
+            CmdSpec { name: "table2", help: "Table II: last-iteration times on the A100 model", opts: vec![] },
+            CmdSpec { name: "fig6", help: "Fig 6: two-phase application speedup", opts: vec![] },
+            CmdSpec { name: "ablations", help: "design-choice ablation studies", opts: vec![] },
+            CmdSpec { name: "all", help: "run every experiment", opts: vec![] },
+            CmdSpec { name: "quickstart", help: "minimal GGArray usage demo", opts: vec![] },
+            CmdSpec {
+                name: "serve",
+                help: "run the coordinator service demo workload",
+                opts: vec![
+                    opt("blocks", Some("512"), "LFVectors"),
+                    opt("inserts", Some("100000"), "total elements to insert"),
+                    opt("work", Some("3"), "work calls after the insert phase"),
+                    flag("no-artifacts", "skip AOT artifacts (host fallback)"),
+                ],
+            },
+        ],
+        global_opts: vec![
+            opt("out", Some("reports"), "report output directory"),
+            opt("seed", Some("42"), "rng seed"),
+            flag("quiet", "suppress markdown output"),
+            flag("plot", "render an ASCII chart of the figure"),
+        ],
+    }
+}
+
+fn emit(rep: Report, out_dir: &str, quiet: bool) -> anyhow::Result<()> {
+    if !quiet {
+        print!("{}", rep.markdown());
+    }
+    let paths = rep.save(std::path::Path::new(out_dir))?;
+    eprintln!("[repro] wrote {} files under {out_dir}/ ({})", paths.len(), rep.id);
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match cli().parse(&args) {
+        Ok(p) => p,
+        Err(help) => {
+            println!("{help}");
+            return Ok(());
+        }
+    };
+    let out = parsed.get("out").unwrap_or("reports").to_string();
+    let quiet = parsed.flag("quiet");
+    let seed: u64 = parsed.get_parse("seed")?;
+
+    match parsed.command.as_str() {
+        "table1" => emit(table1::run(), &out, quiet)?,
+        "fig3" => {
+            let p = fig3::Params {
+                steps: parsed.get_parse("steps")?,
+                draws: parsed.get_parse("draws")?,
+                blocks: parsed.get_parse("blocks")?,
+                seed,
+                ..fig3::Params::default()
+            };
+            let rep = fig3::run(&p);
+            if parsed.flag("plot") {
+                plot_columns(&rep, 0, 0, &[(2, "static_p99"), (5, "ggarray"), (1, "optimal")], true, "Fig 3: memory vs sigma (log y)");
+            }
+            emit(rep, &out, quiet)?;
+        }
+        "fig4" => {
+            let p = fig4::Params { doublings: parsed.get_parse("doublings")?, ..fig4::Params::default() };
+            emit(fig4::run(&p), &out, quiet)?;
+        }
+        "fig5" => emit(fig5::run(&fig5::Params::default()), &out, quiet)?,
+        "table2" => emit(table2::run(), &out, quiet)?,
+        "fig6" => {
+            let rep = fig6::run(&fig6::Params::default());
+            if parsed.flag("plot") {
+                // A100 section, k=1 rows only → speedup vs work calls.
+                let table = &rep.sections[1].table;
+                let pts: Vec<(f64, f64)> = table
+                    .rows()
+                    .iter()
+                    .filter(|r| r[0] == "1")
+                    .map(|r| (r[1].parse().unwrap(), r[4].parse().unwrap()))
+                    .collect();
+                let s = vec![ggarray::util::plot::Series { name: "speedup (k=1, A100)".into(), points: pts }];
+                println!(
+                    "{}",
+                    ggarray::util::plot::render(
+                        &s,
+                        &ggarray::util::plot::PlotConfig {
+                            log_x: true,
+                            title: "Fig 6: two-phase speedup vs work calls (log x)".into(),
+                            ..Default::default()
+                        }
+                    )
+                );
+            }
+            emit(rep, &out, quiet)?;
+        }
+        "ablations" => emit(ablations::run(), &out, quiet)?,
+        "all" => {
+            emit(table1::run(), &out, quiet)?;
+            emit(fig3::run(&fig3::Params { seed, ..fig3::Params::default() }), &out, quiet)?;
+            emit(fig4::run(&fig4::Params::default()), &out, quiet)?;
+            emit(fig5::run(&fig5::Params::default()), &out, quiet)?;
+            emit(table2::run(), &out, quiet)?;
+            emit(fig6::run(&fig6::Params::default()), &out, quiet)?;
+            emit(ablations::run(), &out, quiet)?;
+        }
+        "quickstart" => quickstart(),
+        "serve" => {
+            serve(
+                parsed.get_parse("blocks")?,
+                parsed.get_parse("inserts")?,
+                parsed.get_parse("work")?,
+                !parsed.flag("no-artifacts"),
+            );
+        }
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+    Ok(())
+}
+
+/// Plot columns of a report section: x from `xcol`, one series per
+/// (column, label).
+fn plot_columns(rep: &Report, section: usize, xcol: usize, ys: &[(usize, &str)], log_y: bool, title: &str) {
+    use ggarray::util::plot::{render, PlotConfig, Series};
+    let table = &rep.sections[section].table;
+    let series: Vec<Series> = ys
+        .iter()
+        .map(|&(c, name)| Series {
+            name: name.to_string(),
+            points: table
+                .rows()
+                .iter()
+                .filter_map(|r| Some((r[xcol].parse().ok()?, r[c].parse().ok()?)))
+                .collect(),
+        })
+        .collect();
+    println!("{}", render(&series, &PlotConfig { log_y, title: title.to_string(), ..Default::default() }));
+}
+
+fn quickstart() {
+    use ggarray::ggarray::array::{GgArray, GgConfig};
+    use ggarray::insertion::InsertionKind;
+    use ggarray::sim::spec::DeviceSpec;
+
+    let spec = DeviceSpec::a100();
+    let mut gg: GgArray<u32> = GgArray::new(GgConfig::new(32), spec);
+    let report = gg.grow_and_insert(&(0..100_000u32).collect::<Vec<_>>(), InsertionKind::WarpScan);
+    println!("inserted {} elements in {:.3} ms (simulated)", report.elements, report.total_ms());
+    let rw = gg.read_write_block(30.0, |x| *x += 1);
+    println!("rw_b over {} elements: {:.3} ms (simulated)", rw.elements, rw.total_ms());
+    println!("len {} capacity {} overhead {:.2}×", gg.len(), gg.capacity(), gg.overhead_ratio());
+    assert_eq!(gg.get(0), Some(1));
+    println!("quickstart OK");
+}
+
+fn serve(blocks: usize, inserts: usize, work: u32, use_artifacts: bool) {
+    use ggarray::coordinator::request::{Request, Response};
+    use ggarray::coordinator::service::{Coordinator, CoordinatorConfig};
+
+    let cfg = CoordinatorConfig { blocks, use_artifacts, ..CoordinatorConfig::default() };
+    let c = Coordinator::start(cfg);
+    let chunk = 1024;
+    let mut sent = 0usize;
+    while sent < inserts {
+        let n = chunk.min(inserts - sent);
+        let values: Vec<f32> = (sent..sent + n).map(|i| i as f32).collect();
+        c.call(Request::Insert { values });
+        sent += n;
+    }
+    c.call(Request::Work { calls: work });
+    match c.call(Request::Flatten) {
+        Response::Flattened { len, sim_us, checksum } => {
+            println!("flattened {len} elements (sim {:.3} ms, checksum {checksum:#x})", sim_us / 1e3)
+        }
+        other => println!("flatten: {other:?}"),
+    }
+    if let Response::Stats(s) = c.call(Request::Stats) {
+        println!("{s}");
+    }
+    c.shutdown();
+}

@@ -1,0 +1,204 @@
+//! AOT artifact manifest: `artifacts/manifest.json` written by
+//! `python/compile/aot.py` describing every lowered HLO module —
+//! entry-point name, file, input/output tensor specs and the lowering
+//! parameters. The Rust side never guesses shapes: everything comes from
+//! here.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// Tensor shape + dtype as recorded by the AOT pipeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    /// "i32" | "u32" | "f32" | "bf16" — jax dtype names.
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|v| v.as_u64().map(|u| u as usize).ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .ok_or_else(|| anyhow::anyhow!("tensor spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    dir: PathBuf,
+    entries: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {} (run `make artifacts`): {e}", path.display()))?;
+        let j = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse error: {e}"))?;
+        let mut entries = BTreeMap::new();
+        let obj = j
+            .get("entries")
+            .and_then(|e| e.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'entries'"))?;
+        for (name, spec) in obj {
+            let file = spec
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow::anyhow!("entry {name} missing file"))?
+                .to_string();
+            let parse_specs = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                spec.get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!("entry {name} missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                ArtifactSpec { name: name.clone(), file, inputs: parse_specs("inputs")?, outputs: parse_specs("outputs")? },
+            );
+        }
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Default artifact directory: `$GGARRAY_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("GGARRAY_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Does the default manifest exist? (Tests skip gracefully when the
+    /// build-time artifacts haven't been generated yet.)
+    pub fn available() -> bool {
+        Self::default_dir().join("manifest.json").exists()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Entries whose name starts with `prefix`, e.g. all `scan_i32_*`
+    /// size variants, sorted by their first input's element count.
+    pub fn family(&self, prefix: &str) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> =
+            self.entries.values().filter(|s| s.name.starts_with(prefix)).collect();
+        v.sort_by_key(|s| s.inputs.first().map(|i| i.elements()).unwrap_or(0));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let dir = std::env::temp_dir().join("ggarray_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{
+              "version": 1,
+              "entries": {
+                "scan_i32_1024": {
+                  "file": "scan_i32_1024.hlo.txt",
+                  "inputs": [{"shape": [1024], "dtype": "i32"}],
+                  "outputs": [{"shape": [1024], "dtype": "i32"}]
+                },
+                "scan_i32_4096": {
+                  "file": "scan_i32_4096.hlo.txt",
+                  "inputs": [{"shape": [4096], "dtype": "i32"}],
+                  "outputs": [{"shape": [4096], "dtype": "i32"}]
+                },
+                "work_f32_1024": {
+                  "file": "work_f32_1024.hlo.txt",
+                  "inputs": [{"shape": [1024], "dtype": "f32"}],
+                  "outputs": [{"shape": [1024], "dtype": "f32"}]
+                }
+              }
+            }"#,
+        );
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 3);
+        let s = m.get("scan_i32_1024").unwrap();
+        assert_eq!(s.inputs[0].shape, vec![1024]);
+        assert_eq!(s.inputs[0].dtype, "i32");
+        assert_eq!(s.inputs[0].elements(), 1024);
+        assert!(m.path_of(s).ends_with("scan_i32_1024.hlo.txt"));
+        let fam = m.family("scan_i32_");
+        assert_eq!(fam.len(), 2);
+        assert!(fam[0].inputs[0].elements() < fam[1].inputs[0].elements());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = ArtifactManifest::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = std::env::temp_dir().join("ggarray_manifest_bad");
+        write_manifest(&dir, r#"{"entries": {"x": {"file": "x.hlo"}}}"#);
+        assert!(ArtifactManifest::load(&dir).is_err());
+        write_manifest(&dir, "not json");
+        assert!(ArtifactManifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,66 @@
+//! PJRT CPU client wrapper.
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 serialises
+//! `HloModuleProto`s with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md).
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (neither `Send` nor
+//! `Sync`), so the client is **thread-local**: each thread that touches
+//! PJRT lazily creates its own CPU client. In this architecture that is
+//! exactly one thread — the coordinator worker — plus test threads.
+
+use std::cell::RefCell;
+use std::path::Path;
+
+thread_local! {
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with this thread's PJRT CPU client (created on first use).
+pub fn with_client<R>(f: impl FnOnce(&xla::PjRtClient) -> anyhow::Result<R>) -> anyhow::Result<R> {
+    CLIENT.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?);
+        }
+        f(slot.as_ref().expect("just initialised"))
+    })
+}
+
+/// Platform name of this thread's client (diagnostics).
+pub fn platform_name() -> anyhow::Result<String> {
+    with_client(|c| Ok(c.platform_name()))
+}
+
+/// Load an HLO-text file and compile it for this thread's CPU client.
+pub fn compile_hlo_file(path: &Path) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+    )
+    .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    with_client(|c| c.compile(&comp).map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_cpu() {
+        assert_eq!(platform_name().unwrap(), "cpu");
+        // Second use reuses the thread-local (no way to observe identity
+        // directly; absence of re-init cost is covered by bench_hotpath).
+        assert_eq!(platform_name().unwrap(), "cpu");
+    }
+
+    #[test]
+    fn missing_file_errors_cleanly() {
+        let err = match compile_hlo_file(Path::new("/no/such/file.hlo.txt")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error for missing file"),
+        };
+        assert!(err.to_string().contains("file.hlo.txt"));
+    }
+}

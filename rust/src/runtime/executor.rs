@@ -1,0 +1,303 @@
+//! Executable cache + typed execution over the AOT artifacts.
+//!
+//! The coordinator's hot path calls [`Executor::run_i32`] /
+//! [`Executor::run_f32`]; compilation happens once per artifact (cached),
+//! inputs are validated against the manifest's tensor specs, and padding
+//! to the artifact's fixed shape is handled here (XLA executables are
+//! shape-monomorphic; `aot.py` emits a small family of power-of-two
+//! sizes per kernel).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use super::artifact::{ArtifactManifest, ArtifactSpec};
+use super::client;
+
+/// A typed input for [`Executor::run_mixed`].
+#[derive(Debug, Clone, Copy)]
+pub enum ArgValue<'a> {
+    I32(&'a [i32]),
+    F32(&'a [f32]),
+}
+
+/// A typed output from [`Executor::run_mixed`].
+#[derive(Debug, Clone)]
+pub enum OutValue {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+impl OutValue {
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            OutValue::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            OutValue::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Cached, compiled AOT artifacts.
+pub struct Executor {
+    manifest: ArtifactManifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    executions: std::sync::atomic::AtomicU64,
+}
+
+impl Executor {
+    /// Load the manifest from `dir` (usually `artifacts/`).
+    pub fn new(dir: &Path) -> anyhow::Result<Executor> {
+        Ok(Executor {
+            manifest: ArtifactManifest::load(dir)?,
+            cache: Mutex::new(HashMap::new()),
+            executions: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Executor over the default artifact directory.
+    pub fn from_default_dir() -> anyhow::Result<Executor> {
+        Self::new(&ArtifactManifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Number of PJRT executions performed (metrics).
+    pub fn executions(&self) -> u64 {
+        self.executions.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    fn compiled(&self, name: &str) -> anyhow::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}' (have: {:?})", self.manifest.names().collect::<Vec<_>>()))?;
+        let exe = std::sync::Arc::new(client::compile_hlo_file(&self.manifest.path_of(spec))?);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile every artifact (startup warm-up so the request path
+    /// never compiles).
+    pub fn warm_up(&self) -> anyhow::Result<usize> {
+        let names: Vec<String> = self.manifest.names().map(|s| s.to_string()).collect();
+        for n in &names {
+            self.compiled(n)?;
+        }
+        Ok(names.len())
+    }
+
+    fn run_literals(&self, name: &str, inputs: Vec<xla::Literal>) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self.compiled(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
+        self.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result of {name}: {e}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple {name}: {e}"))
+    }
+
+    fn spec_checked(&self, name: &str, ninputs: usize) -> anyhow::Result<&ArtifactSpec> {
+        let spec = self.manifest.get(name).ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?;
+        anyhow::ensure!(
+            spec.inputs.len() == ninputs,
+            "artifact {name} expects {} inputs, got {ninputs}",
+            spec.inputs.len()
+        );
+        Ok(spec)
+    }
+
+    /// Run an i32→i32 artifact. Each input slice must be ≤ the artifact's
+    /// fixed size; it is zero-padded up. Outputs are truncated back to
+    /// `out_len`.
+    pub fn run_i32(&self, name: &str, inputs: &[&[i32]], out_len: usize) -> anyhow::Result<Vec<Vec<i32>>> {
+        let spec = self.spec_checked(name, inputs.len())?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (k, (inp, ts)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            anyhow::ensure!(ts.dtype == "i32", "artifact {name} input {k} is {}, not i32", ts.dtype);
+            anyhow::ensure!(
+                inp.len() <= ts.elements(),
+                "artifact {name} input {k}: {} > capacity {}",
+                inp.len(),
+                ts.elements()
+            );
+            let mut padded = inp.to_vec();
+            padded.resize(ts.elements(), 0);
+            let lit = xla::Literal::vec1(&padded)
+                .reshape(&ts.shape.iter().map(|&d| d as i64).collect::<Vec<_>>())
+                .map_err(|e| anyhow::anyhow!("reshape input {k} of {name}: {e}"))?;
+            lits.push(lit);
+        }
+        let outs = self.run_literals(name, lits)?;
+        outs.into_iter()
+            .map(|o| {
+                let mut v = o.to_vec::<i32>().map_err(|e| anyhow::anyhow!("read output of {name}: {e}"))?;
+                v.truncate(out_len.min(v.len()));
+                Ok(v)
+            })
+            .collect()
+    }
+
+    /// Run an f32→f32 artifact (same padding/truncation contract).
+    pub fn run_f32(&self, name: &str, inputs: &[&[f32]], out_len: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+        let spec = self.spec_checked(name, inputs.len())?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (k, (inp, ts)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            anyhow::ensure!(ts.dtype == "f32", "artifact {name} input {k} is {}, not f32", ts.dtype);
+            anyhow::ensure!(
+                inp.len() <= ts.elements(),
+                "artifact {name} input {k}: {} > capacity {}",
+                inp.len(),
+                ts.elements()
+            );
+            let mut padded = inp.to_vec();
+            padded.resize(ts.elements(), 0.0);
+            let lit = xla::Literal::vec1(&padded)
+                .reshape(&ts.shape.iter().map(|&d| d as i64).collect::<Vec<_>>())
+                .map_err(|e| anyhow::anyhow!("reshape input {k} of {name}: {e}"))?;
+            lits.push(lit);
+        }
+        let outs = self.run_literals(name, lits)?;
+        outs.into_iter()
+            .map(|o| {
+                let mut v = o.to_vec::<f32>().map_err(|e| anyhow::anyhow!("read output of {name}: {e}"))?;
+                v.truncate(out_len.min(v.len()));
+                Ok(v)
+            })
+            .collect()
+    }
+
+    /// Pick the smallest artifact in `family` that fits `n` elements
+    /// (family = name prefix, e.g. "scan_warp_i32_").
+    pub fn pick_size(&self, family: &str, n: usize) -> anyhow::Result<String> {
+        self.manifest
+            .family(family)
+            .into_iter()
+            .find(|s| s.inputs.first().map(|i| i.elements()).unwrap_or(0) >= n)
+            .map(|s| s.name.clone())
+            .ok_or_else(|| anyhow::anyhow!("no artifact in family '{family}' fits {n} elements"))
+    }
+
+    /// Largest artifact in `family` — callers chunk bigger inputs through
+    /// it (elementwise kernels like the work op are chunk-safe).
+    pub fn largest(&self, family: &str) -> anyhow::Result<String> {
+        self.manifest
+            .family(family)
+            .into_iter()
+            .last()
+            .map(|s| s.name.clone())
+            .ok_or_else(|| anyhow::anyhow!("no artifacts in family '{family}'"))
+    }
+
+    /// Smallest fitting artifact, or the largest one for chunked use.
+    pub fn pick_or_largest(&self, family: &str, n: usize) -> anyhow::Result<String> {
+        self.pick_size(family, n).or_else(|_| self.largest(family))
+    }
+
+    /// Pick the artifact size minimising modeled total execution cost for
+    /// chunking `n` elements through it:
+    /// `ceil(n/cap) × (EXEC_OVERHEAD + cap·PER_ELEM)`. A too-small size
+    /// pays per-execution overhead; a too-big one pays zero-padding
+    /// (perf pass: 60k elements through the 262144 artifact cost ~3 ms;
+    /// through 16384 ~0.4 ms).
+    pub fn pick_chunking(&self, family: &str, n: usize) -> anyhow::Result<String> {
+        const EXEC_OVERHEAD_US: f64 = 40.0;
+        const PER_ELEM_US: f64 = 0.004;
+        let fam = self.manifest.family(family);
+        anyhow::ensure!(!fam.is_empty(), "no artifacts in family '{family}'");
+        let n = n.max(1);
+        let best = fam
+            .into_iter()
+            .min_by(|a, b| {
+                let cost = |s: &&ArtifactSpec| {
+                    let cap = s.inputs.first().map(|i| i.elements()).unwrap_or(1).max(1);
+                    let chunks = n.div_ceil(cap) as f64;
+                    chunks * (EXEC_OVERHEAD_US + cap as f64 * PER_ELEM_US)
+                };
+                cost(a).partial_cmp(&cost(b)).unwrap()
+            })
+            .expect("non-empty");
+        Ok(best.name.clone())
+    }
+
+    /// Run an artifact with mixed input dtypes (e.g. `insert_pack_f32_*`:
+    /// i32 mask + f32 values → i32 offsets + f32 packed + i32 total).
+    /// Inputs are zero-padded to the artifact shapes; outputs come back
+    /// full-length (callers slice).
+    pub fn run_mixed(&self, name: &str, inputs: &[ArgValue]) -> anyhow::Result<Vec<OutValue>> {
+        let spec = self.spec_checked(name, inputs.len())?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (k, (inp, ts)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let dims: Vec<i64> = ts.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (inp, ts.dtype.as_str()) {
+                (ArgValue::I32(v), "i32") => {
+                    anyhow::ensure!(v.len() <= ts.elements(), "{name} input {k} too large");
+                    let mut p = v.to_vec();
+                    p.resize(ts.elements(), 0);
+                    xla::Literal::vec1(&p).reshape(&dims)
+                }
+                (ArgValue::F32(v), "f32") => {
+                    anyhow::ensure!(v.len() <= ts.elements(), "{name} input {k} too large");
+                    let mut p = v.to_vec();
+                    p.resize(ts.elements(), 0.0);
+                    xla::Literal::vec1(&p).reshape(&dims)
+                }
+                (_, want) => anyhow::bail!("artifact {name} input {k}: dtype mismatch (artifact wants {want})"),
+            }
+            .map_err(|e| anyhow::anyhow!("reshape input {k} of {name}: {e}"))?;
+            lits.push(lit);
+        }
+        let outs = self.run_literals(name, lits)?;
+        outs.iter()
+            .zip(&spec.outputs)
+            .map(|(o, ts)| match ts.dtype.as_str() {
+                "i32" => Ok(OutValue::I32(o.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{name}: {e}"))?)),
+                "f32" => Ok(OutValue::F32(o.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{name}: {e}"))?)),
+                other => anyhow::bail!("artifact {name}: unsupported output dtype {other}"),
+            })
+            .collect()
+    }
+
+    /// Exclusive prefix sum of `counts` via the AOT scan kernel family.
+    /// Returns (offsets, total). The Pallas kernels compute an *inclusive*
+    /// scan; exclusive = shift right by one.
+    pub fn scan_offsets(&self, family: &str, counts: &[i32]) -> anyhow::Result<(Vec<i64>, i64)> {
+        if counts.is_empty() {
+            return Ok((vec![], 0));
+        }
+        let name = self.pick_size(family, counts.len())?;
+        let incl = self.run_i32(&name, &[counts], counts.len())?.swap_remove(0);
+        let total = *incl.last().expect("non-empty") as i64;
+        let mut offsets = Vec::with_capacity(counts.len());
+        offsets.push(0i64);
+        offsets.extend(incl[..counts.len() - 1].iter().map(|&x| x as i64));
+        Ok((offsets, total))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Executor tests that need real artifacts live in
+    // rust/tests/runtime_artifacts.rs and skip when `make artifacts`
+    // hasn't run. Here: manifest-independent behaviour.
+    use super::*;
+
+    #[test]
+    fn unknown_dir_fails() {
+        assert!(Executor::new(Path::new("/definitely/not/here")).is_err());
+    }
+}

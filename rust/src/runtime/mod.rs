@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+//! Python never runs at request time.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactManifest, ArtifactSpec};
+pub use executor::{ArgValue, Executor, OutValue};

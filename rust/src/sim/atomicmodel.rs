@@ -1,0 +1,84 @@
+//! Atomic-operation cost model.
+//!
+//! Same-address atomics (the paper's *atomic* insertion algorithm does one
+//! `atomicAdd(&size, 1)` per inserting thread) serialise at the L2 atomic
+//! unit. Modern compilers/hardware apply **warp aggregation** — one atomic
+//! per warp plus lane offsets from a ballot — so the serialised op count is
+//! `ceil(n / warp_size)`. Atomics spread over `k` distinct addresses (one
+//! size counter per LFVector) proceed in parallel across addresses and
+//! serialise only within each.
+
+use super::spec::DeviceSpec;
+
+/// Cost (µs) of `n_ops` atomic updates to a single address, with warp
+/// aggregation if `aggregated`.
+pub fn same_addr_atomic_us(spec: &DeviceSpec, n_ops: u64, aggregated: bool) -> f64 {
+    let effective = if aggregated {
+        crate::util::math::ceil_div(n_ops, spec.warp_size as u64)
+    } else {
+        n_ops
+    };
+    effective as f64 * spec.cost.atomic_same_addr_ns / 1e3
+}
+
+/// Cost (µs) of `n_ops` atomics uniformly spread over `n_addrs` distinct
+/// addresses (e.g. one per LFVector): the critical path is the most
+/// contended address; under a uniform spread that is `ceil(n/k)` ops.
+pub fn multi_addr_atomic_us(spec: &DeviceSpec, n_ops: u64, n_addrs: u64, aggregated: bool) -> f64 {
+    assert!(n_addrs > 0);
+    let per_addr = crate::util::math::ceil_div(n_ops, n_addrs);
+    same_addr_atomic_us(spec, per_addr, aggregated)
+}
+
+/// Cost (µs) of the worst-contended address given an explicit per-address
+/// op distribution (used when routing is skewed).
+pub fn skewed_atomic_us(spec: &DeviceSpec, ops_per_addr: &[u64], aggregated: bool) -> f64 {
+    let max = ops_per_addr.iter().copied().max().unwrap_or(0);
+    same_addr_atomic_us(spec, max, aggregated)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregation_divides_by_warp() {
+        let spec = DeviceSpec::a100();
+        let raw = same_addr_atomic_us(&spec, 3200, false);
+        let agg = same_addr_atomic_us(&spec, 3200, true);
+        assert!((raw / agg - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_addr_parallelises() {
+        let spec = DeviceSpec::a100();
+        let one = multi_addr_atomic_us(&spec, 1_000_000, 1, true);
+        let many = multi_addr_atomic_us(&spec, 1_000_000, 512, true);
+        assert!(one / many > 400.0, "one={one} many={many}");
+    }
+
+    #[test]
+    fn skew_dominates() {
+        let spec = DeviceSpec::a100();
+        let balanced = skewed_atomic_us(&spec, &[100, 100, 100], true);
+        let skewed = skewed_atomic_us(&spec, &[10, 10, 280], true);
+        assert!(skewed > balanced * 2.0);
+    }
+
+    #[test]
+    fn atomic_insert_magnitude() {
+        // 5.12e8 inserting threads on one counter, warp-aggregated:
+        // 1.6e7 serialized atomics × 1.9 ns ≈ 30 ms — the "slowest"
+        // insertion algorithm of Fig 4 at large n (scan ≈ 7–12 ms).
+        let spec = DeviceSpec::a100();
+        let ms = same_addr_atomic_us(&spec, 512_000_000, true) / 1e3;
+        assert!(ms > 15.0 && ms < 60.0, "{ms} ms");
+    }
+
+    #[test]
+    fn zero_ops_zero_cost() {
+        let spec = DeviceSpec::titan_rtx();
+        assert_eq!(same_addr_atomic_us(&spec, 0, true), 0.0);
+        assert_eq!(skewed_atomic_us(&spec, &[], true), 0.0);
+    }
+}

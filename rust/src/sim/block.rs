@@ -1,0 +1,90 @@
+//! Thread-block-level cost primitives: `__syncthreads` barriers, the
+//! warp-shuffle inclusive scan (`__shfl_up_sync`), and shared-memory
+//! staging. These are the per-block building blocks the insertion
+//! algorithms compose; costs are in µs of *per-block* critical path, which
+//! `kernel::launch_blocks` then folds over the grid with SM-wave
+//! scheduling.
+
+use super::spec::DeviceSpec;
+
+/// Cycles → µs on the base clock.
+fn cycles_us(spec: &DeviceSpec, cycles: f64) -> f64 {
+    cycles / spec.base_clock_mhz // cycles / (MHz) = µs
+}
+
+/// Cost of one `__syncthreads()` barrier for a block of `threads`.
+/// Roughly 20–40 cycles plus a small per-warp convergence term.
+pub fn barrier_us(spec: &DeviceSpec, threads: u32) -> f64 {
+    let warps = crate::util::math::ceil_div(threads as u64, spec.warp_size as u64) as f64;
+    cycles_us(spec, 24.0 + 2.0 * warps)
+}
+
+/// Critical-path cost of an intra-block inclusive scan of `threads`
+/// elements via warp shuffles: log2(32) shuffle steps within each warp,
+/// a shared-memory stage for warp totals, a scan of warp totals by the
+/// first warp, and a broadcast add — the classic 3-phase block scan.
+pub fn shfl_block_scan_us(spec: &DeviceSpec, threads: u32) -> f64 {
+    let w = spec.warp_size as f64;
+    let warps = crate::util::math::ceil_div(threads as u64, spec.warp_size as u64) as f64;
+    // ~2 cycles per shuffle-add step.
+    let warp_scan = 2.0 * w.log2().ceil();
+    // Stage warp sums to smem + barrier + first-warp scan + barrier + add.
+    let stage = 8.0 + 2.0 * warps.log2().max(1.0).ceil();
+    cycles_us(spec, warp_scan + stage) + 2.0 * barrier_us(spec, threads)
+}
+
+/// Cost of one CAS attempt on a block-shared flag (bucket allocation
+/// guard in `new_bucket`).
+pub fn cas_us(spec: &DeviceSpec) -> f64 {
+    // L2 round-trip, ~300 cycles.
+    cycles_us(spec, 300.0)
+}
+
+/// Per-block cost of staging `bytes` through shared memory (one round
+/// trip at ~128 B/cycle/SM).
+pub fn smem_stage_us(spec: &DeviceSpec, bytes: u64) -> f64 {
+    cycles_us(spec, bytes as f64 / 128.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_sub_microsecond() {
+        let spec = DeviceSpec::a100();
+        let b = barrier_us(&spec, 1024);
+        assert!(b > 0.0 && b < 1.0, "{b}");
+        // Bigger blocks pay slightly more.
+        assert!(barrier_us(&spec, 1024) > barrier_us(&spec, 128));
+    }
+
+    #[test]
+    fn block_scan_cost_reasonable() {
+        let spec = DeviceSpec::a100();
+        let s = shfl_block_scan_us(&spec, 1024);
+        // Tens of cycles + 2 barriers ⇒ well under 1 µs, over 10 ns.
+        assert!(s > 0.01 && s < 1.0, "{s}");
+    }
+
+    #[test]
+    fn scan_grows_with_block_size() {
+        let spec = DeviceSpec::titan_rtx();
+        assert!(shfl_block_scan_us(&spec, 1024) > shfl_block_scan_us(&spec, 64));
+    }
+
+    #[test]
+    fn cas_is_l2_roundtrip_scale() {
+        let spec = DeviceSpec::a100();
+        let c = cas_us(&spec);
+        assert!(c > 0.1 && c < 1.0, "{c}"); // ~0.39 µs at 765 MHz
+    }
+
+    #[test]
+    fn clock_speed_matters() {
+        // TITAN RTX clocks higher → cheaper cycles.
+        let a = cas_us(&DeviceSpec::a100());
+        let t = cas_us(&DeviceSpec::titan_rtx());
+        assert!(t < a);
+    }
+}

@@ -1,0 +1,166 @@
+//! Simulated time accounting.
+//!
+//! A [`Clock`] is a monotonically advancing microsecond counter plus a
+//! per-category ledger, shared by every simulated component (heap, VMM,
+//! kernels). Operations *advance* it by their modeled cost; experiments
+//! read phase totals out of the ledger.
+
+use std::collections::BTreeMap;
+
+/// Cost categories charged by the simulated operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Category {
+    /// Kernel launch overheads.
+    Launch,
+    /// DRAM traffic time.
+    Memory,
+    /// ALU/MXU compute time.
+    Compute,
+    /// Atomic serialisation.
+    Atomic,
+    /// Device allocator (`cudaMalloc`/`free`).
+    Alloc,
+    /// CUDA VMM operations (reserve/map/unmap).
+    Vmm,
+    /// Host synchronisation / host↔device transfers.
+    Host,
+}
+
+impl Category {
+    pub const ALL: [Category; 7] = [
+        Category::Launch,
+        Category::Memory,
+        Category::Compute,
+        Category::Atomic,
+        Category::Alloc,
+        Category::Vmm,
+        Category::Host,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Launch => "launch",
+            Category::Memory => "memory",
+            Category::Compute => "compute",
+            Category::Atomic => "atomic",
+            Category::Alloc => "alloc",
+            Category::Vmm => "vmm",
+            Category::Host => "host",
+        }
+    }
+}
+
+/// Simulated clock + cost ledger (microseconds).
+#[derive(Debug, Clone, Default)]
+pub struct Clock {
+    now_us: f64,
+    ledger: BTreeMap<Category, f64>,
+}
+
+impl Clock {
+    pub fn new() -> Clock {
+        Clock::default()
+    }
+
+    /// Current simulated time (µs since construction).
+    pub fn now_us(&self) -> f64 {
+        self.now_us
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.now_us / 1e3
+    }
+
+    /// Advance by `us`, charging `cat`.
+    pub fn charge(&mut self, cat: Category, us: f64) {
+        debug_assert!(us >= 0.0, "negative cost {us}");
+        self.now_us += us;
+        *self.ledger.entry(cat).or_insert(0.0) += us;
+    }
+
+    /// Total charged to a category.
+    pub fn total(&self, cat: Category) -> f64 {
+        self.ledger.get(&cat).copied().unwrap_or(0.0)
+    }
+
+    /// Snapshot of the ledger (µs per category).
+    pub fn snapshot(&self) -> BTreeMap<Category, f64> {
+        self.ledger.clone()
+    }
+
+    /// Time elapsed since a mark (µs).
+    pub fn since(&self, mark_us: f64) -> f64 {
+        self.now_us - mark_us
+    }
+
+    /// Reset time and ledger.
+    pub fn reset(&mut self) {
+        self.now_us = 0.0;
+        self.ledger.clear();
+    }
+}
+
+/// A scoped phase measurement: captures the clock at construction and
+/// reports the delta. Used by experiment runners to attribute grow /
+/// insert / r-w phases.
+pub struct Phase {
+    start_us: f64,
+}
+
+impl Phase {
+    pub fn start(clock: &Clock) -> Phase {
+        Phase { start_us: clock.now_us() }
+    }
+
+    pub fn elapsed_us(&self, clock: &Clock) -> f64 {
+        clock.since(self.start_us)
+    }
+
+    pub fn elapsed_ms(&self, clock: &Clock) -> f64 {
+        self.elapsed_us(clock) / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate() {
+        let mut c = Clock::new();
+        c.charge(Category::Memory, 10.0);
+        c.charge(Category::Memory, 5.0);
+        c.charge(Category::Launch, 4.0);
+        assert_eq!(c.now_us(), 19.0);
+        assert_eq!(c.total(Category::Memory), 15.0);
+        assert_eq!(c.total(Category::Launch), 4.0);
+        assert_eq!(c.total(Category::Vmm), 0.0);
+    }
+
+    #[test]
+    fn phase_scoping() {
+        let mut c = Clock::new();
+        c.charge(Category::Alloc, 3.0);
+        let p = Phase::start(&c);
+        c.charge(Category::Memory, 7.0);
+        c.charge(Category::Compute, 1.0);
+        assert_eq!(p.elapsed_us(&c), 8.0);
+        assert!((p.elapsed_ms(&c) - 0.008).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut c = Clock::new();
+        c.charge(Category::Host, 2.0);
+        c.reset();
+        assert_eq!(c.now_us(), 0.0);
+        assert_eq!(c.total(Category::Host), 0.0);
+    }
+
+    #[test]
+    fn ms_conversion() {
+        let mut c = Clock::new();
+        c.charge(Category::Memory, 2500.0);
+        assert!((c.now_ms() - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,234 @@
+//! Grid-level kernel cost model.
+//!
+//! A kernel is summarised by a [`KernelProfile`] — DRAM traffic, FP32 and
+//! MXU/tensor FLOPs, per-block critical path, atomic serialisation — and
+//! [`launch`] folds it over the device: SM-wave scheduling for the block
+//! critical path, bandwidth occupancy for the memory time, and the usual
+//! `max(memory, compute)` overlap for a well-pipelined kernel.
+
+use super::clock::{Category, Clock};
+use super::spec::DeviceSpec;
+
+/// Cost description of one kernel launch.
+#[derive(Debug, Clone)]
+pub struct KernelProfile {
+    /// Grid size in thread blocks.
+    pub blocks: u64,
+    /// Threads per block.
+    pub threads_per_block: u32,
+    /// Total DRAM traffic in bytes.
+    pub bytes: f64,
+    /// Fraction of peak bandwidth this traffic can use (coalescing /
+    /// access-pattern efficiency), before grid-occupancy scaling.
+    pub coalescing_eff: f64,
+    /// CUDA-core FP32 work.
+    pub flops_fp32: f64,
+    /// Tensor-core / MXU FP16 work.
+    pub flops_mxu: f64,
+    /// Utilisation of the tensor path (paper: 1/8 of warps active for the
+    /// tensor scan at a 1:1 data:thread ratio).
+    pub mxu_utilisation: f64,
+    /// Per-block critical-path time (barriers, intra-block scans) — paid
+    /// once per *wave* of resident blocks, not per block.
+    pub per_block_us: f64,
+    /// Pre-computed atomic serialisation time (see `atomicmodel`).
+    pub atomic_us: f64,
+    /// Additional non-overlapped pipeline time (e.g. the MXU matmul stage
+    /// of the tensor scan, which cannot hide behind the streaming traffic
+    /// at a 1:1 data:thread ratio).
+    pub extra_us: f64,
+}
+
+impl KernelProfile {
+    /// A pure streaming kernel: `bytes` of traffic at `eff` efficiency.
+    pub fn streaming(blocks: u64, threads_per_block: u32, bytes: f64, eff: f64) -> KernelProfile {
+        KernelProfile {
+            blocks,
+            threads_per_block,
+            bytes,
+            coalescing_eff: eff,
+            flops_fp32: 0.0,
+            flops_mxu: 0.0,
+            mxu_utilisation: 1.0,
+            per_block_us: 0.0,
+            atomic_us: 0.0,
+            extra_us: 0.0,
+        }
+    }
+}
+
+/// Breakdown of a launch's modeled time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaunchBreakdown {
+    pub launch_us: f64,
+    pub memory_us: f64,
+    pub compute_us: f64,
+    pub block_path_us: f64,
+    pub atomic_us: f64,
+    pub total_us: f64,
+}
+
+/// Model a launch without charging a clock.
+pub fn model(spec: &DeviceSpec, p: &KernelProfile) -> LaunchBreakdown {
+    assert!(p.blocks > 0, "kernel with zero blocks");
+    let resident = (p.blocks).min(spec.max_resident_blocks(p.threads_per_block) as u64);
+    // Bandwidth occupancy: a small resident grid cannot saturate DRAM.
+    let occ_bw = spec.occupancy_frac(resident);
+    let memory_us = if p.bytes > 0.0 {
+        p.bytes / (spec.bw_bytes_per_us() * p.coalescing_eff.clamp(1e-6, 1.0) * occ_bw)
+    } else {
+        0.0
+    };
+    // Compute occupancy: fraction of the device's thread capacity in flight.
+    let total_threads = (p.blocks * p.threads_per_block as u64) as f64;
+    let capacity = (spec.sm_count * spec.max_threads_per_sm) as f64;
+    let occ_cp = (total_threads / capacity).min(1.0).max(1e-6);
+    let compute_us = p.flops_fp32 / (spec.fp32_flops_per_us() * occ_cp)
+        + p.flops_mxu / (spec.fp16_flops_per_us() * p.mxu_utilisation.clamp(1e-6, 1.0) * occ_cp);
+    // The per-block critical path is paid once per wave of resident blocks.
+    let waves = crate::util::math::ceil_div(p.blocks, resident.max(1)) as f64;
+    let block_path_us = waves * p.per_block_us;
+    let total_us =
+        spec.cost.kernel_launch_us + memory_us.max(compute_us) + block_path_us + p.atomic_us + p.extra_us;
+    LaunchBreakdown {
+        launch_us: spec.cost.kernel_launch_us,
+        memory_us,
+        compute_us,
+        block_path_us: block_path_us + p.extra_us,
+        atomic_us: p.atomic_us,
+        total_us,
+    }
+}
+
+/// Model a launch and charge it to `clock` by category. Returns the
+/// breakdown.
+pub fn launch(spec: &DeviceSpec, clock: &mut Clock, p: &KernelProfile) -> LaunchBreakdown {
+    let b = model(spec, p);
+    clock.charge(Category::Launch, b.launch_us);
+    if b.memory_us >= b.compute_us {
+        clock.charge(Category::Memory, b.memory_us);
+    } else {
+        clock.charge(Category::Compute, b.compute_us);
+    }
+    if b.block_path_us > 0.0 {
+        clock.charge(Category::Compute, b.block_path_us);
+    }
+    if b.atomic_us > 0.0 {
+        clock.charge(Category::Atomic, b.atomic_us);
+    }
+    b
+}
+
+/// Convenience: time (µs) for a fully-parallel streaming pass over `bytes`
+/// at efficiency `eff` with a saturating grid.
+pub fn streaming_us(spec: &DeviceSpec, bytes: f64, eff: f64) -> f64 {
+    bytes / (spec.bw_bytes_per_us() * eff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_rw_kernel_matches_table2() {
+        // The paper's r/w op: +1, 30 times, on 1.024e9 u32 elements,
+        // static array, A100 → 6.27 ms (Table II).
+        let spec = DeviceSpec::a100();
+        let n = 1.024e9;
+        let p = KernelProfile {
+            blocks: 1_000_000, // one thread per element, plenty of blocks
+            threads_per_block: 1024,
+            bytes: 2.0 * 4.0 * n,
+            coalescing_eff: spec.cost.coalesced_eff,
+            flops_fp32: 30.0 * n,
+            flops_mxu: 0.0,
+            mxu_utilisation: 1.0,
+            per_block_us: 0.0,
+            atomic_us: 0.0,
+            extra_us: 0.0,
+        };
+        let b = model(&spec, &p);
+        let ms = b.total_us / 1e3;
+        assert!((ms - 6.27).abs() < 0.4, "modeled {ms:.2} ms vs 6.27 ms");
+        // It must be memory-bound: 30 adds/elem ≪ bandwidth time.
+        assert!(b.memory_us > b.compute_us);
+    }
+
+    #[test]
+    fn occupancy_penalty_small_grids() {
+        let spec = DeviceSpec::a100();
+        let mk = |blocks| KernelProfile::streaming(blocks, 1024, 4e9, spec.cost.coalesced_eff);
+        let t32 = model(&spec, &mk(32)).total_us;
+        let t512 = model(&spec, &mk(512)).total_us;
+        // 32 blocks can't saturate bandwidth: ~2.2× slower, as in the
+        // paper's GGArray32-vs-512 insert gap.
+        let ratio = t32 / t512;
+        assert!(ratio > 1.8 && ratio < 3.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn waves_multiply_block_path() {
+        let spec = DeviceSpec::a100();
+        let mut p = KernelProfile::streaming(216, 1024, 0.0, 1.0);
+        p.per_block_us = 2.0;
+        let one_wave = model(&spec, &p);
+        p.blocks = 216 * 3;
+        let three_waves = model(&spec, &p);
+        assert!((one_wave.block_path_us - 2.0).abs() < 1e-9);
+        assert!((three_waves.block_path_us - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compute_bound_kernel_uses_flops() {
+        let spec = DeviceSpec::a100();
+        let p = KernelProfile {
+            blocks: 10_000,
+            threads_per_block: 1024,
+            bytes: 1e6,
+            coalescing_eff: 1.0,
+            flops_fp32: 1e12, // 1 TFLOP on a 19.49 TFLOPS part ≈ 51 ms
+            flops_mxu: 0.0,
+            mxu_utilisation: 1.0,
+            per_block_us: 0.0,
+            atomic_us: 0.0,
+            extra_us: 0.0,
+        };
+        let b = model(&spec, &p);
+        assert!(b.compute_us > b.memory_us);
+        assert!((b.compute_us / 1e3 - 51.3).abs() < 2.0, "{}", b.compute_us / 1e3);
+    }
+
+    #[test]
+    fn launch_charges_categories() {
+        let spec = DeviceSpec::a100();
+        let mut clock = Clock::new();
+        let mut p = KernelProfile::streaming(1000, 256, 1e9, 0.8);
+        p.atomic_us = 5.0;
+        p.per_block_us = 0.1;
+        let b = launch(&spec, &mut clock, &p);
+        assert!((clock.now_us() - b.total_us).abs() < 1e-9);
+        assert_eq!(clock.total(Category::Atomic), 5.0);
+        assert!(clock.total(Category::Memory) > 0.0);
+        assert_eq!(clock.total(Category::Launch), spec.cost.kernel_launch_us);
+    }
+
+    #[test]
+    fn mxu_path_respects_utilisation() {
+        let spec = DeviceSpec::titan_rtx();
+        let mk = |util| KernelProfile {
+            blocks: 100_000,
+            threads_per_block: 1024,
+            bytes: 0.0,
+            coalescing_eff: 1.0,
+            flops_fp32: 0.0,
+            flops_mxu: 1e12,
+            mxu_utilisation: util,
+            per_block_us: 0.0,
+            atomic_us: 0.0,
+            extra_us: 0.0,
+        };
+        let full = model(&spec, &mk(1.0)).compute_us;
+        let eighth = model(&spec, &mk(0.125)).compute_us;
+        assert!((eighth / full - 8.0).abs() < 1e-6);
+    }
+}

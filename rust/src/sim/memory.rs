@@ -1,0 +1,243 @@
+//! Simulated VRAM heap (`cudaMalloc`-style allocator).
+//!
+//! Tracks capacity, live bytes and peak usage for the memory-efficiency
+//! experiments (Fig 3), and charges allocation latency to the simulated
+//! clock. Device-side allocations from concurrently-running blocks
+//! serialise on the allocator — the effect the paper leans on when GGArray
+//! with many LFVectors pays more for `grow` than with few (Table II:
+//! GGArray512 grow 8.76 ms vs GGArray32 0.52 ms).
+
+use super::clock::{Category, Clock};
+use super::spec::DeviceSpec;
+use std::collections::BTreeMap;
+
+/// Opaque handle to a live allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct AllocId(u64);
+
+/// Out-of-memory error carrying the shortfall.
+#[derive(Debug, thiserror::Error)]
+#[error("simulated VRAM OOM: requested {requested} B, free {free} B of {capacity} B")]
+pub struct OomError {
+    pub requested: u64,
+    pub free: u64,
+    pub capacity: u64,
+}
+
+/// The simulated device heap.
+#[derive(Debug)]
+pub struct VramHeap {
+    spec: DeviceSpec,
+    capacity: u64,
+    used: u64,
+    peak: u64,
+    next_id: u64,
+    allocs: BTreeMap<AllocId, u64>,
+    alloc_calls: u64,
+    free_calls: u64,
+}
+
+impl VramHeap {
+    /// Heap sized to the device's full VRAM.
+    pub fn new(spec: DeviceSpec) -> VramHeap {
+        let capacity = spec.memory_bytes();
+        VramHeap::with_capacity(spec, capacity)
+    }
+
+    /// Heap with an explicit capacity (used to emulate a VRAM budget).
+    pub fn with_capacity(spec: DeviceSpec, capacity: u64) -> VramHeap {
+        VramHeap {
+            spec,
+            capacity,
+            used: 0,
+            peak: 0,
+            next_id: 1,
+            allocs: BTreeMap::new(),
+            alloc_calls: 0,
+            free_calls: 0,
+        }
+    }
+
+    /// Latency of a single allocation of `bytes`.
+    fn alloc_cost_us(&self, bytes: u64) -> f64 {
+        let mib = bytes as f64 / (1024.0 * 1024.0);
+        self.spec.cost.malloc_base_us + self.spec.cost.malloc_per_mib_us * mib
+    }
+
+    /// Allocate `bytes`, charging the clock.
+    pub fn alloc(&mut self, bytes: u64, clock: &mut Clock) -> Result<AllocId, OomError> {
+        if self.used + bytes > self.capacity {
+            return Err(OomError { requested: bytes, free: self.capacity - self.used, capacity: self.capacity });
+        }
+        clock.charge(Category::Alloc, self.alloc_cost_us(bytes));
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        let id = AllocId(self.next_id);
+        self.next_id += 1;
+        self.allocs.insert(id, bytes);
+        self.alloc_calls += 1;
+        Ok(id)
+    }
+
+    /// `count` device-side allocations issued by concurrently-running
+    /// blocks: they serialise on the allocator lock, so the charged time is
+    /// the *sum* of individual latencies.
+    pub fn alloc_many(&mut self, sizes: &[u64], clock: &mut Clock) -> Result<Vec<AllocId>, OomError> {
+        let total: u64 = sizes.iter().sum();
+        if self.used + total > self.capacity {
+            return Err(OomError { requested: total, free: self.capacity - self.used, capacity: self.capacity });
+        }
+        let mut ids = Vec::with_capacity(sizes.len());
+        for &s in sizes {
+            ids.push(self.alloc(s, clock).expect("checked capacity above"));
+        }
+        Ok(ids)
+    }
+
+    /// Free an allocation.
+    pub fn free(&mut self, id: AllocId, clock: &mut Clock) {
+        let bytes = self.allocs.remove(&id).expect("double free / unknown AllocId");
+        self.used -= bytes;
+        self.free_calls += 1;
+        clock.charge(Category::Alloc, self.spec.cost.free_us);
+    }
+
+    /// Size of a live allocation.
+    pub fn size_of(&self, id: AllocId) -> Option<u64> {
+        self.allocs.get(&id).copied()
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    pub fn live_allocations(&self) -> usize {
+        self.allocs.len()
+    }
+
+    pub fn alloc_calls(&self) -> u64 {
+        self.alloc_calls
+    }
+
+    pub fn free_calls(&self) -> u64 {
+        self.free_calls
+    }
+
+    pub fn spec(&self) -> &DeviceSpec {
+        &self.spec
+    }
+
+    /// Reset the peak-tracking watermark to current usage (used between
+    /// experiment phases).
+    pub fn reset_peak(&mut self) {
+        self.peak = self.used;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn heap() -> (VramHeap, Clock) {
+        (VramHeap::with_capacity(DeviceSpec::a100(), 1024 * 1024 * 1024), Clock::new())
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let (mut h, mut c) = heap();
+        let id = h.alloc(1000, &mut c).unwrap();
+        assert_eq!(h.used(), 1000);
+        assert_eq!(h.size_of(id), Some(1000));
+        assert_eq!(h.live_allocations(), 1);
+        h.free(id, &mut c);
+        assert_eq!(h.used(), 0);
+        assert_eq!(h.live_allocations(), 0);
+        assert_eq!(h.peak(), 1000);
+        assert!(c.total(Category::Alloc) > 0.0);
+    }
+
+    #[test]
+    fn oom_when_exceeding_capacity() {
+        let (mut h, mut c) = heap();
+        let cap = h.capacity();
+        let _a = h.alloc(cap - 10, &mut c).unwrap();
+        let err = h.alloc(11, &mut c).unwrap_err();
+        assert_eq!(err.requested, 11);
+        assert_eq!(err.free, 10);
+        // Failed alloc must not charge time or mutate state.
+        assert_eq!(h.used(), cap - 10);
+    }
+
+    #[test]
+    fn peak_tracks_high_watermark() {
+        let (mut h, mut c) = heap();
+        let a = h.alloc(500, &mut c).unwrap();
+        let b = h.alloc(300, &mut c).unwrap();
+        h.free(a, &mut c);
+        let _c2 = h.alloc(100, &mut c).unwrap();
+        assert_eq!(h.peak(), 800);
+        assert_eq!(h.used(), 400);
+        h.free(b, &mut c);
+        h.reset_peak();
+        assert_eq!(h.peak(), h.used());
+    }
+
+    #[test]
+    fn alloc_many_serialises_cost() {
+        let (mut h, mut c) = heap();
+        let sizes = vec![1024 * 1024; 8];
+        let before = c.now_us();
+        let ids = h.alloc_many(&sizes, &mut c).unwrap();
+        assert_eq!(ids.len(), 8);
+        let elapsed = c.now_us() - before;
+        // 8 × (base 16.8 + 0.002/MiB) = 134.416 µs — strictly serialised.
+        assert!((elapsed - 8.0 * 16.802).abs() < 1e-6, "elapsed {elapsed}");
+    }
+
+    #[test]
+    fn alloc_many_all_or_nothing() {
+        let (mut h, mut c) = heap();
+        let cap = h.capacity();
+        let err = h.alloc_many(&[cap / 2, cap / 2, cap / 2], &mut c).unwrap_err();
+        assert_eq!(err.requested, cap / 2 * 3);
+        assert_eq!(h.used(), 0);
+        assert_eq!(h.live_allocations(), 0);
+    }
+
+    #[test]
+    fn alloc_cost_mostly_size_independent() {
+        // cudaMalloc latency is dominated by the allocator lock, not the
+        // size (Table II back-calculation) — a 256 MiB allocation costs
+        // only slightly more than a 1 KiB one.
+        let (mut h, mut c) = heap();
+        let t0 = c.now_us();
+        h.alloc(1024, &mut c).unwrap();
+        let small = c.now_us() - t0;
+        let t1 = c.now_us();
+        h.alloc(256 * 1024 * 1024, &mut c).unwrap();
+        let big = c.now_us() - t1;
+        assert!(big > small, "big {big} small {small}");
+        assert!(big < small * 1.1, "big {big} small {small}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_free_panics() {
+        let (mut h, mut c) = heap();
+        let id = h.alloc(10, &mut c).unwrap();
+        h.free(id, &mut c);
+        h.free(id, &mut c);
+    }
+}

@@ -1,0 +1,297 @@
+//! Device-side buddy sub-allocator.
+//!
+//! The paper's §II.D surveys GPU dynamic memory managers (XMalloc,
+//! ScatterAlloc, Ouroboros; Winter et al. 2021 benchmarks) as "potential
+//! tools that can complement" GGArray: device `malloc` is slow because
+//! every allocation takes the global driver path. A sub-allocator grabs
+//! large slabs once and serves bucket-sized requests from a buddy tree,
+//! turning GGArray's grow phase from B driver calls into B cheap
+//! device-side splits.
+//!
+//! Implemented as a classic power-of-two buddy system over slabs obtained
+//! from [`VramHeap`]; used by the A5 ablation (`experiments::ablations`)
+//! to quantify the grow-phase saving.
+
+use super::clock::{Category, Clock};
+use super::memory::{AllocId, OomError, VramHeap};
+use std::collections::BTreeSet;
+
+/// Cost of a device-side buddy split/coalesce step (µs) — a few atomic
+/// CAS operations on the free bitmap, ~100 cycles at 1 GHz.
+const BUDDY_OP_US: f64 = 0.1;
+
+/// One slab: a contiguous VramHeap allocation managed as a buddy tree.
+#[derive(Debug)]
+struct Slab {
+    #[allow(dead_code)]
+    backing: AllocId,
+    /// Free blocks per order: `free[k]` holds offsets of free blocks of
+    /// size `min_block << k`.
+    free: Vec<BTreeSet<u64>>,
+}
+
+/// Handle to a sub-allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubAlloc {
+    pub slab: usize,
+    pub offset: u64,
+    pub order: u32,
+}
+
+/// Buddy allocator over device slabs.
+#[derive(Debug)]
+pub struct BuddyAllocator {
+    slab_bytes: u64,
+    min_block: u64,
+    max_order: u32,
+    slabs: Vec<Slab>,
+    live: u64,
+    /// Stats.
+    slab_allocs: u64,
+    buddy_ops: u64,
+}
+
+impl BuddyAllocator {
+    /// `slab_bytes` and `min_block` must be powers of two, slab ≥ min.
+    pub fn new(slab_bytes: u64, min_block: u64) -> BuddyAllocator {
+        assert!(slab_bytes.is_power_of_two() && min_block.is_power_of_two());
+        assert!(slab_bytes >= min_block);
+        let max_order = (slab_bytes / min_block).trailing_zeros();
+        BuddyAllocator {
+            slab_bytes,
+            min_block,
+            max_order,
+            slabs: Vec::new(),
+            live: 0,
+            slab_allocs: 0,
+            buddy_ops: 0,
+        }
+    }
+
+    fn order_for(&self, bytes: u64) -> u32 {
+        let blocks = crate::util::math::ceil_div(bytes.max(1), self.min_block);
+        crate::util::math::next_pow2(blocks).trailing_zeros()
+    }
+
+    /// Bytes actually reserved for a request of `bytes`.
+    pub fn block_size(&self, bytes: u64) -> u64 {
+        self.min_block << self.order_for(bytes)
+    }
+
+    /// Allocate `bytes` (rounded to a buddy block). Grabs a new slab from
+    /// the heap when no free block fits — that is the only driver-path
+    /// (expensive) operation.
+    pub fn alloc(&mut self, bytes: u64, heap: &mut VramHeap, clock: &mut Clock) -> Result<SubAlloc, OomError> {
+        let order = self.order_for(bytes);
+        assert!(
+            order <= self.max_order,
+            "request {bytes} B exceeds slab size {} B",
+            self.slab_bytes
+        );
+        // Find a slab with a free block of order ≥ requested.
+        for slab_idx in 0..self.slabs.len() {
+            if let Some(sub) = self.try_alloc_in(slab_idx, order, clock) {
+                self.live += self.min_block << order;
+                return Ok(sub);
+            }
+        }
+        // Driver path: new slab.
+        let backing = heap.alloc(self.slab_bytes, clock)?;
+        self.slab_allocs += 1;
+        let mut free = vec![BTreeSet::new(); self.max_order as usize + 1];
+        free[self.max_order as usize].insert(0);
+        self.slabs.push(Slab { backing, free });
+        let idx = self.slabs.len() - 1;
+        let sub = self.try_alloc_in(idx, order, clock).expect("fresh slab must satisfy");
+        self.live += self.min_block << order;
+        Ok(sub)
+    }
+
+    fn try_alloc_in(&mut self, slab_idx: usize, order: u32, clock: &mut Clock) -> Option<SubAlloc> {
+        let slab = &mut self.slabs[slab_idx];
+        // Find the smallest free order ≥ requested.
+        let mut k = order;
+        while k <= self.max_order && slab.free[k as usize].is_empty() {
+            k += 1;
+        }
+        if k > self.max_order {
+            return None;
+        }
+        // Pop and split down to the requested order.
+        let offset = *slab.free[k as usize].iter().next().unwrap();
+        slab.free[k as usize].remove(&offset);
+        // Split down to the requested order; the allocation keeps the
+        // left child, each right buddy goes on its free list.
+        while k > order {
+            k -= 1;
+            let buddy = offset + (self.min_block << k);
+            slab.free[k as usize].insert(buddy);
+            self.buddy_ops += 1;
+            clock.charge(Category::Alloc, BUDDY_OP_US);
+        }
+        Some(SubAlloc { slab: slab_idx, offset, order })
+    }
+
+    /// Free a sub-allocation, coalescing buddies.
+    pub fn free(&mut self, sub: SubAlloc, clock: &mut Clock) {
+        let slab = &mut self.slabs[sub.slab];
+        self.live -= self.min_block << sub.order;
+        let mut order = sub.order;
+        let mut offset = sub.offset;
+        loop {
+            let size = self.min_block << order;
+            let buddy = offset ^ size;
+            if order < self.max_order && slab.free[order as usize].remove(&buddy) {
+                // Coalesce with the buddy and continue up.
+                offset = offset.min(buddy);
+                order += 1;
+                self.buddy_ops += 1;
+                clock.charge(Category::Alloc, BUDDY_OP_US);
+            } else {
+                slab.free[order as usize].insert(offset);
+                break;
+            }
+        }
+    }
+
+    /// Bytes held in slabs (driver-visible footprint).
+    pub fn slab_bytes_total(&self) -> u64 {
+        self.slabs.len() as u64 * self.slab_bytes
+    }
+
+    /// Live sub-allocated bytes.
+    pub fn live_bytes(&self) -> u64 {
+        self.live
+    }
+
+    /// Internal fragmentation of the buddy policy for a request size.
+    pub fn internal_frag(&self, bytes: u64) -> f64 {
+        self.block_size(bytes) as f64 / bytes.max(1) as f64
+    }
+
+    pub fn slab_allocs(&self) -> u64 {
+        self.slab_allocs
+    }
+
+    pub fn buddy_ops(&self) -> u64 {
+        self.buddy_ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::spec::DeviceSpec;
+
+    fn setup() -> (BuddyAllocator, VramHeap, Clock) {
+        (
+            BuddyAllocator::new(1 << 20, 1 << 10), // 1 MiB slabs, 1 KiB min
+            VramHeap::with_capacity(DeviceSpec::a100(), 1 << 30),
+            Clock::new(),
+        )
+    }
+
+    #[test]
+    fn alloc_rounds_to_buddy_blocks() {
+        let (b, _, _) = setup();
+        assert_eq!(b.block_size(1), 1024);
+        assert_eq!(b.block_size(1024), 1024);
+        assert_eq!(b.block_size(1025), 2048);
+        assert_eq!(b.block_size(3000), 4096);
+        assert_eq!(b.block_size(1 << 20), 1 << 20);
+    }
+
+    #[test]
+    fn one_slab_serves_many_buckets() {
+        let (mut b, mut heap, mut clock) = setup();
+        // 256 × 4 KiB buckets = 1 MiB: exactly one driver allocation.
+        let subs: Vec<SubAlloc> = (0..256).map(|_| b.alloc(4096, &mut heap, &mut clock).unwrap()).collect();
+        assert_eq!(b.slab_allocs(), 1);
+        assert_eq!(heap.alloc_calls(), 1);
+        assert_eq!(b.live_bytes(), 1 << 20);
+        // All offsets distinct and within the slab.
+        let mut offsets: Vec<u64> = subs.iter().map(|s| s.offset).collect();
+        offsets.sort_unstable();
+        offsets.dedup();
+        assert_eq!(offsets.len(), 256);
+        assert!(offsets.iter().all(|&o| o < (1 << 20)));
+        // One more triggers slab #2.
+        b.alloc(4096, &mut heap, &mut clock).unwrap();
+        assert_eq!(b.slab_allocs(), 2);
+    }
+
+    #[test]
+    fn free_coalesces_back_to_full_slab() {
+        let (mut b, mut heap, mut clock) = setup();
+        let subs: Vec<SubAlloc> = (0..16).map(|_| b.alloc(64 * 1024, &mut heap, &mut clock).unwrap()).collect();
+        assert_eq!(b.live_bytes(), 1 << 20);
+        for s in subs {
+            b.free(s, &mut clock);
+        }
+        assert_eq!(b.live_bytes(), 0);
+        // Fully coalesced: a max-order alloc fits again without a new slab.
+        let before = b.slab_allocs();
+        let big = b.alloc(1 << 20, &mut heap, &mut clock).unwrap();
+        assert_eq!(b.slab_allocs(), before);
+        assert_eq!(big.order, 10); // 1 MiB / 1 KiB = 2^10
+    }
+
+    #[test]
+    fn mixed_sizes_no_overlap() {
+        let (mut b, mut heap, mut clock) = setup();
+        let mut live: Vec<(SubAlloc, u64)> = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(31);
+        for step in 0..2000 {
+            if live.is_empty() || rng.bernoulli(0.6) {
+                let bytes = 1u64 << rng.range(0, 15); // 1 B … 16 KiB
+                let sub = b.alloc(bytes, &mut heap, &mut clock).unwrap();
+                let size = b.block_size(bytes);
+                // Overlap check against all live blocks in the same slab.
+                for (other, osize) in &live {
+                    if other.slab == sub.slab {
+                        let a0 = sub.offset;
+                        let a1 = sub.offset + size;
+                        let b0 = other.offset;
+                        let b1 = other.offset + osize;
+                        assert!(a1 <= b0 || b1 <= a0, "overlap at step {step}: {sub:?} vs {other:?}");
+                    }
+                }
+                live.push((sub, size));
+            } else {
+                let k = rng.below(live.len() as u64) as usize;
+                let (sub, _) = live.swap_remove(k);
+                b.free(sub, &mut clock);
+            }
+        }
+        // Accounting holds.
+        let expect: u64 = live.iter().map(|(_, s)| s).sum();
+        assert_eq!(b.live_bytes(), expect);
+    }
+
+    #[test]
+    fn grow_phase_cheaper_than_driver_mallocs() {
+        // The §II.D argument quantified: 512 bucket allocations through
+        // the buddy vs 512 driver mallocs.
+        let spec = DeviceSpec::a100();
+        let (mut b, mut heap, mut clock) = (
+            BuddyAllocator::new(1 << 26, 1 << 12), // 64 MiB slabs
+            VramHeap::with_capacity(spec.clone(), 1 << 32),
+            Clock::new(),
+        );
+        let t0 = clock.now_us();
+        for _ in 0..512 {
+            b.alloc(128 * 1024, &mut heap, &mut clock).unwrap(); // 128 KiB buckets
+        }
+        let buddy_us = clock.now_us() - t0;
+        let mut heap2 = VramHeap::with_capacity(spec, 1 << 32);
+        let mut clock2 = Clock::new();
+        for _ in 0..512 {
+            heap2.alloc(128 * 1024, &mut clock2).unwrap();
+        }
+        let driver_us = clock2.now_us();
+        assert!(
+            buddy_us < driver_us / 3.0,
+            "buddy {buddy_us:.1} µs should be ≪ driver {driver_us:.1} µs"
+        );
+    }
+}

@@ -1,0 +1,134 @@
+//! Event trace: an optional, bounded record of simulated operations used
+//! by tests, debugging, and the `--trace` CLI flag. Each event carries the
+//! simulated start time, duration, a label, and the cost category.
+
+use super::clock::Category;
+
+/// One recorded simulated event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub t_start_us: f64,
+    pub dur_us: f64,
+    pub category: Category,
+    pub label: String,
+}
+
+/// Bounded event recorder. Disabled by default (zero overhead beyond a
+/// branch); enable with [`Trace::enabled`].
+#[derive(Debug, Default)]
+pub struct Trace {
+    events: Vec<Event>,
+    enabled: bool,
+    capacity: usize,
+    dropped: u64,
+}
+
+impl Trace {
+    /// A disabled trace (records nothing).
+    pub fn disabled() -> Trace {
+        Trace { events: Vec::new(), enabled: false, capacity: 0, dropped: 0 }
+    }
+
+    /// An enabled trace bounded to `capacity` events; further events are
+    /// counted in [`Trace::dropped`] instead of stored.
+    pub fn enabled(capacity: usize) -> Trace {
+        Trace { events: Vec::with_capacity(capacity.min(4096)), enabled: true, capacity, dropped: 0 }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record an event (no-op when disabled).
+    pub fn record(&mut self, t_start_us: f64, dur_us: f64, category: Category, label: impl Into<String>) {
+        if !self.enabled {
+            return;
+        }
+        if self.events.len() >= self.capacity {
+            self.dropped += 1;
+            return;
+        }
+        self.events.push(Event { t_start_us, dur_us, category, label: label.into() });
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Total recorded duration per category label (for summaries).
+    pub fn total_for(&self, category: Category) -> f64 {
+        self.events.iter().filter(|e| e.category == category).map(|e| e.dur_us).sum()
+    }
+
+    /// Render a compact text timeline (first `n` events).
+    pub fn render(&self, n: usize) -> String {
+        let mut out = String::new();
+        for e in self.events.iter().take(n) {
+            out.push_str(&format!(
+                "{:>12.3}µs  +{:<10.3}  {:<7}  {}\n",
+                e.t_start_us,
+                e.dur_us,
+                e.category.name(),
+                e.label
+            ));
+        }
+        if self.events.len() > n {
+            out.push_str(&format!("… {} more events\n", self.events.len() - n));
+        }
+        if self.dropped > 0 {
+            out.push_str(&format!("… {} events dropped (capacity {})\n", self.dropped, self.capacity));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut t = Trace::disabled();
+        t.record(0.0, 1.0, Category::Memory, "x");
+        assert!(t.events().is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn bounded_capacity() {
+        let mut t = Trace::enabled(2);
+        for i in 0..5 {
+            t.record(i as f64, 1.0, Category::Alloc, format!("e{i}"));
+        }
+        assert_eq!(t.events().len(), 2);
+        assert_eq!(t.dropped(), 3);
+        assert!(t.render(10).contains("dropped"));
+    }
+
+    #[test]
+    fn totals_by_category() {
+        let mut t = Trace::enabled(10);
+        t.record(0.0, 2.0, Category::Memory, "a");
+        t.record(2.0, 3.0, Category::Memory, "b");
+        t.record(5.0, 1.0, Category::Launch, "c");
+        assert_eq!(t.total_for(Category::Memory), 5.0);
+        assert_eq!(t.total_for(Category::Launch), 1.0);
+        assert_eq!(t.total_for(Category::Vmm), 0.0);
+    }
+
+    #[test]
+    fn render_truncates() {
+        let mut t = Trace::enabled(10);
+        for i in 0..4 {
+            t.record(i as f64, 0.5, Category::Compute, format!("k{i}"));
+        }
+        let s = t.render(2);
+        assert!(s.contains("k0") && s.contains("k1"));
+        assert!(!s.contains("k3"));
+        assert!(s.contains("2 more"));
+    }
+}

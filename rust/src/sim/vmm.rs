@@ -1,0 +1,285 @@
+//! Simulated CUDA low-level virtual memory management API
+//! (`cuMemAddressReserve` / `cuMemCreate` / `cuMemMap` / `cuMemSetAccess`),
+//! the substrate behind the paper's **memMap** semi-static baseline
+//! (Perry & Sakharnykh 2020).
+//!
+//! Semantics reproduced:
+//! * a large **virtual address range** is reserved once, cheaply;
+//! * **physical pages** (2 MiB granularity) are created+mapped on demand —
+//!   growing never copies data, indexing stays contiguous in VA space;
+//! * memory is consumed in whole pages → *page slack* fragmentation;
+//! * map/unmap cost a per-page latency charged to the simulated clock.
+
+use super::clock::{Category, Clock};
+use super::spec::DeviceSpec;
+
+/// Error from VMM operations.
+#[derive(Debug, thiserror::Error)]
+pub enum VmmError {
+    #[error("VA reservation exhausted: need {need} B mapped, reserved {reserved} B")]
+    ReservationExhausted { need: u64, reserved: u64 },
+    #[error("physical memory exhausted: need {need} pages, available {available}")]
+    PhysicalExhausted { need: u64, available: u64 },
+    #[error("cannot shrink below {mapped} mapped bytes to {target}")]
+    BadShrink { mapped: u64, target: u64 },
+}
+
+/// A reserved VA range with on-demand page mapping.
+#[derive(Debug)]
+pub struct VmmRange {
+    page_bytes: u64,
+    reserved_bytes: u64,
+    mapped_pages: u64,
+    /// Bytes the client actually asked to be usable (≤ mapped).
+    committed_bytes: u64,
+    map_calls: u64,
+    unmap_calls: u64,
+}
+
+/// Physical page pool shared by all ranges on a device (models the GPU's
+/// physical memory for fragmentation accounting).
+#[derive(Debug)]
+pub struct PhysicalPool {
+    page_bytes: u64,
+    total_pages: u64,
+    used_pages: u64,
+    peak_pages: u64,
+}
+
+impl PhysicalPool {
+    pub fn new(spec: &DeviceSpec) -> PhysicalPool {
+        let page_bytes = spec.cost.vmm_page_bytes;
+        PhysicalPool {
+            page_bytes,
+            total_pages: spec.memory_bytes() / page_bytes,
+            used_pages: 0,
+            peak_pages: 0,
+        }
+    }
+
+    /// Pool with explicit capacity in bytes (for budget experiments).
+    pub fn with_capacity(spec: &DeviceSpec, capacity_bytes: u64) -> PhysicalPool {
+        let page_bytes = spec.cost.vmm_page_bytes;
+        PhysicalPool { page_bytes, total_pages: capacity_bytes / page_bytes, used_pages: 0, peak_pages: 0 }
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_pages * self.page_bytes
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_pages * self.page_bytes
+    }
+
+    pub fn available_pages(&self) -> u64 {
+        self.total_pages - self.used_pages
+    }
+
+    fn take(&mut self, pages: u64) -> Result<(), VmmError> {
+        if pages > self.available_pages() {
+            return Err(VmmError::PhysicalExhausted { need: pages, available: self.available_pages() });
+        }
+        self.used_pages += pages;
+        self.peak_pages = self.peak_pages.max(self.used_pages);
+        Ok(())
+    }
+
+    fn give_back(&mut self, pages: u64) {
+        debug_assert!(pages <= self.used_pages);
+        self.used_pages -= pages;
+    }
+}
+
+impl VmmRange {
+    /// Reserve a VA range of `va_bytes` (rounded up to page granularity).
+    /// Cheap: one `cuMemAddressReserve` call.
+    pub fn reserve(spec: &DeviceSpec, va_bytes: u64, clock: &mut Clock) -> VmmRange {
+        let page = spec.cost.vmm_page_bytes;
+        let reserved = crate::util::math::ceil_div(va_bytes, page) * page;
+        clock.charge(Category::Vmm, spec.cost.vmm_reserve_us);
+        VmmRange {
+            page_bytes: page,
+            reserved_bytes: reserved,
+            mapped_pages: 0,
+            committed_bytes: 0,
+            map_calls: 0,
+            unmap_calls: 0,
+        }
+    }
+
+    /// Grow the usable prefix to `target_bytes`, mapping new physical pages
+    /// as needed. No data copy — existing mappings are untouched (this is
+    /// the whole point of the VMM baseline).
+    pub fn grow_to(
+        &mut self,
+        spec: &DeviceSpec,
+        pool: &mut PhysicalPool,
+        target_bytes: u64,
+        clock: &mut Clock,
+    ) -> Result<(), VmmError> {
+        if target_bytes > self.reserved_bytes {
+            return Err(VmmError::ReservationExhausted { need: target_bytes, reserved: self.reserved_bytes });
+        }
+        let need_pages = crate::util::math::ceil_div(target_bytes, self.page_bytes);
+        if need_pages > self.mapped_pages {
+            let new_pages = need_pages - self.mapped_pages;
+            pool.take(new_pages)?;
+            clock.charge(Category::Vmm, new_pages as f64 * spec.cost.vmm_map_page_us);
+            self.mapped_pages = need_pages;
+            self.map_calls += 1;
+        }
+        self.committed_bytes = self.committed_bytes.max(target_bytes);
+        Ok(())
+    }
+
+    /// Shrink the usable prefix, unmapping whole pages past the new end.
+    pub fn shrink_to(
+        &mut self,
+        spec: &DeviceSpec,
+        pool: &mut PhysicalPool,
+        target_bytes: u64,
+        clock: &mut Clock,
+    ) -> Result<(), VmmError> {
+        if target_bytes > self.committed_bytes {
+            return Err(VmmError::BadShrink { mapped: self.committed_bytes, target: target_bytes });
+        }
+        let need_pages = crate::util::math::ceil_div(target_bytes, self.page_bytes);
+        if need_pages < self.mapped_pages {
+            let drop_pages = self.mapped_pages - need_pages;
+            pool.give_back(drop_pages);
+            clock.charge(Category::Vmm, drop_pages as f64 * spec.cost.vmm_unmap_page_us);
+            self.mapped_pages = need_pages;
+            self.unmap_calls += 1;
+        }
+        self.committed_bytes = target_bytes;
+        Ok(())
+    }
+
+    /// Release everything (drop mappings back to the pool).
+    pub fn release(&mut self, spec: &DeviceSpec, pool: &mut PhysicalPool, clock: &mut Clock) {
+        pool.give_back(self.mapped_pages);
+        clock.charge(Category::Vmm, self.mapped_pages as f64 * spec.cost.vmm_unmap_page_us);
+        self.mapped_pages = 0;
+        self.committed_bytes = 0;
+        self.unmap_calls += 1;
+    }
+
+    pub fn mapped_bytes(&self) -> u64 {
+        self.mapped_pages * self.page_bytes
+    }
+
+    pub fn committed_bytes(&self) -> u64 {
+        self.committed_bytes
+    }
+
+    pub fn reserved_bytes(&self) -> u64 {
+        self.reserved_bytes
+    }
+
+    /// Page slack: mapped-but-unused bytes (internal fragmentation).
+    pub fn page_slack(&self) -> u64 {
+        self.mapped_bytes() - self.committed_bytes
+    }
+
+    pub fn map_calls(&self) -> u64 {
+        self.map_calls
+    }
+
+    pub fn unmap_calls(&self) -> u64 {
+        self.unmap_calls
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PAGE: u64 = 2 * 1024 * 1024;
+
+    fn setup() -> (DeviceSpec, PhysicalPool, Clock) {
+        let spec = DeviceSpec::a100();
+        let pool = PhysicalPool::new(&spec);
+        (spec, pool, Clock::new())
+    }
+
+    #[test]
+    fn reserve_rounds_to_pages() {
+        let (spec, _pool, mut clock) = setup();
+        let r = VmmRange::reserve(&spec, PAGE + 1, &mut clock);
+        assert_eq!(r.reserved_bytes(), 2 * PAGE);
+        assert_eq!(r.mapped_bytes(), 0);
+        assert!(clock.total(Category::Vmm) > 0.0);
+    }
+
+    #[test]
+    fn grow_maps_only_new_pages() {
+        let (spec, mut pool, mut clock) = setup();
+        let mut r = VmmRange::reserve(&spec, 100 * PAGE, &mut clock);
+        r.grow_to(&spec, &mut pool, 3 * PAGE, &mut clock).unwrap();
+        assert_eq!(r.mapped_bytes(), 3 * PAGE);
+        assert_eq!(pool.used_bytes(), 3 * PAGE);
+        let t0 = clock.now_us();
+        // Growing within already-mapped pages is free.
+        r.grow_to(&spec, &mut pool, 3 * PAGE - 5, &mut clock).unwrap();
+        assert_eq!(clock.now_us(), t0);
+        // Growing by one byte past the mapped prefix maps exactly one page.
+        r.grow_to(&spec, &mut pool, 3 * PAGE + 1, &mut clock).unwrap();
+        assert_eq!(r.mapped_bytes(), 4 * PAGE);
+        assert!((clock.now_us() - t0 - spec.cost.vmm_map_page_us).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grow_cost_matches_table2_shape() {
+        // Mapping 2.048 GB should land near the paper's 5.21 ms memMap grow.
+        let (spec, mut pool, mut clock) = setup();
+        let mut r = VmmRange::reserve(&spec, 8 * 1024 * 1024 * 1024u64, &mut clock);
+        let t0 = clock.now_us();
+        r.grow_to(&spec, &mut pool, 2_048_000_000, &mut clock).unwrap();
+        let ms = (clock.now_us() - t0) / 1e3;
+        assert!((ms - 5.21).abs() < 0.35, "modeled {ms} ms");
+    }
+
+    #[test]
+    fn page_slack_accounting() {
+        let (spec, mut pool, mut clock) = setup();
+        let mut r = VmmRange::reserve(&spec, 10 * PAGE, &mut clock);
+        r.grow_to(&spec, &mut pool, PAGE / 2, &mut clock).unwrap();
+        assert_eq!(r.page_slack(), PAGE / 2);
+        assert_eq!(r.committed_bytes(), PAGE / 2);
+    }
+
+    #[test]
+    fn reservation_exhausted() {
+        let (spec, mut pool, mut clock) = setup();
+        let mut r = VmmRange::reserve(&spec, 2 * PAGE, &mut clock);
+        let err = r.grow_to(&spec, &mut pool, 3 * PAGE, &mut clock).unwrap_err();
+        assert!(matches!(err, VmmError::ReservationExhausted { .. }));
+    }
+
+    #[test]
+    fn physical_exhausted() {
+        let spec = DeviceSpec::a100();
+        let mut pool = PhysicalPool::with_capacity(&spec, 4 * PAGE);
+        let mut clock = Clock::new();
+        let mut r = VmmRange::reserve(&spec, 100 * PAGE, &mut clock);
+        r.grow_to(&spec, &mut pool, 4 * PAGE, &mut clock).unwrap();
+        let err = r.grow_to(&spec, &mut pool, 5 * PAGE, &mut clock).unwrap_err();
+        assert!(matches!(err, VmmError::PhysicalExhausted { .. }));
+    }
+
+    #[test]
+    fn shrink_and_release() {
+        let (spec, mut pool, mut clock) = setup();
+        let mut r = VmmRange::reserve(&spec, 10 * PAGE, &mut clock);
+        r.grow_to(&spec, &mut pool, 5 * PAGE, &mut clock).unwrap();
+        r.shrink_to(&spec, &mut pool, 2 * PAGE, &mut clock).unwrap();
+        assert_eq!(r.mapped_bytes(), 2 * PAGE);
+        assert_eq!(pool.used_bytes(), 2 * PAGE);
+        assert!(r.shrink_to(&spec, &mut pool, 3 * PAGE, &mut clock).is_err());
+        r.release(&spec, &mut pool, &mut clock);
+        assert_eq!(pool.used_bytes(), 0);
+        assert_eq!(r.mapped_bytes(), 0);
+        // Peak sticks at the high watermark.
+        assert_eq!(pool.peak_bytes(), 5 * PAGE);
+    }
+}

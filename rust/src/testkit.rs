@@ -1,0 +1,198 @@
+//! Property-based testing harness (offline `proptest` replacement).
+//!
+//! Provides seeded generators and a `check` runner with automatic input
+//! shrinking: on failure it greedily tries smaller variants of the failing
+//! case (halving sizes / values, dropping elements) until no smaller
+//! counterexample reproduces, then panics with the minimal case and the
+//! seed needed to replay it.
+
+use crate::util::rng::Rng;
+
+/// A generator of random values of `T` with a shrink strategy.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+
+    /// Sample a value.
+    fn sample(&self, rng: &mut Rng) -> Self::Value;
+
+    /// Candidate shrinks of `v`, in decreasing aggressiveness.
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let _ = v;
+        Vec::new()
+    }
+}
+
+/// Number of cases per property (keep CI fast but meaningful).
+pub const DEFAULT_CASES: u32 = 128;
+
+/// Run a property over `cases` random inputs; panics with the minimal
+/// failing input if the property returns `Err`.
+pub fn check<G: Gen>(name: &str, seed: u64, cases: u32, gen: &G, prop: impl Fn(&G::Value) -> Result<(), String>) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Shrink greedily.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 1000 {
+                improved = false;
+                rounds += 1;
+                for cand in gen.shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed {seed}, case {case}):\n  minimal input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+// ---------------- generators ----------------
+
+/// u64 in [lo, hi].
+pub struct U64Range {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Gen for U64Range {
+    type Value = u64;
+
+    fn sample(&self, rng: &mut Rng) -> u64 {
+        rng.range(self.lo, self.hi + 1)
+    }
+
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vec of u32 counts with bounded length and value (insertion count
+/// vectors).
+pub struct CountsVec {
+    pub max_len: usize,
+    pub max_val: u32,
+}
+
+impl Gen for CountsVec {
+    type Value = Vec<u32>;
+
+    fn sample(&self, rng: &mut Rng) -> Vec<u32> {
+        let len = rng.range(0, self.max_len as u64 + 1) as usize;
+        (0..len).map(|_| rng.range(0, self.max_val as u64 + 1) as u32).collect()
+    }
+
+    fn shrink(&self, v: &Vec<u32>) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(v[..v.len() / 2].to_vec()); // drop back half
+            out.push(v[v.len() / 2..].to_vec()); // drop front half
+            let mut halved = v.clone();
+            for x in &mut halved {
+                *x /= 2;
+            }
+            if &halved != v {
+                out.push(halved);
+            }
+            let mut minus_one = v.clone();
+            minus_one.pop();
+            out.push(minus_one);
+        }
+        out
+    }
+}
+
+/// Pairs of independent generators.
+pub struct PairGen<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairGen<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn sample(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.sample(rng), self.1.sample(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        for a in self.0.shrink(&v.0) {
+            out.push((a, v.1.clone()));
+        }
+        for b in self.1.shrink(&v.1) {
+            out.push((v.0.clone(), b));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let ran = std::cell::Cell::new(0u32);
+        let gen = U64Range { lo: 0, hi: 100 };
+        check("tautology", 1, 50, &gen, |_| {
+            ran.set(ran.get() + 1);
+            Ok(())
+        });
+        assert_eq!(ran.get(), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input: 50")]
+    fn shrinks_to_boundary() {
+        // Property "v < 50" fails first at some v ≥ 50; shrinking must
+        // land exactly on 50.
+        let gen = U64Range { lo: 0, hi: 1000 };
+        check("v<50", 7, 200, &gen, |&v| if v < 50 { Ok(()) } else { Err(format!("{v} !< 50")) });
+    }
+
+    #[test]
+    #[should_panic]
+    fn counts_vec_shrinks_length() {
+        let gen = CountsVec { max_len: 64, max_val: 10 };
+        check("len<5", 3, 100, &gen, |v| {
+            if v.len() < 5 {
+                Ok(())
+            } else {
+                Err("too long".into())
+            }
+        });
+    }
+
+    #[test]
+    fn counts_vec_samples_in_bounds() {
+        let gen = CountsVec { max_len: 16, max_val: 9 };
+        let mut rng = Rng::new(11);
+        for _ in 0..100 {
+            let v = gen.sample(&mut rng);
+            assert!(v.len() <= 16);
+            assert!(v.iter().all(|&x| x <= 9));
+        }
+    }
+
+    #[test]
+    fn pair_gen_shrinks_componentwise() {
+        let gen = PairGen(U64Range { lo: 0, hi: 10 }, U64Range { lo: 0, hi: 10 });
+        let shrinks = gen.shrink(&(5, 7));
+        assert!(shrinks.iter().any(|&(a, b)| a < 5 && b == 7));
+        assert!(shrinks.iter().any(|&(a, b)| a == 5 && b < 7));
+    }
+}

@@ -1,0 +1,18 @@
+//! Theoretical memory-usage model (paper §V / Fig 3).
+//!
+//! Workload: an application whose final element count is `n = s·X` with
+//! `X ~ LogNormal(0, σ)` — the amount of insertions is uncertain. How
+//! much VRAM must each structure provision?
+//!
+//! * **optimal** — exactly `n` (oracle knowledge);
+//! * **static** — must pre-allocate a high quantile of the distribution so
+//!   the run fails at most 1% of the time: `s·q_{0.99}(X)`;
+//! * **semi-static (doubling)** — holds `next_pow2` of the live size, and
+//!   transiently `3×` during a copy-resize;
+//! * **memMap** — doubling capacity in pages, no copy ⇒ peak `≈ 2n`;
+//! * **GGArray** — per-LFVector doubling buckets: capacity < `2n + B·fbs`,
+//!   i.e. asymptotically below `2×` optimal (§V: "not greater than 2×").
+
+pub mod memory_model;
+
+pub use memory_model::{expected_usage, MemoryCurve, UsagePoint};

@@ -1,0 +1,281 @@
+//! Minimal subcommand + flag argument parser (offline `clap` replacement)
+//! for the `repro` CLI and the bench binaries.
+//!
+//! Supported syntax: `prog <subcommand> [--flag] [--key value] [--key=value]
+//! [positional...]`. Unknown flags are errors; `--help` renders usage from
+//! the declared specs.
+
+use std::collections::BTreeMap;
+
+/// Declared flag/option spec (for help rendering and validation).
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// A declared subcommand.
+#[derive(Debug, Clone)]
+pub struct CmdSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// Parse result: chosen subcommand, options, and positionals.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    /// Value of `--name` (after defaults applied).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Required option parse with error context.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))?;
+        raw.parse::<T>()
+            .map_err(|e| anyhow::anyhow!("invalid value for --{name} ({raw}): {e}"))
+    }
+
+    /// Optional option with parsing.
+    pub fn get_opt_parse<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(raw) => raw
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("invalid value for --{name} ({raw}): {e}")),
+        }
+    }
+
+    /// Was boolean `--name` present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// The CLI definition.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub prog: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CmdSpec>,
+    /// Options accepted by every subcommand.
+    pub global_opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    /// Render `--help` text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.prog, self.about, self.prog);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.help));
+        }
+        s.push_str("\nGLOBAL OPTIONS:\n");
+        for o in &self.global_opts {
+            s.push_str(&render_opt(o));
+        }
+        s.push_str("\nPer-command options are shown with `<command> --help`.\n");
+        s
+    }
+
+    fn command_usage(&self, cmd: &CmdSpec) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.prog, cmd.name, cmd.help);
+        for o in cmd.opts.iter().chain(self.global_opts.iter()) {
+            s.push_str(&render_opt(o));
+        }
+        s
+    }
+
+    /// Parse argv (not including argv[0]). Returns Err(help-text) for
+    /// `--help` / no args so the caller can print and exit 0.
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        if args.is_empty() || args[0] == "--help" || args[0] == "-h" || args[0] == "help" {
+            return Err(self.usage());
+        }
+        let cmd_name = &args[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| format!("unknown command '{cmd_name}'\n\n{}", self.usage()))?;
+
+        let known = |name: &str| -> Option<&OptSpec> {
+            cmd.opts
+                .iter()
+                .chain(self.global_opts.iter())
+                .find(|o| o.name == name)
+        };
+
+        let mut parsed = Parsed {
+            command: cmd.name.to_string(),
+            opts: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+        };
+        // Apply defaults first.
+        for o in cmd.opts.iter().chain(self.global_opts.iter()) {
+            if let Some(d) = o.default {
+                parsed.opts.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.command_usage(cmd));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = known(&name).ok_or_else(|| {
+                    format!("unknown option --{name} for '{}'\n\n{}", cmd.name, self.command_usage(cmd))
+                })?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{name} requires a value"))?
+                        }
+                    };
+                    parsed.opts.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{name} does not take a value"));
+                    }
+                    parsed.flags.push(name);
+                }
+            } else {
+                parsed.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(parsed)
+    }
+}
+
+fn render_opt(o: &OptSpec) -> String {
+    let mut left = format!("--{}", o.name);
+    if o.takes_value {
+        left.push_str(" <v>");
+    }
+    let mut line = format!("  {left:<22} {}", o.help);
+    if let Some(d) = o.default {
+        line.push_str(&format!(" [default: {d}]"));
+    }
+    line.push('\n');
+    line
+}
+
+/// Shorthand constructors.
+pub fn opt(name: &'static str, default: Option<&'static str>, help: &'static str) -> OptSpec {
+    OptSpec { name, takes_value: true, default, help }
+}
+
+pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, takes_value: false, default: None, help }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            prog: "repro",
+            about: "test",
+            commands: vec![
+                CmdSpec {
+                    name: "fig5",
+                    help: "run fig5",
+                    opts: vec![
+                        opt("blocks", Some("512"), "number of LFVectors"),
+                        opt("gpu", Some("a100"), "device model"),
+                        flag("verbose", "chatty"),
+                    ],
+                },
+                CmdSpec { name: "all", help: "run everything", opts: vec![] },
+            ],
+            global_opts: vec![opt("seed", Some("42"), "rng seed"), opt("out", None, "output dir")],
+        }
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let p = cli().parse(&args(&["fig5", "--blocks", "32", "--verbose"])).unwrap();
+        assert_eq!(p.command, "fig5");
+        assert_eq!(p.get("blocks"), Some("32"));
+        assert_eq!(p.get("gpu"), Some("a100")); // default
+        assert_eq!(p.get("seed"), Some("42")); // global default
+        assert!(p.flag("verbose"));
+        assert!(!p.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let p = cli().parse(&args(&["fig5", "--blocks=64", "--seed=7"])).unwrap();
+        assert_eq!(p.get_parse::<u32>("blocks").unwrap(), 64);
+        assert_eq!(p.get_parse::<u64>("seed").unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_command_and_option() {
+        assert!(cli().parse(&args(&["nope"])).is_err());
+        assert!(cli().parse(&args(&["fig5", "--bogus", "1"])).is_err());
+        // 'blocks' belongs to fig5, not 'all'
+        assert!(cli().parse(&args(&["all", "--blocks", "1"])).is_err());
+    }
+
+    #[test]
+    fn help_requested() {
+        let err = cli().parse(&args(&[])).unwrap_err();
+        assert!(err.contains("USAGE"));
+        let err = cli().parse(&args(&["fig5", "--help"])).unwrap_err();
+        assert!(err.contains("number of LFVectors"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(cli().parse(&args(&["fig5", "--blocks"])).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let p = cli().parse(&args(&["fig5", "pos1", "--blocks", "8", "pos2"])).unwrap();
+        assert_eq!(p.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn get_parse_errors_are_descriptive() {
+        let p = cli().parse(&args(&["fig5", "--blocks", "NaNs"])).unwrap();
+        let e = p.get_parse::<u32>("blocks").unwrap_err().to_string();
+        assert!(e.contains("--blocks"), "{e}");
+    }
+}

@@ -1,0 +1,161 @@
+//! Wall-clock benchmark harness (offline `criterion` replacement) for the
+//! `cargo bench` targets (`harness = false`).
+//!
+//! Methodology: warm-up runs, then timed iterations until both a minimum
+//! iteration count and a minimum total measuring time are reached;
+//! reports mean/σ/p50/p95 per iteration. Deliberately simple — the
+//! numbers that matter for the paper figures come from the simulated
+//! clock; wall-clock benches cover the *real* hot paths (structure ops,
+//! router, PJRT execute).
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub min_iters: u32,
+    pub min_time: Duration,
+    pub max_iters: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> BenchConfig {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            min_time: Duration::from_millis(200),
+            max_iters: 10_000,
+        }
+    }
+}
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time summary (µs).
+    pub summary: Summary,
+    pub iters: u32,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.summary.mean
+    }
+}
+
+/// A named collection of results, renderable as a markdown table.
+#[derive(Debug, Default)]
+pub struct BenchSuite {
+    pub title: String,
+    pub results: Vec<BenchResult>,
+    cfg: BenchConfig,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> BenchSuite {
+        BenchSuite { title: title.to_string(), results: Vec::new(), cfg: BenchConfig::default() }
+    }
+
+    pub fn with_config(mut self, cfg: BenchConfig) -> BenchSuite {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Run one benchmark: `f` is a full iteration (setup outside).
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        for _ in 0..self.cfg.warmup_iters {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        let mut iters = 0u32;
+        while (iters < self.cfg.min_iters || start.elapsed() < self.cfg.min_time) && iters < self.cfg.max_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e6);
+            iters += 1;
+        }
+        let result = BenchResult { name: name.to_string(), summary: Summary::of(&samples), iters };
+        eprintln!(
+            "  {:<44} {:>12.2} µs/iter  (σ {:.2}, p95 {:.2}, n={})",
+            result.name, result.summary.mean, result.summary.stddev, result.summary.p95, iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally-computed (e.g. simulated) value so it shows up
+    /// in the same table.
+    pub fn record(&mut self, name: &str, value_us: f64) {
+        eprintln!("  {:<44} {:>12.2} µs (modeled)", name, value_us);
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&[value_us]),
+            iters: 0,
+        });
+    }
+
+    /// Markdown rendering for EXPERIMENTS.md.
+    pub fn markdown(&self) -> String {
+        let mut t = crate::util::csv::CsvTable::new(["benchmark", "mean_us", "stddev_us", "p95_us", "iters"]);
+        for r in &self.results {
+            t.push_display([
+                r.name.clone(),
+                format!("{:.2}", r.summary.mean),
+                format!("{:.2}", r.summary.stddev),
+                format!("{:.2}", r.summary.p95),
+                r.iters.to_string(),
+            ]);
+        }
+        format!("### {}\n\n{}", self.title, crate::util::tables::markdown(&t))
+    }
+
+    /// Print the header; call once at the top of a bench main.
+    pub fn banner(&self) {
+        eprintln!("\n== {} ==", self.title);
+    }
+}
+
+/// Prevent the optimiser from discarding a value (ports of
+/// `criterion::black_box` — `std::hint::black_box` is stable, use it).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut suite = BenchSuite::new("unit").with_config(BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            min_time: Duration::from_millis(1),
+            max_iters: 50,
+        });
+        let mut acc = 0u64;
+        suite.bench("count_to_1000", || {
+            for i in 0..1000u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        let r = &suite.results[0];
+        assert!(r.iters >= 5);
+        assert!(r.summary.mean > 0.0);
+        let md = suite.markdown();
+        assert!(md.contains("count_to_1000"));
+    }
+
+    #[test]
+    fn record_modeled_values() {
+        let mut suite = BenchSuite::new("modeled");
+        suite.record("table2_static_insert", 7070.0);
+        assert_eq!(suite.results[0].summary.mean, 7070.0);
+        assert_eq!(suite.results[0].iters, 0);
+    }
+}

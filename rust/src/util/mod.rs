@@ -1,0 +1,17 @@
+//! From-scratch utility substrate.
+//!
+//! This environment is offline: only the vendored dependency closure of the
+//! `xla` crate is available, so the usual ecosystem crates (clap, serde,
+//! rand, criterion, proptest) are re-implemented here as small focused
+//! modules. Each is a real, tested implementation — not a stub — sized to
+//! what the rest of the system needs.
+
+pub mod argparse;
+pub mod benchkit;
+pub mod csv;
+pub mod json;
+pub mod math;
+pub mod plot;
+pub mod rng;
+pub mod stats;
+pub mod tables;

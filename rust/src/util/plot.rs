@@ -1,0 +1,149 @@
+//! Terminal line plots for the figure CLI: renders (x, y) series as an
+//! ASCII chart with log-scale support, so `repro fig3 --plot` shows the
+//! figure's shape without leaving the terminal.
+
+/// One named series.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Plot configuration.
+#[derive(Debug, Clone)]
+pub struct PlotConfig {
+    pub width: usize,
+    pub height: usize,
+    pub log_y: bool,
+    pub log_x: bool,
+    pub title: String,
+}
+
+impl Default for PlotConfig {
+    fn default() -> PlotConfig {
+        PlotConfig { width: 72, height: 20, log_y: false, log_x: false, title: String::new() }
+    }
+}
+
+const MARKS: [char; 6] = ['*', 'o', '+', 'x', '#', '@'];
+
+fn transform(v: f64, log: bool) -> f64 {
+    if log {
+        v.max(1e-12).log10()
+    } else {
+        v
+    }
+}
+
+/// Render the series into an ASCII chart.
+pub fn render(series: &[Series], cfg: &PlotConfig) -> String {
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|&(x, y)| (transform(x, cfg.log_x), transform(y, cfg.log_y))))
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if pts.is_empty() {
+        return "(no data)\n".to_string();
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; cfg.width]; cfg.height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            let (tx, ty) = (transform(x, cfg.log_x), transform(y, cfg.log_y));
+            if !tx.is_finite() || !ty.is_finite() {
+                continue;
+            }
+            let col = (((tx - x0) / (x1 - x0)) * (cfg.width - 1) as f64).round() as usize;
+            let row = (((ty - y0) / (y1 - y0)) * (cfg.height - 1) as f64).round() as usize;
+            let r = cfg.height - 1 - row.min(cfg.height - 1);
+            grid[r][col.min(cfg.width - 1)] = mark;
+        }
+    }
+    let untransform = |v: f64, log: bool| if log { 10f64.powf(v) } else { v };
+    let mut out = String::new();
+    if !cfg.title.is_empty() {
+        out.push_str(&format!("  {}\n", cfg.title));
+    }
+    let ylab = |v: f64| format!("{:>9.3}", untransform(v, cfg.log_y));
+    for (r, row) in grid.iter().enumerate() {
+        let frac = 1.0 - r as f64 / (cfg.height - 1) as f64;
+        let label = if r == 0 || r == cfg.height - 1 || r == cfg.height / 2 {
+            ylab(y0 + frac * (y1 - y0))
+        } else {
+            " ".repeat(9)
+        };
+        out.push_str(&format!("{label} |{}\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!("{} +{}\n", " ".repeat(9), "-".repeat(cfg.width)));
+    out.push_str(&format!(
+        "{}  {:<.3}{}{:>.3}\n",
+        " ".repeat(9),
+        untransform(x0, cfg.log_x),
+        " ".repeat(cfg.width.saturating_sub(12)),
+        untransform(x1, cfg.log_x)
+    ));
+    out.push_str("  legend: ");
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("{} {}  ", MARKS[si % MARKS.len()], s.name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(name: &str, f: impl Fn(f64) -> f64) -> Series {
+        Series { name: name.into(), points: (0..=20).map(|i| (i as f64 / 10.0, f(i as f64 / 10.0))).collect() }
+    }
+
+    #[test]
+    fn renders_basic_shape() {
+        let s = vec![curve("up", |x| x), curve("down", |x| 2.0 - x)];
+        let out = render(&s, &PlotConfig { title: "cross".into(), ..PlotConfig::default() });
+        assert!(out.contains("cross"));
+        assert!(out.contains("legend: * up  o down"));
+        // Rising series: '*' appears in the top row within the right half.
+        let top = out.lines().nth(1).unwrap();
+        let pos = top.rfind('*').unwrap();
+        assert!(pos > top.len() / 2, "{out}");
+    }
+
+    #[test]
+    fn log_scale_compresses() {
+        let s = vec![Series { name: "exp".into(), points: (0..=10).map(|i| (i as f64, 10f64.powi(i))).collect() }];
+        let lin = render(&s, &PlotConfig::default());
+        let log = render(&s, &PlotConfig { log_y: true, ..PlotConfig::default() });
+        // On a log axis the exponential becomes a diagonal: the middle
+        // band (rows 8–12 of 20) must contain marks; on a linear axis all
+        // but the largest point collapse onto the bottom rows.
+        let mid_band_has = |s: &str, lo: usize, hi: usize| {
+            s.lines().skip(lo).take(hi - lo).any(|l| l.contains('*'))
+        };
+        assert!(mid_band_has(&log, 8, 13), "{log}");
+        assert!(!mid_band_has(&lin, 5, 15), "{lin}");
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        assert_eq!(render(&[], &PlotConfig::default()), "(no data)\n");
+        let flat = vec![Series { name: "flat".into(), points: vec![(1.0, 5.0), (2.0, 5.0)] }];
+        let out = render(&flat, &PlotConfig::default());
+        assert!(out.contains('*'));
+    }
+}

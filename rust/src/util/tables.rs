@@ -1,0 +1,136 @@
+//! Markdown table rendering for terminal output and EXPERIMENTS.md
+//! snippets. Columns are auto-sized; numeric-looking cells are
+//! right-aligned.
+
+use super::csv::CsvTable;
+
+/// Render a [`CsvTable`] as a GitHub-flavored markdown table.
+pub fn markdown(table: &CsvTable) -> String {
+    let header = table.header();
+    let rows = table.rows();
+    let ncols = header.len();
+    let mut width = vec![0usize; ncols];
+    let mut numeric = vec![true; ncols];
+    for (c, h) in header.iter().enumerate() {
+        width[c] = width[c].max(display_width(h));
+    }
+    for row in rows {
+        for (c, cell) in row.iter().enumerate() {
+            width[c] = width[c].max(display_width(cell));
+            if !cell.is_empty() && cell.parse::<f64>().is_err() && cell != "-" && cell != "_" {
+                numeric[c] = false;
+            }
+        }
+    }
+    let mut out = String::new();
+    render_row(&mut out, header, &width, &numeric);
+    out.push('|');
+    for c in 0..ncols {
+        out.push_str(&"-".repeat(width[c] + 2));
+        if numeric[c] {
+            // Right-align marker.
+            out.pop();
+            out.push(':');
+        }
+        out.push('|');
+    }
+    out.push('\n');
+    for row in rows {
+        render_row(&mut out, row, &width, &numeric);
+    }
+    out
+}
+
+fn render_row<S: AsRef<str>>(out: &mut String, cells: &[S], width: &[usize], numeric: &[bool]) {
+    out.push('|');
+    for (c, cell) in cells.iter().enumerate() {
+        let cell = cell.as_ref();
+        let pad = width[c].saturating_sub(display_width(cell));
+        out.push(' ');
+        if numeric[c] {
+            out.push_str(&" ".repeat(pad));
+            out.push_str(cell);
+        } else {
+            out.push_str(cell);
+            out.push_str(&" ".repeat(pad));
+        }
+        out.push_str(" |");
+    }
+    out.push('\n');
+}
+
+/// Approximate display width: count chars (we only use ASCII + a few Greek
+/// letters in headers, all single-width).
+fn display_width(s: &str) -> usize {
+    s.chars().count()
+}
+
+/// Format milliseconds with sensible precision.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms >= 100.0 {
+        format!("{ms:.1}")
+    } else if ms >= 1.0 {
+        format!("{ms:.2}")
+    } else {
+        format!("{ms:.4}")
+    }
+}
+
+/// Format a count with SI-style suffix (1.0e6 → "1.0M").
+pub fn fmt_count(n: u64) -> String {
+    let nf = n as f64;
+    if nf >= 1e9 {
+        format!("{:.3}G", nf / 1e9)
+    } else if nf >= 1e6 {
+        format!("{:.1}M", nf / 1e6)
+    } else if nf >= 1e3 {
+        format!("{:.1}K", nf / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Format bytes human-readably.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::csv::CsvTable;
+
+    #[test]
+    fn renders_alignment() {
+        let mut t = CsvTable::new(["name", "ms"]);
+        t.push(["static", "7.07"]);
+        t.push(["GGArray512", "11.79"]);
+        let md = markdown(&t);
+        assert!(md.contains("| static     |"));
+        assert!(md.contains("-:|"), "numeric col should right-align: {md}");
+        assert!(md.lines().count() == 4);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_ms(123.456), "123.5");
+        assert_eq!(fmt_ms(7.071), "7.07");
+        assert_eq!(fmt_ms(0.52149), "0.5215");
+        assert_eq!(fmt_count(512), "512");
+        assert_eq!(fmt_count(1_024_000_000), "1.024G");
+        assert_eq!(fmt_count(5_000), "5.0K");
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2 * 1024 * 1024), "2.00 MiB");
+    }
+}

@@ -1,0 +1,140 @@
+//! Workload generators for the experiments and the coordinator.
+//!
+//! The paper's workloads:
+//! * **duplication** (Fig 4/5): start at 1e6, insert one element per
+//!   existing element, 10 times;
+//! * **uncertain growth** (Fig 3): total insertions = `s · LogNormal(0,σ)`;
+//! * **two-phase** (Fig 6): repeat { insert `k·size` elements; run the
+//!   work kernel `w` times } for 5 iterations ending at 1e9 elements.
+
+pub mod trace;
+
+use crate::util::rng::Rng;
+
+/// A single step in a generated workload trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Step {
+    /// Insert this many elements (values synthesised by the driver).
+    Insert(u64),
+    /// Run the +1 work kernel this many times over the whole array.
+    Work(u32),
+    /// Flatten into a contiguous array (two-phase pattern).
+    Flatten,
+}
+
+/// Declarative description of a workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub steps: Vec<Step>,
+    /// Expected final element count (for validation).
+    pub expected_final: u64,
+}
+
+impl WorkloadSpec {
+    /// Fig 4/5 duplication: `iters` doublings from `start`.
+    pub fn duplication(start: u64, iters: u32) -> WorkloadSpec {
+        let mut steps = vec![Step::Insert(start)];
+        let mut size = start;
+        for _ in 0..iters {
+            steps.push(Step::Insert(size));
+            size *= 2;
+        }
+        WorkloadSpec { name: format!("duplication_{start}x{iters}"), steps, expected_final: size }
+    }
+
+    /// Fig 6 two-phase: `phases` iterations of insert(k·size) + work(w),
+    /// sized so the final array is `final_size` regardless of `k`.
+    ///
+    /// Paper: "a starting array size such that after all iterations and
+    /// independent of the amount of insertions per thread per iteration
+    /// the final size is 1e9" — so `start = final / (k+1)^phases`.
+    pub fn two_phase(final_size: u64, inserts_per_elem: u64, work_calls: u32, phases: u32) -> WorkloadSpec {
+        let growth = (inserts_per_elem + 1).pow(phases);
+        let start = (final_size / growth).max(1);
+        let mut steps = vec![Step::Insert(start)];
+        let mut size = start;
+        for _ in 0..phases {
+            let ins = size * inserts_per_elem;
+            steps.push(Step::Insert(ins));
+            size += ins;
+            steps.push(Step::Flatten);
+            steps.push(Step::Work(work_calls));
+        }
+        WorkloadSpec {
+            name: format!("two_phase_f{final_size}_k{inserts_per_elem}_w{work_calls}"),
+            steps,
+            expected_final: size,
+        }
+    }
+
+    /// Fig 3 uncertain growth: one bulk insert of `s·X`, `X~LogNormal(0,σ)`.
+    pub fn uncertain(s: u64, sigma: f64, rng: &mut Rng) -> WorkloadSpec {
+        let x = if sigma == 0.0 { 1.0 } else { rng.lognormal(0.0, sigma) };
+        let n = ((s as f64) * x).max(1.0) as u64;
+        WorkloadSpec { name: format!("uncertain_s{s}_sigma{sigma}"), steps: vec![Step::Insert(n)], expected_final: n }
+    }
+
+    /// Total elements inserted over the trace.
+    pub fn total_inserts(&self) -> u64 {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                Step::Insert(n) => *n,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Synthesise deterministic element values for an insert step (the data
+/// the experiments push through the structures; value = a simple mix of
+/// the running counter so readback can be verified).
+pub fn synth_values(start_counter: u64, n: usize) -> Vec<u32> {
+    (0..n as u64).map(|i| ((start_counter + i).wrapping_mul(2654435761) >> 8) as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duplication_trace() {
+        let w = WorkloadSpec::duplication(1_000_000, 10);
+        assert_eq!(w.steps.len(), 11);
+        assert_eq!(w.expected_final, 1_024_000_000);
+        assert_eq!(w.total_inserts(), 1_024_000_000);
+        assert_eq!(w.steps[0], Step::Insert(1_000_000));
+        assert_eq!(w.steps[10], Step::Insert(512_000_000));
+    }
+
+    #[test]
+    fn two_phase_final_size_independent_of_k() {
+        // Paper: final size 1e9 for k ∈ {1,3,10}, 5 phases.
+        for k in [1u64, 3, 10] {
+            let w = WorkloadSpec::two_phase(1_000_000_000, k, 100, 5);
+            let rel = (w.expected_final as f64 - 1e9).abs() / 1e9;
+            assert!(rel < 0.05, "k={k}: final {}", w.expected_final);
+            // Each phase has insert + flatten + work.
+            assert_eq!(w.steps.len(), 1 + 15);
+        }
+    }
+
+    #[test]
+    fn uncertain_respects_sigma_zero() {
+        let mut rng = Rng::new(5);
+        let w = WorkloadSpec::uncertain(1000, 0.0, &mut rng);
+        assert_eq!(w.expected_final, 1000);
+    }
+
+    #[test]
+    fn synth_values_deterministic_and_spread() {
+        let a = synth_values(0, 100);
+        let b = synth_values(0, 100);
+        assert_eq!(a, b);
+        let uniq: std::collections::HashSet<_> = a.iter().collect();
+        assert!(uniq.len() > 95);
+        let c = synth_values(100, 1);
+        assert_ne!(a[0], c[0]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Replayable workload traces: serialise a [`WorkloadSpec`] to a simple
+//! line format, load it back, and drive structures from files — so
+//! experiments can be re-run bit-for-bit and external traces can be fed
+//! in.
+//!
+//! Format (one step per line, `#` comments):
+//! ```text
+//! # name: duplication_1000000x10
+//! insert 1000000
+//! work 30
+//! flatten
+//! ```
+
+use std::path::Path;
+
+use super::{Step, WorkloadSpec};
+
+/// Serialise to the line format.
+pub fn to_text(w: &WorkloadSpec) -> String {
+    let mut s = format!("# name: {}\n# expected_final: {}\n", w.name, w.expected_final);
+    for step in &w.steps {
+        match step {
+            Step::Insert(n) => s.push_str(&format!("insert {n}\n")),
+            Step::Work(c) => s.push_str(&format!("work {c}\n")),
+            Step::Flatten => s.push_str("flatten\n"),
+        }
+    }
+    s
+}
+
+/// Parse the line format.
+pub fn from_text(text: &str) -> anyhow::Result<WorkloadSpec> {
+    let mut name = "trace".to_string();
+    let mut steps = Vec::new();
+    let mut running = 0u64;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            if let Some(n) = rest.trim().strip_prefix("name:") {
+                name = n.trim().to_string();
+            }
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        match parts.next() {
+            Some("insert") => {
+                let n: u64 = parts
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("line {}: insert needs a count", lineno + 1))?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("line {}: bad count: {e}", lineno + 1))?;
+                running += n;
+                steps.push(Step::Insert(n));
+            }
+            Some("work") => {
+                let c: u32 = parts
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("line {}: work needs a call count", lineno + 1))?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("line {}: bad count: {e}", lineno + 1))?;
+                steps.push(Step::Work(c));
+            }
+            Some("flatten") => steps.push(Step::Flatten),
+            Some(other) => anyhow::bail!("line {}: unknown step '{other}'", lineno + 1),
+            None => {}
+        }
+        if parts.next().is_some() {
+            anyhow::bail!("line {}: trailing tokens", lineno + 1);
+        }
+    }
+    Ok(WorkloadSpec { name, steps, expected_final: running })
+}
+
+/// Save to a file.
+pub fn save(w: &WorkloadSpec, path: &Path) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, to_text(w))?;
+    Ok(())
+}
+
+/// Load from a file.
+pub fn load(path: &Path) -> anyhow::Result<WorkloadSpec> {
+    from_text(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let w = WorkloadSpec::two_phase(1_000_000, 3, 100, 5);
+        let text = to_text(&w);
+        let back = from_text(&text).unwrap();
+        assert_eq!(back.steps, w.steps);
+        assert_eq!(back.name, w.name);
+        assert_eq!(back.expected_final, w.total_inserts());
+    }
+
+    #[test]
+    fn parse_errors_are_located() {
+        assert!(from_text("insert").unwrap_err().to_string().contains("line 1"));
+        assert!(from_text("insert 5\nbogus 3").unwrap_err().to_string().contains("line 2"));
+        assert!(from_text("work 1 extra").unwrap_err().to_string().contains("trailing"));
+        assert!(from_text("insert notanumber").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let w = from_text("# name: t1\n\n# a comment\ninsert 10\nflatten\nwork 2\n").unwrap();
+        assert_eq!(w.name, "t1");
+        assert_eq!(w.steps, vec![Step::Insert(10), Step::Flatten, Step::Work(2)]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("ggarray_trace_test");
+        let path = dir.join("w.trace");
+        let w = WorkloadSpec::duplication(100, 3);
+        save(&w, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.steps, w.steps);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,239 @@
+//! End-to-end coordinator tests: the full request path — routing,
+//! batching, PJRT work kernels (when artifacts exist), flatten — with
+//! numeric verification against host-computed expectations.
+
+use std::time::Duration;
+
+use ggarray::coordinator::batcher::BatchConfig;
+use ggarray::coordinator::request::{checksum, Request, Response};
+use ggarray::coordinator::router::Policy;
+use ggarray::coordinator::service::{Coordinator, CoordinatorConfig};
+use ggarray::insertion::InsertionKind;
+use ggarray::runtime::ArtifactManifest;
+use ggarray::sim::spec::DeviceSpec;
+
+fn cfg(blocks: usize, use_artifacts: bool) -> CoordinatorConfig {
+    CoordinatorConfig {
+        device: DeviceSpec::a100(),
+        blocks,
+        first_bucket_size: 32,
+        insertion: InsertionKind::WarpScan,
+        routing: Policy::Even,
+        batch: BatchConfig { max_values: 2048, max_delay: Duration::from_millis(1) },
+        use_artifacts,
+        work_iters: 30,
+        heap_capacity: None,
+    }
+}
+
+/// Host-side expectation of the full pipeline: even-routed inserts,
+/// block-major flatten order, `calls` work passes.
+fn expected_flat(blocks: usize, batches: &[Vec<f32>], work_calls: u32) -> Vec<f32> {
+    let mut per_block: Vec<Vec<f32>> = vec![Vec::new(); blocks];
+    for values in batches {
+        let n = values.len();
+        let counts: Vec<usize> = (0..blocks).map(|i| n / blocks + usize::from(i < n % blocks)).collect();
+        let mut off = 0;
+        for (b, &c) in counts.iter().enumerate() {
+            per_block[b].extend_from_slice(&values[off..off + c]);
+            off += c;
+        }
+    }
+    let mut flat: Vec<f32> = per_block.into_iter().flatten().collect();
+    for _ in 0..work_calls {
+        for v in &mut flat {
+            // 30 sequential f32 adds, matching kernel semantics exactly.
+            for _ in 0..30 {
+                *v += 1.0;
+            }
+        }
+    }
+    flat
+}
+
+fn run_pipeline(use_artifacts: bool) -> (u64, u64, u64) {
+    let blocks = 8;
+    let c = Coordinator::start(cfg(blocks, use_artifacts));
+    // Batches big enough to flush by size (2048) plus a deadline tail.
+    let batch_a: Vec<f32> = (0..2048).map(|i| i as f32).collect();
+    let batch_b: Vec<f32> = (0..1000).map(|i| (i * 3) as f32).collect();
+    c.call(Request::Insert { values: batch_a.clone() });
+    c.call(Request::Insert { values: batch_b.clone() });
+    c.call(Request::Work { calls: 2 });
+    let (len, sum, pjrt) = match c.call(Request::Flatten) {
+        Response::Flattened { len, checksum, .. } => {
+            let stats = match c.call(Request::Stats) {
+                Response::Stats(s) => s,
+                other => panic!("{other:?}"),
+            };
+            (len, checksum, stats.pjrt_executions)
+        }
+        other => panic!("{other:?}"),
+    };
+    // Expected flat contents. NOTE: the coordinator flushes `batch_a` by
+    // size (2048 = max_values) and `batch_b` at the Work barrier, so the
+    // two batches are routed independently — same as here.
+    let want = expected_flat(blocks, &[batch_a, batch_b], 2);
+    assert_eq!(len, want.len() as u64);
+    assert_eq!(sum, checksum(&want), "flatten contents mismatch (artifacts={use_artifacts})");
+    c.shutdown();
+    (len, sum, pjrt)
+}
+
+#[test]
+fn pipeline_host_fallback() {
+    let (len, _, pjrt) = run_pipeline(false);
+    assert_eq!(len, 3048);
+    assert_eq!(pjrt, 0, "host fallback must not touch PJRT");
+}
+
+#[test]
+fn pipeline_with_artifacts_matches_host_fallback() {
+    if !ArtifactManifest::available() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let (len_a, sum_a, pjrt) = run_pipeline(true);
+    let (len_b, sum_b, _) = run_pipeline(false);
+    assert_eq!((len_a, sum_a), (len_b, sum_b), "PJRT path and host path must agree bit-exactly");
+    assert!(pjrt > 0, "artifact path should actually execute PJRT");
+}
+
+#[test]
+fn routing_policies_preserve_multiset() {
+    for policy in [Policy::Even, Policy::LeastLoaded, Policy::Hash] {
+        let mut c = cfg(4, false);
+        c.routing = policy;
+        let coord = Coordinator::start(c);
+        let values: Vec<f32> = (0..500).map(|i| i as f32).collect();
+        coord.call(Request::Insert { values: values.clone() });
+        let flat = match coord.call(Request::Flatten) {
+            Response::Flattened { len, .. } => len,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(flat, 500, "{policy:?}");
+        // Every value must be present exactly once.
+        let mut got: Vec<f32> = Vec::new();
+        for i in 0..500u64 {
+            got.push(coord.call(Request::Query { index: i }).expect_value().unwrap());
+        }
+        let mut sorted = got.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(sorted, values, "{policy:?}");
+        coord.shutdown();
+    }
+}
+
+#[test]
+fn stats_reflect_pipeline() {
+    let c = Coordinator::start(cfg(4, false));
+    for _ in 0..10 {
+        c.call(Request::Insert { values: vec![1.0; 100] });
+    }
+    c.call(Request::Work { calls: 1 });
+    c.call(Request::Flatten);
+    let s = match c.call(Request::Stats) {
+        Response::Stats(s) => s,
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(s.elements_inserted, 1000);
+    assert_eq!(s.len, 1000);
+    assert_eq!(s.work_calls, 1);
+    assert_eq!(s.flattens, 1);
+    assert!(s.batches >= 1 && s.batches <= 10);
+    assert!(s.sim_insert_ms > 0.0);
+    assert!(s.sim_work_ms > 0.0);
+    assert!(s.sim_flatten_ms > 0.0);
+    assert!(s.mean_latency_us > 0.0);
+    c.shutdown();
+}
+
+#[test]
+fn concurrent_clients_conserve_elements() {
+    // 8 client threads × 50 inserts of 64 values: nothing lost, nothing
+    // duplicated, service stays healthy throughout.
+    let coord = Coordinator::start(cfg(8, false));
+    let threads = 8;
+    let inserts_per_thread = 50;
+    let chunk = 64usize;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let client = coord.client();
+        handles.push(std::thread::spawn(move || {
+            for k in 0..inserts_per_thread {
+                let base = (t * 1_000_000 + k * chunk) as f32;
+                let values: Vec<f32> = (0..chunk).map(|i| base + i as f32).collect();
+                match client.call(Request::Insert { values }) {
+                    Response::Inserted { count, .. } => assert_eq!(count, chunk as u64),
+                    other => panic!("{other:?}"),
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let _ = coord.call(Request::Query { index: 0 }); // barrier
+    let s = match coord.call(Request::Stats) {
+        Response::Stats(s) => s,
+        other => panic!("{other:?}"),
+    };
+    let expect = (threads * inserts_per_thread * chunk) as u64;
+    assert_eq!(s.elements_inserted, expect);
+    assert_eq!(s.len, expect);
+    assert_eq!(s.errors, 0);
+    // All values present exactly once (multiset check via sum).
+    let mut sum = 0f64;
+    for i in 0..expect {
+        sum += coord.call(Request::Query { index: i }).expect_value().unwrap() as f64;
+    }
+    let want_sum: f64 = (0..threads)
+        .flat_map(|t| (0..inserts_per_thread * chunk).map(move |j| (t * 1_000_000 + j) as f64))
+        .sum();
+    assert_eq!(sum, want_sum);
+    coord.shutdown();
+}
+
+#[test]
+fn oom_injection_degrades_gracefully() {
+    // A 64 KiB VRAM budget: the service must report errors, keep a
+    // consistent index, and keep serving queries/stats after the OOM.
+    let mut c = cfg(4, false);
+    c.heap_capacity = Some(64 * 1024);
+    let coord = Coordinator::start(c);
+    // ~16k f32 fit; try to insert 40k.
+    for _ in 0..40 {
+        coord.call(Request::Insert { values: vec![1.5f32; 1000] });
+    }
+    let _ = coord.call(Request::Query { index: 0 }); // barrier
+    let s = match coord.call(Request::Stats) {
+        Response::Stats(s) => s,
+        other => panic!("{other:?}"),
+    };
+    assert!(s.errors > 0, "expected simulated OOM errors");
+    assert!(s.len < 40_000, "len {} should be capped by the budget", s.len);
+    assert!(s.allocated_bytes <= 64 * 1024);
+    // Service still serves reads and work after the failure.
+    assert_eq!(coord.call(Request::Query { index: 0 }).expect_value(), Some(1.5));
+    match coord.call(Request::Work { calls: 1 }) {
+        Response::Worked { .. } => {}
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(coord.call(Request::Query { index: 0 }).expect_value(), Some(31.5));
+    coord.shutdown();
+}
+
+#[test]
+fn empty_array_operations_are_safe() {
+    let c = Coordinator::start(cfg(2, false));
+    match c.call(Request::Work { calls: 3 }) {
+        Response::Worked { calls: 3, .. } => {}
+        other => panic!("{other:?}"),
+    }
+    match c.call(Request::Flatten) {
+        Response::Flattened { len: 0, .. } => {}
+        other => panic!("{other:?}"),
+    }
+    assert_eq!(c.call(Request::Query { index: 0 }).expect_value(), None);
+    c.shutdown();
+}

@@ -1,0 +1,341 @@
+//! Property-based tests (testkit) over the coordinator-critical
+//! invariants: routing conservation, unique slot assignment, prefix-index
+//! correctness, LFVector capacity bounds, batcher conservation, VMM
+//! accounting.
+
+use ggarray::coordinator::router::{self, Policy};
+use ggarray::ggarray::index::PrefixIndex;
+use ggarray::ggarray::lfvector::LfVector;
+use ggarray::insertion::assign_indices;
+use ggarray::sim::clock::Clock;
+use ggarray::sim::memory::VramHeap;
+use ggarray::sim::spec::DeviceSpec;
+use ggarray::sim::vmm::{PhysicalPool, VmmRange};
+use ggarray::testkit::{check, CountsVec, PairGen, U64Range, DEFAULT_CASES};
+use ggarray::theory::memory_model::ggarray_capacity;
+use ggarray::util::rng::Rng;
+
+#[test]
+fn prop_assign_indices_unique_dense() {
+    let gen = CountsVec { max_len: 200, max_val: 50 };
+    check("assign_indices unique+dense", 0xA11CE, DEFAULT_CASES, &gen, |counts| {
+        let base = 1000u64;
+        let (offsets, total) = assign_indices(base, counts);
+        if offsets.len() != counts.len() {
+            return Err("length mismatch".into());
+        }
+        let mut expanded: Vec<u64> = Vec::new();
+        for (t, &c) in counts.iter().enumerate() {
+            for k in 0..c {
+                expanded.push(offsets[t] + k as u64);
+            }
+        }
+        expanded.sort_unstable();
+        let want: Vec<u64> = (base..total).collect();
+        if expanded != want {
+            return Err(format!("slots not dense: {expanded:?} != [{base},{total})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_router_conservation_and_bounds() {
+    let gen = PairGen(CountsVec { max_len: 64, max_val: 1000 }, U64Range { lo: 0, hi: 5000 });
+    check("router conserves elements", 0xB0B, DEFAULT_CASES, &gen, |(sizes_raw, n)| {
+        if sizes_raw.is_empty() {
+            return Ok(()); // router requires ≥1 block
+        }
+        let sizes: Vec<u64> = sizes_raw.iter().map(|&s| s as u64).collect();
+        for policy in [Policy::Even, Policy::LeastLoaded, Policy::Hash] {
+            let counts = router::route(policy, &sizes, *n as usize, 3);
+            let total: usize = counts.iter().sum();
+            if total != *n as usize {
+                return Err(format!("{policy:?}: routed {total} != {n}"));
+            }
+            if counts.len() != sizes.len() {
+                return Err(format!("{policy:?}: wrong width"));
+            }
+        }
+        // LeastLoaded must never be worse balanced than Even.
+        let ll = router::route(Policy::LeastLoaded, &sizes, *n as usize, 3);
+        let ev = router::route(Policy::Even, &sizes, *n as usize, 3);
+        let (bl, be) = (router::imbalance_after(&sizes, &ll), router::imbalance_after(&sizes, &ev));
+        if bl > be + 1e-9 {
+            return Err(format!("least-loaded imbalance {bl} > even {be}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prefix_index_locate_inverse() {
+    let gen = CountsVec { max_len: 100, max_val: 300 };
+    check("prefix index locate", 0x1DE, DEFAULT_CASES, &gen, |sizes_raw| {
+        let sizes: Vec<u64> = sizes_raw.iter().map(|&s| s as u64).collect();
+        let mut idx = PrefixIndex::new();
+        idx.rebuild(sizes.iter().copied());
+        let total: u64 = sizes.iter().sum();
+        if idx.total() != total {
+            return Err("total mismatch".into());
+        }
+        // Forward map must invert locate at every boundary ± 1.
+        let mut probe = vec![0u64];
+        let mut acc = 0;
+        for &s in &sizes {
+            acc += s;
+            if acc > 0 {
+                probe.push(acc - 1);
+            }
+            probe.push(acc);
+        }
+        for &i in &probe {
+            match idx.locate(i) {
+                Some((b, l)) => {
+                    if i >= total {
+                        return Err(format!("locate({i}) = Some but total {total}"));
+                    }
+                    if idx.start_of(b) + l != i {
+                        return Err(format!("locate({i}) → ({b},{l}) doesn't invert"));
+                    }
+                    if l >= sizes[b] {
+                        return Err(format!("local {l} ≥ size {}", sizes[b]));
+                    }
+                }
+                None => {
+                    if i < total {
+                        return Err(format!("locate({i}) = None but total {total}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lfvector_capacity_bound_and_roundtrip() {
+    let gen = CountsVec { max_len: 40, max_val: 200 };
+    check("lfvector bounds", 0x1F5EC, 64, &gen, |chunks| {
+        let spec = DeviceSpec::a100();
+        let mut heap = VramHeap::with_capacity(spec, 1 << 26);
+        let mut clock = Clock::new();
+        let mut v: LfVector<u32> = LfVector::new(8);
+        let mut shadow: Vec<u32> = Vec::new();
+        for (i, &c) in chunks.iter().enumerate() {
+            let vals: Vec<u32> = (0..c).map(|k| (i as u32) << 16 | k).collect();
+            v.push_back_bulk(&vals, &mut heap, &mut clock).map_err(|e| e.to_string())?;
+            shadow.extend_from_slice(&vals);
+            let cap = v.capacity() as f64;
+            let bound = 2.0 * v.len() as f64 + 2.0 * 8.0;
+            if cap > bound {
+                return Err(format!("cap {cap} > bound {bound} at len {}", v.len()));
+            }
+        }
+        if v.len() != shadow.len() {
+            return Err("length mismatch".into());
+        }
+        for (i, &want) in shadow.iter().enumerate() {
+            if v.get(i) != Some(want) {
+                return Err(format!("get({i}) = {:?} want {want}", v.get(i)));
+            }
+        }
+        // Heap accounting matches.
+        if heap.used() != v.allocated_bytes() {
+            return Err("heap vs vector accounting".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_theory_capacity_bounds() {
+    let gen = PairGen(U64Range { lo: 1, hi: 100_000_000 }, U64Range { lo: 1, hi: 2048 });
+    check("ggarray_capacity bounds", 0x7E0, DEFAULT_CASES, &gen, |&(n, blocks)| {
+        let fbs = 64;
+        let cap = ggarray_capacity(n, blocks, fbs);
+        if cap < n {
+            return Err(format!("cap {cap} < n {n}"));
+        }
+        let bound = 2 * n + 2 * blocks * fbs;
+        if cap > bound {
+            return Err(format!("cap {cap} > 2n+2Bf = {bound} (n={n}, B={blocks})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_values() {
+    use ggarray::coordinator::batcher::{BatchConfig, Batcher};
+    let gen = CountsVec { max_len: 50, max_val: 300 };
+    check("batcher conserves", 0xBA7C, DEFAULT_CASES, &gen, |pushes| {
+        let mut b = Batcher::new(BatchConfig { max_values: 257, max_delay: std::time::Duration::from_secs(60) });
+        let mut emitted = 0usize;
+        let mut pushed = 0usize;
+        for (i, &c) in pushes.iter().enumerate() {
+            let vals = vec![i as f32; c as usize];
+            pushed += vals.len();
+            if let Some(batch) = b.push(&vals) {
+                emitted += batch.values.len();
+            }
+        }
+        if let Some(batch) = b.flush() {
+            emitted += batch.values.len();
+        }
+        if emitted != pushed {
+            return Err(format!("emitted {emitted} != pushed {pushed}"));
+        }
+        if b.pending_len() != 0 {
+            return Err("pending after flush".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vmm_accounting() {
+    let gen = CountsVec { max_len: 30, max_val: 40 };
+    check("vmm map/unmap accounting", 0x111, 64, &gen, |targets| {
+        let spec = DeviceSpec::a100();
+        let page = spec.cost.vmm_page_bytes;
+        let mut pool = PhysicalPool::new(&spec);
+        let mut clock = Clock::new();
+        let mut range = VmmRange::reserve(&spec, 100 * page, &mut clock);
+        let mut committed = 0u64;
+        for &t in targets {
+            let target = (t as u64 % 90) * page / 2;
+            if target >= committed {
+                range.grow_to(&spec, &mut pool, target, &mut clock).map_err(|e| e.to_string())?;
+            } else {
+                range.shrink_to(&spec, &mut pool, target, &mut clock).map_err(|e| e.to_string())?;
+            }
+            committed = target;
+            if range.mapped_bytes() % page != 0 {
+                return Err("mapped not page-granular".into());
+            }
+            if range.mapped_bytes() < committed {
+                return Err("mapped < committed".into());
+            }
+            if range.mapped_bytes() - committed >= page {
+                return Err(format!(
+                    "slack {} ≥ one page after shrink/grow to {committed}",
+                    range.mapped_bytes() - committed
+                ));
+            }
+            if pool.used_bytes() != range.mapped_bytes() {
+                return Err("pool vs range accounting".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Shadow-model fuzz: a random op sequence (insert / rw_b / rw_g /
+/// shrink / flatten) on the GGArray must agree with a plain Vec model at
+/// every step. This is the strongest single correctness check on the
+/// structure.
+#[test]
+fn prop_ggarray_matches_shadow_model() {
+    use ggarray::ggarray::array::{GgArray, GgConfig};
+    use ggarray::ggarray::flatten::flatten;
+    use ggarray::insertion::InsertionKind;
+
+    let mut rng = Rng::new(0x5AD0);
+    for case in 0..24 {
+        let blocks = 1usize << rng.range(0, 5); // 1..16
+        let fbs = 1usize << rng.range(2, 7); // 4..64
+        let mut gg: GgArray<u32> = GgArray::new(
+            GgConfig { num_blocks: blocks, threads_per_block: 256, first_bucket_size: fbs, insertion: InsertionKind::WarpScan },
+            DeviceSpec::a100(),
+        );
+        // Shadow: per-block Vecs (mirrors block-major semantics exactly).
+        let mut shadow: Vec<Vec<u32>> = vec![Vec::new(); blocks];
+        let mut counter = 0u32;
+        for step in 0..60 {
+            match rng.below(10) {
+                0..=4 => {
+                    // insert_bulk with even split
+                    let n = rng.range(0, 500) as usize;
+                    let vals: Vec<u32> = (0..n as u32).map(|i| counter + i).collect();
+                    counter += n as u32;
+                    gg.insert_bulk(&vals, InsertionKind::WarpScan).unwrap();
+                    let counts: Vec<usize> =
+                        (0..blocks).map(|i| n / blocks + usize::from(i < n % blocks)).collect();
+                    let mut off = 0;
+                    for (b, &c) in counts.iter().enumerate() {
+                        shadow[b].extend_from_slice(&vals[off..off + c]);
+                        off += c;
+                    }
+                }
+                5 | 6 => {
+                    gg.read_write_block(1.0, |x| *x = x.wrapping_mul(3).wrapping_add(1));
+                    for v in shadow.iter_mut().flatten() {
+                        *v = v.wrapping_mul(3).wrapping_add(1);
+                    }
+                }
+                7 => {
+                    gg.read_write_global(1.0, |x| *x = x.wrapping_add(7));
+                    for v in shadow.iter_mut().flatten() {
+                        *v = v.wrapping_add(7);
+                    }
+                }
+                8 => {
+                    let total: usize = shadow.iter().map(|s| s.len()).sum();
+                    if total > 0 {
+                        let keep = rng.below(total as u64 + 1) as usize;
+                        gg.shrink_to(keep);
+                        let split: Vec<usize> =
+                            (0..blocks).map(|i| keep / blocks + usize::from(i < keep % blocks)).collect();
+                        for (b, s) in shadow.iter_mut().enumerate() {
+                            s.truncate(split[b].min(s.len()));
+                        }
+                    }
+                }
+                _ => {
+                    let flat = flatten(&mut gg).unwrap();
+                    let want: Vec<u32> = shadow.iter().flatten().copied().collect();
+                    assert_eq!(flat.data, want, "case {case} step {step}: flatten mismatch");
+                }
+            }
+            // Invariants after every step.
+            let want: Vec<u32> = shadow.iter().flatten().copied().collect();
+            assert_eq!(gg.len(), want.len(), "case {case} step {step}");
+            // Spot-check a few random indices through the global index.
+            for _ in 0..5 {
+                if want.is_empty() {
+                    break;
+                }
+                let i = rng.below(want.len() as u64);
+                assert_eq!(gg.get(i), Some(want[i as usize]), "case {case} step {step} idx {i}");
+            }
+            assert_eq!(gg.get(want.len() as u64), None);
+            if !want.is_empty() {
+                let r = gg.overhead_ratio();
+                let floor = (blocks * fbs) as f64 / want.len() as f64;
+                assert!(r < 2.1 + 2.0 * floor, "case {case} step {step}: overhead {r} (floor {floor})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_scan_artifacts_match_oracle_when_available() {
+    if !ggarray::runtime::ArtifactManifest::available() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let exec = ggarray::runtime::Executor::from_default_dir().unwrap();
+    let mut rng = Rng::new(0x5CA9);
+    for case in 0..24 {
+        let n = rng.range(1, 1024) as usize;
+        let counts: Vec<i32> = (0..n).map(|_| rng.below(16) as i32).collect();
+        for fam in ["scan_warp_i32_", "scan_mxu_i32_"] {
+            let (offsets, total) = exec.scan_offsets(fam, &counts).unwrap();
+            let counts_u32: Vec<u32> = counts.iter().map(|&c| c as u32).collect();
+            let (want, want_total) = assign_indices(0, &counts_u32);
+            assert_eq!(total as u64, want_total, "{fam} case {case}");
+            assert_eq!(offsets, want.iter().map(|&x| x as i64).collect::<Vec<_>>(), "{fam} case {case}");
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Integration: load the real AOT artifacts through PJRT and cross-check
+//! the kernels against the Rust host oracles. Skips (with a notice) when
+//! `make artifacts` hasn't been run.
+
+use ggarray::insertion::assign_indices;
+use ggarray::runtime::{ArtifactManifest, Executor};
+use ggarray::util::rng::Rng;
+
+fn executor_or_skip() -> Option<Executor> {
+    if !ArtifactManifest::available() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Executor::from_default_dir().expect("manifest present but unloadable"))
+}
+
+#[test]
+fn scan_warp_matches_host_oracle() {
+    let Some(exec) = executor_or_skip() else { return };
+    let mut rng = Rng::new(7);
+    for n in [1usize, 5, 128, 1000, 1024] {
+        let counts: Vec<i32> = (0..n).map(|_| rng.below(4) as i32).collect();
+        let out = exec.run_i32("scan_warp_i32_1024", &[&counts], n).unwrap();
+        let incl = &out[0];
+        let mut acc = 0i32;
+        for (i, &c) in counts.iter().enumerate() {
+            acc += c;
+            assert_eq!(incl[i], acc, "n={n} i={i}");
+        }
+    }
+}
+
+#[test]
+fn scan_mxu_agrees_with_scan_warp() {
+    let Some(exec) = executor_or_skip() else { return };
+    let mut rng = Rng::new(11);
+    let counts: Vec<i32> = (0..1024).map(|_| rng.below(8) as i32).collect();
+    let warp = exec.run_i32("scan_warp_i32_1024", &[&counts], 1024).unwrap();
+    let mxu = exec.run_i32("scan_mxu_i32_1024", &[&counts], 1024).unwrap();
+    assert_eq!(warp[0], mxu[0], "the two scan algorithms must agree exactly");
+}
+
+#[test]
+fn scan_offsets_matches_assign_indices() {
+    let Some(exec) = executor_or_skip() else { return };
+    let counts_u32: Vec<u32> = vec![3, 0, 1, 7, 2, 0, 5];
+    let counts_i32: Vec<i32> = counts_u32.iter().map(|&c| c as i32).collect();
+    let (offsets, total) = exec.scan_offsets("scan_warp_i32_", &counts_i32).unwrap();
+    let (want, want_total) = assign_indices(0, &counts_u32);
+    assert_eq!(total as u64, want_total);
+    assert_eq!(offsets, want.iter().map(|&x| x as i64).collect::<Vec<_>>());
+}
+
+#[test]
+fn work_kernel_adds_thirty() {
+    let Some(exec) = executor_or_skip() else { return };
+    let xs: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+    let out = exec.run_f32("work_f32_1024", &[&xs], xs.len()).unwrap();
+    for (i, (&x, &y)) in xs.iter().zip(&out[0]).enumerate() {
+        assert_eq!(y, x + 30.0, "i={i}");
+    }
+}
+
+#[test]
+fn padding_does_not_corrupt_scan() {
+    // Inputs shorter than the artifact are zero-padded; zeros after the
+    // real data must not change the inclusive prefix within range.
+    let Some(exec) = executor_or_skip() else { return };
+    let counts = vec![5i32; 10];
+    let out = exec.run_i32("scan_warp_i32_1024", &[&counts], 10).unwrap();
+    assert_eq!(out[0], (1..=10).map(|i| i * 5).collect::<Vec<i32>>());
+}
+
+#[test]
+fn pick_size_picks_smallest_fitting() {
+    let Some(exec) = executor_or_skip() else { return };
+    assert_eq!(exec.pick_size("scan_warp_i32_", 100).unwrap(), "scan_warp_i32_1024");
+    assert_eq!(exec.pick_size("scan_warp_i32_", 1024).unwrap(), "scan_warp_i32_1024");
+    assert_eq!(exec.pick_size("scan_warp_i32_", 1025).unwrap(), "scan_warp_i32_4096");
+    assert!(exec.pick_size("scan_warp_i32_", 100_000_000).is_err());
+}
+
+#[test]
+fn oversized_input_rejected() {
+    let Some(exec) = executor_or_skip() else { return };
+    let too_big = vec![1i32; 5000];
+    let err = exec.run_i32("scan_warp_i32_1024", &[&too_big], 5000).unwrap_err();
+    assert!(err.to_string().contains("capacity"));
+}
+
+#[test]
+fn insert_pack_artifact_full_pipeline() {
+    // The fused L2 graph: mask + values → offsets + packed + total,
+    // through one PJRT execution.
+    use ggarray::runtime::{ArgValue, OutValue};
+    let Some(exec) = executor_or_skip() else { return };
+    if exec.manifest().get("insert_pack_f32_1024").is_none() {
+        eprintln!("SKIP: insert_pack artifacts not built");
+        return;
+    }
+    let mut rng = Rng::new(5);
+    let n = 700usize;
+    let mask: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+    let values: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+    let outs = exec
+        .run_mixed("insert_pack_f32_1024", &[ArgValue::I32(&mask), ArgValue::F32(&values)])
+        .unwrap();
+    let offsets = outs[0].as_i32().unwrap();
+    let packed = outs[1].as_f32().unwrap();
+    let total = outs[2].as_i32().unwrap()[0] as usize;
+    // Host oracle.
+    let want: Vec<f32> = mask
+        .iter()
+        .zip(&values)
+        .filter(|(&m, _)| m == 1)
+        .map(|(_, &v)| v)
+        .collect();
+    assert_eq!(total, want.len());
+    assert_eq!(&packed[..total], &want[..]);
+    // Offsets where mask=1 are 0..total-1 in order.
+    let got_off: Vec<i32> = mask
+        .iter()
+        .zip(offsets)
+        .filter(|(&m, _)| m == 1)
+        .map(|(_, &o)| o)
+        .collect();
+    assert_eq!(got_off, (0..total as i32).collect::<Vec<_>>());
+    // Type mismatch is rejected cleanly.
+    assert!(exec
+        .run_mixed("insert_pack_f32_1024", &[ArgValue::F32(&values), ArgValue::F32(&values)])
+        .is_err());
+    let _ = OutValue::I32(vec![]); // exercise the enum export
+}
+
+#[test]
+fn flatten_artifact_matches_host_flatten() {
+    use ggarray::runtime::{ArgValue, OutValue};
+    let Some(exec) = executor_or_skip() else { return };
+    let Some(spec) = exec.manifest().get("flatten_f32_8192") else {
+        eprintln!("SKIP: flatten artifacts not built");
+        return;
+    };
+    let (blocks, cap) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let mut rng = Rng::new(9);
+    // Bucketed input: block b holds sizes[b] live values.
+    let sizes: Vec<i32> = (0..blocks).map(|_| rng.below(cap as u64 + 1) as i32).collect();
+    let mut vals = vec![0f32; blocks * cap];
+    let mut expect: Vec<f32> = Vec::new();
+    for b in 0..blocks {
+        for j in 0..sizes[b] as usize {
+            let v = (b * 10_000 + j) as f32;
+            vals[b * cap + j] = v;
+            expect.push(v);
+        }
+    }
+    let outs = exec
+        .run_mixed("flatten_f32_8192", &[ArgValue::F32(&vals), ArgValue::I32(&sizes)])
+        .unwrap();
+    let flat = outs[0].as_f32().unwrap();
+    let total = match &outs[1] {
+        OutValue::I32(v) => v[0] as usize,
+        _ => panic!("total should be i32"),
+    };
+    assert_eq!(total, expect.len());
+    assert_eq!(&flat[..total], &expect[..]);
+}
+
+#[test]
+fn warm_up_compiles_everything_once() {
+    let Some(exec) = executor_or_skip() else { return };
+    let n = exec.warm_up().unwrap();
+    assert!(n >= 6, "expected ≥6 artifacts, got {n}");
+    // Executions counter untouched by warm-up.
+    assert_eq!(exec.executions(), 0);
+    let _ = exec.run_i32("scan_warp_i32_1024", &[&vec![1i32; 4]], 4).unwrap();
+    assert_eq!(exec.executions(), 1);
+}
