@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 verification plus compile-and-run smoke coverage
+# of the experiment/bench path, so a PR cannot silently break the binaries
+# that only `cargo run`/`cargo bench` exercise.
+#
+# Usage: ./ci.sh [--quick]
+#   --quick   skip the smoke runs (tier-1 only)
+
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+cargo build --release
+cargo test -q
+
+if [[ "${1:-}" == "--quick" ]]; then
+    echo "ci.sh --quick: tier-1 green, skipping smoke runs"
+    exit 0
+fi
+
+SMOKE_OUT="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_OUT"' EXIT
+
+echo "== smoke: experiment binary (fig3, small sweep) =="
+cargo run --release --bin repro -- fig3 --steps 4 --draws 200 --quiet --out "$SMOKE_OUT"
+
+echo "== smoke: sharded two-phase example (byte-identity + sealed payoff) =="
+cargo run --release --example sharded_two_phase
+
+echo "== smoke: shard bench (modeled sealed-vs-unsealed assertions) =="
+cargo bench --bench bench_shards
+
+echo "ci.sh: all green"

@@ -1,0 +1,98 @@
+//! Sharded two-phase lifecycle end-to-end (paper §VI.D at service
+//! scale): grow each epoch across N independent GGArray shards, **seal**
+//! it — drain batches, flatten every shard, concatenate into the flat
+//! fast-access view — and run the work phase at static-array cost while
+//! the next insert epoch opens behind it.
+//!
+//! Demonstrates the two headline properties of the sharded design:
+//!
+//! 1. **Layout invariance** — global routing + per-shard slicing makes
+//!    the sealed bytes identical for any shard count (1 vs 4 here);
+//! 2. **Two-phase payoff** — work over sealed (flat) epochs simulates
+//!    markedly cheaper than the same work over unsealed GGArray data.
+//!
+//! ```sh
+//! cargo run --release --example sharded_two_phase
+//! ```
+
+use std::time::Duration;
+
+use ggarray::coordinator::batcher::BatchConfig;
+use ggarray::coordinator::request::{Request, Response};
+use ggarray::coordinator::service::{drive_workload, Coordinator, CoordinatorConfig, WorkloadRun};
+use ggarray::workload::WorkloadSpec;
+
+const FINAL_SIZE: u64 = 1 << 18; // 262144 elements after 3 doubling phases
+const PHASES: u32 = 3;
+const WORK_CALLS: u32 = 2;
+const CHUNK: usize = 4096;
+const TOTAL_BLOCKS: usize = 32;
+
+fn config(shards: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        blocks: TOTAL_BLOCKS,
+        shards,
+        first_bucket_size: 64,
+        use_artifacts: false,
+        // max_values == CHUNK makes every insert request flush by size:
+        // batch boundaries (and so routing) are identical across runs.
+        batch: BatchConfig { max_values: CHUNK, max_delay: Duration::from_secs(3600) },
+        ..CoordinatorConfig::default()
+    }
+}
+
+/// Run a workload and capture (run summary, final flatten checksum,
+/// final stats line).
+fn run(w: &WorkloadSpec, shards: usize) -> (WorkloadRun, u64, String) {
+    let c = Coordinator::start(config(shards));
+    let run = drive_workload(&c, w, CHUNK);
+    let final_checksum = match c.call(Request::Flatten) {
+        Response::Flattened { checksum, len, .. } => {
+            assert_eq!(len, w.expected_final, "final length mismatch");
+            checksum
+        }
+        other => panic!("flatten failed: {other:?}"),
+    };
+    let stats = match c.call(Request::Stats) {
+        Response::Stats(s) => s.to_string(),
+        other => panic!("stats failed: {other:?}"),
+    };
+    c.shutdown();
+    (run, final_checksum, stats)
+}
+
+fn main() {
+    let sealed_wl = WorkloadSpec::two_phase_sharded(FINAL_SIZE, 1, WORK_CALLS, PHASES);
+    let unsealed_wl = WorkloadSpec::two_phase(FINAL_SIZE, 1, WORK_CALLS, PHASES);
+    println!("== sharded two-phase driver: {} ==", sealed_wl.name);
+    println!("final size {} over {PHASES} phases, {TOTAL_BLOCKS} total blocks\n", sealed_wl.expected_final);
+
+    // --- layout invariance: 1 shard vs 4 shards, byte-identical ---
+    let (run1, final1, _) = run(&sealed_wl, 1);
+    let (run4, final4, stats4) = run(&sealed_wl, 4);
+    assert_eq!(
+        run1.seal_checksums, run4.seal_checksums,
+        "per-epoch sealed contents must be byte-identical across shard counts"
+    );
+    assert_eq!(final1, final4, "final flattened contents must be byte-identical");
+    println!("layout invariance: 1-shard and 4-shard sealed epochs byte-identical ✓");
+    for (i, sum) in run4.seal_checksums.iter().enumerate() {
+        println!("  epoch {} checksum {sum:#018x}", i + 1);
+    }
+
+    // --- two-phase payoff: sealed work ≪ unsealed work ---
+    let (run4_unsealed, _, _) = run(&unsealed_wl, 4);
+    let sealed_ms = run4.work_sim_us / 1e3;
+    let unsealed_ms = run4_unsealed.work_sim_us / 1e3;
+    assert!(
+        sealed_ms < unsealed_ms,
+        "sealed work {sealed_ms} ms must beat unsealed {unsealed_ms} ms"
+    );
+    println!("\ntwo-phase payoff (4 shards, simulated work time across all phases):");
+    println!("  unsealed (GGArray rw_b): {unsealed_ms:>9.3} ms");
+    println!("  sealed   (flat path):    {sealed_ms:>9.3} ms   ({:.1}× faster)", unsealed_ms / sealed_ms);
+    println!("  seal cost (flatten):     {:>9.3} ms", run4.seal_sim_us / 1e3);
+
+    println!("\n--- 4-shard coordinator metrics ---\n{stats4}");
+    println!("\nsharded_two_phase OK");
+}

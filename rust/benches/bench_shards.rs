@@ -1,0 +1,89 @@
+//! Sharded-coordinator benches: wall-clock request-path throughput vs
+//! shard count, plus the modeled (simulated-GPU) cost split between the
+//! sealed flat path and the unsealed GGArray path.
+//! Run: `cargo bench --bench bench_shards`
+
+use std::time::Duration;
+
+use ggarray::coordinator::batcher::BatchConfig;
+use ggarray::coordinator::request::{Request, Response};
+use ggarray::coordinator::service::{Coordinator, CoordinatorConfig};
+use ggarray::util::benchkit::{black_box, BenchConfig, BenchSuite};
+
+const TOTAL_BLOCKS: usize = 64;
+const CHUNK: usize = 4096;
+const INSERTS: usize = 1 << 17; // 131072 elements per iteration
+
+fn config(shards: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        blocks: TOTAL_BLOCKS,
+        shards,
+        first_bucket_size: 64,
+        use_artifacts: false,
+        batch: BatchConfig { max_values: CHUNK, max_delay: Duration::from_millis(2) },
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn insert_all(c: &Coordinator) {
+    let mut sent = 0usize;
+    while sent < INSERTS {
+        let n = CHUNK.min(INSERTS - sent);
+        let values: Vec<f32> = (sent..sent + n).map(|i| i as f32).collect();
+        c.call(Request::Insert { values });
+        sent += n;
+    }
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("shards — request path vs shard count, sealed vs unsealed work")
+        .with_config(BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            min_time: Duration::from_millis(100),
+            max_iters: 20,
+        });
+    suite.banner();
+
+    // --- wall-clock: insert+seal pipeline per shard count ---
+    for shards in [1usize, 2, 4, 8] {
+        suite.bench(&format!("insert {INSERTS} + seal ({shards} shards)"), || {
+            let c = Coordinator::start(config(shards));
+            insert_all(&c);
+            match c.call(Request::Seal) {
+                Response::Sealed { epoch_len, .. } => assert_eq!(epoch_len, INSERTS as u64),
+                other => panic!("{other:?}"),
+            }
+            black_box(c.call(Request::Stats));
+            c.shutdown();
+        });
+    }
+
+    // --- modeled: one work pass, unsealed vs sealed, per shard count ---
+    for shards in [1usize, 4] {
+        let c = Coordinator::start(config(shards));
+        insert_all(&c);
+        let unsealed_us = match c.call(Request::Work { calls: 1 }) {
+            Response::Worked { sim_us, .. } => sim_us,
+            other => panic!("{other:?}"),
+        };
+        let seal_us = match c.call(Request::Seal) {
+            Response::Sealed { sim_us, .. } => sim_us,
+            other => panic!("{other:?}"),
+        };
+        let sealed_us = match c.call(Request::Work { calls: 1 }) {
+            Response::Worked { sim_us, .. } => sim_us,
+            other => panic!("{other:?}"),
+        };
+        suite.record(&format!("sim work unsealed rw_b ({shards} shards)"), unsealed_us);
+        suite.record(&format!("sim seal (flatten+concat, {shards} shards)"), seal_us);
+        suite.record(&format!("sim work sealed flat ({shards} shards)"), sealed_us);
+        assert!(
+            sealed_us < unsealed_us,
+            "{shards} shards: sealed {sealed_us} µs !< unsealed {unsealed_us} µs"
+        );
+        c.shutdown();
+    }
+
+    println!("\n{}", suite.markdown());
+}

@@ -14,6 +14,8 @@ pub struct Metrics {
     pub batches: u64,
     pub work_calls: u64,
     pub flattens: u64,
+    /// Epoch seals performed (two-phase lifecycle).
+    pub seals: u64,
     pub queries: u64,
     pub errors: u64,
     pub pjrt_executions: u64,
@@ -34,6 +36,7 @@ impl Metrics {
             batches: 0,
             work_calls: 0,
             flattens: 0,
+            seals: 0,
             queries: 0,
             errors: 0,
             pjrt_executions: 0,
@@ -56,6 +59,7 @@ impl Metrics {
             batches: self.batches,
             work_calls: self.work_calls,
             flattens: self.flattens,
+            seals: self.seals,
             queries: self.queries,
             errors: self.errors,
             pjrt_executions: self.pjrt_executions,
@@ -67,6 +71,13 @@ impl Metrics {
             len,
             capacity,
             allocated_bytes,
+            // Sharding/epoch context defaults to a single-shard store;
+            // sharded services attach theirs via
+            // [`MetricsSnapshot::with_sharding`].
+            shards: 1,
+            epoch: 0,
+            sealed_len: 0,
+            per_shard_len: Vec::new(),
         }
     }
 }
@@ -86,6 +97,7 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub work_calls: u64,
     pub flattens: u64,
+    pub seals: u64,
     pub queries: u64,
     pub errors: u64,
     pub pjrt_executions: u64,
@@ -97,9 +109,34 @@ pub struct MetricsSnapshot {
     pub len: u64,
     pub capacity: u64,
     pub allocated_bytes: u64,
+    /// Number of GGArray shards behind the service.
+    pub shards: usize,
+    /// Current inserting-epoch sequence number.
+    pub epoch: u64,
+    /// Elements in the sealed (flat, fast-access) prefix.
+    pub sealed_len: u64,
+    /// Live-epoch elements per shard (aggregated OpReports land in the
+    /// sim_* ledgers; this exposes the balance).
+    pub per_shard_len: Vec<u64>,
 }
 
 impl MetricsSnapshot {
+    /// Attach the shard/epoch context in one step (the raw counters are
+    /// shard-agnostic, so `snapshot()` cannot fill these itself).
+    pub fn with_sharding(
+        mut self,
+        shards: usize,
+        epoch: u64,
+        sealed_len: u64,
+        per_shard_len: Vec<u64>,
+    ) -> MetricsSnapshot {
+        self.shards = shards;
+        self.epoch = epoch;
+        self.sealed_len = sealed_len;
+        self.per_shard_len = per_shard_len;
+        self
+    }
+
     /// Memory overhead vs live data (the paper's ≤2× claim, observable
     /// live).
     pub fn overhead_ratio(&self) -> f64 {
@@ -126,12 +163,17 @@ impl std::fmt::Display for MetricsSnapshot {
         writeln!(f, "elements inserted    {}", self.elements_inserted)?;
         writeln!(f, "batches (coalescing) {} ({:.1}×)", self.batches, self.coalescing())?;
         writeln!(f, "work calls           {}", self.work_calls)?;
-        writeln!(f, "flattens             {}", self.flattens)?;
+        writeln!(f, "flattens / seals     {} / {}", self.flattens, self.seals)?;
         writeln!(f, "queries              {}", self.queries)?;
         writeln!(f, "errors               {}", self.errors)?;
         writeln!(f, "PJRT executions      {}", self.pjrt_executions)?;
         writeln!(f, "sim insert/work/flat {:.2} / {:.2} / {:.2} ms", self.sim_insert_ms, self.sim_work_ms, self.sim_flatten_ms)?;
         writeln!(f, "mean request latency {:.1} µs over {}", self.mean_latency_us, self.p_latency_count)?;
+        writeln!(
+            f,
+            "shards / epoch       {} / {} (sealed prefix {} elements)",
+            self.shards, self.epoch, self.sealed_len
+        )?;
         writeln!(f, "len / capacity       {} / {}", self.len, self.capacity)?;
         write!(f, "allocated            {} (overhead {:.2}×)", crate::util::tables::fmt_bytes(self.allocated_bytes), self.overhead_ratio())
     }

@@ -1,11 +1,17 @@
 //! Dynamic-memory workload coordinator (Layer 3 service).
 //!
-//! Routes insertion/work/flatten requests onto the GGArray's per-block
-//! LFVectors, batches them per block, and drives the AOT work kernels via
-//! the PJRT runtime. See `service` for the event loop.
+//! Routes insertion/work/flatten requests over N independent GGArray
+//! [`shard::Shard`]s (each with its own VRAM budget carved from the
+//! shared device), batches them per the global block space, and drives
+//! the AOT work kernels via the PJRT runtime. The paper's two-phase
+//! lifecycle is first-class: sealing an epoch flattens every shard into
+//! one contiguous fast-access view (see [`shard::EpochManager`]) while a
+//! fresh insert epoch opens behind it. See [`service`] for the event
+//! loop.
 
 pub mod batcher;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod service;
+pub mod shard;

@@ -13,6 +13,10 @@ pub enum Request {
     /// Flatten into a contiguous buffer (two-phase pattern); the array
     /// keeps its contents.
     Flatten,
+    /// Seal the current epoch: drain in-flight batches, flatten every
+    /// shard, concatenate into the sealed flat view (fast access path),
+    /// and open a fresh insert epoch behind it.
+    Seal,
     /// Read one element by global index.
     Query { index: u64 },
     /// Metrics snapshot.
@@ -46,6 +50,17 @@ pub enum Response {
         /// validation.
         checksum: u64,
     },
+    Sealed {
+        /// The new (now inserting) epoch sequence number.
+        epoch: u64,
+        /// Elements sealed by this request.
+        epoch_len: u64,
+        /// Total elements across all sealed epochs.
+        sealed_len: u64,
+        sim_us: f64,
+        /// Checksum of this epoch's flattened data (order-sensitive).
+        checksum: u64,
+    },
     Value(Option<f32>),
     Stats(MetricsSnapshot),
     Cleared,
@@ -67,6 +82,17 @@ impl Response {
         match self {
             Response::Value(v) => v,
             other => panic!("expected Value, got {other:?}"),
+        }
+    }
+
+    /// Convenience for tests: `(epoch, epoch_len, sealed_len, sim_us,
+    /// checksum)` or panic.
+    pub fn expect_sealed(self) -> (u64, u64, u64, f64, u64) {
+        match self {
+            Response::Sealed { epoch, epoch_len, sealed_len, sim_us, checksum } => {
+                (epoch, epoch_len, sealed_len, sim_us, checksum)
+            }
+            other => panic!("expected Sealed, got {other:?}"),
         }
     }
 }

@@ -92,6 +92,28 @@ pub fn route(policy: Policy, sizes: &[u64], n: usize, batch_seq: u64) -> Vec<usi
     }
 }
 
+/// Split a *global* per-block routing decision across shards that own
+/// `blocks_per_shard` consecutive blocks each: shard `k` receives the
+/// counts for blocks `[k·bps, (k+1)·bps)` together with the offset of its
+/// first value in the batch (values are consumed in block order, so each
+/// shard's slice is contiguous).
+///
+/// Routing globally and then slicing is what makes the sharded store's
+/// layout independent of the shard count: S shards × B/S blocks see
+/// exactly the per-block pushes one S=1 store with B blocks would, so a
+/// sealed flatten concatenation is byte-identical across shard counts.
+pub fn split_for_shards(counts: &[usize], blocks_per_shard: usize) -> Vec<(usize, &[usize])> {
+    assert!(blocks_per_shard > 0, "blocks_per_shard must be positive");
+    assert_eq!(counts.len() % blocks_per_shard, 0, "blocks not divisible into shards");
+    let mut out = Vec::with_capacity(counts.len() / blocks_per_shard);
+    let mut offset = 0usize;
+    for chunk in counts.chunks(blocks_per_shard) {
+        out.push((offset, chunk));
+        offset += chunk.iter().sum::<usize>();
+    }
+    out
+}
+
 /// Max/min block size after applying `counts` — the balance metric.
 pub fn imbalance_after(sizes: &[u64], counts: &[usize]) -> f64 {
     let after: Vec<u64> = sizes.iter().zip(counts).map(|(&s, &c)| s + c as u64).collect();
@@ -160,6 +182,31 @@ mod tests {
         assert_eq!(a.iter().sum::<usize>(), 9);
         assert_eq!(b.iter().sum::<usize>(), 9);
         assert_ne!(a, b, "different sequence numbers should rotate the split");
+    }
+
+    #[test]
+    fn split_for_shards_slices_are_contiguous_and_conserving() {
+        let sizes = vec![3u64, 9, 0, 4, 4, 4, 100, 2];
+        for policy in [Policy::Even, Policy::LeastLoaded, Policy::Hash] {
+            let counts = route(policy, &sizes, 1234, 5);
+            let shards = split_for_shards(&counts, 2);
+            assert_eq!(shards.len(), 4);
+            let mut expect_offset = 0usize;
+            let mut total = 0usize;
+            for (k, (offset, sub)) in shards.into_iter().enumerate() {
+                assert_eq!(offset, expect_offset, "{policy:?} shard {k}");
+                assert_eq!(sub, &counts[k * 2..(k + 1) * 2]);
+                expect_offset += sub.iter().sum::<usize>();
+                total += sub.iter().sum::<usize>();
+            }
+            assert_eq!(total, 1234, "{policy:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn split_for_shards_rejects_ragged() {
+        split_for_shards(&[1, 2, 3], 2);
     }
 
     #[test]

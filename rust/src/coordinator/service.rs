@@ -1,8 +1,17 @@
-//! The coordinator service: a worker thread owning the GGArray, fed by an
-//! mpsc request channel. Insert requests are routed (per [`router`]) and
-//! batched (per [`batcher`]); Work/Flatten run through the PJRT runtime
-//! when AOT artifacts are available and fall back to host compute when
-//! not (the numerics are identical — the integration tests assert it).
+//! The coordinator service: a worker thread owning N independent GGArray
+//! [`Shard`]s plus the sealed-epoch store, fed by an mpsc request
+//! channel. Insert requests are routed globally (per [`router`]) across
+//! the shards' combined block space, batched (per [`batcher`]), and
+//! sliced per shard; Work/Flatten run through the PJRT runtime when AOT
+//! artifacts are available and fall back to host compute when not (the
+//! numerics are identical — the integration tests assert it).
+//!
+//! The two-phase lifecycle (paper §VI.D) is first-class: `Request::Seal`
+//! drains in-flight batches, flattens every shard, concatenates the
+//! results into one contiguous [`ShardedFlattened`] view held by the
+//! [`EpochManager`], and opens a fresh insert epoch behind it. Reads and
+//! work over the sealed prefix run at static-array (coalesced) cost; the
+//! live epoch keeps paying GGArray costs until it, too, is sealed.
 //!
 //! No async runtime is available offline; the event loop is a plain
 //! blocking channel with deadline-aware `recv_timeout`, which for an
@@ -13,21 +22,25 @@ use std::sync::mpsc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::ggarray::array::{GgArray, GgConfig};
-use crate::ggarray::flatten;
+use crate::ggarray::flatten::{self, ShardedFlattened};
 use crate::insertion::InsertionKind;
 use crate::runtime::Executor;
 use crate::sim::spec::DeviceSpec;
+use crate::workload::{synth_f32, Step, WorkloadSpec};
 
 use super::batcher::{BatchConfig, Batcher};
 use super::metrics::Metrics;
 use super::request::{checksum, Request, Response};
 use super::router::{self, Policy};
+use super::shard::{EpochManager, Shard, ShardConfig};
 
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     pub device: DeviceSpec,
+    /// Total LFVectors (thread blocks) across ALL shards; must divide
+    /// evenly by `shards`. Keeping the total fixed while varying the
+    /// shard count leaves the global data layout unchanged.
     pub blocks: usize,
     pub first_bucket_size: usize,
     pub insertion: InsertionKind,
@@ -37,9 +50,13 @@ pub struct CoordinatorConfig {
     pub use_artifacts: bool,
     /// +1 iterations per work call (paper: 30).
     pub work_iters: u32,
-    /// Simulated VRAM budget in bytes (None = the device's full memory).
+    /// Simulated VRAM budget in bytes (None = the device's full memory),
+    /// carved evenly into per-shard heap budgets.
     /// Used by failure-injection tests and multi-tenant scenarios.
     pub heap_capacity: Option<u64>,
+    /// Independent GGArray shards, each owning `blocks / shards`
+    /// consecutive blocks of the global block space.
+    pub shards: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -54,6 +71,7 @@ impl Default for CoordinatorConfig {
             use_artifacts: true,
             work_iters: 30,
             heap_capacity: None,
+            shards: 1,
         }
     }
 }
@@ -71,6 +89,14 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start the worker thread.
     pub fn start(cfg: CoordinatorConfig) -> Coordinator {
+        assert!(cfg.shards > 0, "coordinator needs at least one shard");
+        assert_eq!(
+            cfg.blocks % cfg.shards,
+            0,
+            "blocks ({}) must divide evenly into shards ({})",
+            cfg.blocks,
+            cfg.shards
+        );
         let (tx, rx) = mpsc::channel::<Envelope>();
         let worker = std::thread::Builder::new()
             .name("ggarray-coordinator".into())
@@ -79,19 +105,15 @@ impl Coordinator {
         Coordinator { tx, worker: Some(worker) }
     }
 
-    /// Synchronous call.
+    /// Synchronous call (delegates to a [`Client`] over the same
+    /// channel).
     pub fn call(&self, req: Request) -> Response {
-        let (rtx, rrx) = mpsc::channel();
-        if self.tx.send(Envelope::Call(req, rtx)).is_err() {
-            return Response::Error("coordinator stopped".into());
-        }
-        rrx.recv().unwrap_or_else(|_| Response::Error("coordinator dropped reply".into()))
+        self.client().call(req)
     }
 
     /// Fire-and-forget insert (no response wait) — throughput path.
     pub fn insert_nowait(&self, values: Vec<f32>) {
-        let (rtx, _rrx) = mpsc::channel();
-        let _ = self.tx.send(Envelope::Call(Request::Insert { values }, rtx));
+        self.client().insert_nowait(values);
     }
 
     /// A cloneable client handle for concurrent callers (each thread gets
@@ -135,11 +157,19 @@ impl Client {
         }
         rrx.recv().unwrap_or_else(|_| Response::Error("coordinator dropped reply".into()))
     }
+
+    /// Fire-and-forget insert (no response wait) — throughput path.
+    pub fn insert_nowait(&self, values: Vec<f32>) {
+        let (rtx, _rrx) = mpsc::channel();
+        let _ = self.tx.send(Envelope::Call(Request::Insert { values }, rtx));
+    }
 }
 
 struct Worker {
     cfg: CoordinatorConfig,
-    gg: GgArray<f32>,
+    shards: Vec<Shard>,
+    blocks_per_shard: usize,
+    epochs: EpochManager,
     batcher: Batcher,
     metrics: Metrics,
     executor: Option<Executor>,
@@ -148,12 +178,7 @@ struct Worker {
 
 impl Worker {
     fn new(cfg: CoordinatorConfig) -> Worker {
-        let gg_cfg = GgConfig {
-            num_blocks: cfg.blocks,
-            threads_per_block: 1024,
-            first_bucket_size: cfg.first_bucket_size,
-            insertion: cfg.insertion,
-        };
+        let blocks_per_shard = cfg.blocks / cfg.shards;
         let executor = if cfg.use_artifacts {
             match Executor::from_default_dir() {
                 Ok(e) => Some(e),
@@ -165,16 +190,26 @@ impl Worker {
         } else {
             None
         };
-        let gg = match cfg.heap_capacity {
-            Some(cap) => GgArray::with_heap(
-                gg_cfg,
-                cfg.device.clone(),
-                crate::sim::memory::VramHeap::with_capacity(cfg.device.clone(), cap),
-            ),
-            None => GgArray::new(gg_cfg, cfg.device.clone()),
-        };
+        // Each shard's heap budget is carved from the shared device (or
+        // from the configured budget).
+        let total_heap = cfg.heap_capacity.unwrap_or_else(|| cfg.device.memory_bytes());
+        let per_shard_heap = (total_heap / cfg.shards as u64).max(1);
+        let shards: Vec<Shard> = (0..cfg.shards)
+            .map(|id| {
+                Shard::new(ShardConfig {
+                    id,
+                    blocks: blocks_per_shard,
+                    first_bucket_size: cfg.first_bucket_size,
+                    insertion: cfg.insertion,
+                    device: cfg.device.clone(),
+                    heap_bytes: per_shard_heap,
+                })
+            })
+            .collect();
         Worker {
-            gg,
+            shards,
+            blocks_per_shard,
+            epochs: EpochManager::new(cfg.device.clone()),
             batcher: Batcher::new(cfg.batch.clone()),
             metrics: Metrics::new(),
             executor,
@@ -211,6 +246,50 @@ impl Worker {
         }
     }
 
+    // ---------- aggregate views ----------
+
+    /// Elements in the live (unsealed) epoch across all shards.
+    fn live_len(&self) -> u64 {
+        self.shards.iter().map(|s| s.len() as u64).sum()
+    }
+
+    /// Total elements: sealed prefix + live epoch.
+    fn total_len(&self) -> u64 {
+        self.epochs.sealed_len() + self.live_len()
+    }
+
+    /// Total simulated time across shard clocks and the flat-path clock.
+    fn sim_total_us(&self) -> f64 {
+        self.shards.iter().map(|s| s.sim_now_us()).sum::<f64>() + self.epochs.now_us()
+    }
+
+    /// Per-block sizes over the global (all-shard) block space.
+    fn global_sizes(&self) -> Vec<u64> {
+        let mut sizes = Vec::with_capacity(self.cfg.blocks);
+        for shard in &self.shards {
+            sizes.extend(shard.block_sizes());
+        }
+        sizes
+    }
+
+    /// Read a global index: the sealed prefix first, then the live epoch
+    /// in shard order.
+    fn read_global(&self, i: u64) -> Option<f32> {
+        let sealed = self.epochs.sealed_len();
+        if i < sealed {
+            return self.epochs.get(i);
+        }
+        let mut j = i - sealed;
+        for shard in &self.shards {
+            let n = shard.len() as u64;
+            if j < n {
+                return shard.get(j);
+            }
+            j -= n;
+        }
+        None
+    }
+
     /// Flush pending inserts before any op that observes array state.
     fn barrier(&mut self) {
         if let Some(batch) = self.batcher.flush() {
@@ -219,7 +298,10 @@ impl Worker {
     }
 
     fn apply_batch(&mut self, values: Vec<f32>, requests: usize) {
-        let sizes = self.gg.block_sizes();
+        if values.is_empty() {
+            return;
+        }
+        let sizes = self.global_sizes();
         let counts = router::route(self.cfg.routing, &sizes, values.len(), self.batch_seq);
         self.batch_seq += 1;
         // Cross-check the per-block offsets against the AOT scan kernel
@@ -236,43 +318,26 @@ impl Worker {
                 self.metrics.pjrt_executions += 1;
             }
         }
-        let sim0 = self.gg.clock().now_us();
-        let mut off = 0usize;
-        for (b, &c) in counts.iter().enumerate() {
-            if c == 0 {
-                continue;
-            }
-            if let Err(e) = self.gg.push_bulk_to_block(b, &values[off..off + c]) {
-                eprintln!("[coordinator] simulated OOM during insert: {e}");
-                self.metrics.errors += 1;
-                // Keep the index consistent with whatever landed before
-                // the OOM (no rollback — matches device semantics where
-                // earlier blocks' writes are already visible).
-                self.gg.rebuild_index_charged();
-                self.metrics.elements_inserted += off as u64;
-                return;
-            }
-            off += c;
-        }
-        // Charge the modeled insertion kernel + index rebuild.
-        let shape = crate::insertion::InsertShape {
-            threads: values.len().max(self.gg.len()) as u64,
-            inserts: values.len() as u64,
-            elem_bytes: 4,
-            blocks: self.cfg.blocks as u64,
-            threads_per_block: 1024,
-            counters: self.cfg.blocks as u64,
-            write_eff: self.cfg.device.cost.ggarray_insert_eff,
-        };
-        let profile = crate::insertion::profile(&self.cfg.device, self.cfg.insertion, &shape);
+        // Slice the global decision per shard: shard k owns blocks
+        // [k·bps, (k+1)·bps) and its values are contiguous in the batch.
+        let mut applied = 0u64;
+        for (shard, (offset, sub)) in
+            self.shards.iter_mut().zip(router::split_for_shards(&counts, self.blocks_per_shard))
         {
-            let (_, _, clock, spec, _, _) = self.gg.parts_mut();
-            crate::sim::kernel::launch(spec, clock, &profile);
+            let take: usize = sub.iter().sum();
+            let out = shard.apply_counts(sub, &values[offset..offset + take]);
+            self.metrics.sim_insert_us += out.sim_us;
+            applied += out.applied as u64;
+            if let Some(e) = out.error {
+                eprintln!("[coordinator] simulated OOM during insert on shard {}: {e}", shard.id());
+                // No rollback — elements placed before the OOM stay
+                // visible, matching device semantics; the shard left its
+                // index consistent.
+                self.metrics.errors += 1;
+            }
         }
-        self.gg.rebuild_index_charged();
-        self.metrics.sim_insert_us += self.gg.clock().now_us() - sim0;
         self.metrics.batches += 1;
-        self.metrics.elements_inserted += values.len() as u64;
+        self.metrics.elements_inserted += applied;
         let _ = requests;
     }
 
@@ -284,56 +349,136 @@ impl Worker {
                 if let Some(batch) = self.batcher.push(&values) {
                     self.apply_batch(batch.values, batch.requests);
                 }
-                Response::Inserted { count, sim_us: 0.0, len: self.gg.len() as u64 + self.batcher.pending_len() as u64 }
+                Response::Inserted {
+                    count,
+                    sim_us: 0.0,
+                    len: self.total_len() + self.batcher.pending_len() as u64,
+                }
             }
             Request::Work { calls } => {
                 self.barrier();
-                let sim0 = self.gg.clock().now_us();
+                let sim0 = self.sim_total_us();
                 let mut pjrt = 0u64;
                 for _ in 0..calls {
+                    // Real numeric update on the live epoch (PJRT when
+                    // possible), then the modeled rw_b cost per shard.
                     pjrt += self.one_work_pass();
-                    let _ = self.gg.read_write_block(self.cfg.work_iters as f64, |_| {});
+                    for shard in &mut self.shards {
+                        shard.charge_rw_block(self.cfg.work_iters as f64);
+                    }
+                    // Sealed prefix: real update + static-array cost —
+                    // the fast path the two-phase pattern buys.
+                    self.epochs.work(self.cfg.work_iters);
                 }
                 self.metrics.work_calls += calls as u64;
                 self.metrics.pjrt_executions += pjrt;
-                let sim_us = self.gg.clock().now_us() - sim0;
+                let sim_us = self.sim_total_us() - sim0;
                 self.metrics.sim_work_us += sim_us;
                 Response::Worked { calls, sim_us, pjrt_executions: pjrt }
             }
             Request::Flatten => {
                 self.barrier();
-                let sim0 = self.gg.clock().now_us();
-                match flatten::flatten(&mut self.gg) {
-                    Ok(flat) => {
-                        self.metrics.flattens += 1;
-                        let sim_us = self.gg.clock().now_us() - sim0;
-                        self.metrics.sim_flatten_us += sim_us;
-                        Response::Flattened { len: flat.data.len() as u64, sim_us, checksum: checksum(&flat.data) }
+                let sim0 = self.sim_total_us();
+                // Sealed prefix is already flat; append a non-destructive
+                // flatten of the live epoch, shard by shard.
+                let mut data: Vec<f32> = Vec::with_capacity(self.total_len() as usize);
+                for segment in self.epochs.segments() {
+                    data.extend_from_slice(segment);
+                }
+                let mut failed = None;
+                for shard in &mut self.shards {
+                    match shard.flatten_temp() {
+                        Ok(f) => data.extend_from_slice(&f.data),
+                        Err(e) => {
+                            failed = Some(e);
+                            break;
+                        }
                     }
-                    Err(e) => {
-                        self.metrics.errors += 1;
-                        Response::Error(format!("flatten OOM: {e}"))
+                }
+                if let Some(e) = failed {
+                    self.metrics.errors += 1;
+                    return Response::Error(format!("flatten OOM: {e}"));
+                }
+                self.metrics.flattens += 1;
+                let sim_us = self.sim_total_us() - sim0;
+                self.metrics.sim_flatten_us += sim_us;
+                Response::Flattened { len: data.len() as u64, sim_us, checksum: checksum(&data) }
+            }
+            Request::Seal => {
+                self.barrier();
+                let sim0 = self.sim_total_us();
+                // Two-phase commit across shards: flatten everything
+                // first, commit VRAM residency only if every shard
+                // succeeded, otherwise release the fresh destinations
+                // and reopen with contents untouched.
+                let mut parts = Vec::with_capacity(self.shards.len());
+                let mut failed = None;
+                for shard in &mut self.shards {
+                    match shard.seal_flatten() {
+                        Ok(f) => parts.push(f),
+                        Err(e) => {
+                            failed = Some(e);
+                            break;
+                        }
                     }
+                }
+                if let Some(e) = failed {
+                    for (shard, mut part) in self.shards.iter_mut().zip(parts) {
+                        shard.abort_seal(part.alloc.take());
+                    }
+                    // Shards past the failure point never flattened —
+                    // just reopen them (zip stopped at `parts`' length,
+                    // so handle the tail, failure shard included).
+                    for shard in &mut self.shards {
+                        shard.reopen();
+                    }
+                    self.metrics.errors += 1;
+                    return Response::Error(format!("seal OOM: {e}"));
+                }
+                for (shard, part) in self.shards.iter_mut().zip(&mut parts) {
+                    shard.commit_seal(part.alloc.take());
+                }
+                let flat: ShardedFlattened<f32> = flatten::concat(parts);
+                let epoch_len = flat.len() as u64;
+                let sum = checksum(&flat.data);
+                let epoch = self.epochs.absorb(flat);
+                self.metrics.seals += 1;
+                let sim_us = self.sim_total_us() - sim0;
+                self.metrics.sim_flatten_us += sim_us;
+                Response::Sealed {
+                    epoch,
+                    epoch_len,
+                    sealed_len: self.epochs.sealed_len(),
+                    sim_us,
+                    checksum: sum,
                 }
             }
             Request::Query { index } => {
                 self.barrier();
                 self.metrics.queries += 1;
-                Response::Value(self.gg.get(index))
+                Response::Value(self.read_global(index))
             }
             Request::Stats => {
-                let snap = self.metrics.snapshot(
-                    self.gg.len() as u64,
-                    self.gg.capacity() as u64,
-                    self.gg.allocated_bytes(),
+                let len = self.total_len();
+                let capacity = self.shards.iter().map(|s| s.capacity() as u64).sum::<u64>()
+                    + self.epochs.sealed_len();
+                let allocated = self.shards.iter().map(|s| s.allocated_bytes()).sum::<u64>()
+                    + self.epochs.sealed_len() * 4;
+                let snap = self.metrics.snapshot(len, capacity, allocated).with_sharding(
+                    self.shards.len(),
+                    self.epochs.seq(),
+                    self.epochs.sealed_len(),
+                    self.shards.iter().map(|s| s.len() as u64).collect(),
                 );
                 Response::Stats(snap)
             }
             Request::Clear => {
                 // Discard pending inserts too: Clear means "empty now".
                 let _ = self.batcher.flush();
-                self.gg.clear();
-                self.gg.rebuild_index_charged();
+                for shard in &mut self.shards {
+                    shard.reset();
+                }
+                self.epochs.reset();
                 Response::Cleared
             }
             Request::Shutdown => {
@@ -343,56 +488,84 @@ impl Worker {
         }
     }
 
-    /// Apply the real +1×`work_iters` numeric update, through the AOT
-    /// PJRT kernel when possible. Returns PJRT executions done.
+    /// Apply the real +1×`work_iters` numeric update to the live epoch,
+    /// through the AOT PJRT kernels when possible. Returns PJRT
+    /// executions done.
     fn one_work_pass(&mut self) -> u64 {
-        let n = self.gg.len();
-        if n == 0 {
-            return 0;
-        }
-        if let Some(exec) = &self.executor {
-            // Flatten (host copy), run through the artifact family in
-            // chunks, write back.
-            let data = self.gg.to_vec();
-            if let Ok(name) = exec.pick_chunking("work_f32_", data.len()) {
-                let spec_cap = exec.manifest().get(&name).map(|s| s.inputs[0].elements()).unwrap_or(0);
-                if spec_cap > 0 {
-                    let mut out = Vec::with_capacity(data.len());
-                    let mut execs = 0u64;
-                    let mut ok = true;
-                    for chunk in data.chunks(spec_cap) {
-                        match exec.run_f32(&name, &[chunk], chunk.len()) {
-                            Ok(mut r) => {
-                                out.extend(r.swap_remove(0));
-                                execs += 1;
-                            }
-                            Err(e) => {
-                                eprintln!("[coordinator] PJRT work failed, host fallback: {e}");
-                                ok = false;
-                                break;
-                            }
-                        }
-                    }
-                    if ok {
-                        self.gg.overwrite_from(&out);
-                        return execs;
-                    }
-                }
-            }
-        }
-        // Host fallback: identical numerics (30 sequential f32 adds, like
-        // the kernel), applied in place per block.
+        let exec = self.executor.as_ref();
         let iters = self.cfg.work_iters;
-        let (vectors, _, _, _, _, _) = self.gg.parts_mut();
-        for v in vectors.iter_mut() {
-            v.for_each_mut(|x| {
-                for _ in 0..iters {
-                    *x += 1.0;
-                }
-            });
+        let mut pjrt = 0u64;
+        for shard in &mut self.shards {
+            pjrt += shard.work_pass(exec, iters);
         }
-        0
+        pjrt
     }
+}
+
+// ---------------------------------------------------------------------
+// Workload driver
+// ---------------------------------------------------------------------
+
+/// Summary of driving a [`WorkloadSpec`] through a coordinator.
+#[derive(Debug, Clone, Default)]
+pub struct WorkloadRun {
+    /// Total elements submitted.
+    pub inserted: u64,
+    /// Checksum of each sealed epoch, in seal order.
+    pub seal_checksums: Vec<u64>,
+    /// Checksum of each full-flatten snapshot, in order.
+    pub flatten_checksums: Vec<u64>,
+    /// Simulated µs across all Work steps.
+    pub work_sim_us: f64,
+    /// Simulated µs across all Seal steps.
+    pub seal_sim_us: f64,
+}
+
+/// Drive a workload trace through the service. `Insert` steps synthesise
+/// deterministic f32 values in exactly `chunk`-sized requests, so batch
+/// boundaries — and therefore global routing decisions — are reproducible
+/// across runs and shard counts (pair with `BatchConfig::max_values ==
+/// chunk` for fully deterministic flushes). Panics on service errors:
+/// this is a test/experiment driver, not production plumbing.
+pub fn drive_workload(c: &Coordinator, w: &WorkloadSpec, chunk: usize) -> WorkloadRun {
+    assert!(chunk > 0);
+    let mut run = WorkloadRun::default();
+    let mut counter = 0u64;
+    for step in &w.steps {
+        match step {
+            Step::Insert(n) => {
+                let mut sent = 0u64;
+                while sent < *n {
+                    let take = chunk.min((*n - sent) as usize);
+                    let values: Vec<f32> =
+                        (0..take).map(|i| synth_f32(counter + i as u64)).collect();
+                    match c.call(Request::Insert { values }) {
+                        Response::Inserted { .. } => {}
+                        other => panic!("insert failed: {other:?}"),
+                    }
+                    counter += take as u64;
+                    sent += take as u64;
+                }
+                run.inserted = counter;
+            }
+            Step::Work(calls) => match c.call(Request::Work { calls: *calls }) {
+                Response::Worked { sim_us, .. } => run.work_sim_us += sim_us,
+                other => panic!("work failed: {other:?}"),
+            },
+            Step::Flatten => match c.call(Request::Flatten) {
+                Response::Flattened { checksum, .. } => run.flatten_checksums.push(checksum),
+                other => panic!("flatten failed: {other:?}"),
+            },
+            Step::Seal => match c.call(Request::Seal) {
+                Response::Sealed { checksum, sim_us, .. } => {
+                    run.seal_checksums.push(checksum);
+                    run.seal_sim_us += sim_us;
+                }
+                other => panic!("seal failed: {other:?}"),
+            },
+        }
+    }
+    run
 }
 
 #[cfg(test)]
@@ -407,6 +580,10 @@ mod tests {
             batch: BatchConfig { max_values: 64, max_delay: Duration::from_millis(1) },
             ..CoordinatorConfig::default()
         }
+    }
+
+    fn sharded_cfg(blocks: usize, shards: usize) -> CoordinatorConfig {
+        CoordinatorConfig { shards, ..test_cfg(blocks) }
     }
 
     #[test]
@@ -491,5 +668,80 @@ mod tests {
         let c = Coordinator::start(test_cfg(2));
         c.call(Request::Insert { values: vec![1.0] });
         drop(c); // Drop impl joins the worker
+    }
+
+    #[test]
+    fn seal_moves_data_to_flat_path_and_opens_fresh_epoch() {
+        let c = Coordinator::start(sharded_cfg(8, 2));
+        c.call(Request::Insert { values: (0..300).map(|i| i as f32).collect() });
+        let (epoch, epoch_len, sealed_len) = match c.call(Request::Seal) {
+            Response::Sealed { epoch, epoch_len, sealed_len, .. } => (epoch, epoch_len, sealed_len),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(epoch, 1);
+        assert_eq!(epoch_len, 300);
+        assert_eq!(sealed_len, 300);
+        // Sealed data reads back; epoch 1 inserts land after it.
+        assert!(c.call(Request::Query { index: 0 }).expect_value().is_some());
+        c.call(Request::Insert { values: vec![7.0; 10] });
+        // Query barriers the pending batch before Stats observes state.
+        assert_eq!(c.call(Request::Query { index: 300 }).expect_value(), Some(7.0));
+        let snap = match c.call(Request::Stats) {
+            Response::Stats(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(snap.len, 310);
+        assert_eq!(snap.sealed_len, 300);
+        assert_eq!(snap.epoch, 1);
+        assert_eq!(snap.seals, 1);
+        assert_eq!(snap.shards, 2);
+        assert_eq!(snap.per_shard_len.iter().sum::<u64>(), 10);
+        assert_eq!(c.call(Request::Query { index: 310 }).expect_value(), None);
+        c.shutdown();
+    }
+
+    #[test]
+    fn work_updates_sealed_and_live_epochs_alike() {
+        let cfg = sharded_cfg(4, 2);
+        let iters = cfg.work_iters as f32;
+        let c = Coordinator::start(cfg);
+        c.call(Request::Insert { values: vec![1.0, 2.0, 3.0, 4.0] });
+        c.call(Request::Seal);
+        c.call(Request::Insert { values: vec![100.0, 200.0] });
+        c.call(Request::Work { calls: 1 });
+        // Sealed element and live element both advanced by one work call.
+        assert_eq!(c.call(Request::Query { index: 0 }).expect_value(), Some(1.0 + iters));
+        assert_eq!(c.call(Request::Query { index: 4 }).expect_value(), Some(100.0 + iters));
+        c.shutdown();
+    }
+
+    #[test]
+    fn flatten_spans_sealed_prefix_plus_live_epoch() {
+        let c = Coordinator::start(sharded_cfg(4, 1));
+        c.call(Request::Insert { values: (0..64).map(|i| i as f32).collect() });
+        c.call(Request::Seal);
+        c.call(Request::Insert { values: (64..80).map(|i| i as f32).collect() });
+        match c.call(Request::Flatten) {
+            Response::Flattened { len, .. } => assert_eq!(len, 80),
+            other => panic!("{other:?}"),
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn clear_drops_sealed_epochs_too() {
+        let c = Coordinator::start(sharded_cfg(4, 2));
+        c.call(Request::Insert { values: vec![1.0; 50] });
+        c.call(Request::Seal);
+        c.call(Request::Insert { values: vec![2.0; 10] });
+        c.call(Request::Clear);
+        let snap = match c.call(Request::Stats) {
+            Response::Stats(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(snap.len, 0);
+        assert_eq!(snap.sealed_len, 0);
+        assert_eq!(c.call(Request::Query { index: 0 }).expect_value(), None);
+        c.shutdown();
     }
 }

@@ -1,0 +1,637 @@
+//! Shards and epochs: the scale-out layer of the coordinator.
+//!
+//! A [`Shard`] is one independent `GgArray<f32>` running over its own
+//! [`VramHeap`] budget carved from a shared [`DeviceSpec`] — the
+//! DynaSOAr-style hierarchy: global routing picks a shard, the shard's
+//! per-block LFVectors pick a bucket. Shards own disjoint *consecutive*
+//! runs of the global block space, so a batch routed globally and sliced
+//! per shard (see [`crate::coordinator::router::split_for_shards`])
+//! produces exactly the layout a single GgArray with all the blocks
+//! would: the sealed flatten concatenation is byte-identical for any
+//! shard count.
+//!
+//! The [`EpochManager`] implements the paper's §VI.D two-phase lifecycle
+//! as a first-class API: an epoch is [`Epoch::Inserting`] while data
+//! grows inside the shard GgArrays, and moves to [`Epoch::Sealed`] when
+//! the coordinator drains in-flight batches, flattens every shard, and
+//! concatenates the results into one contiguous [`ShardedFlattened`]
+//! view. Reads and work over sealed data run at static-array (coalesced)
+//! cost — the fast regular-access phase — while a fresh inserting epoch
+//! opens behind the seal.
+
+use crate::ggarray::array::{GgArray, GgConfig};
+use crate::ggarray::flatten::{self, Flattened, ShardedFlattened};
+use crate::insertion::{self, InsertionKind, InsertShape};
+use crate::runtime::Executor;
+use crate::sim::kernel::{self, KernelProfile};
+use crate::sim::memory::{AllocId, OomError, VramHeap};
+use crate::sim::spec::DeviceSpec;
+
+/// Construction parameters for one shard.
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    pub id: usize,
+    /// LFVectors (thread blocks) owned by this shard.
+    pub blocks: usize,
+    pub first_bucket_size: usize,
+    pub insertion: InsertionKind,
+    pub device: DeviceSpec,
+    /// Simulated VRAM budget for this shard's heap.
+    pub heap_bytes: u64,
+}
+
+/// Outcome of applying one routed sub-batch to a shard.
+#[derive(Debug)]
+pub struct ShardInsertOutcome {
+    /// Elements actually placed (= the sub-batch size unless OOM).
+    pub applied: usize,
+    /// Simulated GPU time charged to this shard for the sub-batch (µs).
+    pub sim_us: f64,
+    /// The OOM, if the shard's budget ran out mid-batch.
+    pub error: Option<OomError>,
+}
+
+/// One independent GGArray shard with its own VRAM budget.
+#[derive(Debug)]
+pub struct Shard {
+    id: usize,
+    gg: GgArray<f32>,
+    insertion: InsertionKind,
+    /// Simulated VRAM held by the flatten destinations of every sealed
+    /// epoch: sealed data stays resident (it keeps serving reads and
+    /// work) until `reset`, so repeated seals under a tight budget OOM
+    /// exactly as they would on a real device.
+    sealed_allocs: Vec<AllocId>,
+}
+
+impl Shard {
+    pub fn new(cfg: ShardConfig) -> Shard {
+        let gg_cfg = GgConfig {
+            num_blocks: cfg.blocks,
+            threads_per_block: 1024,
+            first_bucket_size: cfg.first_bucket_size,
+            insertion: cfg.insertion,
+        };
+        let heap = VramHeap::with_capacity(cfg.device.clone(), cfg.heap_bytes);
+        Shard {
+            id: cfg.id,
+            gg: GgArray::with_heap(gg_cfg, cfg.device, heap),
+            insertion: cfg.insertion,
+            sealed_allocs: Vec::new(),
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn len(&self) -> usize {
+        self.gg.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gg.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.gg.capacity()
+    }
+
+    pub fn allocated_bytes(&self) -> u64 {
+        self.gg.allocated_bytes()
+    }
+
+    pub fn heap_used(&self) -> u64 {
+        self.gg.heap().used()
+    }
+
+    pub fn block_sizes(&self) -> Vec<u64> {
+        self.gg.block_sizes()
+    }
+
+    pub fn sim_now_us(&self) -> f64 {
+        self.gg.clock().now_us()
+    }
+
+    pub fn gg(&self) -> &GgArray<f32> {
+        &self.gg
+    }
+
+    /// Read a shard-local global index (the shard's own block-major
+    /// order).
+    pub fn get(&self, i: u64) -> Option<f32> {
+        self.gg.get(i)
+    }
+
+    /// Apply a routed sub-batch: `counts[b]` values to block `b`, in
+    /// order, then charge the shard-local insertion kernel and index
+    /// rebuild. On OOM the elements placed before the failure stay
+    /// visible (device semantics) and the index is left consistent.
+    pub fn apply_counts(&mut self, counts: &[usize], values: &[f32]) -> ShardInsertOutcome {
+        debug_assert_eq!(counts.len(), self.gg.num_blocks());
+        debug_assert_eq!(counts.iter().sum::<usize>(), values.len());
+        let sim0 = self.gg.clock().now_us();
+        let mut off = 0usize;
+        for (b, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if let Err(e) = self.gg.push_bulk_to_block(b, &values[off..off + c]) {
+                self.gg.rebuild_index_charged();
+                return ShardInsertOutcome {
+                    applied: off,
+                    sim_us: self.gg.clock().now_us() - sim0,
+                    error: Some(e),
+                };
+            }
+            off += c;
+        }
+        // Modeled insertion kernel over this shard's grid.
+        let blocks = self.gg.num_blocks() as u64;
+        let shape = InsertShape {
+            threads: values.len().max(self.gg.len()) as u64,
+            inserts: values.len() as u64,
+            elem_bytes: 4,
+            blocks,
+            threads_per_block: 1024,
+            counters: blocks,
+            write_eff: self.gg.spec().cost.ggarray_insert_eff,
+        };
+        let profile = insertion::profile(self.gg.spec(), self.insertion, &shape);
+        {
+            let (_, _, clock, spec, _, _) = self.gg.parts_mut();
+            kernel::launch(spec, clock, &profile);
+        }
+        self.gg.rebuild_index_charged();
+        ShardInsertOutcome { applied: off, sim_us: self.gg.clock().now_us() - sim0, error: None }
+    }
+
+    /// Seal this shard's epoch and flatten its contents. The returned
+    /// [`Flattened`] still carries its destination allocation: the
+    /// caller decides the transaction's fate — [`Shard::commit_seal`]
+    /// once every shard of the store succeeded, or [`Shard::abort_seal`]
+    /// if any failed — so a cross-shard seal never half-commits VRAM.
+    /// On error this shard is reopened untouched.
+    pub fn seal_flatten(&mut self) -> Result<Flattened<f32>, OomError> {
+        self.gg.seal();
+        match flatten::flatten(&mut self.gg) {
+            Ok(f) => Ok(f),
+            Err(e) => {
+                self.gg.reopen();
+                Err(e)
+            }
+        }
+    }
+
+    /// Commit a successful seal: retain the epoch's flatten destination
+    /// (sealed data stays VRAM-resident until `reset`), drop the
+    /// growable storage, and open the next inserting epoch.
+    pub fn commit_seal(&mut self, alloc: Option<AllocId>) {
+        self.sealed_allocs.extend(alloc);
+        self.reopen_clear();
+    }
+
+    /// Abort a seal whose sibling shard failed: release this shard's
+    /// fresh flatten destination and reopen with contents untouched
+    /// (the per-shard flatten is non-destructive).
+    pub fn abort_seal(&mut self, alloc: Option<AllocId>) {
+        if let Some(a) = alloc {
+            let (_, heap, clock, _, _, _) = self.gg.parts_mut();
+            heap.free(a, clock);
+        }
+        self.gg.reopen();
+    }
+
+    /// Non-destructive flatten for a read-only snapshot: the temporary
+    /// destination is released immediately (the data lives on the host
+    /// side of the response).
+    pub fn flatten_temp(&mut self) -> Result<Flattened<f32>, OomError> {
+        let mut f = flatten::flatten(&mut self.gg)?;
+        if let Some(dst) = f.alloc.take() {
+            let (_, heap, clock, _, _, _) = self.gg.parts_mut();
+            heap.free(dst, clock);
+        }
+        Ok(f)
+    }
+
+    /// Reopen without clearing — the abort path when a multi-shard seal
+    /// fails partway: contents stay in place and inserts resume.
+    pub fn reopen(&mut self) {
+        self.gg.reopen();
+    }
+
+    /// After a successful seal: drop the growable storage and open the
+    /// next inserting epoch (the sealed data lives on in the epoch
+    /// manager + the retained flat allocation).
+    pub fn reopen_clear(&mut self) {
+        self.gg.clear();
+        self.gg.rebuild_index_charged();
+        self.gg.reopen();
+    }
+
+    /// Full reset (service `Clear`): release everything including every
+    /// sealed epoch's destination.
+    pub fn reset(&mut self) {
+        let allocs = std::mem::take(&mut self.sealed_allocs);
+        for a in allocs {
+            let (_, heap, clock, _, _, _) = self.gg.parts_mut();
+            heap.free(a, clock);
+        }
+        self.gg.clear();
+        self.gg.rebuild_index_charged();
+        self.gg.reopen();
+    }
+
+    /// Charge one modeled `rw_b` pass over this shard without touching
+    /// data (the real numeric update goes through [`Shard::work_pass`]).
+    pub fn charge_rw_block(&mut self, flops_per_elem: f64) -> f64 {
+        self.gg.read_write_block(flops_per_elem, |_| {}).us
+    }
+
+    /// Apply the real +1×`iters` numeric update to this shard's data,
+    /// through the AOT PJRT kernel when available. Returns PJRT
+    /// executions performed (0 on the host fallback path).
+    pub fn work_pass(&mut self, exec: Option<&Executor>, iters: u32) -> u64 {
+        let n = self.gg.len();
+        if n == 0 {
+            return 0;
+        }
+        if let Some(exec) = exec {
+            let data = self.gg.to_vec();
+            if let Ok(name) = exec.pick_chunking("work_f32_", data.len()) {
+                let spec_cap = exec.manifest().get(&name).map(|s| s.inputs[0].elements()).unwrap_or(0);
+                if spec_cap > 0 {
+                    let mut out = Vec::with_capacity(data.len());
+                    let mut execs = 0u64;
+                    let mut ok = true;
+                    for chunk in data.chunks(spec_cap) {
+                        match exec.run_f32(&name, &[chunk], chunk.len()) {
+                            Ok(mut r) => {
+                                out.extend(r.swap_remove(0));
+                                execs += 1;
+                            }
+                            Err(e) => {
+                                eprintln!("[coordinator] PJRT work failed on shard {}, host fallback: {e}", self.id);
+                                ok = false;
+                                break;
+                            }
+                        }
+                    }
+                    if ok {
+                        self.gg.overwrite_from(&out);
+                        return execs;
+                    }
+                }
+            }
+        }
+        // Host fallback: identical numerics (iters sequential f32 adds).
+        let (vectors, _, _, _, _, _) = self.gg.parts_mut();
+        for v in vectors.iter_mut() {
+            v.for_each_mut(|x| {
+                for _ in 0..iters {
+                    *x += 1.0;
+                }
+            });
+        }
+        0
+    }
+}
+
+// ---------------------------------------------------------------------
+// Epochs
+// ---------------------------------------------------------------------
+
+/// Lifecycle state of one epoch of the sharded store (paper §VI.D).
+#[derive(Debug)]
+pub enum Epoch<T> {
+    /// High-uncertainty insertion phase: contents grow inside the shard
+    /// GgArrays.
+    Inserting,
+    /// Fast regular-access phase: the epoch's contents flattened into a
+    /// contiguous shard-indexed view.
+    Sealed(ShardedFlattened<T>),
+}
+
+impl<T: Copy> Epoch<T> {
+    pub fn is_sealed(&self) -> bool {
+        matches!(self, Epoch::Sealed(_))
+    }
+
+    pub fn sealed(&self) -> Option<&ShardedFlattened<T>> {
+        match self {
+            Epoch::Sealed(v) => Some(v),
+            Epoch::Inserting => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Epoch::Sealed(v) => v.len(),
+            Epoch::Inserting => 0,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Owns the sealed epochs and the simulated cost of the flat access
+/// path. Global index order: sealed epochs in seal order (each
+/// shard-major internally), then the live inserting epoch.
+#[derive(Debug)]
+pub struct EpochManager {
+    device: DeviceSpec,
+    clock: crate::sim::clock::Clock,
+    /// Sequence number of the *current inserting* epoch (starts at 0;
+    /// each seal advances it).
+    seq: u64,
+    /// Epoch history in seal order — every entry here is
+    /// [`Epoch::Sealed`]; the current [`Epoch::Inserting`] lives in the
+    /// shard GgArrays, not in this store.
+    sealed: Vec<Epoch<f32>>,
+    /// Global start offset of each sealed epoch.
+    starts: Vec<u64>,
+    total: u64,
+}
+
+impl EpochManager {
+    pub fn new(device: DeviceSpec) -> EpochManager {
+        EpochManager {
+            device,
+            clock: crate::sim::clock::Clock::new(),
+            seq: 0,
+            sealed: Vec::new(),
+            starts: Vec::new(),
+            total: 0,
+        }
+    }
+
+    /// Current inserting-epoch sequence number.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Total elements across all sealed epochs.
+    pub fn sealed_len(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sealed_epochs(&self) -> usize {
+        self.sealed.len()
+    }
+
+    pub fn now_us(&self) -> f64 {
+        self.clock.now_us()
+    }
+
+    /// Absorb a freshly sealed epoch (`Inserting → Sealed` transition);
+    /// returns the new inserting-epoch sequence number.
+    pub fn absorb(&mut self, flat: ShardedFlattened<f32>) -> u64 {
+        self.starts.push(self.total);
+        self.total += flat.len() as u64;
+        self.sealed.push(Epoch::Sealed(flat));
+        self.seq += 1;
+        self.seq
+    }
+
+    /// Read a global index from the sealed prefix ([0, sealed_len)).
+    pub fn get(&self, i: u64) -> Option<f32> {
+        if i >= self.total {
+            return None;
+        }
+        // Few epochs: linear scan from the back beats a binary search.
+        for (k, &start) in self.starts.iter().enumerate().rev() {
+            if i >= start {
+                return self.sealed[k].sealed().and_then(|v| v.get(i - start));
+            }
+        }
+        None
+    }
+
+    /// The sealed epochs' flat segments in global order — callers
+    /// bulk-copy (`extend_from_slice`) instead of pushing per element.
+    pub fn segments(&self) -> impl Iterator<Item = &[f32]> {
+        self.sealed.iter().filter_map(|e| e.sealed()).map(|v| v.data.as_slice())
+    }
+
+    /// Apply the +1×`iters` work op to all sealed data at static-array
+    /// cost: fully-coalesced streaming traffic, no bucket indirection and
+    /// no per-chunk pointer chases — the payoff of the two-phase pattern.
+    /// Returns the simulated µs charged.
+    pub fn work(&mut self, iters: u32) -> f64 {
+        let n = self.total;
+        if n == 0 {
+            return 0.0;
+        }
+        for epoch in &mut self.sealed {
+            if let Epoch::Sealed(view) = epoch {
+                for x in &mut view.data {
+                    for _ in 0..iters {
+                        *x += 1.0;
+                    }
+                }
+            }
+        }
+        let t0 = self.clock.now_us();
+        let tpb = 1024u32;
+        let blocks = crate::util::math::ceil_div(n, tpb as u64);
+        let profile = KernelProfile {
+            blocks,
+            threads_per_block: tpb,
+            bytes: 2.0 * 4.0 * n as f64,
+            coalescing_eff: self.device.cost.coalesced_eff,
+            flops_fp32: iters as f64 * n as f64,
+            flops_mxu: 0.0,
+            mxu_utilisation: 1.0,
+            per_block_us: 0.0,
+            atomic_us: 0.0,
+            extra_us: 0.0,
+        };
+        kernel::launch(&self.device, &mut self.clock, &profile);
+        self.clock.now_us() - t0
+    }
+
+    /// Drop all sealed epochs (service `Clear`). The epoch counter keeps
+    /// advancing — epochs are points in time, not storage.
+    pub fn reset(&mut self) {
+        self.sealed.clear();
+        self.starts.clear();
+        self.total = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(blocks: usize, heap_bytes: u64) -> Shard {
+        Shard::new(ShardConfig {
+            id: 0,
+            blocks,
+            first_bucket_size: 4,
+            insertion: InsertionKind::WarpScan,
+            device: DeviceSpec::a100(),
+            heap_bytes,
+        })
+    }
+
+    #[test]
+    fn apply_counts_places_values_in_block_order() {
+        let mut s = shard(4, 1 << 24);
+        let values: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let out = s.apply_counts(&[3, 3, 2, 2], &values);
+        assert_eq!(out.applied, 10);
+        assert!(out.error.is_none());
+        assert!(out.sim_us > 0.0);
+        assert_eq!(s.len(), 10);
+        // Block-major order equals the routed order here.
+        for i in 0..10u64 {
+            assert_eq!(s.get(i), Some(i as f32));
+        }
+    }
+
+    #[test]
+    fn apply_counts_oom_keeps_prefix_and_reports() {
+        let mut s = shard(2, 2048); // tiny budget: 2 blocks × fbs 4 f32 fit, not much more
+        let values: Vec<f32> = (0..4000).map(|i| i as f32).collect();
+        let out = s.apply_counts(&[2000, 2000], &values);
+        assert!(out.error.is_some());
+        assert!(out.applied < 4000);
+        assert_eq!(s.len(), out.applied);
+        // Index stayed consistent.
+        if out.applied > 0 {
+            assert!(s.get(0).is_some());
+        }
+        assert_eq!(s.get(out.applied as u64), None);
+    }
+
+    #[test]
+    fn committed_seals_stay_vram_resident_until_reset() {
+        let mut s = shard(4, 1 << 24);
+        s.apply_counts(&[25, 25, 25, 25], &vec![1.0; 100]);
+        let used_growable = s.heap_used();
+        let mut f1 = s.seal_flatten().unwrap();
+        assert_eq!(f1.data.len(), 100);
+        assert!(f1.alloc.is_some(), "caller owns the destination until commit/abort");
+        assert!(s.heap_used() > used_growable, "sealed dst resident");
+        s.commit_seal(f1.alloc.take());
+        // Growable storage released; sealed dst (100 × 4 B) still held.
+        assert_eq!(s.heap_used(), 400);
+        assert_eq!(s.len(), 0);
+        // Next epoch: insert, seal again — BOTH epochs' destinations stay
+        // resident (sealed data is live until reset).
+        s.apply_counts(&[5, 5, 5, 5], &vec![2.0; 20]);
+        let mut f2 = s.seal_flatten().unwrap();
+        assert_eq!(f2.data.len(), 20);
+        s.commit_seal(f2.alloc.take());
+        assert_eq!(s.heap_used(), 480, "both sealed epochs occupy simulated VRAM");
+        s.reset();
+        assert_eq!(s.heap_used(), 0);
+    }
+
+    #[test]
+    fn abort_seal_releases_destination_and_keeps_contents() {
+        let mut s = shard(2, 1 << 24);
+        s.apply_counts(&[10, 10], &vec![4.0; 20]);
+        let used_before = s.heap_used();
+        let mut f = s.seal_flatten().unwrap();
+        assert!(s.heap_used() > used_before);
+        s.abort_seal(f.alloc.take());
+        // VRAM back to the pre-seal state, data untouched, inserts legal.
+        assert_eq!(s.heap_used(), used_before);
+        assert_eq!(s.len(), 20);
+        assert_eq!(s.get(0), Some(4.0));
+        let out = s.apply_counts(&[1, 1], &[5.0, 6.0]);
+        assert!(out.error.is_none());
+        assert_eq!(s.len(), 22);
+    }
+
+    #[test]
+    fn flatten_temp_releases_destination() {
+        let mut s = shard(2, 1 << 24);
+        s.apply_counts(&[10, 10], &vec![3.0; 20]);
+        let used = s.heap_used();
+        let f = s.flatten_temp().unwrap();
+        assert_eq!(f.data.len(), 20);
+        assert_eq!(s.heap_used(), used, "temp flatten must not retain VRAM");
+    }
+
+    #[test]
+    fn work_pass_host_fallback_updates_every_element() {
+        let mut s = shard(2, 1 << 24);
+        s.apply_counts(&[2, 1], &[1.0, 2.0, 3.0]);
+        let pjrt = s.work_pass(None, 30);
+        assert_eq!(pjrt, 0);
+        assert_eq!(s.get(0), Some(31.0));
+        assert_eq!(s.get(2), Some(33.0));
+    }
+
+    #[test]
+    fn epoch_manager_orders_and_reads_sealed_epochs() {
+        let mut em = EpochManager::new(DeviceSpec::a100());
+        assert_eq!(em.seq(), 0);
+        assert_eq!(em.get(0), None);
+        let mk = |vals: Vec<f32>| {
+            flatten::concat(vec![Flattened { data: vals, report: Default::default(), alloc: None }])
+        };
+        assert_eq!(em.absorb(mk(vec![1.0, 2.0, 3.0])), 1);
+        assert_eq!(em.absorb(mk(vec![10.0])), 2);
+        assert_eq!(em.sealed_len(), 4);
+        assert_eq!(em.sealed_epochs(), 2);
+        assert_eq!(em.get(0), Some(1.0));
+        assert_eq!(em.get(2), Some(3.0));
+        assert_eq!(em.get(3), Some(10.0));
+        assert_eq!(em.get(4), None);
+        let mut all: Vec<f32> = Vec::new();
+        for segment in em.segments() {
+            all.extend_from_slice(segment);
+        }
+        assert_eq!(all, vec![1.0, 2.0, 3.0, 10.0]);
+        // Work applies everywhere and charges the flat-path clock.
+        let us = em.work(30);
+        assert!(us > 0.0);
+        assert_eq!(em.get(0), Some(31.0));
+        assert_eq!(em.get(3), Some(40.0));
+        assert!((em.now_us() - us).abs() < 1e-9);
+        em.reset();
+        assert_eq!(em.sealed_len(), 0);
+        assert_eq!(em.seq(), 2, "epoch counter survives reset");
+    }
+
+    #[test]
+    fn epoch_enum_lifecycle() {
+        let e: Epoch<f32> = Epoch::Inserting;
+        assert!(!e.is_sealed());
+        assert!(e.sealed().is_none());
+        assert_eq!(e.len(), 0);
+        let sealed = Epoch::Sealed(flatten::concat(vec![Flattened {
+            data: vec![5.0f32, 6.0],
+            report: Default::default(),
+            alloc: None,
+        }]));
+        assert!(sealed.is_sealed());
+        assert_eq!(sealed.len(), 2);
+        assert_eq!(sealed.sealed().unwrap().get(1), Some(6.0));
+    }
+
+    #[test]
+    fn sealed_work_cheaper_than_unsealed_rw_b_per_element() {
+        // The acceptance shape: one work pass over n elements costs less
+        // through the sealed flat path than through the GgArray rw_b path.
+        let n = 1 << 20;
+        let mut s = shard(32, 1 << 30);
+        let counts = vec![n / 32; 32];
+        s.apply_counts(&counts, &vec![0.5; n]);
+        let unsealed_us = s.charge_rw_block(30.0);
+        let mut flat = s.seal_flatten().unwrap();
+        s.commit_seal(flat.alloc.take());
+        let mut em = EpochManager::new(DeviceSpec::a100());
+        em.absorb(flatten::concat(vec![flat]));
+        let sealed_us = em.work(30);
+        assert!(
+            sealed_us < unsealed_us / 2.0,
+            "sealed {sealed_us} µs !≪ unsealed {unsealed_us} µs"
+        );
+    }
+}

@@ -88,6 +88,9 @@ pub struct GgArray<T> {
     clock: Clock,
     vectors: Vec<LfVector<T>>,
     index: PrefixIndex,
+    /// Epoch hook (paper §VI.D two-phase pattern): a sealed array rejects
+    /// growth/insertion until [`GgArray::reopen`] — the flatten window.
+    sealed: bool,
 }
 
 impl<T: Copy + Default> GgArray<T> {
@@ -101,7 +104,26 @@ impl<T: Copy + Default> GgArray<T> {
     pub fn with_heap(cfg: GgConfig, spec: DeviceSpec, heap: VramHeap) -> GgArray<T> {
         assert!(cfg.num_blocks > 0, "GGArray needs at least one LFVector");
         let vectors = (0..cfg.num_blocks).map(|_| LfVector::new(cfg.first_bucket_size)).collect();
-        GgArray { cfg, spec, heap, clock: Clock::new(), vectors, index: PrefixIndex::new() }
+        GgArray { cfg, spec, heap, clock: Clock::new(), vectors, index: PrefixIndex::new(), sealed: false }
+    }
+
+    // ---------- epoch lifecycle (two-phase pattern, §VI.D) ----------
+
+    /// Seal the array for the flatten window of a two-phase epoch:
+    /// subsequent `grow_for`/`insert_bulk`/`push_*` calls panic until
+    /// [`GgArray::reopen`]. Reads, flatten, shrink and clear stay legal.
+    pub fn seal(&mut self) {
+        self.sealed = true;
+    }
+
+    /// Reopen after a seal: the next insert epoch may grow the array
+    /// again.
+    pub fn reopen(&mut self) {
+        self.sealed = false;
+    }
+
+    pub fn is_sealed(&self) -> bool {
+        self.sealed
     }
 
     // ---------- introspection ----------
@@ -197,6 +219,7 @@ impl<T: Copy + Default> GgArray<T> {
     /// this is why GGArray512 grows slower than GGArray32 (Table II).
     pub fn grow_for(&mut self, extra: &[usize]) -> Result<OpReport, OomError> {
         assert_eq!(extra.len(), self.cfg.num_blocks);
+        assert!(!self.sealed, "grow_for on a sealed GgArray (reopen the epoch first)");
         let phase = Phase::start(&self.clock);
         // One kernel launches the growth; blocks then race on CAS flags.
         self.clock.charge(Category::Launch, self.spec.cost.kernel_launch_us);
@@ -218,6 +241,7 @@ impl<T: Copy + Default> GgArray<T> {
     /// algorithm `kind`. Any buckets not pre-grown are allocated on
     /// demand (Algorithm 1's `new_bucket` path).
     pub fn insert_bulk(&mut self, values: &[T], kind: InsertionKind) -> Result<OpReport, OomError> {
+        assert!(!self.sealed, "insert_bulk on a sealed GgArray (reopen the epoch first)");
         let phase = Phase::start(&self.clock);
         let counts = self.even_split(values.len());
         // Real data placement: per-block bulk push_back (the intra-block
@@ -396,12 +420,14 @@ impl<T: Copy + Default> GgArray<T> {
     /// path).
     pub fn push_to_block(&mut self, block: usize, v: T) -> Result<usize, OomError> {
         assert!(block < self.cfg.num_blocks);
+        assert!(!self.sealed, "push_to_block on a sealed GgArray (reopen the epoch first)");
         self.vectors[block].push_back(v, &mut self.heap, &mut self.clock)
     }
 
     /// Bulk push to a specific block.
     pub fn push_bulk_to_block(&mut self, block: usize, vs: &[T]) -> Result<std::ops::Range<usize>, OomError> {
         assert!(block < self.cfg.num_blocks);
+        assert!(!self.sealed, "push_bulk_to_block on a sealed GgArray (reopen the epoch first)");
         self.vectors[block].push_back_bulk(vs, &mut self.heap, &mut self.clock)
     }
 }
@@ -546,6 +572,29 @@ mod tests {
         // Can grow again after shrinking.
         g.insert_bulk(&vec![9u32; 1000], InsertionKind::WarpScan).unwrap();
         assert_eq!(g.len(), 1800);
+    }
+
+    #[test]
+    fn seal_reopen_lifecycle() {
+        let mut g = small();
+        g.insert_bulk(&vec![1u32; 100], InsertionKind::WarpScan).unwrap();
+        assert!(!g.is_sealed());
+        g.seal();
+        assert!(g.is_sealed());
+        // Reads stay legal while sealed.
+        assert_eq!(g.get(0), Some(1));
+        assert_eq!(g.len(), 100);
+        g.reopen();
+        g.insert_bulk(&vec![2u32; 10], InsertionKind::WarpScan).unwrap();
+        assert_eq!(g.len(), 110);
+    }
+
+    #[test]
+    #[should_panic(expected = "sealed")]
+    fn sealed_rejects_insert() {
+        let mut g = small();
+        g.seal();
+        let _ = g.insert_bulk(&[1u32], InsertionKind::WarpScan);
     }
 
     #[test]

@@ -7,15 +7,114 @@
 //! indirection; writes are fully coalesced.
 
 use crate::sim::kernel::{self, KernelProfile};
-use crate::sim::memory::OomError;
+use crate::sim::memory::{AllocId, OomError};
 
 use super::array::{GgArray, OpReport};
+use super::index::PrefixIndex;
 
 /// Result of a flatten: the contiguous data plus the timing report.
 #[derive(Debug)]
 pub struct Flattened<T> {
     pub data: Vec<T>,
     pub report: OpReport,
+    /// The destination allocation in the source array's heap, so callers
+    /// can govern the flat copy's simulated VRAM: release it for a
+    /// throwaway snapshot, or retain it while the flat view stays live
+    /// (a sealed epoch).
+    pub alloc: Option<AllocId>,
+}
+
+/// A multi-shard flatten: per-shard flattened contents concatenated into
+/// one contiguous array, plus a shard-offset index so a global index can
+/// be mapped back to its (shard, local) coordinates — the sealed-epoch
+/// analogue of the per-block [`PrefixIndex`].
+#[derive(Debug)]
+pub struct ShardedFlattened<T> {
+    /// Shard-major concatenation (shard 0's flat data, then shard 1's, …).
+    pub data: Vec<T>,
+    /// Prefix sums of per-shard lengths: `index.locate(i)` yields
+    /// `(shard, local_index)`.
+    pub index: PrefixIndex,
+    /// Summed per-shard flatten reports.
+    pub report: OpReport,
+}
+
+impl<T: Copy> ShardedFlattened<T> {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn shards(&self) -> usize {
+        self.index.blocks()
+    }
+
+    /// Global start offset of shard `s` in the concatenated data.
+    pub fn shard_start(&self, s: usize) -> u64 {
+        self.index.start_of(s)
+    }
+
+    /// Map a global index to `(shard, local_index)`.
+    pub fn locate(&self, i: u64) -> Option<(usize, u64)> {
+        self.index.locate(i)
+    }
+
+    /// Read a global index.
+    pub fn get(&self, i: u64) -> Option<T> {
+        self.data.get(i as usize).copied()
+    }
+}
+
+/// Concatenate per-shard [`Flattened`] results (in shard order) into one
+/// [`ShardedFlattened`] with the shard-offset index. Pure host-side
+/// bookkeeping: the per-shard gather kernels were already charged by the
+/// individual flattens, and the shard outputs land directly in their
+/// final offsets (writes are disjoint), so no extra device pass is due.
+///
+/// Any `alloc` still attached to a part is dropped *untracked* here —
+/// callers that govern simulated VRAM (e.g. the coordinator's seal
+/// transaction) must `take()` the allocations first.
+pub fn concat<T: Copy + Default>(parts: Vec<Flattened<T>>) -> ShardedFlattened<T> {
+    let mut index = PrefixIndex::new();
+    index.rebuild(parts.iter().map(|p| p.data.len() as u64));
+    let total: usize = parts.iter().map(|p| p.data.len()).sum();
+    let mut data = Vec::with_capacity(total);
+    let mut report = OpReport::default();
+    for p in parts {
+        report.us += p.report.us;
+        report.buckets_allocated += p.report.buckets_allocated;
+        report.elements += p.report.elements;
+        data.extend_from_slice(&p.data);
+    }
+    ShardedFlattened { data, index, report }
+}
+
+/// Flatten every shard and concatenate with a shard-offset index — the
+/// sealing step of the sharded two-phase lifecycle. Shard order defines
+/// global order, so with block-sliced routing the result is byte-identical
+/// to flattening one GgArray holding all the blocks.
+///
+/// The per-shard flatten destinations are released before returning: the
+/// concatenated view lives host-side, so holding simulated VRAM for it
+/// would leak a destination per call. Callers that want VRAM-resident
+/// sealed views manage the allocations themselves (as the coordinator's
+/// seal transaction does).
+pub fn flatten_concat<T: Copy + Default>(
+    shards: &mut [GgArray<T>],
+) -> Result<ShardedFlattened<T>, OomError> {
+    let mut parts = Vec::with_capacity(shards.len());
+    for gg in shards.iter_mut() {
+        let mut f = flatten(gg)?;
+        if let Some(dst) = f.alloc.take() {
+            let (_, heap, clock, _, _, _) = gg.parts_mut();
+            heap.free(dst, clock);
+        }
+        parts.push(f);
+    }
+    Ok(concat(parts))
 }
 
 /// Flatten the GGArray into a fresh contiguous (simulated-VRAM-resident)
@@ -31,7 +130,7 @@ pub fn flatten<T: Copy + Default>(gg: &mut GgArray<T>) -> Result<Flattened<T>, O
 
     let phase = crate::sim::clock::Phase::start(clock);
     // Destination allocation (one cudaMalloc).
-    let _dst = heap.alloc((n * elem) as u64, clock)?;
+    let dst = heap.alloc((n * elem) as u64, clock)?;
     // Real copy.
     let mut data = Vec::with_capacity(n);
     for v in vectors.iter() {
@@ -50,7 +149,7 @@ pub fn flatten<T: Copy + Default>(gg: &mut GgArray<T>) -> Result<Flattened<T>, O
     let profile = KernelProfile::streaming(blocks.max(1), tpb, read + write, eff);
     kernel::launch(&spec, clock, &profile);
     let report = OpReport { us: phase.elapsed_us(clock), buckets_allocated: 0, elements: n as u64 };
-    Ok(Flattened { data, report })
+    Ok(Flattened { data, report, alloc: Some(dst) })
 }
 
 #[cfg(test)]
@@ -90,6 +189,57 @@ mod tests {
         let rw = g.read_write_block(30.0, |x| *x += 1);
         let fl = flatten(&mut g).unwrap();
         assert!(fl.report.us < rw.us, "flatten {} !< rw_b {}", fl.report.us, rw.us);
+    }
+
+    #[test]
+    fn flatten_concat_matches_single_array_layout() {
+        // 2 shards × 4 blocks receiving the same per-block pushes as one
+        // 8-block array must flatten to byte-identical contents, with the
+        // shard-offset index at the 4-block boundary.
+        let cfg4 = GgConfig { num_blocks: 4, threads_per_block: 256, first_bucket_size: 4, insertion: InsertionKind::WarpScan };
+        let cfg8 = GgConfig { num_blocks: 8, ..cfg4.clone() };
+        let mut single: GgArray<u32> = GgArray::new(cfg8, DeviceSpec::a100());
+        let mut shards: Vec<GgArray<u32>> = (0..2).map(|_| GgArray::new(cfg4.clone(), DeviceSpec::a100())).collect();
+        let mut counter = 0u32;
+        for b in 0..8usize {
+            let n = [5usize, 0, 17, 3, 9, 1, 0, 30][b];
+            let chunk: Vec<u32> = (counter..counter + n as u32).collect();
+            counter += n as u32;
+            single.push_bulk_to_block(b, &chunk).unwrap();
+            shards[b / 4].push_bulk_to_block(b % 4, &chunk).unwrap();
+        }
+        let flat_single = flatten(&mut single).unwrap();
+        let sharded = super::flatten_concat(&mut shards).unwrap();
+        assert_eq!(sharded.data, flat_single.data);
+        assert_eq!(sharded.shards(), 2);
+        assert_eq!(sharded.shard_start(0), 0);
+        assert_eq!(sharded.shard_start(1), 25); // 5 + 0 + 17 + 3
+        assert_eq!(sharded.len(), 65);
+        // locate maps every global index to the shard that owns it.
+        assert_eq!(sharded.locate(24), Some((0, 24)));
+        assert_eq!(sharded.locate(25), Some((1, 0)));
+        assert_eq!(sharded.locate(64), Some((1, 39)));
+        assert_eq!(sharded.locate(65), None);
+        assert_eq!(sharded.get(30), Some(flat_single.data[30]));
+    }
+
+    #[test]
+    fn concat_sums_reports_and_handles_empty_shards() {
+        let mk = |n: u32| Flattened::<u32> {
+            data: (0..n).collect(),
+            report: OpReport { us: 10.0, buckets_allocated: 1, elements: n as u64 },
+            alloc: None,
+        };
+        let s = super::concat(vec![mk(3), mk(0), mk(2)]);
+        assert_eq!(s.data, vec![0, 1, 2, 0, 1]);
+        assert_eq!(s.shards(), 3);
+        assert!((s.report.us - 30.0).abs() < 1e-12);
+        assert_eq!(s.report.elements, 5);
+        // Empty middle shard: index skips it.
+        assert_eq!(s.locate(3), Some((2, 0)));
+        let empty: ShardedFlattened<u32> = super::concat(vec![]);
+        assert!(empty.is_empty());
+        assert_eq!(empty.locate(0), None);
     }
 
     #[test]

@@ -7,8 +7,8 @@
 //! * **Layer 3 (this crate)** — the GGArray data structure (an array of
 //!   LFVectors, one per thread block), its baselines (static, semi-static,
 //!   memMap/VMM), the three parallel insertion algorithms, a calibrated
-//!   GPU execution cost model, and a coordinator service that drives
-//!   dynamic-memory workloads.
+//!   GPU execution cost model, and a **sharded coordinator service** that
+//!   drives dynamic-memory workloads at traffic-serving scale.
 //! * **Layer 2 (JAX, build time)** — the compute graphs (insert step, work
 //!   phase, flatten) lowered AOT to HLO text.
 //! * **Layer 1 (Pallas, build time)** — prefix-sum kernels (vector-unit
@@ -16,6 +16,32 @@
 //!   at runtime through the PJRT CPU client by [`runtime`].
 //!
 //! See `DESIGN.md` for the experiment index and hardware-adaptation notes.
+//!
+//! ## Shards and epochs (two-phase lifecycle at service scale)
+//!
+//! The paper's headline usage pattern (§VI.D) is *phase-structured*: grow
+//! with the GGArray while the final size is uncertain, then flatten once
+//! and run the regular-access work phase at static-array speed. The
+//! coordinator makes that lifecycle first-class and scales it out:
+//!
+//! * **Shards** — [`coordinator::shard::Shard`]: N independent
+//!   `GgArray<f32>`s, each owning `blocks/N` consecutive blocks of the
+//!   global block space and a VRAM budget carved from the shared
+//!   [`sim::spec::DeviceSpec`]. Insert batches are routed *globally*
+//!   (per [`coordinator::router`]) and sliced per shard, so the data
+//!   layout — and therefore the sealed flatten bytes — is identical for
+//!   any shard count.
+//! * **Epochs** — [`coordinator::shard::EpochManager`]:
+//!   `Epoch::Inserting → Epoch::Sealed(flat)`. `Request::Seal` drains
+//!   in-flight batches, runs [`ggarray::flatten`] per shard, concatenates
+//!   into one [`ggarray::flatten::ShardedFlattened`] view with a
+//!   shard-offset index, and opens a fresh insert epoch behind it.
+//!   Reads/work over the sealed prefix are charged fully-coalesced
+//!   static-array cost; the live epoch keeps paying GGArray costs until
+//!   it, too, seals — exactly the paper's insert-fast/access-fast split.
+//!
+//! See `examples/sharded_two_phase.rs` for the end-to-end flow and
+//! `rust/benches/bench_shards.rs` for the scaling shape.
 //!
 //! ## Quick start
 //!
@@ -49,10 +75,12 @@ pub mod prelude {
     };
     pub use crate::coordinator::{
         request::{Request, Response},
-        service::{Coordinator, CoordinatorConfig},
+        service::{drive_workload, Coordinator, CoordinatorConfig, WorkloadRun},
+        shard::{Epoch, EpochManager, Shard, ShardConfig},
     };
     pub use crate::ggarray::{
         array::{GgArray, GgConfig, OpReport},
+        flatten::{Flattened, ShardedFlattened},
         lfvector::LfVector,
     };
     pub use crate::insertion::InsertionKind;

@@ -46,9 +46,11 @@ fn cli() -> Cli {
                 name: "serve",
                 help: "run the coordinator service demo workload",
                 opts: vec![
-                    opt("blocks", Some("512"), "LFVectors"),
+                    opt("blocks", Some("512"), "LFVectors (total across shards)"),
+                    opt("shards", Some("1"), "independent GGArray shards"),
                     opt("inserts", Some("100000"), "total elements to insert"),
                     opt("work", Some("3"), "work calls after the insert phase"),
+                    flag("seal", "seal the epoch (flat fast path) before the work phase"),
                     flag("no-artifacts", "skip AOT artifacts (host fallback)"),
                 ],
             },
@@ -146,8 +148,10 @@ fn main() -> anyhow::Result<()> {
         "serve" => {
             serve(
                 parsed.get_parse("blocks")?,
+                parsed.get_parse("shards")?,
                 parsed.get_parse("inserts")?,
                 parsed.get_parse("work")?,
+                parsed.flag("seal"),
                 !parsed.flag("no-artifacts"),
             );
         }
@@ -191,11 +195,11 @@ fn quickstart() {
     println!("quickstart OK");
 }
 
-fn serve(blocks: usize, inserts: usize, work: u32, use_artifacts: bool) {
+fn serve(blocks: usize, shards: usize, inserts: usize, work: u32, seal: bool, use_artifacts: bool) {
     use ggarray::coordinator::request::{Request, Response};
     use ggarray::coordinator::service::{Coordinator, CoordinatorConfig};
 
-    let cfg = CoordinatorConfig { blocks, use_artifacts, ..CoordinatorConfig::default() };
+    let cfg = CoordinatorConfig { blocks, shards, use_artifacts, ..CoordinatorConfig::default() };
     let c = Coordinator::start(cfg);
     let chunk = 1024;
     let mut sent = 0usize;
@@ -204,6 +208,14 @@ fn serve(blocks: usize, inserts: usize, work: u32, use_artifacts: bool) {
         let values: Vec<f32> = (sent..sent + n).map(|i| i as f32).collect();
         c.call(Request::Insert { values });
         sent += n;
+    }
+    if seal {
+        match c.call(Request::Seal) {
+            Response::Sealed { epoch, sealed_len, sim_us, .. } => {
+                println!("sealed epoch → {epoch}: {sealed_len} elements on the flat path (sim {:.3} ms)", sim_us / 1e3)
+            }
+            other => println!("seal: {other:?}"),
+        }
     }
     c.call(Request::Work { calls: work });
     match c.call(Request::Flatten) {

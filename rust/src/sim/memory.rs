@@ -16,13 +16,24 @@ use std::collections::BTreeMap;
 pub struct AllocId(u64);
 
 /// Out-of-memory error carrying the shortfall.
-#[derive(Debug, thiserror::Error)]
-#[error("simulated VRAM OOM: requested {requested} B, free {free} B of {capacity} B")]
+#[derive(Debug)]
 pub struct OomError {
     pub requested: u64,
     pub free: u64,
     pub capacity: u64,
 }
+
+impl std::fmt::Display for OomError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "simulated VRAM OOM: requested {} B, free {} B of {} B",
+            self.requested, self.free, self.capacity
+        )
+    }
+}
+
+impl std::error::Error for OomError {}
 
 /// The simulated device heap.
 #[derive(Debug)]

@@ -14,15 +14,30 @@ use super::clock::{Category, Clock};
 use super::spec::DeviceSpec;
 
 /// Error from VMM operations.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum VmmError {
-    #[error("VA reservation exhausted: need {need} B mapped, reserved {reserved} B")]
     ReservationExhausted { need: u64, reserved: u64 },
-    #[error("physical memory exhausted: need {need} pages, available {available}")]
     PhysicalExhausted { need: u64, available: u64 },
-    #[error("cannot shrink below {mapped} mapped bytes to {target}")]
     BadShrink { mapped: u64, target: u64 },
 }
+
+impl std::fmt::Display for VmmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VmmError::ReservationExhausted { need, reserved } => {
+                write!(f, "VA reservation exhausted: need {need} B mapped, reserved {reserved} B")
+            }
+            VmmError::PhysicalExhausted { need, available } => {
+                write!(f, "physical memory exhausted: need {need} pages, available {available}")
+            }
+            VmmError::BadShrink { mapped, target } => {
+                write!(f, "cannot shrink below {mapped} mapped bytes to {target}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for VmmError {}
 
 /// A reserved VA range with on-demand page mapping.
 #[derive(Debug)]

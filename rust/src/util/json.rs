@@ -182,12 +182,19 @@ fn write_escaped(out: &mut String, s: &str) {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Parse a JSON document (must consume all non-whitespace input).
 pub fn parse(input: &str) -> Result<Json, ParseError> {

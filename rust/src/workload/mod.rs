@@ -20,6 +20,10 @@ pub enum Step {
     Work(u32),
     /// Flatten into a contiguous array (two-phase pattern).
     Flatten,
+    /// Seal the current epoch: flatten every shard into the contiguous
+    /// fast-access view and open a fresh insert epoch (sharded two-phase
+    /// lifecycle; flat structures treat it as a no-op like `Flatten`).
+    Seal,
 }
 
 /// Declarative description of a workload.
@@ -68,6 +72,35 @@ impl WorkloadSpec {
         }
     }
 
+    /// Sharded two-phase lifecycle: like [`WorkloadSpec::two_phase`] but
+    /// each phase *seals* its epoch instead of taking a throwaway flatten
+    /// snapshot — inserts grow the shard GgArrays, the seal moves the
+    /// epoch into the flat fast-access view, and the work phase runs at
+    /// static-array cost over everything sealed so far.
+    pub fn two_phase_sharded(
+        final_size: u64,
+        inserts_per_elem: u64,
+        work_calls: u32,
+        phases: u32,
+    ) -> WorkloadSpec {
+        let growth = (inserts_per_elem + 1).pow(phases);
+        let start = (final_size / growth).max(1);
+        let mut steps = vec![Step::Insert(start)];
+        let mut size = start;
+        for _ in 0..phases {
+            let ins = size * inserts_per_elem;
+            steps.push(Step::Insert(ins));
+            size += ins;
+            steps.push(Step::Seal);
+            steps.push(Step::Work(work_calls));
+        }
+        WorkloadSpec {
+            name: format!("two_phase_sharded_f{final_size}_k{inserts_per_elem}_w{work_calls}"),
+            steps,
+            expected_final: size,
+        }
+    }
+
     /// Fig 3 uncertain growth: one bulk insert of `s·X`, `X~LogNormal(0,σ)`.
     pub fn uncertain(s: u64, sigma: f64, rng: &mut Rng) -> WorkloadSpec {
         let x = if sigma == 0.0 { 1.0 } else { rng.lognormal(0.0, sigma) };
@@ -94,6 +127,14 @@ pub fn synth_values(start_counter: u64, n: usize) -> Vec<u32> {
     (0..n as u64).map(|i| ((start_counter + i).wrapping_mul(2654435761) >> 8) as u32).collect()
 }
 
+/// Deterministic f32 value for element `counter` of a coordinator-driven
+/// workload. Kept within f32's exact-integer range (and away from its
+/// upper end) so repeated +1 work passes stay bit-exact — the property
+/// the cross-shard byte-identity tests rely on.
+pub fn synth_f32(counter: u64) -> f32 {
+    ((counter.wrapping_mul(2654435761) >> 12) % (1 << 22)) as f32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +158,28 @@ mod tests {
             assert!(rel < 0.05, "k={k}: final {}", w.expected_final);
             // Each phase has insert + flatten + work.
             assert_eq!(w.steps.len(), 1 + 15);
+        }
+    }
+
+    #[test]
+    fn two_phase_sharded_mirrors_two_phase_with_seals() {
+        let flat = WorkloadSpec::two_phase(1_000_000, 3, 10, 4);
+        let sharded = WorkloadSpec::two_phase_sharded(1_000_000, 3, 10, 4);
+        assert_eq!(sharded.expected_final, flat.expected_final);
+        assert_eq!(sharded.total_inserts(), flat.total_inserts());
+        assert_eq!(sharded.steps.len(), flat.steps.len());
+        let seals = sharded.steps.iter().filter(|s| matches!(s, Step::Seal)).count();
+        assert_eq!(seals, 4);
+        assert!(!sharded.steps.iter().any(|s| matches!(s, Step::Flatten)));
+    }
+
+    #[test]
+    fn synth_f32_deterministic_and_exact() {
+        for c in [0u64, 1, 1000, u64::MAX / 3] {
+            let v = synth_f32(c);
+            assert_eq!(v, synth_f32(c));
+            assert!(v >= 0.0 && v < (1 << 22) as f32);
+            assert_eq!(v.fract(), 0.0, "synth_f32 must be an exact integer value");
         }
     }
 

@@ -23,6 +23,7 @@ pub fn to_text(w: &WorkloadSpec) -> String {
             Step::Insert(n) => s.push_str(&format!("insert {n}\n")),
             Step::Work(c) => s.push_str(&format!("work {c}\n")),
             Step::Flatten => s.push_str("flatten\n"),
+            Step::Seal => s.push_str("seal\n"),
         }
     }
     s
@@ -64,6 +65,7 @@ pub fn from_text(text: &str) -> anyhow::Result<WorkloadSpec> {
                 steps.push(Step::Work(c));
             }
             Some("flatten") => steps.push(Step::Flatten),
+            Some("seal") => steps.push(Step::Seal),
             Some(other) => anyhow::bail!("line {}: unknown step '{other}'", lineno + 1),
             None => {}
         }
@@ -100,6 +102,15 @@ mod tests {
         assert_eq!(back.steps, w.steps);
         assert_eq!(back.name, w.name);
         assert_eq!(back.expected_final, w.total_inserts());
+    }
+
+    #[test]
+    fn seal_steps_roundtrip() {
+        let w = WorkloadSpec::two_phase_sharded(10_000, 1, 2, 3);
+        let text = to_text(&w);
+        assert!(text.contains("seal\n"));
+        let back = from_text(&text).unwrap();
+        assert_eq!(back.steps, w.steps);
     }
 
     #[test]

@@ -23,6 +23,7 @@ fn cfg(blocks: usize, use_artifacts: bool) -> CoordinatorConfig {
         use_artifacts,
         work_iters: 30,
         heap_capacity: None,
+        shards: 1,
     }
 }
 

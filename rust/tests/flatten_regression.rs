@@ -1,0 +1,172 @@
+//! Flatten-order regression suite: `flatten` (and the new multi-shard
+//! `flatten_concat`) must preserve global block-major order exactly as
+//! reconstructable from `block_sizes()` / `even_split`, including under
+//! adversarial per-block distributions — heavy skew, empty blocks, and
+//! single-block pile-ups — where an off-by-one in bucket walking or
+//! prefix indexing would scramble the output.
+
+use ggarray::ggarray::array::{GgArray, GgConfig};
+use ggarray::ggarray::flatten::{flatten, flatten_concat};
+use ggarray::insertion::InsertionKind;
+use ggarray::sim::spec::DeviceSpec;
+use ggarray::util::rng::Rng;
+
+fn cfg(blocks: usize) -> GgConfig {
+    GgConfig {
+        num_blocks: blocks,
+        threads_per_block: 256,
+        first_bucket_size: 4,
+        insertion: InsertionKind::WarpScan,
+    }
+}
+
+/// Push an explicit per-block distribution, returning the per-block
+/// contents (the ground truth for block-major order).
+fn fill_blocks(gg: &mut GgArray<u32>, dist: &[usize]) -> Vec<Vec<u32>> {
+    let mut counter = 0u32;
+    let mut truth: Vec<Vec<u32>> = Vec::with_capacity(dist.len());
+    for (b, &n) in dist.iter().enumerate() {
+        let chunk: Vec<u32> = (counter..counter + n as u32).collect();
+        counter += n as u32;
+        gg.push_bulk_to_block(b, &chunk).unwrap();
+        truth.push(chunk);
+    }
+    gg.rebuild_index_charged();
+    truth
+}
+
+#[test]
+fn flatten_preserves_order_for_adversarial_distributions() {
+    let distributions: Vec<Vec<usize>> = vec![
+        // all data in one block, everything else empty
+        vec![0, 0, 0, 5000, 0, 0, 0, 0],
+        // empty blocks interleaved with tiny and huge ones
+        vec![1, 0, 3000, 0, 1, 0, 2999, 0],
+        // geometric skew
+        vec![4096, 2048, 1024, 512, 256, 128, 64, 32],
+        // boundary sizes around the bucket structure (fbs 4: 4, 12, 28…)
+        vec![3, 4, 5, 11, 12, 13, 27, 28],
+        // completely empty array
+        vec![0, 0, 0, 0, 0, 0, 0, 0],
+    ];
+    for (d, dist) in distributions.iter().enumerate() {
+        let mut gg: GgArray<u32> = GgArray::new(cfg(8), DeviceSpec::a100());
+        let truth = fill_blocks(&mut gg, dist);
+        // block_sizes must mirror the distribution exactly.
+        let sizes: Vec<u64> = dist.iter().map(|&n| n as u64).collect();
+        assert_eq!(gg.block_sizes(), sizes, "distribution {d}");
+        let flat = flatten(&mut gg).unwrap();
+        let want: Vec<u32> = truth.into_iter().flatten().collect();
+        assert_eq!(flat.data, want, "distribution {d}: flatten broke block-major order");
+        // And the prefix index agrees element by element.
+        for (i, &v) in want.iter().enumerate() {
+            assert_eq!(gg.get(i as u64), Some(v), "distribution {d}, index {i}");
+        }
+    }
+}
+
+#[test]
+fn flatten_matches_even_split_reconstruction() {
+    // The paper's even insertion path: multiple insert_bulk rounds, each
+    // split per even_split. The flatten order must equal the per-block
+    // reconstruction from those splits.
+    let mut gg: GgArray<u32> = GgArray::new(cfg(8), DeviceSpec::a100());
+    let mut per_block: Vec<Vec<u32>> = vec![Vec::new(); 8];
+    let mut counter = 0u32;
+    for round_size in [1usize, 7, 8, 100, 1023, 4096] {
+        let vals: Vec<u32> = (counter..counter + round_size as u32).collect();
+        counter += round_size as u32;
+        let counts = gg.even_split(round_size);
+        let mut off = 0;
+        for (b, &c) in counts.iter().enumerate() {
+            per_block[b].extend_from_slice(&vals[off..off + c]);
+            off += c;
+        }
+        gg.insert_bulk(&vals, InsertionKind::WarpScan).unwrap();
+    }
+    let want: Vec<u32> = per_block.iter().flatten().copied().collect();
+    let sizes: Vec<u64> = per_block.iter().map(|v| v.len() as u64).collect();
+    assert_eq!(gg.block_sizes(), sizes);
+    let flat = flatten(&mut gg).unwrap();
+    assert_eq!(flat.data, want);
+}
+
+#[test]
+fn flatten_concat_equals_single_array_for_adversarial_shards() {
+    // S shards × (B/S) blocks fed the same per-block distribution as one
+    // B-block array must concatenate to byte-identical flat contents —
+    // the invariant the sharded coordinator's seal path relies on —
+    // including when whole shards are empty.
+    let distributions: Vec<Vec<usize>> = vec![
+        vec![0, 0, 0, 0, 900, 0, 0, 0],     // one shard holds everything
+        vec![7, 0, 0, 0, 0, 0, 0, 1],       // first and last blocks only
+        vec![128, 64, 32, 16, 8, 4, 2, 1],  // skew across shard boundary
+        vec![0, 0, 0, 0, 0, 0, 0, 0],       // all shards empty
+    ];
+    for (d, dist) in distributions.iter().enumerate() {
+        let mut single: GgArray<u32> = GgArray::new(cfg(8), DeviceSpec::a100());
+        let truth = fill_blocks(&mut single, dist);
+        let want: Vec<u32> = truth.into_iter().flatten().collect();
+        let flat_single = flatten(&mut single).unwrap();
+        assert_eq!(flat_single.data, want, "distribution {d}");
+        for shards in [1usize, 2, 4] {
+            let bps = 8 / shards;
+            let mut parts: Vec<GgArray<u32>> =
+                (0..shards).map(|_| GgArray::new(cfg(bps), DeviceSpec::a100())).collect();
+            let mut counter = 0u32;
+            for (b, &n) in dist.iter().enumerate() {
+                let chunk: Vec<u32> = (counter..counter + n as u32).collect();
+                counter += n as u32;
+                parts[b / bps].push_bulk_to_block(b % bps, &chunk).unwrap();
+            }
+            let sharded = flatten_concat(&mut parts).unwrap();
+            assert_eq!(sharded.data, want, "distribution {d}, {shards} shards");
+            assert_eq!(sharded.shards(), shards);
+            // Shard starts must equal the block-size prefix at shard
+            // boundaries.
+            let mut acc = 0u64;
+            for s in 0..shards {
+                assert_eq!(sharded.shard_start(s), acc, "distribution {d}, shard {s}");
+                acc += dist[s * bps..(s + 1) * bps].iter().map(|&n| n as u64).sum::<u64>();
+            }
+            // locate() round-trips every element to its owning shard.
+            for i in 0..want.len() as u64 {
+                let (s, local) = sharded.locate(i).unwrap();
+                assert_eq!(sharded.shard_start(s) + local, i);
+            }
+            assert_eq!(sharded.locate(want.len() as u64), None);
+        }
+    }
+}
+
+#[test]
+fn flatten_concat_randomised_against_shadow() {
+    // Randomised sweep: arbitrary per-block loads across 1/2/4 shards
+    // must always equal the shadow reconstruction.
+    let mut rng = Rng::new(0xF1A77E);
+    for case in 0..20 {
+        let dist: Vec<usize> = (0..8).map(|_| rng.below(600) as usize).collect();
+        let want: Vec<u32> = {
+            let mut acc = Vec::new();
+            let mut counter = 0u32;
+            for &n in &dist {
+                acc.extend(counter..counter + n as u32);
+                counter += n as u32;
+            }
+            acc
+        };
+        for shards in [2usize, 4] {
+            let bps = 8 / shards;
+            let mut parts: Vec<GgArray<u32>> =
+                (0..shards).map(|_| GgArray::new(cfg(bps), DeviceSpec::a100())).collect();
+            let mut counter = 0u32;
+            for (b, &n) in dist.iter().enumerate() {
+                let chunk: Vec<u32> = (counter..counter + n as u32).collect();
+                counter += n as u32;
+                parts[b / bps].push_bulk_to_block(b % bps, &chunk).unwrap();
+            }
+            let sharded = flatten_concat(&mut parts).unwrap();
+            assert_eq!(sharded.data, want, "case {case}, {shards} shards");
+        }
+    }
+}

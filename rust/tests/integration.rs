@@ -26,7 +26,7 @@ fn drive(s: &mut dyn GrowableArray<u32>, w: &WorkloadSpec) -> (usize, u64) {
                     s.read_write(30.0, &mut |x| *x = x.wrapping_add(30));
                 }
             }
-            Step::Flatten => {} // flat structures are already flat
+            Step::Flatten | Step::Seal => {} // flat structures are already flat
         }
     }
     let mut h = 0xcbf29ce484222325u64;
@@ -76,7 +76,7 @@ fn ggarray_matches_baselines_content() {
                     gg.read_write_block(30.0, |x| *x = x.wrapping_add(30));
                 }
             }
-            Step::Flatten => {}
+            Step::Flatten | Step::Seal => {}
         }
     }
     // NOTE: GGArray's global order is block-major (each insert splits

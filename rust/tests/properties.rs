@@ -231,6 +231,140 @@ fn prop_vmm_accounting() {
     });
 }
 
+/// `insert_bulk` must conserve every submitted value — nothing lost,
+/// nothing duplicated, nothing reordered within a block — for all three
+/// insertion algorithms (their semantics are identical; only the cost
+/// model differs).
+#[test]
+fn prop_insert_bulk_conserves_values_all_kinds() {
+    use ggarray::ggarray::array::{GgArray, GgConfig};
+    use ggarray::insertion::InsertionKind;
+
+    let gen = CountsVec { max_len: 12, max_val: 400 };
+    check("insert_bulk conserves values", 0xC0115E7, 48, &gen, |chunks| {
+        for kind in InsertionKind::ALL {
+            let mut gg: GgArray<u32> = GgArray::new(
+                GgConfig { num_blocks: 8, threads_per_block: 256, first_bucket_size: 8, insertion: kind },
+                DeviceSpec::a100(),
+            );
+            let mut submitted: Vec<u32> = Vec::new();
+            let mut counter = 0u32;
+            for &c in chunks {
+                let vals: Vec<u32> = (0..c).map(|k| counter + k).collect();
+                counter += c;
+                gg.insert_bulk(&vals, kind).map_err(|e| format!("{}: {e}", kind.name()))?;
+                submitted.extend_from_slice(&vals);
+            }
+            if gg.len() != submitted.len() {
+                return Err(format!("{}: len {} != submitted {}", kind.name(), gg.len(), submitted.len()));
+            }
+            if gg.len() > gg.capacity() {
+                return Err(format!("{}: len {} > capacity {}", kind.name(), gg.len(), gg.capacity()));
+            }
+            let mut got = gg.to_vec();
+            got.sort_unstable();
+            let mut want = submitted.clone();
+            want.sort_unstable();
+            if got != want {
+                return Err(format!("{}: multiset mismatch after {} chunks", kind.name(), chunks.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `len() ≤ capacity()` must hold after ANY grow/shrink/clear sequence,
+/// with the heap ledger agreeing with the structure's own accounting at
+/// every step.
+#[test]
+fn prop_len_le_capacity_after_grow_shrink_clear() {
+    use ggarray::ggarray::array::{GgArray, GgConfig};
+    use ggarray::insertion::InsertionKind;
+
+    let gen = CountsVec { max_len: 30, max_val: 900 };
+    check("len ≤ capacity through grow/shrink/clear", 0x5C415E, 64, &gen, |ops| {
+        let mut gg: GgArray<u32> = GgArray::new(
+            GgConfig { num_blocks: 4, threads_per_block: 256, first_bucket_size: 4, insertion: InsertionKind::WarpScan },
+            DeviceSpec::a100(),
+        );
+        for (step, &op) in ops.iter().enumerate() {
+            match op % 4 {
+                // grow + insert
+                0 | 1 => {
+                    let n = (op as usize / 2) % 700;
+                    let split = gg.even_split(n);
+                    gg.grow_for(&split).map_err(|e| e.to_string())?;
+                    gg.insert_bulk(&vec![op; n], InsertionKind::WarpScan).map_err(|e| e.to_string())?;
+                }
+                // shrink to an arbitrary target (may exceed len: no-op)
+                2 => {
+                    gg.shrink_to(op as usize % 500);
+                }
+                // clear
+                _ => {
+                    gg.clear();
+                    gg.rebuild_index_charged();
+                }
+            }
+            if gg.len() > gg.capacity() {
+                return Err(format!("step {step}: len {} > capacity {}", gg.len(), gg.capacity()));
+            }
+            if gg.heap().used() != gg.allocated_bytes() {
+                return Err(format!(
+                    "step {step}: heap {} != structure {}",
+                    gg.heap().used(),
+                    gg.allocated_bytes()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `get`/`set` must round-trip at random global indices, and reject
+/// everything past the end.
+#[test]
+fn prop_get_set_roundtrip_random_indices() {
+    use ggarray::ggarray::array::{GgArray, GgConfig};
+    use ggarray::insertion::InsertionKind;
+
+    let gen = PairGen(CountsVec { max_len: 8, max_val: 500 }, U64Range { lo: 0, hi: u64::MAX / 2 });
+    check("get/set roundtrip", 0x6E75E7, 64, &gen, |(chunks, seed)| {
+        let mut gg: GgArray<u32> = GgArray::new(
+            GgConfig { num_blocks: 8, threads_per_block: 256, first_bucket_size: 8, insertion: InsertionKind::WarpScan },
+            DeviceSpec::a100(),
+        );
+        for (i, &c) in chunks.iter().enumerate() {
+            gg.insert_bulk(&vec![i as u32; c as usize], InsertionKind::WarpScan).map_err(|e| e.to_string())?;
+        }
+        let n = gg.len() as u64;
+        let mut rng = Rng::new(*seed);
+        for probe in 0..32 {
+            if n == 0 {
+                break;
+            }
+            let i = rng.below(n);
+            let v = 0xBEEF_0000 ^ probe as u32 ^ (i as u32);
+            if !gg.set(i, v) {
+                return Err(format!("set({i}) rejected with len {n}"));
+            }
+            if gg.get(i) != Some(v) {
+                return Err(format!("get({i}) = {:?}, want {v}", gg.get(i)));
+            }
+        }
+        // Past-the-end accesses must fail cleanly.
+        if gg.get(n).is_some() {
+            return Err(format!("get({n}) succeeded past the end"));
+        }
+        for past in [n, n + 1, n + 1000] {
+            if gg.get(past).is_some() {
+                return Err(format!("get({past}) succeeded past the end"));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Shadow-model fuzz: a random op sequence (insert / rw_b / rw_g /
 /// shrink / flatten) on the GGArray must agree with a plain Vec model at
 /// every step. This is the strongest single correctness check on the

@@ -1,0 +1,211 @@
+//! Sharded coordinator end-to-end: concurrency under mixed call/nowait
+//! traffic, and the ISSUE acceptance criteria — a 4-shard `two_phase`
+//! run produces byte-identical flattened contents to a 1-shard run, and
+//! the sealed-epoch path simulates cheaper per access than the unsealed
+//! GGArray path.
+
+use std::time::Duration;
+
+use ggarray::coordinator::batcher::BatchConfig;
+use ggarray::coordinator::request::{Request, Response};
+use ggarray::coordinator::service::{drive_workload, Coordinator, CoordinatorConfig, WorkloadRun};
+use ggarray::workload::WorkloadSpec;
+
+const CHUNK: usize = 4096;
+
+fn cfg(blocks: usize, shards: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        blocks,
+        shards,
+        first_bucket_size: 32,
+        use_artifacts: false,
+        // Deterministic flushes: full chunks flush by size, tails at the
+        // next barrier — never by wall-clock deadline.
+        batch: BatchConfig { max_values: CHUNK, max_delay: Duration::from_secs(3600) },
+        ..CoordinatorConfig::default()
+    }
+}
+
+// ------------------------------------------------------------------
+// Concurrency (satellite: threaded Client::call + insert_nowait, then
+// shutdown drains and the totals match)
+// ------------------------------------------------------------------
+
+#[test]
+fn concurrent_calls_and_nowait_inserts_conserve_elements() {
+    let threads = 8usize;
+    let rounds = 30usize;
+    let call_chunk = 32usize;
+    let nowait_chunk = 8usize;
+    let coord = Coordinator::start(CoordinatorConfig {
+        batch: BatchConfig { max_values: 256, max_delay: Duration::from_millis(1) },
+        ..cfg(32, 4)
+    });
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let client = coord.client();
+        handles.push(std::thread::spawn(move || {
+            let mut sum = 0f64;
+            for k in 0..rounds {
+                // Synchronous insert…
+                let base = (t * 1_000_000 + k * call_chunk) as f32;
+                let values: Vec<f32> = (0..call_chunk).map(|i| base + i as f32).collect();
+                sum += values.iter().map(|&v| v as f64).sum::<f64>();
+                match client.call(Request::Insert { values }) {
+                    Response::Inserted { count, .. } => assert_eq!(count, call_chunk as u64),
+                    other => panic!("{other:?}"),
+                }
+                // …interleaved with fire-and-forget traffic.
+                let nbase = (t * 1_000_000 + 500_000 + k * nowait_chunk) as f32;
+                let nowait: Vec<f32> = (0..nowait_chunk).map(|i| nbase + i as f32).collect();
+                sum += nowait.iter().map(|&v| v as f64).sum::<f64>();
+                client.insert_nowait(nowait);
+            }
+            sum
+        }));
+    }
+    let mut want_sum = 0f64;
+    for h in handles {
+        want_sum += h.join().unwrap();
+    }
+    let expect = (threads * rounds * (call_chunk + nowait_chunk)) as u64;
+    // A Query barriers every pending batch (the same drain Shutdown
+    // performs), making the totals observable before shutdown.
+    let _ = coord.call(Request::Query { index: 0 });
+    let snap = match coord.call(Request::Stats) {
+        Response::Stats(s) => s,
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(snap.elements_inserted, expect, "drained element count must match submitted");
+    assert_eq!(snap.len, expect);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.shards, 4);
+    assert_eq!(snap.per_shard_len.iter().sum::<u64>(), expect);
+    // Contents conserved, not just counted: sum over every element.
+    let mut got_sum = 0f64;
+    for i in 0..expect {
+        got_sum += coord.call(Request::Query { index: i }).expect_value().unwrap() as f64;
+    }
+    assert_eq!(got_sum, want_sum);
+    coord.shutdown();
+}
+
+#[test]
+fn concurrent_traffic_across_a_seal_epoch_boundary() {
+    // Threads keep inserting while the main thread seals: every element
+    // must land either in the sealed prefix or the live epoch — none
+    // dropped, none duplicated.
+    let threads = 4usize;
+    let rounds = 20usize;
+    let chunk = 16usize;
+    let coord = Coordinator::start(CoordinatorConfig {
+        batch: BatchConfig { max_values: 64, max_delay: Duration::from_millis(1) },
+        ..cfg(16, 4)
+    });
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let client = coord.client();
+        handles.push(std::thread::spawn(move || {
+            for k in 0..rounds {
+                let base = (t * 100_000 + k * chunk) as f32;
+                let values: Vec<f32> = (0..chunk).map(|i| base + i as f32).collect();
+                client.call(Request::Insert { values });
+            }
+        }));
+    }
+    // Seal mid-traffic a few times.
+    for _ in 0..3 {
+        std::thread::sleep(Duration::from_millis(2));
+        match coord.call(Request::Seal) {
+            Response::Sealed { .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let _ = coord.call(Request::Query { index: 0 });
+    let snap = match coord.call(Request::Stats) {
+        Response::Stats(s) => s,
+        other => panic!("{other:?}"),
+    };
+    let expect = (threads * rounds * chunk) as u64;
+    assert_eq!(snap.elements_inserted, expect);
+    assert_eq!(snap.len, expect);
+    assert_eq!(snap.epoch, 3);
+    assert_eq!(snap.seals, 3);
+    assert_eq!(snap.sealed_len + snap.per_shard_len.iter().sum::<u64>(), expect);
+    coord.shutdown();
+}
+
+// ------------------------------------------------------------------
+// Acceptance criteria
+// ------------------------------------------------------------------
+
+fn run_workload(w: &WorkloadSpec, shards: usize) -> (WorkloadRun, u64) {
+    let c = Coordinator::start(cfg(32, shards));
+    let run = drive_workload(&c, w, CHUNK);
+    let final_checksum = match c.call(Request::Flatten) {
+        Response::Flattened { checksum, len, .. } => {
+            assert_eq!(len, w.expected_final);
+            checksum
+        }
+        other => panic!("{other:?}"),
+    };
+    c.shutdown();
+    (run, final_checksum)
+}
+
+#[test]
+fn four_shard_two_phase_byte_identical_to_one_shard() {
+    let w = WorkloadSpec::two_phase_sharded(1 << 18, 1, 2, 3);
+    let (run1, final1) = run_workload(&w, 1);
+    let (run4, final4) = run_workload(&w, 4);
+    assert_eq!(run1.seal_checksums.len(), 3);
+    assert_eq!(
+        run1.seal_checksums, run4.seal_checksums,
+        "sealed epochs must be byte-identical across shard counts"
+    );
+    assert_eq!(final1, final4, "final flattened contents must be byte-identical");
+    assert_eq!(run1.inserted, run4.inserted);
+}
+
+#[test]
+fn sealed_epoch_work_cheaper_than_unsealed() {
+    // Same element stream, same phases: the sealed run does its work
+    // passes over flat (coalesced) epochs, the unsealed run over live
+    // GGArray data (rw_b). The simulated per-access cost must favour the
+    // sealed path — the paper's two-phase payoff, now service-level.
+    let sealed_wl = WorkloadSpec::two_phase_sharded(1 << 18, 1, 2, 3);
+    let unsealed_wl = WorkloadSpec::two_phase(1 << 18, 1, 2, 3);
+    for shards in [1usize, 4] {
+        let (sealed_run, _) = run_workload(&sealed_wl, shards);
+        let (unsealed_run, _) = run_workload(&unsealed_wl, shards);
+        assert!(
+            sealed_run.work_sim_us < unsealed_run.work_sim_us,
+            "{shards} shards: sealed work {} µs !< unsealed {} µs",
+            sealed_run.work_sim_us,
+            unsealed_run.work_sim_us
+        );
+    }
+}
+
+#[test]
+fn seal_checksum_matches_flatten_of_same_data() {
+    // Sealing is just a retained flatten: for a single epoch the sealed
+    // checksum must equal the Flatten checksum taken right before it.
+    let c = Coordinator::start(cfg(32, 4));
+    c.call(Request::Insert { values: (0..5000).map(|i| (i * 3) as f32).collect() });
+    let flat_sum = match c.call(Request::Flatten) {
+        Response::Flattened { checksum, .. } => checksum,
+        other => panic!("{other:?}"),
+    };
+    let (epoch, epoch_len, sealed_len, _sim, seal_sum) = c.call(Request::Seal).expect_sealed();
+    assert_eq!(epoch, 1);
+    assert_eq!(epoch_len, 5000);
+    assert_eq!(sealed_len, 5000);
+    assert_eq!(seal_sum, flat_sum, "seal must capture exactly the flatten contents");
+    // And the sealed data serves reads.
+    assert_eq!(c.call(Request::Query { index: 0 }).expect_value(), Some(0.0));
+    c.shutdown();
+}

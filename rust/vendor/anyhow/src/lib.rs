@@ -1,0 +1,95 @@
+//! Offline subset of the `anyhow` crate: a message-carrying [`Error`]
+//! convertible from any `std::error::Error`, the [`Result`] alias, and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Exactly the surface this
+//! workspace uses — no backtraces, no downcasting, no context chains.
+
+use std::fmt;
+
+/// A type-erased error holding a rendered message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`; that is what
+// makes this blanket conversion coherent (the same trick the real anyhow
+// uses).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macro_and_conversion_roundtrip() {
+        fn io_fail() -> crate::Result<()> {
+            std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(())
+        }
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+
+        fn guarded(n: u32) -> crate::Result<u32> {
+            crate::ensure!(n < 10, "n too big: {n}");
+            if n == 7 {
+                crate::bail!("unlucky {n}");
+            }
+            Ok(n)
+        }
+        assert_eq!(guarded(3).unwrap(), 3);
+        assert!(guarded(12).unwrap_err().to_string().contains("12"));
+        assert!(guarded(7).unwrap_err().to_string().contains("unlucky"));
+        let e = crate::anyhow!("x = {}", 5);
+        assert_eq!(e.to_string(), "x = 5");
+        assert_eq!(format!("{e:?}"), "x = 5");
+    }
+}

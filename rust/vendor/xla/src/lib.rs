@@ -1,0 +1,164 @@
+//! Null PJRT backend.
+//!
+//! This crate mirrors the slice of the `xla` (xla-rs / xla_extension)
+//! API that the runtime layer uses, but carries no native XLA runtime:
+//! creating the CPU client succeeds (so diagnostics report a platform),
+//! while parsing or executing HLO returns a clear "runtime unavailable"
+//! error. Every caller in this workspace already handles those errors by
+//! falling back to host compute with identical numerics, so the full
+//! system builds, tests, and runs offline; dropping the real `xla` crate
+//! back in re-enables AOT execution without source changes.
+
+use std::fmt;
+
+/// Error type matching the real crate's `xla::Error` role.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable (null xla backend — install xla_extension and swap the real `xla` crate in to enable AOT execution)";
+
+/// Supported element types for [`Literal`] construction/readback.
+pub trait NativeType: Copy + fmt::Debug {}
+
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+
+/// Host-side tensor value. The null backend stores nothing beyond the
+/// fact that one was requested; executing is impossible anyway.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    elements: usize,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { elements: v.len() }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.elements {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.elements
+            )));
+        }
+        Ok(self.clone())
+    }
+
+    /// Read back as a host vector — never reachable in the null backend
+    /// (no executable can produce a result literal).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+
+    /// Unpack a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+}
+
+/// Parsed `HloModuleProto` (text interchange format).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).exists() {
+            return Err(Error(format!("cannot read {path}: no such file")));
+        }
+        Err(Error(format!("cannot parse {path}: {UNAVAILABLE}")))
+    }
+}
+
+/// An XLA computation wrapping a module proto.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client. Succeeds so platform diagnostics work; compilation is
+    /// where the null backend reports itself.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+}
+
+/// Compiled executable handle (never constructible in the null backend,
+/// but the type must exist for caches and signatures).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+}
+
+/// Device buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(UNAVAILABLE.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_cpu_but_cannot_compile() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu");
+        assert!(c.compile(&XlaComputation).is_err());
+    }
+
+    #[test]
+    fn missing_hlo_file_names_the_path() {
+        let e = HloModuleProto::from_text_file("/no/such/file.hlo.txt").unwrap_err();
+        assert!(e.to_string().contains("file.hlo.txt"));
+    }
+
+    #[test]
+    fn literal_reshape_checks_element_count() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+}
