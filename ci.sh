@@ -27,7 +27,12 @@ cargo run --release --bin repro -- fig3 --steps 4 --draws 200 --quiet --out "$SM
 echo "== smoke: sharded two-phase example (byte-identity + sealed payoff) =="
 cargo run --release --example sharded_two_phase
 
-echo "== smoke: shard bench (modeled sealed-vs-unsealed assertions) =="
+echo "== smoke: shard bench (parallel time model gate) =="
+# bench_shards asserts the parallel-time-model acceptance criteria and
+# exits non-zero when they fail:
+#   * insert-heavy: 4-shard critical-path sim time < 1-shard,
+#   * device totals exceed the critical path on multi-shard runs,
+#   * sealed work cheaper than unsealed at 1 and 4 shards.
 cargo bench --bench bench_shards
 
 echo "ci.sh: all green"

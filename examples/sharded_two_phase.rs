@@ -18,6 +18,7 @@
 use std::time::Duration;
 
 use ggarray::coordinator::batcher::BatchConfig;
+use ggarray::coordinator::metrics::MetricsSnapshot;
 use ggarray::coordinator::request::{Request, Response};
 use ggarray::coordinator::service::{drive_workload, Coordinator, CoordinatorConfig, WorkloadRun};
 use ggarray::workload::WorkloadSpec;
@@ -42,8 +43,8 @@ fn config(shards: usize) -> CoordinatorConfig {
 }
 
 /// Run a workload and capture (run summary, final flatten checksum,
-/// final stats line).
-fn run(w: &WorkloadSpec, shards: usize) -> (WorkloadRun, u64, String) {
+/// final metrics snapshot).
+fn run(w: &WorkloadSpec, shards: usize) -> (WorkloadRun, u64, MetricsSnapshot) {
     let c = Coordinator::start(config(shards));
     let run = drive_workload(&c, w, CHUNK);
     let final_checksum = match c.call(Request::Flatten) {
@@ -53,10 +54,7 @@ fn run(w: &WorkloadSpec, shards: usize) -> (WorkloadRun, u64, String) {
         }
         other => panic!("flatten failed: {other:?}"),
     };
-    let stats = match c.call(Request::Stats) {
-        Response::Stats(s) => s.to_string(),
-        other => panic!("stats failed: {other:?}"),
-    };
+    let stats = c.call(Request::Stats).expect_stats();
     c.shutdown();
     (run, final_checksum, stats)
 }
@@ -68,7 +66,7 @@ fn main() {
     println!("final size {} over {PHASES} phases, {TOTAL_BLOCKS} total blocks\n", sealed_wl.expected_final);
 
     // --- layout invariance: 1 shard vs 4 shards, byte-identical ---
-    let (run1, final1, _) = run(&sealed_wl, 1);
+    let (run1, final1, stats1) = run(&sealed_wl, 1);
     let (run4, final4, stats4) = run(&sealed_wl, 4);
     assert_eq!(
         run1.seal_checksums, run4.seal_checksums,
@@ -92,6 +90,22 @@ fn main() {
     println!("  unsealed (GGArray rw_b): {unsealed_ms:>9.3} ms");
     println!("  sealed   (flat path):    {sealed_ms:>9.3} ms   ({:.1}× faster)", unsealed_ms / sealed_ms);
     println!("  seal cost (flatten):     {:>9.3} ms", run4.seal_sim_us / 1e3);
+
+    // --- parallel time model: shard speedup visible in sim time ---
+    assert!(
+        stats4.sim_insert_ms < stats1.sim_insert_ms,
+        "4-shard insert critical path {} ms must beat 1-shard {} ms",
+        stats4.sim_insert_ms,
+        stats1.sim_insert_ms
+    );
+    println!("\nparallel time model (insert phases, simulated):");
+    println!("  1 shard  critical path:  {:>9.3} ms", stats1.sim_insert_ms);
+    println!(
+        "  4 shards critical path:  {:>9.3} ms   ({:.1}× speedup, {:.3} ms device total)",
+        stats4.sim_insert_ms,
+        stats1.sim_insert_ms / stats4.sim_insert_ms,
+        stats4.device_insert_ms
+    );
 
     println!("\n--- 4-shard coordinator metrics ---\n{stats4}");
     println!("\nsharded_two_phase OK");

@@ -1,6 +1,13 @@
 //! Sharded-coordinator benches: wall-clock request-path throughput vs
 //! shard count, plus the modeled (simulated-GPU) cost split between the
-//! sealed flat path and the unsealed GGArray path.
+//! sealed flat path and the unsealed GGArray path — now under the
+//! parallel time model (critical path = max over concurrent shards;
+//! `device_*` = aggregate device-seconds).
+//!
+//! This bench doubles as the CI gate for the parallel time model: it
+//! *asserts* that 4-shard critical-path sim time beats 1-shard on the
+//! insert-heavy scenario (the speedup the old sum-over-shards ledger
+//! could never show), and that sealed work stays cheaper than unsealed.
 //! Run: `cargo bench --bench bench_shards`
 
 use std::time::Duration;
@@ -35,6 +42,17 @@ fn insert_all(c: &Coordinator) {
     }
 }
 
+/// Insert-heavy scenario: drive the full stream, then read the insert
+/// ledger — `(critical_path_ms, device_total_ms)`.
+fn insert_heavy_sim(shards: usize) -> (f64, f64) {
+    let c = Coordinator::start(config(shards));
+    insert_all(&c);
+    let _ = c.call(Request::Query { index: 0 }); // barrier pending batches
+    let snap = c.call(Request::Stats).expect_stats();
+    c.shutdown();
+    (snap.sim_insert_ms, snap.device_insert_ms)
+}
+
 fn main() {
     let mut suite = BenchSuite::new("shards — request path vs shard count, sealed vs unsealed work")
         .with_config(BenchConfig {
@@ -57,6 +75,30 @@ fn main() {
             black_box(c.call(Request::Stats));
             c.shutdown();
         });
+    }
+
+    // --- modeled: insert-heavy critical path vs device total (CI gate) ---
+    let (sim1, _) = insert_heavy_sim(1);
+    suite.record("sim insert critical path (1 shard) [µs]", sim1 * 1e3);
+    for shards in [2usize, 4, 8] {
+        let (sim_s, dev_s) = insert_heavy_sim(shards);
+        suite.record(&format!("sim insert critical path ({shards} shards) [µs]"), sim_s * 1e3);
+        suite.record(
+            &format!("sim insert speedup ({shards} shards) [×]"),
+            sim1 / sim_s,
+        );
+        assert!(
+            dev_s > sim_s,
+            "{shards} shards: device total {dev_s} ms !> critical path {sim_s} ms"
+        );
+        if shards == 4 {
+            // The ci.sh gate: multi-shard speedup must be visible in the
+            // sim-time wall-model, not just in wall-clock.
+            assert!(
+                sim_s < sim1,
+                "insert-heavy: 4-shard critical path {sim_s} ms !< 1-shard {sim1} ms"
+            );
+        }
     }
 
     // --- modeled: one work pass, unsealed vs sealed, per shard count ---

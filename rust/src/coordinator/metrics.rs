@@ -1,9 +1,72 @@
 //! Service metrics: request counters, simulated-time ledger, wall-clock
 //! latency summaries.
+//!
+//! The simulated-time ledger uses the **parallel time model**: shards are
+//! thread-block groups of one device executing concurrently, so an
+//! operation's wall-model cost is the *max* over the participating
+//! shards' clock deltas (the critical path) plus any serial coordinator
+//! term — not the sum. The sum survives as `device_*` totals
+//! (device-seconds of work issued), and the two together give the
+//! shard-parallel utilisation. [`ParallelCost`] carries both.
 
 use std::time::Instant;
 
 use crate::util::stats::Welford;
+
+/// Simulated cost of one service operation under the parallel time
+/// model.
+///
+/// * `critical_path_us` — the wall-model: serial coordinator work plus
+///   the slowest participating shard (shards run concurrently on the
+///   device, DynaSOAr-style, so the op completes when the last one
+///   does).
+/// * `total_device_us` — aggregate device-seconds: the *sum* of every
+///   participant's delta plus the serial term. This is what the ledger
+///   summed (incorrectly, as wall time) before the parallel model.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ParallelCost {
+    pub critical_path_us: f64,
+    pub total_device_us: f64,
+}
+
+impl ParallelCost {
+    pub fn zero() -> ParallelCost {
+        ParallelCost::default()
+    }
+
+    /// A purely serial cost (coordinator-side work: routing, sync,
+    /// single-kernel passes over the sealed store).
+    pub fn serial(us: f64) -> ParallelCost {
+        ParallelCost { critical_path_us: us, total_device_us: us }
+    }
+
+    /// Fold per-shard clock deltas executed *concurrently*: the critical
+    /// path is the slowest shard, the device total is the sum.
+    pub fn from_parallel(deltas: impl IntoIterator<Item = f64>) -> ParallelCost {
+        let mut cost = ParallelCost::zero();
+        for d in deltas {
+            cost.critical_path_us = cost.critical_path_us.max(d);
+            cost.total_device_us += d;
+        }
+        cost
+    }
+
+    /// Sequential composition: `other` starts after `self` finishes
+    /// (e.g. the sealed-store pass launched behind the shard kernels).
+    pub fn then(self, other: ParallelCost) -> ParallelCost {
+        ParallelCost {
+            critical_path_us: self.critical_path_us + other.critical_path_us,
+            total_device_us: self.total_device_us + other.total_device_us,
+        }
+    }
+
+    /// Parallel speedup exposed by the op: device-seconds issued per
+    /// wall-model second (1.0 = fully serial, S = perfect S-shard
+    /// scaling). NaN when nothing was charged.
+    pub fn speedup(&self) -> f64 {
+        self.total_device_us / self.critical_path_us
+    }
+}
 
 /// Live metrics owned by the service worker.
 #[derive(Debug)]
@@ -19,10 +82,18 @@ pub struct Metrics {
     pub queries: u64,
     pub errors: u64,
     pub pjrt_executions: u64,
-    /// Simulated GPU µs per op class.
+    /// Sealed-segment compaction passes performed.
+    pub compactions: u64,
+    /// Simulated wall-model (critical-path) µs per op class — shards
+    /// execute concurrently, so these are max-over-shards, not sums.
     pub sim_insert_us: f64,
     pub sim_work_us: f64,
     pub sim_flatten_us: f64,
+    /// Aggregate device-seconds per op class (sum over shards) — the
+    /// utilisation companion to the `sim_*` wall-model.
+    pub device_insert_us: f64,
+    pub device_work_us: f64,
+    pub device_flatten_us: f64,
     /// Wall-clock per-request latency (µs).
     latency: Welford,
 }
@@ -40,15 +111,37 @@ impl Metrics {
             queries: 0,
             errors: 0,
             pjrt_executions: 0,
+            compactions: 0,
             sim_insert_us: 0.0,
             sim_work_us: 0.0,
             sim_flatten_us: 0.0,
+            device_insert_us: 0.0,
+            device_work_us: 0.0,
+            device_flatten_us: 0.0,
             latency: Welford::new(),
         }
     }
 
     pub fn observe_latency_us(&mut self, us: f64) {
         self.latency.push(us);
+    }
+
+    /// Charge one op's [`ParallelCost`] to the insert ledger.
+    pub fn charge_insert(&mut self, cost: ParallelCost) {
+        self.sim_insert_us += cost.critical_path_us;
+        self.device_insert_us += cost.total_device_us;
+    }
+
+    /// Charge one op's [`ParallelCost`] to the work ledger.
+    pub fn charge_work(&mut self, cost: ParallelCost) {
+        self.sim_work_us += cost.critical_path_us;
+        self.device_work_us += cost.total_device_us;
+    }
+
+    /// Charge one op's [`ParallelCost`] to the flatten/seal ledger.
+    pub fn charge_flatten(&mut self, cost: ParallelCost) {
+        self.sim_flatten_us += cost.critical_path_us;
+        self.device_flatten_us += cost.total_device_us;
     }
 
     pub fn snapshot(&self, len: u64, capacity: u64, allocated_bytes: u64) -> MetricsSnapshot {
@@ -63,9 +156,13 @@ impl Metrics {
             queries: self.queries,
             errors: self.errors,
             pjrt_executions: self.pjrt_executions,
+            compactions: self.compactions,
             sim_insert_ms: self.sim_insert_us / 1e3,
             sim_work_ms: self.sim_work_us / 1e3,
             sim_flatten_ms: self.sim_flatten_us / 1e3,
+            device_insert_ms: self.device_insert_us / 1e3,
+            device_work_ms: self.device_work_us / 1e3,
+            device_flatten_ms: self.device_flatten_us / 1e3,
             mean_latency_us: self.latency.mean(),
             p_latency_count: self.latency.count(),
             len,
@@ -77,6 +174,7 @@ impl Metrics {
             shards: 1,
             epoch: 0,
             sealed_len: 0,
+            sealed_segments: 0,
             per_shard_len: Vec::new(),
         }
     }
@@ -101,9 +199,16 @@ pub struct MetricsSnapshot {
     pub queries: u64,
     pub errors: u64,
     pub pjrt_executions: u64,
+    /// Sealed-segment compaction passes performed.
+    pub compactions: u64,
+    /// Wall-model (critical-path) simulated ms per op class.
     pub sim_insert_ms: f64,
     pub sim_work_ms: f64,
     pub sim_flatten_ms: f64,
+    /// Aggregate device-seconds (sum-over-shards) ms per op class.
+    pub device_insert_ms: f64,
+    pub device_work_ms: f64,
+    pub device_flatten_ms: f64,
     pub mean_latency_us: f64,
     pub p_latency_count: u64,
     pub len: u64,
@@ -115,6 +220,9 @@ pub struct MetricsSnapshot {
     pub epoch: u64,
     /// Elements in the sealed (flat, fast-access) prefix.
     pub sealed_len: u64,
+    /// Flat segments currently backing the sealed prefix (compaction
+    /// keeps this bounded).
+    pub sealed_segments: usize,
     /// Live-epoch elements per shard (aggregated OpReports land in the
     /// sim_* ledgers; this exposes the balance).
     pub per_shard_len: Vec<u64>,
@@ -128,13 +236,25 @@ impl MetricsSnapshot {
         shards: usize,
         epoch: u64,
         sealed_len: u64,
+        sealed_segments: usize,
         per_shard_len: Vec<u64>,
     ) -> MetricsSnapshot {
         self.shards = shards;
         self.epoch = epoch;
         self.sealed_len = sealed_len;
+        self.sealed_segments = sealed_segments;
         self.per_shard_len = per_shard_len;
         self
+    }
+
+    /// Observed shard-parallel speedup: device-seconds issued per
+    /// wall-model second across all op classes (1.0 = serial; up to
+    /// `shards` for perfectly balanced dispatch). NaN before any
+    /// simulated work.
+    pub fn parallel_speedup(&self) -> f64 {
+        let sim = self.sim_insert_ms + self.sim_work_ms + self.sim_flatten_ms;
+        let device = self.device_insert_ms + self.device_work_ms + self.device_flatten_ms;
+        device / sim
     }
 
     /// Memory overhead vs live data (the paper's ≤2× claim, observable
@@ -167,12 +287,21 @@ impl std::fmt::Display for MetricsSnapshot {
         writeln!(f, "queries              {}", self.queries)?;
         writeln!(f, "errors               {}", self.errors)?;
         writeln!(f, "PJRT executions      {}", self.pjrt_executions)?;
-        writeln!(f, "sim insert/work/flat {:.2} / {:.2} / {:.2} ms", self.sim_insert_ms, self.sim_work_ms, self.sim_flatten_ms)?;
+        writeln!(f, "sim insert/work/flat {:.2} / {:.2} / {:.2} ms (critical path)", self.sim_insert_ms, self.sim_work_ms, self.sim_flatten_ms)?;
+        let speedup = self.parallel_speedup();
+        writeln!(
+            f,
+            "device insert/work/flat {:.2} / {:.2} / {:.2} ms (speedup {})",
+            self.device_insert_ms,
+            self.device_work_ms,
+            self.device_flatten_ms,
+            if speedup.is_finite() { format!("{speedup:.2}×") } else { "—".into() }
+        )?;
         writeln!(f, "mean request latency {:.1} µs over {}", self.mean_latency_us, self.p_latency_count)?;
         writeln!(
             f,
-            "shards / epoch       {} / {} (sealed prefix {} elements)",
-            self.shards, self.epoch, self.sealed_len
+            "shards / epoch       {} / {} (sealed prefix {} elements in {} segments, {} compactions)",
+            self.shards, self.epoch, self.sealed_len, self.sealed_segments, self.compactions
         )?;
         writeln!(f, "len / capacity       {} / {}", self.len, self.capacity)?;
         write!(f, "allocated            {} (overhead {:.2}×)", crate::util::tables::fmt_bytes(self.allocated_bytes), self.overhead_ratio())
@@ -204,5 +333,31 @@ mod tests {
     fn empty_overhead_is_nan() {
         let m = Metrics::new();
         assert!(m.snapshot(0, 0, 0).overhead_ratio().is_nan());
+    }
+
+    #[test]
+    fn parallel_cost_folds_max_and_sum() {
+        let c = ParallelCost::from_parallel([10.0, 4.0, 7.0]);
+        assert_eq!(c.critical_path_us, 10.0);
+        assert_eq!(c.total_device_us, 21.0);
+        assert!((c.speedup() - 2.1).abs() < 1e-12);
+        // Sequential composition adds both components.
+        let s = c.then(ParallelCost::serial(5.0));
+        assert_eq!(s.critical_path_us, 15.0);
+        assert_eq!(s.total_device_us, 26.0);
+        assert_eq!(ParallelCost::from_parallel([]), ParallelCost::zero());
+    }
+
+    #[test]
+    fn ledger_separates_critical_path_from_device_totals() {
+        let mut m = Metrics::new();
+        m.charge_insert(ParallelCost { critical_path_us: 100.0, total_device_us: 400.0 });
+        m.charge_work(ParallelCost { critical_path_us: 50.0, total_device_us: 50.0 });
+        let s = m.snapshot(10, 10, 40);
+        assert!((s.sim_insert_ms - 0.1).abs() < 1e-12);
+        assert!((s.device_insert_ms - 0.4).abs() < 1e-12);
+        assert!((s.sim_work_ms - 0.05).abs() < 1e-12);
+        // Speedup over both classes: 450 device µs in 150 wall µs.
+        assert!((s.parallel_speedup() - 3.0).abs() < 1e-9);
     }
 }

@@ -39,13 +39,22 @@ pub enum Response {
     },
     Worked {
         calls: u32,
+        /// Wall-model simulated time (µs): serial coordinator term plus
+        /// the critical path over concurrently-executing shards.
         sim_us: f64,
+        /// Aggregate device-seconds (µs): the sum over every
+        /// participating shard — `device_us / sim_us` is the op's
+        /// shard-parallel speedup.
+        device_us: f64,
         /// PJRT executions performed (0 on the host fallback path).
         pjrt_executions: u64,
     },
     Flattened {
         len: u64,
+        /// Wall-model simulated time (µs, critical path over shards).
         sim_us: f64,
+        /// Aggregate device-seconds (µs, sum over shards).
+        device_us: f64,
         /// Checksum of the flattened data (order-sensitive) for e2e
         /// validation.
         checksum: u64,
@@ -57,7 +66,14 @@ pub enum Response {
         epoch_len: u64,
         /// Total elements across all sealed epochs.
         sealed_len: u64,
+        /// Flat segments backing the sealed prefix after this seal
+        /// (compaction keeps it bounded).
+        sealed_segments: usize,
+        /// Wall-model simulated time (µs, critical path over shards,
+        /// compaction gather included).
         sim_us: f64,
+        /// Aggregate device-seconds (µs, sum over shards).
+        device_us: f64,
         /// Checksum of this epoch's flattened data (order-sensitive).
         checksum: u64,
     },
@@ -85,11 +101,19 @@ impl Response {
         }
     }
 
+    /// Convenience for tests/benches: the metrics snapshot or panic.
+    pub fn expect_stats(self) -> MetricsSnapshot {
+        match self {
+            Response::Stats(s) => s,
+            other => panic!("expected Stats, got {other:?}"),
+        }
+    }
+
     /// Convenience for tests: `(epoch, epoch_len, sealed_len, sim_us,
     /// checksum)` or panic.
     pub fn expect_sealed(self) -> (u64, u64, u64, f64, u64) {
         match self {
-            Response::Sealed { epoch, epoch_len, sealed_len, sim_us, checksum } => {
+            Response::Sealed { epoch, epoch_len, sealed_len, sim_us, checksum, .. } => {
                 (epoch, epoch_len, sealed_len, sim_us, checksum)
             }
             other => panic!("expected Sealed, got {other:?}"),

@@ -49,37 +49,38 @@ pub fn route(policy: Policy, sizes: &[u64], n: usize, batch_seq: u64) -> Vec<usi
         }
         Policy::LeastLoaded => {
             // Water-filling: raise the lowest blocks to a common level.
+            // Monotone fill invariant: a level pass never raises a block
+            // past the next (untouched) block's size, and the remainder
+            // is spread base + at-most-one, so whenever `n` covers the
+            // total gap to the tallest block the post-route spread is
+            // max−min ≤ 1.
             let mut order: Vec<usize> = (0..b).collect();
             order.sort_by_key(|&i| sizes[i]);
             let mut counts = vec![0usize; b];
             let mut remaining = n as u64;
-            // Level pass: bring each prefix up to the next block's size.
-            for k in 0..b {
-                if remaining == 0 {
+            // Grow the active prefix: raise the `filled` lowest blocks
+            // exactly to the next block's size while the budget covers
+            // the full step (the tight gap: width × height, no +1 slack).
+            let mut level = sizes[order[0]];
+            let mut filled = 1usize;
+            while filled < b {
+                let next = sizes[order[filled]];
+                let step = (next - level).saturating_mul(filled as u64);
+                if step > remaining {
                     break;
                 }
-                let next_level = if k + 1 < b { sizes[order[k + 1]] } else { u64::MAX };
-                let cur_level = sizes[order[k]] + counts[order[k]] as u64;
-                if next_level > cur_level {
-                    let gap = (next_level - cur_level).min(remaining / (k as u64 + 1) + 1);
-                    // Fill the k+1 lowest blocks up by `gap` each (bounded
-                    // by remaining).
-                    for &i in &order[..=k] {
-                        let add = gap.min(remaining);
-                        counts[i] += add as usize;
-                        remaining -= add;
-                        if remaining == 0 {
-                            break;
-                        }
-                    }
-                }
+                remaining -= step;
+                level = next;
+                filled += 1;
             }
-            // Distribute any tail evenly.
-            let mut i = 0;
-            while remaining > 0 {
-                counts[order[i % b]] += 1;
-                remaining -= 1;
-                i += 1;
+            // Spread what's left over the active prefix: base for all,
+            // one extra for the first `remaining % filled` — final
+            // heights within the prefix differ by at most 1 and never
+            // exceed the first untouched block's size.
+            let base = remaining / filled as u64;
+            let extra = (remaining % filled as u64) as usize;
+            for (j, &i) in order[..filled].iter().enumerate() {
+                counts[i] = (level - sizes[i] + base + u64::from(j < extra)) as usize;
             }
             counts
         }
@@ -159,10 +160,33 @@ mod tests {
         let after: Vec<u64> = sizes.iter().zip(&counts).map(|(&s, &c)| s + c as u64).collect();
         let max = *after.iter().max().unwrap();
         let min = *after.iter().min().unwrap();
-        assert!(max - min <= 2, "after {after:?}");
+        assert!(max - min <= 1, "after {after:?}");
         // Strictly better balance than the even split.
         let even = route(Policy::Even, &sizes, 200, 0);
         assert!(imbalance_after(&sizes, &counts) < imbalance_after(&sizes, &even));
+    }
+
+    #[test]
+    fn least_loaded_level_pass_never_overshoots() {
+        // Regression: the old level pass capped the fill at
+        // `remaining/(k+1) + 1`, which could raise low blocks past the
+        // next level and leave a max−min of 2+ even when the batch was
+        // big enough to fully level the store (e.g. [0,0,0] with n=4
+        // produced [2,2,0]).
+        let sizes = vec![0u64, 0, 0];
+        let counts = route(Policy::LeastLoaded, &sizes, 4, 0);
+        let after: Vec<u64> = sizes.iter().zip(&counts).map(|(&s, &c)| s + c as u64).collect();
+        let max = *after.iter().max().unwrap();
+        let min = *after.iter().min().unwrap();
+        assert!(max - min <= 1, "after {after:?}");
+        // Partial fills stay below the first untouched block.
+        let sizes = vec![10u64, 2, 50];
+        let counts = route(Policy::LeastLoaded, &sizes, 11, 0);
+        let after: Vec<u64> = sizes.iter().zip(&counts).map(|(&s, &c)| s + c as u64).collect();
+        // 8 raise block 1 to 10, remaining 3 spread over {0,1}: ≤ 12.
+        assert!(after[0] <= 12 && after[1] <= 12, "after {after:?}");
+        assert_eq!(after[2], 50, "tallest block untouched by a partial fill");
+        assert!(after.iter().take(2).all(|&h| h <= 50));
     }
 
     #[test]

@@ -13,6 +13,15 @@
 //! work over the sealed prefix run at static-array (coalesced) cost; the
 //! live epoch keeps paying GGArray costs until it, too, is sealed.
 //!
+//! Simulated time follows the **parallel time model**: shards are
+//! concurrent thread-block groups of one device, so each dispatching op
+//! (insert batch, work, flatten, seal) charges the ledger the *max* over
+//! the participating shards' clock deltas — the critical path — plus an
+//! explicit serial coordinator term (host sync for routing/dispatch) and
+//! any serial single-kernel passes over the sealed store. The per-shard
+//! sums survive as `device_*` aggregate totals; see
+//! [`super::metrics::ParallelCost`].
+//!
 //! No async runtime is available offline; the event loop is a plain
 //! blocking channel with deadline-aware `recv_timeout`, which for an
 //! in-process service is equivalent to (and simpler than) a tokio
@@ -25,11 +34,12 @@ use std::time::{Duration, Instant};
 use crate::ggarray::flatten::{self, ShardedFlattened};
 use crate::insertion::InsertionKind;
 use crate::runtime::Executor;
+use crate::sim::clock::{Category, Clock};
 use crate::sim::spec::DeviceSpec;
 use crate::workload::{synth_f32, Step, WorkloadSpec};
 
 use super::batcher::{BatchConfig, Batcher};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, ParallelCost};
 use super::request::{checksum, Request, Response};
 use super::router::{self, Policy};
 use super::shard::{EpochManager, Shard, ShardConfig};
@@ -57,6 +67,10 @@ pub struct CoordinatorConfig {
     /// Independent GGArray shards, each owning `blocks / shards`
     /// consecutive blocks of the global block space.
     pub shards: usize,
+    /// Sealed-segment compaction threshold: once the epoch store holds
+    /// more than this many flat segments, a seal triggers one modeled
+    /// gather pass merging them into a single segment (0 disables).
+    pub compact_segments: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -72,8 +86,77 @@ impl Default for CoordinatorConfig {
             work_iters: 30,
             heap_capacity: None,
             shards: 1,
+            compact_segments: 4,
         }
     }
+}
+
+/// Typed rejection of an invalid [`CoordinatorConfig`] — returned by
+/// [`Coordinator::try_start`] instead of tripping asserts (or silently
+/// dropping blocks) deep inside the worker.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConfigError {
+    /// `shards == 0`: the worker needs at least one shard.
+    NoShards,
+    /// `blocks == 0`: the router needs at least one block.
+    NoBlocks,
+    /// `blocks % shards != 0`: integer division would silently drop the
+    /// remainder blocks from the global block space and later trip the
+    /// `split_for_shards` divisibility assert.
+    UnevenBlocks { blocks: usize, shards: usize },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::NoShards => write!(f, "coordinator needs at least one shard"),
+            ConfigError::NoBlocks => write!(f, "coordinator needs at least one block"),
+            ConfigError::UnevenBlocks { blocks, shards } => write!(
+                f,
+                "blocks ({blocks}) must divide evenly into shards ({shards}); \
+                 {} remainder block(s) would be lost",
+                blocks % shards
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl CoordinatorConfig {
+    /// Check the shard/block geometry before any worker state is built.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.shards == 0 {
+            return Err(ConfigError::NoShards);
+        }
+        if self.blocks == 0 {
+            return Err(ConfigError::NoBlocks);
+        }
+        if self.blocks % self.shards != 0 {
+            return Err(ConfigError::UnevenBlocks { blocks: self.blocks, shards: self.shards });
+        }
+        Ok(())
+    }
+}
+
+/// Carve a total heap budget into per-shard budgets without losing the
+/// remainder: every shard gets `total / shards` bytes and the first
+/// `total % shards` shards get one extra byte each, so the budgets sum
+/// to exactly `total`. `shards` must be positive (the coordinator
+/// guarantees it via [`CoordinatorConfig::validate`]).
+pub fn split_heap_budget(total: u64, shards: usize) -> Vec<u64> {
+    debug_assert!(shards > 0, "split_heap_budget needs at least one shard");
+    let base = total / shards as u64;
+    let rem = total % shards as u64;
+    (0..shards as u64).map(|k| base + u64::from(k < rem)).collect()
+}
+
+/// Per-clock snapshot taken at the start of an op; see
+/// [`Worker::cost_since`].
+struct ClockMarks {
+    shards: Vec<f64>,
+    epochs: f64,
+    coord: f64,
 }
 
 enum Envelope {
@@ -87,22 +170,23 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the worker thread.
+    /// Start the worker thread, panicking on an invalid config (tests
+    /// and examples; services that own their config should prefer
+    /// [`Coordinator::try_start`]).
     pub fn start(cfg: CoordinatorConfig) -> Coordinator {
-        assert!(cfg.shards > 0, "coordinator needs at least one shard");
-        assert_eq!(
-            cfg.blocks % cfg.shards,
-            0,
-            "blocks ({}) must divide evenly into shards ({})",
-            cfg.blocks,
-            cfg.shards
-        );
+        Coordinator::try_start(cfg).unwrap_or_else(|e| panic!("invalid coordinator config: {e}"))
+    }
+
+    /// Validate the config and start the worker thread, or report what
+    /// is wrong with the geometry as a typed [`ConfigError`].
+    pub fn try_start(cfg: CoordinatorConfig) -> Result<Coordinator, ConfigError> {
+        cfg.validate()?;
         let (tx, rx) = mpsc::channel::<Envelope>();
         let worker = std::thread::Builder::new()
             .name("ggarray-coordinator".into())
             .spawn(move || Worker::new(cfg).run(rx))
             .expect("spawn coordinator worker");
-        Coordinator { tx, worker: Some(worker) }
+        Ok(Coordinator { tx, worker: Some(worker) })
     }
 
     /// Synchronous call (delegates to a [`Client`] over the same
@@ -174,10 +258,17 @@ struct Worker {
     metrics: Metrics,
     executor: Option<Executor>,
     batch_seq: u64,
+    /// Serial coordinator clock: host-side sync charged once per
+    /// shard-dispatching op — the explicit serial term of the parallel
+    /// time model (it cannot overlap with any shard's kernels).
+    coord: Clock,
 }
 
 impl Worker {
+    /// Build the worker state. The config was validated by
+    /// [`Coordinator::try_start`], so the geometry divides evenly here.
     fn new(cfg: CoordinatorConfig) -> Worker {
+        debug_assert!(cfg.validate().is_ok());
         let blocks_per_shard = cfg.blocks / cfg.shards;
         let executor = if cfg.use_artifacts {
             match Executor::from_default_dir() {
@@ -191,18 +282,19 @@ impl Worker {
             None
         };
         // Each shard's heap budget is carved from the shared device (or
-        // from the configured budget).
+        // from the configured budget), remainder bytes included.
         let total_heap = cfg.heap_capacity.unwrap_or_else(|| cfg.device.memory_bytes());
-        let per_shard_heap = (total_heap / cfg.shards as u64).max(1);
-        let shards: Vec<Shard> = (0..cfg.shards)
-            .map(|id| {
+        let shards: Vec<Shard> = split_heap_budget(total_heap, cfg.shards)
+            .into_iter()
+            .enumerate()
+            .map(|(id, heap_bytes)| {
                 Shard::new(ShardConfig {
                     id,
                     blocks: blocks_per_shard,
                     first_bucket_size: cfg.first_bucket_size,
                     insertion: cfg.insertion,
                     device: cfg.device.clone(),
-                    heap_bytes: per_shard_heap,
+                    heap_bytes,
                 })
             })
             .collect();
@@ -214,6 +306,7 @@ impl Worker {
             metrics: Metrics::new(),
             executor,
             batch_seq: 0,
+            coord: Clock::new(),
             cfg,
         }
     }
@@ -258,9 +351,34 @@ impl Worker {
         self.epochs.sealed_len() + self.live_len()
     }
 
-    /// Total simulated time across shard clocks and the flat-path clock.
-    fn sim_total_us(&self) -> f64 {
-        self.shards.iter().map(|s| s.sim_now_us()).sum::<f64>() + self.epochs.now_us()
+    /// Snapshot every simulated clock that can advance during one op:
+    /// the per-shard clocks (concurrent), the flat-path clock and the
+    /// coordinator clock (both serial).
+    fn clock_marks(&self) -> ClockMarks {
+        ClockMarks {
+            shards: self.shards.iter().map(|s| s.sim_now_us()).collect(),
+            epochs: self.epochs.now_us(),
+            coord: self.coord.now_us(),
+        }
+    }
+
+    /// The parallel-model cost of everything since `marks`: shards ran
+    /// concurrently (max over deltas on the critical path, sum on the
+    /// device total); the flat-path and coordinator deltas are serial
+    /// launches that cannot overlap the shard kernels.
+    fn cost_since(&self, marks: &ClockMarks) -> ParallelCost {
+        let shard_cost = ParallelCost::from_parallel(
+            self.shards.iter().zip(&marks.shards).map(|(s, &t0)| s.sim_now_us() - t0),
+        );
+        let serial =
+            (self.epochs.now_us() - marks.epochs) + (self.coord.now_us() - marks.coord);
+        shard_cost.then(ParallelCost::serial(serial))
+    }
+
+    /// Charge the serial coordinator term of one shard-dispatching op
+    /// (routing decision + launch sync on the host).
+    fn charge_dispatch(&mut self) {
+        self.coord.charge(Category::Host, self.cfg.device.cost.host_sync_us);
     }
 
     /// Per-block sizes over the global (all-shard) block space.
@@ -301,6 +419,8 @@ impl Worker {
         if values.is_empty() {
             return;
         }
+        let marks = self.clock_marks();
+        self.charge_dispatch();
         let sizes = self.global_sizes();
         let counts = router::route(self.cfg.routing, &sizes, values.len(), self.batch_seq);
         self.batch_seq += 1;
@@ -320,13 +440,21 @@ impl Worker {
         }
         // Slice the global decision per shard: shard k owns blocks
         // [k·bps, (k+1)·bps) and its values are contiguous in the batch.
+        // The sub-batches execute concurrently on the device (disjoint
+        // block ranges), so the ledger charges the slowest shard, not
+        // the sum — see `cost_since`.
         let mut applied = 0u64;
         for (shard, (offset, sub)) in
             self.shards.iter_mut().zip(router::split_for_shards(&counts, self.blocks_per_shard))
         {
             let take: usize = sub.iter().sum();
+            if take == 0 {
+                // No sub-batch → no kernel launch on this shard. Charging
+                // idle shards a phantom insertion pass would let them set
+                // the max-over-shards critical path under skewed routing.
+                continue;
+            }
             let out = shard.apply_counts(sub, &values[offset..offset + take]);
-            self.metrics.sim_insert_us += out.sim_us;
             applied += out.applied as u64;
             if let Some(e) = out.error {
                 eprintln!("[coordinator] simulated OOM during insert on shard {}: {e}", shard.id());
@@ -336,6 +464,8 @@ impl Worker {
                 self.metrics.errors += 1;
             }
         }
+        let cost = self.cost_since(&marks);
+        self.metrics.charge_insert(cost);
         self.metrics.batches += 1;
         self.metrics.elements_inserted += applied;
         let _ = requests;
@@ -357,30 +487,45 @@ impl Worker {
             }
             Request::Work { calls } => {
                 self.barrier();
-                let sim0 = self.sim_total_us();
+                let marks = self.clock_marks();
                 let mut pjrt = 0u64;
                 for _ in 0..calls {
+                    self.charge_dispatch();
                     // Real numeric update on the live epoch (PJRT when
-                    // possible), then the modeled rw_b cost per shard.
+                    // possible), then the modeled rw_b cost per shard —
+                    // concurrent launches, so the ledger sees the max.
+                    // Empty live shards get no rw_b launch at all: on a
+                    // mostly-sealed store the live pass is free.
                     pjrt += self.one_work_pass();
                     for shard in &mut self.shards {
-                        shard.charge_rw_block(self.cfg.work_iters as f64);
+                        if !shard.is_empty() {
+                            shard.charge_rw_block(self.cfg.work_iters as f64);
+                        }
                     }
                     // Sealed prefix: real update + static-array cost —
-                    // the fast path the two-phase pattern buys.
+                    // the fast path the two-phase pattern buys. One
+                    // kernel over the whole flat store, serial behind
+                    // the per-shard launches.
                     self.epochs.work(self.cfg.work_iters);
                 }
                 self.metrics.work_calls += calls as u64;
                 self.metrics.pjrt_executions += pjrt;
-                let sim_us = self.sim_total_us() - sim0;
-                self.metrics.sim_work_us += sim_us;
-                Response::Worked { calls, sim_us, pjrt_executions: pjrt }
+                let cost = self.cost_since(&marks);
+                self.metrics.charge_work(cost);
+                Response::Worked {
+                    calls,
+                    sim_us: cost.critical_path_us,
+                    device_us: cost.total_device_us,
+                    pjrt_executions: pjrt,
+                }
             }
             Request::Flatten => {
                 self.barrier();
-                let sim0 = self.sim_total_us();
+                let marks = self.clock_marks();
+                self.charge_dispatch();
                 // Sealed prefix is already flat; append a non-destructive
-                // flatten of the live epoch, shard by shard.
+                // flatten of the live epoch — per-shard gathers over
+                // disjoint block ranges, concurrent on the device.
                 let mut data: Vec<f32> = Vec::with_capacity(self.total_len() as usize);
                 for segment in self.epochs.segments() {
                     data.extend_from_slice(segment);
@@ -400,13 +545,19 @@ impl Worker {
                     return Response::Error(format!("flatten OOM: {e}"));
                 }
                 self.metrics.flattens += 1;
-                let sim_us = self.sim_total_us() - sim0;
-                self.metrics.sim_flatten_us += sim_us;
-                Response::Flattened { len: data.len() as u64, sim_us, checksum: checksum(&data) }
+                let cost = self.cost_since(&marks);
+                self.metrics.charge_flatten(cost);
+                Response::Flattened {
+                    len: data.len() as u64,
+                    sim_us: cost.critical_path_us,
+                    device_us: cost.total_device_us,
+                    checksum: checksum(&data),
+                }
             }
             Request::Seal => {
                 self.barrier();
-                let sim0 = self.sim_total_us();
+                let marks = self.clock_marks();
+                self.charge_dispatch();
                 // Two-phase commit across shards: flatten everything
                 // first, commit VRAM residency only if every shard
                 // succeeded, otherwise release the fresh destinations
@@ -442,14 +593,22 @@ impl Worker {
                 let epoch_len = flat.len() as u64;
                 let sum = checksum(&flat.data);
                 let epoch = self.epochs.absorb(flat);
+                // Segment-count hygiene: one modeled gather pass merges
+                // the sealed segments once there are too many (charged
+                // to the flat-path clock, so it lands in this op's cost).
+                if self.epochs.maybe_compact(self.cfg.compact_segments).is_some() {
+                    self.metrics.compactions += 1;
+                }
                 self.metrics.seals += 1;
-                let sim_us = self.sim_total_us() - sim0;
-                self.metrics.sim_flatten_us += sim_us;
+                let cost = self.cost_since(&marks);
+                self.metrics.charge_flatten(cost);
                 Response::Sealed {
                     epoch,
                     epoch_len,
                     sealed_len: self.epochs.sealed_len(),
-                    sim_us,
+                    sealed_segments: self.epochs.sealed_epochs(),
+                    sim_us: cost.critical_path_us,
+                    device_us: cost.total_device_us,
                     checksum: sum,
                 }
             }
@@ -468,6 +627,7 @@ impl Worker {
                     self.shards.len(),
                     self.epochs.seq(),
                     self.epochs.sealed_len(),
+                    self.epochs.sealed_epochs(),
                     self.shards.iter().map(|s| s.len() as u64).collect(),
                 );
                 Response::Stats(snap)
@@ -515,10 +675,14 @@ pub struct WorkloadRun {
     pub seal_checksums: Vec<u64>,
     /// Checksum of each full-flatten snapshot, in order.
     pub flatten_checksums: Vec<u64>,
-    /// Simulated µs across all Work steps.
+    /// Wall-model (critical-path) simulated µs across all Work steps.
     pub work_sim_us: f64,
-    /// Simulated µs across all Seal steps.
+    /// Wall-model (critical-path) simulated µs across all Seal steps.
     pub seal_sim_us: f64,
+    /// Aggregate device-seconds (µs) across all Work steps.
+    pub work_device_us: f64,
+    /// Aggregate device-seconds (µs) across all Seal steps.
+    pub seal_device_us: f64,
 }
 
 /// Drive a workload trace through the service. `Insert` steps synthesise
@@ -549,7 +713,10 @@ pub fn drive_workload(c: &Coordinator, w: &WorkloadSpec, chunk: usize) -> Worklo
                 run.inserted = counter;
             }
             Step::Work(calls) => match c.call(Request::Work { calls: *calls }) {
-                Response::Worked { sim_us, .. } => run.work_sim_us += sim_us,
+                Response::Worked { sim_us, device_us, .. } => {
+                    run.work_sim_us += sim_us;
+                    run.work_device_us += device_us;
+                }
                 other => panic!("work failed: {other:?}"),
             },
             Step::Flatten => match c.call(Request::Flatten) {
@@ -557,9 +724,10 @@ pub fn drive_workload(c: &Coordinator, w: &WorkloadSpec, chunk: usize) -> Worklo
                 other => panic!("flatten failed: {other:?}"),
             },
             Step::Seal => match c.call(Request::Seal) {
-                Response::Sealed { checksum, sim_us, .. } => {
+                Response::Sealed { checksum, sim_us, device_us, .. } => {
                     run.seal_checksums.push(checksum);
                     run.seal_sim_us += sim_us;
+                    run.seal_device_us += device_us;
                 }
                 other => panic!("seal failed: {other:?}"),
             },
@@ -660,6 +828,97 @@ mod tests {
             other => panic!("{other:?}"),
         };
         assert!(snap.overhead_ratio() < 2.3, "overhead {:.2}", snap.overhead_ratio());
+        c.shutdown();
+    }
+
+    #[test]
+    fn validate_rejects_bad_geometry_with_typed_errors() {
+        assert_eq!(
+            CoordinatorConfig { shards: 0, ..test_cfg(4) }.validate(),
+            Err(ConfigError::NoShards)
+        );
+        assert_eq!(
+            CoordinatorConfig { blocks: 0, shards: 1, ..test_cfg(4) }.validate(),
+            Err(ConfigError::NoBlocks)
+        );
+        // The old path silently dropped blocks (10 / 4 = 2 per shard →
+        // 8 live blocks) and only tripped an assert at the first batch.
+        let err = CoordinatorConfig { shards: 4, ..test_cfg(10) }.validate().unwrap_err();
+        assert_eq!(err, ConfigError::UnevenBlocks { blocks: 10, shards: 4 });
+        assert!(err.to_string().contains("2 remainder"), "{err}");
+        assert!(Coordinator::try_start(CoordinatorConfig { shards: 4, ..test_cfg(10) }).is_err());
+        // And a valid geometry still starts.
+        let c = Coordinator::try_start(test_cfg(4)).expect("valid config");
+        c.shutdown();
+    }
+
+    #[test]
+    fn heap_budget_split_conserves_every_byte() {
+        for (total, shards) in [(10u64, 3usize), (7, 7), (0, 2), (1 << 30, 6), (5, 8), (1, 1)] {
+            let budgets = split_heap_budget(total, shards);
+            assert_eq!(budgets.len(), shards);
+            assert_eq!(budgets.iter().sum::<u64>(), total, "{total}B over {shards} shards");
+            // Remainder lands one byte per shard on the first shards.
+            let max = *budgets.iter().max().unwrap();
+            let min = *budgets.iter().min().unwrap();
+            assert!(max - min <= 1, "{budgets:?}");
+            assert!(budgets.windows(2).all(|w| w[0] >= w[1]), "{budgets:?}");
+        }
+    }
+
+    #[test]
+    fn insert_critical_path_shrinks_with_shards() {
+        // The tentpole invariant at unit scale: the same even insert
+        // stream charged to 4 shards must report a smaller wall-model
+        // time than 1 shard (concurrent sub-batches), while the device
+        // total stays comparable (same work issued, different clock
+        // model).
+        let run = |shards: usize| {
+            let c = Coordinator::start(sharded_cfg(16, shards));
+            c.call(Request::Insert { values: vec![1.0; 1 << 14] });
+            let _ = c.call(Request::Query { index: 0 });
+            let snap = c.call(Request::Stats).expect_stats();
+            c.shutdown();
+            (snap.sim_insert_ms, snap.device_insert_ms)
+        };
+        let (sim1, dev1) = run(1);
+        let (sim4, dev4) = run(4);
+        assert!(
+            sim4 < sim1,
+            "4-shard critical path {sim4} ms must beat 1-shard {sim1} ms"
+        );
+        assert!(dev4 > sim4, "device total must exceed critical path on 4 shards");
+        // Single shard: no parallelism, wall-model == device total.
+        assert!((dev1 - sim1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn repeated_seals_stay_within_compaction_threshold() {
+        let cfg = CoordinatorConfig { compact_segments: 3, ..sharded_cfg(8, 2) };
+        let c = Coordinator::start(cfg);
+        let mut saw_at_threshold = false;
+        for k in 0..10u32 {
+            c.call(Request::Insert { values: vec![k as f32; 50] });
+            match c.call(Request::Seal) {
+                Response::Sealed { sealed_segments, sealed_len, .. } => {
+                    assert!(
+                        sealed_segments <= 3,
+                        "seal {k}: {sealed_segments} segments > threshold"
+                    );
+                    saw_at_threshold |= sealed_segments == 3;
+                    assert_eq!(sealed_len, 50 * (k as u64 + 1));
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert!(saw_at_threshold, "threshold should be reached between compactions");
+        let snap = c.call(Request::Stats).expect_stats();
+        assert!(snap.compactions >= 2, "10 seals over threshold 3: {} compactions", snap.compactions);
+        assert!(snap.sealed_segments <= 3);
+        assert_eq!(snap.sealed_len, 500);
+        // Reads resolve across merged segments.
+        assert_eq!(c.call(Request::Query { index: 0 }).expect_value(), Some(0.0));
+        assert_eq!(c.call(Request::Query { index: 499 }).expect_value(), Some(9.0));
         c.shutdown();
     }
 

@@ -418,12 +418,18 @@ impl EpochManager {
     /// Apply the +1×`iters` work op to all sealed data at static-array
     /// cost: fully-coalesced streaming traffic, no bucket indirection and
     /// no per-chunk pointer chases — the payoff of the two-phase pattern.
-    /// Returns the simulated µs charged.
+    ///
+    /// Each sealed segment is its own device buffer, so the pass is one
+    /// kernel launch *per segment*: a fragmented store pays a launch
+    /// overhead (and small-grid occupancy) per epoch, which is exactly
+    /// the modeled cost [`EpochManager::compact`] buys back. Returns the
+    /// simulated µs charged.
     pub fn work(&mut self, iters: u32) -> f64 {
-        let n = self.total;
-        if n == 0 {
+        if self.total == 0 {
             return 0.0;
         }
+        let t0 = self.clock.now_us();
+        let tpb = 1024u32;
         for epoch in &mut self.sealed {
             if let Epoch::Sealed(view) = epoch {
                 for x in &mut view.data {
@@ -431,25 +437,84 @@ impl EpochManager {
                         *x += 1.0;
                     }
                 }
+                let n_seg = view.len() as u64;
+                if n_seg == 0 {
+                    continue;
+                }
+                let profile = KernelProfile {
+                    blocks: crate::util::math::ceil_div(n_seg, tpb as u64),
+                    threads_per_block: tpb,
+                    bytes: 2.0 * 4.0 * n_seg as f64,
+                    coalescing_eff: self.device.cost.coalesced_eff,
+                    flops_fp32: iters as f64 * n_seg as f64,
+                    flops_mxu: 0.0,
+                    mxu_utilisation: 1.0,
+                    per_block_us: 0.0,
+                    atomic_us: 0.0,
+                    extra_us: 0.0,
+                };
+                kernel::launch(&self.device, &mut self.clock, &profile);
             }
         }
+        self.clock.now_us() - t0
+    }
+
+    /// Merge every sealed segment into one contiguous segment with a
+    /// single modeled gather pass (read each segment, write the merged
+    /// destination — both coalesced streaming traffic). Contents and
+    /// order are untouched, so reads, checksums, and `sealed_len` are
+    /// unaffected; what changes is the segment count — and with it the
+    /// per-segment launch overhead [`EpochManager::work`] pays on every
+    /// sealed pass (the per-segment space overhead is what Tarjan–Zwick
+    /// resizable-array bounds target). Returns the simulated µs charged.
+    ///
+    /// Modeling limitation: only *time* is charged. The sealed bytes'
+    /// simulated VRAM stays with the per-shard seal destinations
+    /// ([`Shard::commit_seal`]) — the total is identical before and
+    /// after a merge — but the transient 2× residency a real gather
+    /// needs (sources + destination live simultaneously) is not pushed
+    /// through a heap, so a budget too tight for that transient cannot
+    /// OOM here. Moving sealed residency into an epoch-owned heap is
+    /// tracked in ROADMAP.
+    pub fn compact(&mut self) -> f64 {
+        if self.sealed.len() <= 1 {
+            return 0.0;
+        }
+        let parts: Vec<ShardedFlattened<f32>> = self
+            .sealed
+            .drain(..)
+            .filter_map(|e| match e {
+                Epoch::Sealed(v) => Some(v),
+                Epoch::Inserting => None,
+            })
+            .collect();
+        let merged = flatten::merge_segments(parts);
+        debug_assert_eq!(merged.len() as u64, self.total);
         let t0 = self.clock.now_us();
+        let n = self.total;
         let tpb = 1024u32;
         let blocks = crate::util::math::ceil_div(n, tpb as u64);
-        let profile = KernelProfile {
-            blocks,
-            threads_per_block: tpb,
-            bytes: 2.0 * 4.0 * n as f64,
-            coalescing_eff: self.device.cost.coalesced_eff,
-            flops_fp32: iters as f64 * n as f64,
-            flops_mxu: 0.0,
-            mxu_utilisation: 1.0,
-            per_block_us: 0.0,
-            atomic_us: 0.0,
-            extra_us: 0.0,
-        };
+        let profile = KernelProfile::streaming(
+            blocks.max(1),
+            tpb,
+            2.0 * 4.0 * n as f64,
+            self.device.cost.coalesced_eff,
+        );
         kernel::launch(&self.device, &mut self.clock, &profile);
+        self.starts = vec![0];
+        self.sealed = vec![Epoch::Sealed(merged)];
         self.clock.now_us() - t0
+    }
+
+    /// Compact when the sealed-segment count exceeds `max_segments`
+    /// (`0` disables compaction). Returns the gather's simulated µs when
+    /// a pass ran.
+    pub fn maybe_compact(&mut self, max_segments: usize) -> Option<f64> {
+        if max_segments == 0 || self.sealed.len() <= max_segments {
+            None
+        } else {
+            Some(self.compact())
+        }
     }
 
     /// Drop all sealed epochs (service `Clear`). The epoch counter keeps
@@ -597,6 +662,34 @@ mod tests {
         em.reset();
         assert_eq!(em.sealed_len(), 0);
         assert_eq!(em.seq(), 2, "epoch counter survives reset");
+    }
+
+    #[test]
+    fn compaction_merges_segments_byte_identically() {
+        let mut em = EpochManager::new(DeviceSpec::a100());
+        let mk = |vals: Vec<f32>| {
+            flatten::concat(vec![Flattened { data: vals, report: Default::default(), alloc: None }])
+        };
+        em.absorb(mk(vec![1.0, 2.0]));
+        em.absorb(mk(vec![3.0]));
+        em.absorb(mk(vec![4.0, 5.0, 6.0]));
+        let before: Vec<f32> = em.segments().flat_map(|s| s.to_vec()).collect();
+        assert_eq!(em.sealed_epochs(), 3);
+        assert!(em.maybe_compact(4).is_none(), "under threshold: no pass");
+        assert!(em.maybe_compact(0).is_none(), "0 disables compaction");
+        let us = em.maybe_compact(2).expect("over threshold: gather pass");
+        assert!(us > 0.0, "gather pass must charge the flat-path clock");
+        assert_eq!(em.sealed_epochs(), 1);
+        assert_eq!(em.sealed_len(), 6);
+        let after: Vec<f32> = em.segments().flat_map(|s| s.to_vec()).collect();
+        assert_eq!(after, before, "compaction must not change sealed bytes");
+        assert_eq!(em.get(0), Some(1.0));
+        assert_eq!(em.get(5), Some(6.0));
+        assert_eq!(em.get(6), None);
+        assert_eq!(em.seq(), 3, "compaction is storage-only; epochs are points in time");
+        // A single segment is already compact: no-op, no charge.
+        assert_eq!(em.compact(), 0.0);
+        assert_eq!(em.sealed_epochs(), 1);
     }
 
     #[test]

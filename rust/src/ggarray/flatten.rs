@@ -92,6 +92,25 @@ pub fn concat<T: Copy + Default>(parts: Vec<Flattened<T>>) -> ShardedFlattened<T
     ShardedFlattened { data, index, report }
 }
 
+/// Merge successive sealed segments into one contiguous segment — the
+/// compaction gather of the epoch store. Order is preserved (segment 0's
+/// data, then segment 1's, …) so the merged bytes are identical to the
+/// concatenation of the inputs; the rebuilt index maps global offsets to
+/// `(original_segment, local)` coordinates.
+///
+/// Host-side data movement only: the caller owns the modeled cost (one
+/// read+write gather pass over the merged bytes, charged to whichever
+/// clock owns the sealed store — see
+/// [`crate::coordinator::shard::EpochManager::compact`]).
+pub fn merge_segments<T: Copy + Default>(parts: Vec<ShardedFlattened<T>>) -> ShardedFlattened<T> {
+    concat(
+        parts
+            .into_iter()
+            .map(|p| Flattened { data: p.data, report: p.report, alloc: None })
+            .collect(),
+    )
+}
+
 /// Flatten every shard and concatenate with a shard-offset index — the
 /// sealing step of the sharded two-phase lifecycle. Shard order defines
 /// global order, so with block-sliced routing the result is byte-identical
@@ -240,6 +259,29 @@ mod tests {
         let empty: ShardedFlattened<u32> = super::concat(vec![]);
         assert!(empty.is_empty());
         assert_eq!(empty.locate(0), None);
+    }
+
+    #[test]
+    fn merge_segments_preserves_bytes_and_order() {
+        let mk = |vals: Vec<u32>| {
+            concat(vec![Flattened {
+                data: vals,
+                report: OpReport { us: 5.0, buckets_allocated: 0, elements: 0 },
+                alloc: None,
+            }])
+        };
+        let parts = vec![mk(vec![1, 2, 3]), mk(vec![]), mk(vec![9, 8])];
+        let want: Vec<u32> = vec![1, 2, 3, 9, 8];
+        let merged = super::merge_segments(parts);
+        assert_eq!(merged.data, want);
+        assert_eq!(merged.len(), 5);
+        // Index maps globals back to (original segment, local).
+        assert_eq!(merged.locate(2), Some((0, 2)));
+        assert_eq!(merged.locate(3), Some((2, 0)));
+        assert_eq!(merged.locate(5), None);
+        assert!((merged.report.us - 15.0).abs() < 1e-12);
+        let empty: ShardedFlattened<u32> = super::merge_segments(vec![]);
+        assert!(empty.is_empty());
     }
 
     #[test]

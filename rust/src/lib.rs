@@ -39,6 +39,24 @@
 //!   Reads/work over the sealed prefix are charged fully-coalesced
 //!   static-array cost; the live epoch keeps paying GGArray costs until
 //!   it, too, seals — exactly the paper's insert-fast/access-fast split.
+//! * **Parallel time model** — shards are concurrent thread-block
+//!   groups of one device, so the service ledger charges each op the
+//!   *max* over the participating shards' simulated deltas (the
+//!   critical path) plus an explicit serial coordinator term — not the
+//!   sum. [`coordinator::metrics::ParallelCost`] carries both the
+//!   wall-model (`sim_*`, critical path) and the aggregate
+//!   device-seconds (`device_*`), whose ratio is the observed
+//!   shard-parallel speedup — the quantity the paper measures and a
+//!   summed ledger can never show.
+//! * **Sealed-epoch compaction** — each seal adds one flat segment, and
+//!   the sealed work pass launches one kernel per segment (separate
+//!   device buffers), so fragmentation costs launch overhead on every
+//!   pass. Once the count passes `CoordinatorConfig::compact_segments`,
+//!   one modeled gather pass
+//!   ([`coordinator::shard::EpochManager::compact`]) merges the
+//!   segments byte-identically into one, buying those launches back.
+//!   `Work` also skips the `rw_b` launch on empty live shards, so a
+//!   fully-sealed store pays only the flat-path passes.
 //!
 //! See `examples/sharded_two_phase.rs` for the end-to-end flow and
 //! `rust/benches/bench_shards.rs` for the scaling shape.

@@ -211,16 +211,23 @@ fn serve(blocks: usize, shards: usize, inserts: usize, work: u32, seal: bool, us
     }
     if seal {
         match c.call(Request::Seal) {
-            Response::Sealed { epoch, sealed_len, sim_us, .. } => {
-                println!("sealed epoch → {epoch}: {sealed_len} elements on the flat path (sim {:.3} ms)", sim_us / 1e3)
+            Response::Sealed { epoch, sealed_len, sealed_segments, sim_us, .. } => {
+                println!(
+                    "sealed epoch → {epoch}: {sealed_len} elements on the flat path ({sealed_segments} segments, sim {:.3} ms)",
+                    sim_us / 1e3
+                )
             }
             other => println!("seal: {other:?}"),
         }
     }
     c.call(Request::Work { calls: work });
     match c.call(Request::Flatten) {
-        Response::Flattened { len, sim_us, checksum } => {
-            println!("flattened {len} elements (sim {:.3} ms, checksum {checksum:#x})", sim_us / 1e3)
+        Response::Flattened { len, sim_us, device_us, checksum } => {
+            println!(
+                "flattened {len} elements (sim {:.3} ms critical path, {:.3} ms device total, checksum {checksum:#x})",
+                sim_us / 1e3,
+                device_us / 1e3
+            )
         }
         other => println!("flatten: {other:?}"),
     }

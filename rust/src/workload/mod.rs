@@ -101,6 +101,26 @@ impl WorkloadSpec {
         }
     }
 
+    /// Epoch churn: `epochs` repeated insert→seal cycles of `per_epoch`
+    /// elements each, then one work phase over the (fully sealed) store.
+    /// This is the segment-hygiene stressor: without sealed-epoch
+    /// compaction the flat store accumulates one segment per cycle.
+    pub fn seal_cycles(per_epoch: u64, epochs: u32, work_calls: u32) -> WorkloadSpec {
+        let mut steps = Vec::with_capacity(epochs as usize * 2 + 1);
+        for _ in 0..epochs {
+            steps.push(Step::Insert(per_epoch));
+            steps.push(Step::Seal);
+        }
+        if work_calls > 0 {
+            steps.push(Step::Work(work_calls));
+        }
+        WorkloadSpec {
+            name: format!("seal_cycles_{per_epoch}x{epochs}_w{work_calls}"),
+            steps,
+            expected_final: per_epoch * epochs as u64,
+        }
+    }
+
     /// Fig 3 uncertain growth: one bulk insert of `s·X`, `X~LogNormal(0,σ)`.
     pub fn uncertain(s: u64, sigma: f64, rng: &mut Rng) -> WorkloadSpec {
         let x = if sigma == 0.0 { 1.0 } else { rng.lognormal(0.0, sigma) };
@@ -171,6 +191,19 @@ mod tests {
         let seals = sharded.steps.iter().filter(|s| matches!(s, Step::Seal)).count();
         assert_eq!(seals, 4);
         assert!(!sharded.steps.iter().any(|s| matches!(s, Step::Flatten)));
+    }
+
+    #[test]
+    fn seal_cycles_trace_shape() {
+        let w = WorkloadSpec::seal_cycles(1000, 6, 2);
+        assert_eq!(w.expected_final, 6000);
+        assert_eq!(w.total_inserts(), 6000);
+        let seals = w.steps.iter().filter(|s| matches!(s, Step::Seal)).count();
+        assert_eq!(seals, 6);
+        assert_eq!(w.steps.last(), Some(&Step::Work(2)));
+        // Zero work calls → pure churn trace.
+        let w0 = WorkloadSpec::seal_cycles(10, 2, 0);
+        assert_eq!(w0.steps.len(), 4);
     }
 
     #[test]

@@ -24,6 +24,7 @@ fn cfg(blocks: usize, use_artifacts: bool) -> CoordinatorConfig {
         work_iters: 30,
         heap_capacity: None,
         shards: 1,
+        compact_segments: 4,
     }
 }
 

@@ -69,6 +69,44 @@ fn prop_router_conservation_and_bounds() {
 }
 
 #[test]
+fn prop_least_loaded_monotone_fill() {
+    // Two invariants of the water-filling router:
+    // 1. whenever `n` covers the total gap to the tallest block, the
+    //    post-route spread is max−min ≤ 1 (the fill fully levels);
+    // 2. a partial fill (n ≤ gap) never raises any block above the
+    //    tallest original block (the level pass must not overshoot).
+    let gen = PairGen(CountsVec { max_len: 48, max_val: 500 }, U64Range { lo: 0, hi: 2000 });
+    check("least-loaded monotone fill", 0xF111, DEFAULT_CASES, &gen, |(sizes_raw, slack)| {
+        if sizes_raw.is_empty() {
+            return Ok(());
+        }
+        let sizes: Vec<u64> = sizes_raw.iter().map(|&s| s as u64).collect();
+        let tallest = *sizes.iter().max().unwrap();
+        let gap: u64 = sizes.iter().map(|&s| tallest - s).sum();
+        let heights = |counts: &[usize]| -> Vec<u64> {
+            sizes.iter().zip(counts).map(|(&s, &c)| s + c as u64).collect()
+        };
+        // Leveling fill: n ≥ gap.
+        let n = gap + slack;
+        let counts = router::route(Policy::LeastLoaded, &sizes, n as usize, 0);
+        let after = heights(&counts);
+        let mx = *after.iter().max().unwrap();
+        let mn = *after.iter().min().unwrap();
+        if mx - mn > 1 {
+            return Err(format!("n={n} ≥ gap={gap} but spread {} > 1: {after:?}", mx - mn));
+        }
+        // Partial fill: n ≤ gap must stay under the tallest block.
+        let n2 = gap.min(*slack);
+        let counts2 = router::route(Policy::LeastLoaded, &sizes, n2 as usize, 0);
+        let after2 = heights(&counts2);
+        if let Some(&h) = after2.iter().find(|&&h| h > tallest) {
+            return Err(format!("partial fill n={n2} ≤ gap={gap} overshot {h} > {tallest}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_prefix_index_locate_inverse() {
     let gen = CountsVec { max_len: 100, max_val: 300 };
     check("prefix index locate", 0x1DE, DEFAULT_CASES, &gen, |sizes_raw| {

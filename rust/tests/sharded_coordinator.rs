@@ -1,12 +1,15 @@
 //! Sharded coordinator end-to-end: concurrency under mixed call/nowait
 //! traffic, and the ISSUE acceptance criteria — a 4-shard `two_phase`
-//! run produces byte-identical flattened contents to a 1-shard run, and
-//! the sealed-epoch path simulates cheaper per access than the unsealed
-//! GGArray path.
+//! run produces byte-identical flattened contents to a 1-shard run, the
+//! sealed-epoch path simulates cheaper per access than the unsealed
+//! GGArray path, multi-shard runs beat single-shard on *critical-path*
+//! simulated time (the parallel time model), and sealed-epoch compaction
+//! bounds the segment count without touching a byte.
 
 use std::time::Duration;
 
 use ggarray::coordinator::batcher::BatchConfig;
+use ggarray::coordinator::metrics::MetricsSnapshot;
 use ggarray::coordinator::request::{Request, Response};
 use ggarray::coordinator::service::{drive_workload, Coordinator, CoordinatorConfig, WorkloadRun};
 use ggarray::workload::WorkloadSpec;
@@ -143,7 +146,12 @@ fn concurrent_traffic_across_a_seal_epoch_boundary() {
 // ------------------------------------------------------------------
 
 fn run_workload(w: &WorkloadSpec, shards: usize) -> (WorkloadRun, u64) {
-    let c = Coordinator::start(cfg(32, shards));
+    let (run, checksum, _) = run_workload_cfg(w, cfg(32, shards));
+    (run, checksum)
+}
+
+fn run_workload_cfg(w: &WorkloadSpec, cfg: CoordinatorConfig) -> (WorkloadRun, u64, MetricsSnapshot) {
+    let c = Coordinator::start(cfg);
     let run = drive_workload(&c, w, CHUNK);
     let final_checksum = match c.call(Request::Flatten) {
         Response::Flattened { checksum, len, .. } => {
@@ -152,8 +160,9 @@ fn run_workload(w: &WorkloadSpec, shards: usize) -> (WorkloadRun, u64) {
         }
         other => panic!("{other:?}"),
     };
+    let snap = c.call(Request::Stats).expect_stats();
     c.shutdown();
-    (run, final_checksum)
+    (run, final_checksum, snap)
 }
 
 #[test]
@@ -188,6 +197,120 @@ fn sealed_epoch_work_cheaper_than_unsealed() {
             unsealed_run.work_sim_us
         );
     }
+}
+
+// ------------------------------------------------------------------
+// Parallel time model (the corrected shard clock)
+// ------------------------------------------------------------------
+
+#[test]
+fn insert_critical_path_monotone_in_shard_count() {
+    // Property over the shard axis: the same even insert stream reports
+    // S-shard critical-path sim time ≤ the 1-shard time for every S,
+    // and strictly less for S ≥ 2 — the speedup the paper measures,
+    // previously impossible because the ledger summed shard clocks.
+    let w = WorkloadSpec::two_phase_sharded(1 << 18, 1, 0, 3);
+    let sim_insert = |shards: usize| {
+        let (_, _, snap) = run_workload_cfg(&w, cfg(32, shards));
+        (snap.sim_insert_ms, snap.device_insert_ms)
+    };
+    let (sim1, dev1) = sim_insert(1);
+    assert!((dev1 - sim1).abs() / sim1 < 1e-9, "1 shard: wall-model must equal device total");
+    for shards in [2usize, 4, 8] {
+        let (sim_s, dev_s) = sim_insert(shards);
+        assert!(
+            sim_s < sim1,
+            "{shards}-shard insert critical path {sim_s} ms !< 1-shard {sim1} ms"
+        );
+        assert!(
+            dev_s > sim_s,
+            "{shards}-shard device total {dev_s} ms must exceed critical path {sim_s} ms"
+        );
+    }
+    // More shards keep helping on this insert-heavy trace (allow a tiny
+    // tolerance: per-shard fixed launch overheads grow with S).
+    let (sim4, _) = sim_insert(4);
+    let (sim2, _) = sim_insert(2);
+    assert!(sim4 < sim2 * 1.05, "4-shard {sim4} ms should not regress past 2-shard {sim2} ms");
+}
+
+#[test]
+fn work_skips_rw_b_on_empty_live_shards() {
+    // After a seal the live shards are empty: a Work call should charge
+    // only the sealed flat pass (plus the serial dispatch term), with no
+    // per-shard rw_b launches. Compare against a store holding the same
+    // data *live* (unsealed), where the rw_b path must dominate.
+    let c = Coordinator::start(cfg(32, 4));
+    // Large enough that memory traffic dominates launch/sync overheads.
+    let n = 1usize << 20;
+    c.call(Request::Insert { values: (0..n).map(|i| (i % 4096) as f32).collect() });
+    let unsealed_us = match c.call(Request::Work { calls: 1 }) {
+        Response::Worked { sim_us, .. } => sim_us,
+        other => panic!("{other:?}"),
+    };
+    c.call(Request::Seal);
+    let sealed_us = match c.call(Request::Work { calls: 1 }) {
+        Response::Worked { sim_us, .. } => sim_us,
+        other => panic!("{other:?}"),
+    };
+    assert!(
+        sealed_us < unsealed_us / 2.0,
+        "fully-sealed work {sealed_us} µs !≪ live work {unsealed_us} µs"
+    );
+    c.shutdown();
+}
+
+// ------------------------------------------------------------------
+// Sealed-epoch compaction
+// ------------------------------------------------------------------
+
+#[test]
+fn compaction_bounds_segments_and_preserves_bytes() {
+    // Same seal-churn trace with compaction on (threshold 2) and off:
+    // every per-epoch seal checksum and the final full-store flatten
+    // must be byte-identical, while the compacting run keeps the sealed
+    // segment count bounded by the threshold.
+    let w = WorkloadSpec::seal_cycles(3_000, 8, 1);
+    let threshold = 2usize;
+    let (run_on, final_on, snap_on) =
+        run_workload_cfg(&w, CoordinatorConfig { compact_segments: threshold, ..cfg(32, 4) });
+    let (run_off, final_off, snap_off) =
+        run_workload_cfg(&w, CoordinatorConfig { compact_segments: 0, ..cfg(32, 4) });
+    assert_eq!(run_on.seal_checksums, run_off.seal_checksums, "per-epoch seals must not change");
+    assert_eq!(final_on, final_off, "compaction must preserve the full sealed bytes");
+    assert!(snap_on.compactions >= 3, "8 seals over threshold 2: {} compactions", snap_on.compactions);
+    assert!(
+        snap_on.sealed_segments <= threshold,
+        "segments {} > threshold {threshold}",
+        snap_on.sealed_segments
+    );
+    assert_eq!(snap_off.compactions, 0);
+    assert_eq!(snap_off.sealed_segments, 8, "disabled run keeps one segment per epoch");
+    assert_eq!(snap_on.sealed_len, snap_off.sealed_len);
+    // The payoff: the sealed work pass launches one kernel per segment,
+    // so the compacted store's work phase must simulate cheaper than the
+    // 8-segment store's.
+    assert!(
+        run_on.work_sim_us < run_off.work_sim_us,
+        "compacted work {} µs !< fragmented work {} µs",
+        run_on.work_sim_us,
+        run_off.work_sim_us
+    );
+}
+
+#[test]
+fn compaction_is_shard_count_invariant() {
+    // Layout invariance survives compaction: 1-shard and 4-shard runs of
+    // the same churn trace, both compacting aggressively, seal and
+    // flatten to identical bytes.
+    let w = WorkloadSpec::seal_cycles(2_000, 6, 0);
+    let (run1, final1, _) =
+        run_workload_cfg(&w, CoordinatorConfig { compact_segments: 1, ..cfg(32, 1) });
+    let (run4, final4, snap4) =
+        run_workload_cfg(&w, CoordinatorConfig { compact_segments: 1, ..cfg(32, 4) });
+    assert_eq!(run1.seal_checksums, run4.seal_checksums);
+    assert_eq!(final1, final4);
+    assert_eq!(snap4.sealed_segments, 1, "threshold 1 compacts after every seal");
 }
 
 #[test]
