@@ -27,6 +27,13 @@ cargo run --release --bin repro -- fig3 --steps 4 --draws 200 --quiet --out "$SM
 echo "== smoke: sharded two-phase example (byte-identity + sealed payoff) =="
 cargo run --release --example sharded_two_phase
 
+echo "== smoke: tight-heap churn (compaction OOM/abort path end-to-end) =="
+# tight_budget_churn asserts the epoch-owned VRAM transaction: seals
+# under a budget too small for compaction's transient 2× must surface
+# compaction OOMs (Response::Sealed + metrics), retain every segment
+# byte-identically, conserve heap accounting, and recover after Clear.
+cargo run --release --example tight_budget_churn
+
 echo "== smoke: shard bench (parallel time model gate) =="
 # bench_shards asserts the parallel-time-model acceptance criteria and
 # exits non-zero when they fail:

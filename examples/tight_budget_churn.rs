@@ -1,0 +1,119 @@
+//! Failure injection: seal→compact churn under a VRAM budget too tight
+//! for compaction's transient 2× residency.
+//!
+//! The epoch store is a real heap now: committed seals *transfer* their
+//! flatten destinations into it, and a compaction gather must reserve
+//! the merged destination while every source segment is still resident.
+//! This driver runs the same `seal_cycles` trace twice:
+//!
+//! * **tight** — the epoch heap admits every seal but can never hold the
+//!   gather's 2× transient: every compaction attempt OOMs and aborts
+//!   byte-identically (segments retained, error surfaced in
+//!   `Response::Sealed::compaction_oom` and the `compaction_ooms`
+//!   metric) while the service keeps sealing and serving;
+//! * **generous** — the same trace with headroom: compaction commits,
+//!   the segment count stays bounded, and the sealed bytes are
+//!   *identical* to the tight run's.
+//!
+//! ```sh
+//! cargo run --release --example tight_budget_churn
+//! ```
+
+use std::time::Duration;
+
+use ggarray::coordinator::batcher::BatchConfig;
+use ggarray::coordinator::request::{Request, Response};
+use ggarray::coordinator::service::{drive_workload, Coordinator, CoordinatorConfig};
+use ggarray::workload::WorkloadSpec;
+
+const PER_EPOCH: u64 = 1_200; // elements per insert→seal cycle
+const EPOCHS: u32 = 4;
+const PER_EPOCH_BYTES: u64 = PER_EPOCH * 4;
+const CHUNK: usize = 4096;
+
+fn config(epoch_heap: Option<u64>) -> CoordinatorConfig {
+    CoordinatorConfig {
+        blocks: 16,
+        shards: 4,
+        first_bucket_size: 32,
+        use_artifacts: false,
+        compact_segments: 2,
+        // Shard heaps get a comfortable 1 MiB on top of the epoch carve:
+        // the injected failure must be the epoch store's, not an insert
+        // OOM.
+        heap_capacity: epoch_heap.map(|e| e + (1 << 20)),
+        epoch_heap,
+        batch: BatchConfig { max_values: CHUNK, max_delay: Duration::from_secs(3600) },
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn main() {
+    let w = WorkloadSpec::seal_cycles(PER_EPOCH, EPOCHS, 1);
+    println!("== tight-budget churn driver: {} ==", w.name);
+
+    // Tight: admits all 4 epochs (4 × 4800 B ≤ 24000 B) but the gather
+    // at seal 3 already needs 3 × 4800 B on top of the resident 3 ×
+    // 4800 B — every compaction attempt must abort.
+    let tight_budget = 5 * PER_EPOCH_BYTES;
+    let tight = Coordinator::start(config(Some(tight_budget)));
+    let run_tight = drive_workload(&tight, &w, CHUNK);
+    let snap_tight = tight.call(Request::Stats).expect_stats();
+
+    // Generous: identical trace, default (half-device) epoch heap.
+    let generous = Coordinator::start(config(None));
+    let run_gen = drive_workload(&generous, &w, CHUNK);
+    let snap_gen = generous.call(Request::Stats).expect_stats();
+
+    // --- the OOMs happened, were surfaced, and tore nothing ---
+    assert_eq!(
+        run_tight.compaction_ooms, 2,
+        "seals 3 and 4 must each trigger a doomed gather (got {})",
+        run_tight.compaction_ooms
+    );
+    assert_eq!(snap_tight.compaction_ooms, 2, "metrics must agree with the responses");
+    assert_eq!(snap_tight.compactions, 0);
+    assert_eq!(snap_tight.sealed_segments, EPOCHS as usize, "aborts retain every segment");
+    assert_eq!(snap_tight.sealed_len, PER_EPOCH * EPOCHS as u64);
+    assert_eq!(snap_tight.sealed_bytes, PER_EPOCH_BYTES * EPOCHS as u64);
+    assert_eq!(
+        snap_tight.heap_used_bytes, snap_tight.allocated_bytes,
+        "conservation: every heap byte accounted"
+    );
+    println!(
+        "tight   ({} B epoch heap): {} seals, {} compaction OOMs, {} segments retained",
+        tight_budget, snap_tight.seals, snap_tight.compaction_ooms, snap_tight.sealed_segments
+    );
+
+    // --- generous run compacted; bytes identical across both regimes ---
+    assert_eq!(run_gen.compaction_ooms, 0);
+    assert!(snap_gen.compactions >= 1, "threshold 2 over 4 seals must compact");
+    assert!(snap_gen.sealed_segments <= 2);
+    assert_eq!(
+        run_tight.seal_checksums, run_gen.seal_checksums,
+        "aborted compactions must never change sealed bytes"
+    );
+    println!(
+        "generous (half-device):    {} seals, {} compactions, {} segments",
+        snap_gen.seals, snap_gen.compactions, snap_gen.sealed_segments
+    );
+    println!("byte-identity across budget regimes ✓");
+
+    // --- the tight store still serves reads and recovers on Clear ---
+    assert!(tight.call(Request::Query { index: 0 }).expect_value().is_some());
+    tight.call(Request::Clear);
+    let cleared = tight.call(Request::Stats).expect_stats();
+    assert_eq!(cleared.heap_used_bytes, 0, "Clear must return every byte");
+    assert_eq!(cleared.sealed_bytes, 0);
+    // Post-clear, the same budget seals and compacts a small epoch fine.
+    tight.call(Request::Insert { values: vec![1.0; 256] });
+    match tight.call(Request::Seal) {
+        Response::Sealed { compaction_oom: None, epoch_len: 256, .. } => {}
+        other => panic!("post-clear seal should succeed cleanly: {other:?}"),
+    }
+    println!("recovery after Clear ✓");
+
+    tight.shutdown();
+    generous.shutdown();
+    println!("\ntight_budget_churn OK");
+}

@@ -47,7 +47,7 @@ fn insert_all(c: &Coordinator) {
 fn insert_heavy_sim(shards: usize) -> (f64, f64) {
     let c = Coordinator::start(config(shards));
     insert_all(&c);
-    let _ = c.call(Request::Query { index: 0 }); // barrier pending batches
+    // Stats barriers pending batches itself.
     let snap = c.call(Request::Stats).expect_stats();
     c.shutdown();
     (snap.sim_insert_ms, snap.device_insert_ms)
@@ -75,6 +75,23 @@ fn main() {
             black_box(c.call(Request::Stats));
             c.shutdown();
         });
+    }
+
+    // --- speedup API gate: None before any charged op, Some after ---
+    {
+        let c = Coordinator::start(config(4));
+        let idle = c.call(Request::Stats).expect_stats();
+        assert_eq!(
+            idle.parallel_speedup(),
+            None,
+            "an idle ledger must report no speedup, not NaN"
+        );
+        insert_all(&c);
+        let busy = c.call(Request::Stats).expect_stats();
+        let speedup = busy.parallel_speedup().expect("charged ledger must report a speedup");
+        assert!(speedup.is_finite() && speedup >= 1.0, "speedup {speedup}");
+        suite.record("observed parallel speedup (4 shards) [×]", speedup);
+        c.shutdown();
     }
 
     // --- modeled: insert-heavy critical path vs device total (CI gate) ---

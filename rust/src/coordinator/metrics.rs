@@ -62,9 +62,14 @@ impl ParallelCost {
 
     /// Parallel speedup exposed by the op: device-seconds issued per
     /// wall-model second (1.0 = fully serial, S = perfect S-shard
-    /// scaling). NaN when nothing was charged.
-    pub fn speedup(&self) -> f64 {
-        self.total_device_us / self.critical_path_us
+    /// scaling). `None` before anything was charged — callers used to
+    /// receive a silent `0/0 = NaN` here.
+    pub fn speedup(&self) -> Option<f64> {
+        if self.critical_path_us > 0.0 {
+            Some(self.total_device_us / self.critical_path_us)
+        } else {
+            None
+        }
     }
 }
 
@@ -84,6 +89,9 @@ pub struct Metrics {
     pub pjrt_executions: u64,
     /// Sealed-segment compaction passes performed.
     pub compactions: u64,
+    /// Compaction attempts aborted because the epoch heap could not hold
+    /// the gather's transient 2× residency (segments retained).
+    pub compaction_ooms: u64,
     /// Simulated wall-model (critical-path) µs per op class — shards
     /// execute concurrently, so these are max-over-shards, not sums.
     pub sim_insert_us: f64,
@@ -112,6 +120,7 @@ impl Metrics {
             errors: 0,
             pjrt_executions: 0,
             compactions: 0,
+            compaction_ooms: 0,
             sim_insert_us: 0.0,
             sim_work_us: 0.0,
             sim_flatten_us: 0.0,
@@ -157,6 +166,7 @@ impl Metrics {
             errors: self.errors,
             pjrt_executions: self.pjrt_executions,
             compactions: self.compactions,
+            compaction_ooms: self.compaction_ooms,
             sim_insert_ms: self.sim_insert_us / 1e3,
             sim_work_ms: self.sim_work_us / 1e3,
             sim_flatten_ms: self.sim_flatten_us / 1e3,
@@ -175,6 +185,8 @@ impl Metrics {
             epoch: 0,
             sealed_len: 0,
             sealed_segments: 0,
+            sealed_bytes: 0,
+            heap_used_bytes: 0,
             per_shard_len: Vec::new(),
         }
     }
@@ -201,6 +213,8 @@ pub struct MetricsSnapshot {
     pub pjrt_executions: u64,
     /// Sealed-segment compaction passes performed.
     pub compactions: u64,
+    /// Compaction attempts aborted on the epoch heap's transient 2×.
+    pub compaction_ooms: u64,
     /// Wall-model (critical-path) simulated ms per op class.
     pub sim_insert_ms: f64,
     pub sim_work_ms: f64,
@@ -223,6 +237,13 @@ pub struct MetricsSnapshot {
     /// Flat segments currently backing the sealed prefix (compaction
     /// keeps this bounded).
     pub sealed_segments: usize,
+    /// Bytes held by the epoch-owned sealed store's heap.
+    pub sealed_bytes: u64,
+    /// Total simulated VRAM in use: per-shard heaps (live-epoch buckets)
+    /// plus the epoch-owned sealed store — the conservation companion to
+    /// `allocated_bytes` (every heap byte is accounted to a live
+    /// structure, and vice versa).
+    pub heap_used_bytes: u64,
     /// Live-epoch elements per shard (aggregated OpReports land in the
     /// sim_* ledgers; this exposes the balance).
     pub per_shard_len: Vec<u64>,
@@ -247,14 +268,26 @@ impl MetricsSnapshot {
         self
     }
 
+    /// Attach the memory-accounting context (sealed-store residency and
+    /// total heap usage across shard + epoch heaps).
+    pub fn with_memory(mut self, sealed_bytes: u64, heap_used_bytes: u64) -> MetricsSnapshot {
+        self.sealed_bytes = sealed_bytes;
+        self.heap_used_bytes = heap_used_bytes;
+        self
+    }
+
     /// Observed shard-parallel speedup: device-seconds issued per
     /// wall-model second across all op classes (1.0 = serial; up to
-    /// `shards` for perfectly balanced dispatch). NaN before any
-    /// simulated work.
-    pub fn parallel_speedup(&self) -> f64 {
+    /// `shards` for perfectly balanced dispatch). `None` before any
+    /// simulated work — the old `f64` version leaked `0/0 = NaN` to
+    /// callers that read stats before the first charged op.
+    pub fn parallel_speedup(&self) -> Option<f64> {
         let sim = self.sim_insert_ms + self.sim_work_ms + self.sim_flatten_ms;
+        if sim <= 0.0 {
+            return None;
+        }
         let device = self.device_insert_ms + self.device_work_ms + self.device_flatten_ms;
-        device / sim
+        Some(device / sim)
     }
 
     /// Memory overhead vs live data (the paper's ≤2× claim, observable
@@ -288,20 +321,28 @@ impl std::fmt::Display for MetricsSnapshot {
         writeln!(f, "errors               {}", self.errors)?;
         writeln!(f, "PJRT executions      {}", self.pjrt_executions)?;
         writeln!(f, "sim insert/work/flat {:.2} / {:.2} / {:.2} ms (critical path)", self.sim_insert_ms, self.sim_work_ms, self.sim_flatten_ms)?;
-        let speedup = self.parallel_speedup();
         writeln!(
             f,
             "device insert/work/flat {:.2} / {:.2} / {:.2} ms (speedup {})",
             self.device_insert_ms,
             self.device_work_ms,
             self.device_flatten_ms,
-            if speedup.is_finite() { format!("{speedup:.2}×") } else { "—".into() }
+            match self.parallel_speedup() {
+                Some(s) => format!("{s:.2}×"),
+                None => "—".into(),
+            }
         )?;
         writeln!(f, "mean request latency {:.1} µs over {}", self.mean_latency_us, self.p_latency_count)?;
         writeln!(
             f,
-            "shards / epoch       {} / {} (sealed prefix {} elements in {} segments, {} compactions)",
-            self.shards, self.epoch, self.sealed_len, self.sealed_segments, self.compactions
+            "shards / epoch       {} / {} (sealed prefix {} elements in {} segments, {} compactions, {} compaction OOMs)",
+            self.shards, self.epoch, self.sealed_len, self.sealed_segments, self.compactions, self.compaction_ooms
+        )?;
+        writeln!(
+            f,
+            "heap in use          {} ({} sealed, epoch-owned)",
+            crate::util::tables::fmt_bytes(self.heap_used_bytes),
+            crate::util::tables::fmt_bytes(self.sealed_bytes)
         )?;
         writeln!(f, "len / capacity       {} / {}", self.len, self.capacity)?;
         write!(f, "allocated            {} (overhead {:.2}×)", crate::util::tables::fmt_bytes(self.allocated_bytes), self.overhead_ratio())
@@ -340,12 +381,24 @@ mod tests {
         let c = ParallelCost::from_parallel([10.0, 4.0, 7.0]);
         assert_eq!(c.critical_path_us, 10.0);
         assert_eq!(c.total_device_us, 21.0);
-        assert!((c.speedup() - 2.1).abs() < 1e-12);
+        assert!((c.speedup().unwrap() - 2.1).abs() < 1e-12);
         // Sequential composition adds both components.
         let s = c.then(ParallelCost::serial(5.0));
         assert_eq!(s.critical_path_us, 15.0);
         assert_eq!(s.total_device_us, 26.0);
         assert_eq!(ParallelCost::from_parallel([]), ParallelCost::zero());
+    }
+
+    #[test]
+    fn speedup_is_none_before_any_charge() {
+        // Regression: 0/0 used to leak NaN to every caller except
+        // Display's is_finite guard.
+        assert_eq!(ParallelCost::zero().speedup(), None);
+        let m = Metrics::new();
+        let s = m.snapshot(0, 0, 0);
+        assert_eq!(s.parallel_speedup(), None);
+        // And the Display path renders the em-dash placeholder, not NaN.
+        assert!(s.to_string().contains("speedup —"), "{s}");
     }
 
     #[test]
@@ -358,6 +411,15 @@ mod tests {
         assert!((s.device_insert_ms - 0.4).abs() < 1e-12);
         assert!((s.sim_work_ms - 0.05).abs() < 1e-12);
         // Speedup over both classes: 450 device µs in 150 wall µs.
-        assert!((s.parallel_speedup() - 3.0).abs() < 1e-9);
+        assert!((s.parallel_speedup().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn with_memory_attaches_heap_accounting() {
+        let m = Metrics::new();
+        let s = m.snapshot(10, 20, 400).with_memory(160, 560);
+        assert_eq!(s.sealed_bytes, 160);
+        assert_eq!(s.heap_used_bytes, 560);
+        assert!(s.to_string().contains("sealed, epoch-owned"), "{s}");
     }
 }

@@ -6,8 +6,12 @@
 //! the AOT work kernels via the PJRT runtime. The paper's two-phase
 //! lifecycle is first-class: sealing an epoch flattens every shard into
 //! one contiguous fast-access view (see [`shard::EpochManager`]) while a
-//! fresh insert epoch opens behind it; sealed segments are compacted
-//! once their count passes the configured threshold. Simulated time is
+//! fresh insert epoch opens behind it; sealed residency is epoch-owned
+//! (commit *transfers* each flatten destination into the epoch store's
+//! own heap, freeing the shard budgets), and sealed segments are
+//! compacted — a reserve-then-commit VRAM transaction that can OOM and
+//! abort — once their count passes the configured threshold. Simulated
+//! time is
 //! charged under the parallel time model ([`metrics::ParallelCost`]):
 //! critical path (max over concurrent shards) for the wall-model,
 //! sum for the `device_*` aggregate totals. See [`service`] for the

@@ -76,6 +76,12 @@ pub enum Response {
         device_us: f64,
         /// Checksum of this epoch's flattened data (order-sensitive).
         checksum: u64,
+        /// Set when this seal triggered a compaction pass that aborted on
+        /// VRAM: the epoch heap could not hold the gather's transient 2×
+        /// residency. The seal itself committed and the store keeps
+        /// serving (segments retained byte-identically) — this surfaces
+        /// the skipped hygiene pass so operators can widen the budget.
+        compaction_oom: Option<String>,
     },
     Value(Option<f32>),
     Stats(MetricsSnapshot),

@@ -13,6 +13,17 @@
 //! work over the sealed prefix run at static-array (coalesced) cost; the
 //! live epoch keeps paying GGArray costs until it, too, is sealed.
 //!
+//! VRAM is one physical budget carved once: the epoch-owned sealed store
+//! (`CoordinatorConfig::epoch_heap`) first, the per-shard heaps from the
+//! remainder. A seal is a real memory transaction — flatten every shard,
+//! reserve epoch-store admission for the whole seal, then *transfer* each
+//! destination out of its shard heap into the epoch heap; any failure
+//! aborts the entire seal in one pass with every byte restored. The
+//! compaction gather is the same shape of transaction (merged destination
+//! reserved while the sources are resident — a transient 2×), and on OOM
+//! it aborts byte-identically, surfacing the error in `Response::Sealed`
+//! and the `compaction_ooms` metric while the store keeps serving.
+//!
 //! Simulated time follows the **parallel time model**: shards are
 //! concurrent thread-block groups of one device, so each dispatching op
 //! (insert batch, work, flatten, seal) charges the ledger the *max* over
@@ -60,10 +71,20 @@ pub struct CoordinatorConfig {
     pub use_artifacts: bool,
     /// +1 iterations per work call (paper: 30).
     pub work_iters: u32,
-    /// Simulated VRAM budget in bytes (None = the device's full memory),
-    /// carved evenly into per-shard heap budgets.
+    /// Total simulated VRAM budget in bytes (None = the device's full
+    /// memory). The epoch-owned sealed store is carved out first (see
+    /// [`CoordinatorConfig::epoch_heap`]); the remainder is split evenly
+    /// into per-shard heap budgets.
     /// Used by failure-injection tests and multi-tenant scenarios.
     pub heap_capacity: Option<u64>,
+    /// Bytes of the total budget reserved for the epoch-owned sealed
+    /// store ([`EpochManager`]'s heap): committed sealed segments live
+    /// there — and the compaction gather's transient 2× residency pushes
+    /// through it — so live-epoch budgets are never squatted on by old
+    /// epochs, and a tight sealed-store budget makes seal admission or
+    /// compaction OOM without touching the shards. `None` reserves half
+    /// the total budget.
+    pub epoch_heap: Option<u64>,
     /// Independent GGArray shards, each owning `blocks / shards`
     /// consecutive blocks of the global block space.
     pub shards: usize,
@@ -85,6 +106,7 @@ impl Default for CoordinatorConfig {
             use_artifacts: true,
             work_iters: 30,
             heap_capacity: None,
+            epoch_heap: None,
             shards: 1,
             compact_segments: 4,
         }
@@ -104,6 +126,10 @@ pub enum ConfigError {
     /// remainder blocks from the global block space and later trip the
     /// `split_for_shards` divisibility assert.
     UnevenBlocks { blocks: usize, shards: usize },
+    /// `epoch_heap` exceeds the total VRAM budget: the sealed store is
+    /// carved out of the same physical memory the shards share, so it
+    /// cannot be promised more than the whole card.
+    EpochHeapExceedsBudget { epoch_heap: u64, total: u64 },
 }
 
 impl std::fmt::Display for ConfigError {
@@ -116,6 +142,11 @@ impl std::fmt::Display for ConfigError {
                 "blocks ({blocks}) must divide evenly into shards ({shards}); \
                  {} remainder block(s) would be lost",
                 blocks % shards
+            ),
+            ConfigError::EpochHeapExceedsBudget { epoch_heap, total } => write!(
+                f,
+                "epoch heap ({epoch_heap} B) exceeds the total VRAM budget ({total} B); \
+                 the sealed store is carved out of the same device memory the shards share"
             ),
         }
     }
@@ -135,7 +166,22 @@ impl CoordinatorConfig {
         if self.blocks % self.shards != 0 {
             return Err(ConfigError::UnevenBlocks { blocks: self.blocks, shards: self.shards });
         }
+        let total = self.heap_capacity.unwrap_or_else(|| self.device.memory_bytes());
+        if let Some(epoch_heap) = self.epoch_heap {
+            if epoch_heap > total {
+                return Err(ConfigError::EpochHeapExceedsBudget { epoch_heap, total });
+            }
+        }
         Ok(())
+    }
+
+    /// The VRAM carve implied by this config: `(epoch_heap_bytes,
+    /// shard_heap_total)` — the sealed store's budget and what is left
+    /// for the per-shard heaps. Requires a validated config.
+    pub fn heap_carve(&self) -> (u64, u64) {
+        let total = self.heap_capacity.unwrap_or_else(|| self.device.memory_bytes());
+        let epoch = self.epoch_heap.unwrap_or(total / 2);
+        (epoch, total - epoch)
     }
 }
 
@@ -281,10 +327,13 @@ impl Worker {
         } else {
             None
         };
-        // Each shard's heap budget is carved from the shared device (or
-        // from the configured budget), remainder bytes included.
-        let total_heap = cfg.heap_capacity.unwrap_or_else(|| cfg.device.memory_bytes());
-        let shards: Vec<Shard> = split_heap_budget(total_heap, cfg.shards)
+        // One physical budget, carved once: the epoch-owned sealed store
+        // takes its reservation first, the rest splits evenly into the
+        // per-shard heaps (remainder bytes included). Bytes committed to
+        // sealed epochs can never be promised to live-epoch growth, and
+        // vice versa.
+        let (epoch_heap_bytes, shard_heap_total) = cfg.heap_carve();
+        let shards: Vec<Shard> = split_heap_budget(shard_heap_total, cfg.shards)
             .into_iter()
             .enumerate()
             .map(|(id, heap_bytes)| {
@@ -301,7 +350,7 @@ impl Worker {
         Worker {
             shards,
             blocks_per_shard,
-            epochs: EpochManager::new(cfg.device.clone()),
+            epochs: EpochManager::new(cfg.device.clone(), epoch_heap_bytes),
             batcher: Batcher::new(cfg.batch.clone()),
             metrics: Metrics::new(),
             executor,
@@ -460,8 +509,13 @@ impl Worker {
                 eprintln!("[coordinator] simulated OOM during insert on shard {}: {e}", shard.id());
                 // No rollback — elements placed before the OOM stay
                 // visible, matching device semantics; the shard left its
-                // index consistent.
+                // index consistent. But dispatch STOPS here: handing
+                // later shards their slices would leave a mid-stream
+                // hole, so the surviving data would no longer be a
+                // contiguous prefix of the batch (and 1-shard vs N-shard
+                // runs would diverge byte-wise under OOM).
                 self.metrics.errors += 1;
+                break;
             }
         }
         let cost = self.cost_since(&marks);
@@ -558,46 +612,76 @@ impl Worker {
                 self.barrier();
                 let marks = self.clock_marks();
                 self.charge_dispatch();
-                // Two-phase commit across shards: flatten everything
-                // first, commit VRAM residency only if every shard
-                // succeeded, otherwise release the fresh destinations
-                // and reopen with contents untouched.
+                // Two-phase commit across shards. Phase 1 — prepare:
+                // flatten every shard (each destination is a fresh
+                // allocation in its shard's heap), then reserve epoch-
+                // store capacity for the whole seal. Any failure aborts
+                // the entire transaction before a single byte commits.
                 let mut parts = Vec::with_capacity(self.shards.len());
                 let mut failed = None;
                 for shard in &mut self.shards {
                     match shard.seal_flatten() {
                         Ok(f) => parts.push(f),
                         Err(e) => {
-                            failed = Some(e);
+                            failed = Some(format!("seal OOM: {e}"));
                             break;
                         }
                     }
                 }
-                if let Some(e) = failed {
-                    for (shard, mut part) in self.shards.iter_mut().zip(parts) {
-                        shard.abort_seal(part.alloc.take());
+                if failed.is_none() {
+                    // Reserve: the epoch store must be able to adopt
+                    // every destination before any shard commits, so the
+                    // per-shard transfers below can never fail half-way.
+                    let sealed_bytes: u64 = parts.iter().map(|p| p.data.len() as u64 * 4).sum();
+                    if let Err(e) = self.epochs.can_accept(sealed_bytes) {
+                        failed = Some(format!("seal OOM (epoch store): {e}"));
                     }
-                    // Shards past the failure point never flattened —
-                    // just reopen them (zip stopped at `parts`' length,
-                    // so handle the tail, failure shard included).
+                }
+                if let Some(msg) = failed {
+                    // Single-pass abort: shards that flattened release
+                    // their fresh destination and reopen; the tail (the
+                    // failure shard included) never flattened and just
+                    // reopens — every shard is visited exactly once, so
+                    // nothing is double-reopened or double-freed.
+                    let mut parts = parts.into_iter();
                     for shard in &mut self.shards {
-                        shard.reopen();
+                        match parts.next() {
+                            Some(mut p) => shard.abort_seal(p.alloc.take()),
+                            None => shard.reopen(),
+                        }
                     }
                     self.metrics.errors += 1;
-                    return Response::Error(format!("seal OOM: {e}"));
+                    return Response::Error(msg);
                 }
+                // Phase 2 — commit: transfer every destination out of
+                // its shard heap into the epoch-owned heap (reservation
+                // checked above, so the transfers are infallible) and
+                // open the next inserting epoch behind the seal.
+                let mut seg_allocs = Vec::with_capacity(parts.len());
                 for (shard, part) in self.shards.iter_mut().zip(&mut parts) {
-                    shard.commit_seal(part.alloc.take());
+                    seg_allocs.extend(shard.commit_seal(part.alloc.take(), self.epochs.heap_mut()));
                 }
                 let flat: ShardedFlattened<f32> = flatten::concat(parts);
                 let epoch_len = flat.len() as u64;
                 let sum = checksum(&flat.data);
-                let epoch = self.epochs.absorb(flat);
+                let epoch = self.epochs.absorb(flat, seg_allocs);
                 // Segment-count hygiene: one modeled gather pass merges
                 // the sealed segments once there are too many (charged
                 // to the flat-path clock, so it lands in this op's cost).
-                if self.epochs.maybe_compact(self.cfg.compact_segments).is_some() {
-                    self.metrics.compactions += 1;
+                // The gather is its own VRAM transaction — sources and
+                // merged destination resident at once — and a budget too
+                // tight for that transient aborts it byte-identically:
+                // the seal stands, the segments stay, and the OOM is
+                // surfaced here and in the metrics.
+                let mut compaction_oom = None;
+                match self.epochs.maybe_compact(self.cfg.compact_segments) {
+                    Some(Ok(_us)) => self.metrics.compactions += 1,
+                    Some(Err(e)) => {
+                        self.metrics.compaction_ooms += 1;
+                        self.metrics.errors += 1;
+                        compaction_oom = Some(format!("compaction OOM (segments retained): {e}"));
+                    }
+                    None => {}
                 }
                 self.metrics.seals += 1;
                 let cost = self.cost_since(&marks);
@@ -610,6 +694,7 @@ impl Worker {
                     sim_us: cost.critical_path_us,
                     device_us: cost.total_device_us,
                     checksum: sum,
+                    compaction_oom,
                 }
             }
             Request::Query { index } => {
@@ -618,26 +703,42 @@ impl Worker {
                 Response::Value(self.read_global(index))
             }
             Request::Stats => {
+                // Pending inserts are observable state: flush them so
+                // `len`, `overhead_ratio()` and `coalescing()` include
+                // everything submitted. Callers previously had to
+                // barrier with a dummy Query to see accurate stats.
+                self.barrier();
                 let len = self.total_len();
                 let capacity = self.shards.iter().map(|s| s.capacity() as u64).sum::<u64>()
                     + self.epochs.sealed_len();
+                // Allocation accounting is a real ledger now: live-epoch
+                // bucket bytes in the shard heaps plus the epoch-owned
+                // sealed store — not a `sealed_len * 4` estimate.
                 let allocated = self.shards.iter().map(|s| s.allocated_bytes()).sum::<u64>()
-                    + self.epochs.sealed_len() * 4;
-                let snap = self.metrics.snapshot(len, capacity, allocated).with_sharding(
-                    self.shards.len(),
-                    self.epochs.seq(),
-                    self.epochs.sealed_len(),
-                    self.epochs.sealed_epochs(),
-                    self.shards.iter().map(|s| s.len() as u64).collect(),
-                );
+                    + self.epochs.sealed_bytes();
+                let heap_used = self.shards.iter().map(|s| s.heap_used()).sum::<u64>()
+                    + self.epochs.sealed_bytes();
+                let snap = self
+                    .metrics
+                    .snapshot(len, capacity, allocated)
+                    .with_sharding(
+                        self.shards.len(),
+                        self.epochs.seq(),
+                        self.epochs.sealed_len(),
+                        self.epochs.sealed_epochs(),
+                        self.shards.iter().map(|s| s.len() as u64).collect(),
+                    )
+                    .with_memory(self.epochs.sealed_bytes(), heap_used);
                 Response::Stats(snap)
             }
             Request::Clear => {
                 // Discard pending inserts too: Clear means "empty now".
                 let _ = self.batcher.flush();
                 for shard in &mut self.shards {
-                    shard.reset();
+                    shard.reopen_clear();
                 }
+                // The epoch store owns the sealed bytes — it releases
+                // them itself.
                 self.epochs.reset();
                 Response::Cleared
             }
@@ -683,6 +784,9 @@ pub struct WorkloadRun {
     pub work_device_us: f64,
     /// Aggregate device-seconds (µs) across all Seal steps.
     pub seal_device_us: f64,
+    /// Seals whose compaction pass aborted on the epoch heap's transient
+    /// 2× residency (the seal itself committed; segments retained).
+    pub compaction_ooms: u64,
 }
 
 /// Drive a workload trace through the service. `Insert` steps synthesise
@@ -724,10 +828,11 @@ pub fn drive_workload(c: &Coordinator, w: &WorkloadSpec, chunk: usize) -> Worklo
                 other => panic!("flatten failed: {other:?}"),
             },
             Step::Seal => match c.call(Request::Seal) {
-                Response::Sealed { checksum, sim_us, device_us, .. } => {
+                Response::Sealed { checksum, sim_us, device_us, compaction_oom, .. } => {
                     run.seal_checksums.push(checksum);
                     run.seal_sim_us += sim_us;
                     run.seal_device_us += device_us;
+                    run.compaction_ooms += u64::from(compaction_oom.is_some());
                 }
                 other => panic!("seal failed: {other:?}"),
             },
@@ -805,8 +910,7 @@ mod tests {
         for i in 0..200 {
             c.call(Request::Insert { values: vec![i as f32] });
         }
-        // Barrier via query, then inspect stats.
-        let _ = c.call(Request::Query { index: 0 });
+        // Stats barriers pending inserts itself — no dummy Query needed.
         let snap = match c.call(Request::Stats) {
             Response::Stats(s) => s,
             other => panic!("{other:?}"),
@@ -822,12 +926,33 @@ mod tests {
     fn stats_overhead_bounded() {
         let c = Coordinator::start(test_cfg(8));
         c.call(Request::Insert { values: vec![1.0; 10_000] });
-        let _ = c.call(Request::Query { index: 0 });
         let snap = match c.call(Request::Stats) {
             Response::Stats(s) => s,
             other => panic!("{other:?}"),
         };
         assert!(snap.overhead_ratio() < 2.3, "overhead {:.2}", snap.overhead_ratio());
+        c.shutdown();
+    }
+
+    #[test]
+    fn stats_barriers_pending_inserts() {
+        // Regression: Stats used to read state without flushing the
+        // batcher, silently excluding pending inserts from len/overhead/
+        // coalescing (callers worked around it with a dummy Query).
+        let cfg = CoordinatorConfig {
+            // A huge size threshold + long deadline: nothing flushes on
+            // its own, so the 50 values below stay pending until an op
+            // barriers them.
+            batch: BatchConfig { max_values: 1 << 20, max_delay: Duration::from_secs(3600) },
+            ..test_cfg(4)
+        };
+        let c = Coordinator::start(cfg);
+        c.call(Request::Insert { values: vec![2.5; 50] });
+        let snap = c.call(Request::Stats).expect_stats();
+        assert_eq!(snap.len, 50, "Stats must observe pending inserts");
+        assert_eq!(snap.elements_inserted, 50);
+        assert!(snap.batches >= 1, "the barrier flush must be recorded");
+        assert!(snap.overhead_ratio().is_finite());
         c.shutdown();
     }
 
@@ -847,9 +972,42 @@ mod tests {
         assert_eq!(err, ConfigError::UnevenBlocks { blocks: 10, shards: 4 });
         assert!(err.to_string().contains("2 remainder"), "{err}");
         assert!(Coordinator::try_start(CoordinatorConfig { shards: 4, ..test_cfg(10) }).is_err());
+        // The epoch store cannot be promised more than the whole budget.
+        let err = CoordinatorConfig {
+            heap_capacity: Some(1024),
+            epoch_heap: Some(2048),
+            ..test_cfg(4)
+        }
+        .validate()
+        .unwrap_err();
+        assert_eq!(err, ConfigError::EpochHeapExceedsBudget { epoch_heap: 2048, total: 1024 });
+        assert!(err.to_string().contains("epoch heap"), "{err}");
         // And a valid geometry still starts.
         let c = Coordinator::try_start(test_cfg(4)).expect("valid config");
         c.shutdown();
+    }
+
+    #[test]
+    fn heap_carve_splits_epoch_store_from_shard_budgets() {
+        let cfg = CoordinatorConfig {
+            heap_capacity: Some(1000),
+            epoch_heap: Some(300),
+            ..test_cfg(4)
+        };
+        assert_eq!(cfg.heap_carve(), (300, 700));
+        // Default: half the budget each way.
+        let cfg = CoordinatorConfig { heap_capacity: Some(1000), ..test_cfg(4) };
+        assert_eq!(cfg.heap_carve(), (500, 500));
+        // epoch_heap == total is legal: a seal-only store with no
+        // live-epoch growth headroom (every insert OOMs — failure
+        // injection territory).
+        let cfg = CoordinatorConfig {
+            heap_capacity: Some(64),
+            epoch_heap: Some(64),
+            ..test_cfg(4)
+        };
+        assert!(cfg.validate().is_ok());
+        assert_eq!(cfg.heap_carve(), (64, 0));
     }
 
     #[test]
@@ -876,7 +1034,6 @@ mod tests {
         let run = |shards: usize| {
             let c = Coordinator::start(sharded_cfg(16, shards));
             c.call(Request::Insert { values: vec![1.0; 1 << 14] });
-            let _ = c.call(Request::Query { index: 0 });
             let snap = c.call(Request::Stats).expect_stats();
             c.shutdown();
             (snap.sim_insert_ms, snap.device_insert_ms)
@@ -943,7 +1100,6 @@ mod tests {
         // Sealed data reads back; epoch 1 inserts land after it.
         assert!(c.call(Request::Query { index: 0 }).expect_value().is_some());
         c.call(Request::Insert { values: vec![7.0; 10] });
-        // Query barriers the pending batch before Stats observes state.
         assert_eq!(c.call(Request::Query { index: 300 }).expect_value(), Some(7.0));
         let snap = match c.call(Request::Stats) {
             Response::Stats(s) => s,
@@ -1000,7 +1156,108 @@ mod tests {
         };
         assert_eq!(snap.len, 0);
         assert_eq!(snap.sealed_len, 0);
+        assert_eq!(snap.sealed_bytes, 0, "Clear must release the epoch-owned store");
+        assert_eq!(snap.heap_used_bytes, 0, "Clear must release every heap byte");
         assert_eq!(c.call(Request::Query { index: 0 }).expect_value(), None);
+        c.shutdown();
+    }
+
+    #[test]
+    fn seal_frees_shard_budgets_by_transferring_to_the_epoch_store() {
+        // The tentpole invariant at unit scale: after a committed seal
+        // the sealed bytes live in the epoch-owned heap, not the shard
+        // heaps — old epochs cannot squat on live-epoch growth budgets.
+        let c = Coordinator::start(sharded_cfg(4, 2));
+        c.call(Request::Insert { values: vec![1.0; 200] });
+        let before = c.call(Request::Stats).expect_stats();
+        assert_eq!(before.sealed_bytes, 0);
+        assert!(before.heap_used_bytes > 0);
+        c.call(Request::Seal);
+        let after = c.call(Request::Stats).expect_stats();
+        assert_eq!(after.sealed_bytes, 200 * 4, "sealed bytes accounted to the epoch heap");
+        assert_eq!(
+            after.heap_used_bytes, after.sealed_bytes,
+            "shard heaps fully released after commit (live epoch is empty)"
+        );
+        assert_eq!(after.allocated_bytes, after.heap_used_bytes, "ledger conserves every byte");
+        c.shutdown();
+    }
+
+    #[test]
+    fn aborted_seal_restores_every_shard_in_one_pass() {
+        // Shard-side OOM: blocks=4 / shards=2 / fbs=16. 60 elements fill
+        // the first buckets to 15/16 per block (128 B per shard, 32 B
+        // free), so the flatten destination (30 × 4 B = 120 B) cannot be
+        // reserved and the seal aborts. Every shard must come back
+        // unsealed, byte-identical, and insertable.
+        let cfg = CoordinatorConfig {
+            heap_capacity: Some(320 + 1024),
+            epoch_heap: Some(1024),
+            ..sharded_cfg(4, 2)
+        };
+        let c = Coordinator::start(cfg);
+        c.call(Request::Insert { values: (0..60).map(|i| i as f32).collect() });
+        let before = c.call(Request::Stats).expect_stats();
+        assert_eq!(before.heap_used_bytes, 256, "two shards × two full first buckets");
+        for round in 1..=2u64 {
+            match c.call(Request::Seal) {
+                Response::Error(msg) => assert!(msg.contains("seal OOM"), "{msg}"),
+                other => panic!("expected seal abort, got {other:?}"),
+            }
+            let after = c.call(Request::Stats).expect_stats();
+            // VRAM restored byte-identically; nothing sealed; the epoch
+            // counter never advanced; repeated aborts do not leak.
+            assert_eq!(after.heap_used_bytes, before.heap_used_bytes, "round {round}");
+            assert_eq!(after.sealed_len, 0);
+            assert_eq!(after.sealed_bytes, 0);
+            assert_eq!(after.epoch, 0);
+            assert_eq!(after.len, 60);
+            assert_eq!(after.errors, round);
+        }
+        // Contents untouched and every shard still insertable (the last
+        // free slot of each first bucket takes one element without any
+        // new allocation).
+        assert_eq!(c.call(Request::Query { index: 0 }).expect_value(), Some(0.0));
+        assert_eq!(c.call(Request::Query { index: 59 }).expect_value(), Some(59.0));
+        c.call(Request::Insert { values: vec![99.0; 4] });
+        let snap = c.call(Request::Stats).expect_stats();
+        assert_eq!(snap.len, 64, "aborted seal must leave every shard insertable");
+        assert_eq!(snap.errors, 2, "the post-abort insert fits without OOM");
+        c.shutdown();
+    }
+
+    #[test]
+    fn seal_admission_failure_aborts_after_every_shard_flattened() {
+        // Epoch-store-side OOM: the shard heaps can hold their flatten
+        // destinations (free 384 B each ≥ the 32-element dst), but the
+        // 64-byte epoch store cannot adopt the 256 sealed bytes. Every
+        // shard took the abort_seal path (destination freed + reopen) —
+        // the single-pass abort with parts.len() == shards.
+        let cfg = CoordinatorConfig {
+            heap_capacity: Some(1024 + 64),
+            epoch_heap: Some(64),
+            ..sharded_cfg(4, 2)
+        };
+        let c = Coordinator::start(cfg);
+        c.call(Request::Insert { values: (0..64).map(|i| i as f32).collect() });
+        let before = c.call(Request::Stats).expect_stats();
+        assert_eq!(before.heap_used_bytes, 256);
+        match c.call(Request::Seal) {
+            Response::Error(msg) => {
+                assert!(msg.contains("epoch store"), "admission failure must say so: {msg}")
+            }
+            other => panic!("expected seal abort, got {other:?}"),
+        }
+        let after = c.call(Request::Stats).expect_stats();
+        assert_eq!(after.heap_used_bytes, 256, "flatten destinations freed on abort");
+        assert_eq!(after.sealed_len, 0);
+        assert_eq!(after.len, 64);
+        // Shards stay fully usable: growing into the second bucket still
+        // fits the untouched shard budgets.
+        c.call(Request::Insert { values: vec![7.0; 64] });
+        let grown = c.call(Request::Stats).expect_stats();
+        assert_eq!(grown.len, 128);
+        assert_eq!(grown.errors, 1, "only the aborted seal errored");
         c.shutdown();
     }
 }

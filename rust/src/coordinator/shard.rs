@@ -18,6 +18,17 @@
 //! view. Reads and work over sealed data run at static-array (coalesced)
 //! cost — the fast regular-access phase — while a fresh inserting epoch
 //! opens behind the seal.
+//!
+//! Sealed residency is **epoch-owned**: at commit each shard *transfers*
+//! its flatten-destination allocation out of its own heap into the
+//! [`EpochManager`]'s heap ([`VramHeap::transfer_to`] — an accounting
+//! move, not allocator traffic), so old epochs never squat on the
+//! live-epoch budgets. [`EpochManager::compact`] is a real reserve-then-
+//! commit transaction over that heap: the merged destination is
+//! allocated while every source segment is still resident (the gather's
+//! transient 2× residency), and a budget too tight for the transient
+//! makes compaction OOM and abort byte-identically — segments,
+//! allocations and `sealed_len` untouched.
 
 use crate::ggarray::array::{GgArray, GgConfig};
 use crate::ggarray::flatten::{self, Flattened, ShardedFlattened};
@@ -51,17 +62,16 @@ pub struct ShardInsertOutcome {
     pub error: Option<OomError>,
 }
 
-/// One independent GGArray shard with its own VRAM budget.
+/// One independent GGArray shard with its own VRAM budget. The budget
+/// covers only the *live* epoch (growable buckets plus the transient
+/// flatten destination of a seal in flight): committed sealed bytes are
+/// transferred to the epoch-owned heap ([`EpochManager`]), so old epochs
+/// never squat on a shard's growth headroom.
 #[derive(Debug)]
 pub struct Shard {
     id: usize,
     gg: GgArray<f32>,
     insertion: InsertionKind,
-    /// Simulated VRAM held by the flatten destinations of every sealed
-    /// epoch: sealed data stays resident (it keeps serving reads and
-    /// work) until `reset`, so repeated seals under a tight budget OOM
-    /// exactly as they would on a real device.
-    sealed_allocs: Vec<AllocId>,
 }
 
 impl Shard {
@@ -73,12 +83,7 @@ impl Shard {
             insertion: cfg.insertion,
         };
         let heap = VramHeap::with_capacity(cfg.device.clone(), cfg.heap_bytes);
-        Shard {
-            id: cfg.id,
-            gg: GgArray::with_heap(gg_cfg, cfg.device, heap),
-            insertion: cfg.insertion,
-            sealed_allocs: Vec::new(),
-        }
+        Shard { id: cfg.id, gg: GgArray::with_heap(gg_cfg, cfg.device, heap), insertion: cfg.insertion }
     }
 
     pub fn id(&self) -> usize {
@@ -183,12 +188,25 @@ impl Shard {
         }
     }
 
-    /// Commit a successful seal: retain the epoch's flatten destination
-    /// (sealed data stays VRAM-resident until `reset`), drop the
-    /// growable storage, and open the next inserting epoch.
-    pub fn commit_seal(&mut self, alloc: Option<AllocId>) {
-        self.sealed_allocs.extend(alloc);
+    /// Commit a successful seal: *transfer* the epoch's flatten
+    /// destination out of this shard's heap into the epoch-owned sealed
+    /// store (the bytes stay resident on the device; only the accounting
+    /// owner changes, freeing this shard's budget for the next epoch),
+    /// drop the growable storage, and open the next inserting epoch.
+    /// Returns the allocation's id in the epoch heap.
+    ///
+    /// The caller must have reserved epoch-store capacity for the whole
+    /// seal ([`EpochManager::can_accept`]) *before* committing any
+    /// shard: a transfer failing mid-commit would tear the cross-shard
+    /// transaction, so it is a contract violation here.
+    pub fn commit_seal(&mut self, alloc: Option<AllocId>, epoch_heap: &mut VramHeap) -> Option<AllocId> {
+        let transferred = alloc.map(|a| {
+            let (_, heap, _, _, _, _) = self.gg.parts_mut();
+            heap.transfer_to(a, epoch_heap)
+                .expect("epoch-store capacity must be reserved (can_accept) before commit")
+        });
         self.reopen_clear();
+        transferred
     }
 
     /// Abort a seal whose sibling shard failed: release this shard's
@@ -220,23 +238,11 @@ impl Shard {
         self.gg.reopen();
     }
 
-    /// After a successful seal: drop the growable storage and open the
-    /// next inserting epoch (the sealed data lives on in the epoch
-    /// manager + the retained flat allocation).
+    /// Drop the growable storage and open the next inserting epoch —
+    /// after a successful seal (the sealed data lives on in the epoch
+    /// manager's heap) or a service `Clear` (the epoch store resets
+    /// itself separately: it owns the sealed bytes, not the shards).
     pub fn reopen_clear(&mut self) {
-        self.gg.clear();
-        self.gg.rebuild_index_charged();
-        self.gg.reopen();
-    }
-
-    /// Full reset (service `Clear`): release everything including every
-    /// sealed epoch's destination.
-    pub fn reset(&mut self) {
-        let allocs = std::mem::take(&mut self.sealed_allocs);
-        for a in allocs {
-            let (_, heap, clock, _, _, _) = self.gg.parts_mut();
-            heap.free(a, clock);
-        }
         self.gg.clear();
         self.gg.rebuild_index_charged();
         self.gg.reopen();
@@ -336,13 +342,22 @@ impl<T: Copy> Epoch<T> {
     }
 }
 
-/// Owns the sealed epochs and the simulated cost of the flat access
-/// path. Global index order: sealed epochs in seal order (each
-/// shard-major internally), then the live inserting epoch.
+/// Owns the sealed epochs, their VRAM, and the simulated cost of the
+/// flat access path. Global index order: sealed epochs in seal order
+/// (each shard-major internally), then the live inserting epoch.
+///
+/// The manager's [`VramHeap`] is the sealed store's budget, carved from
+/// the same device as the shard heaps: every sealed segment's backing
+/// allocation lives here (transferred in at seal commit), and the
+/// compaction gather's transient 2× residency pushes through it — so a
+/// tight budget makes [`EpochManager::compact`] OOM and abort, exactly
+/// like the seal two-phase commit.
 #[derive(Debug)]
 pub struct EpochManager {
     device: DeviceSpec,
     clock: crate::sim::clock::Clock,
+    /// Epoch-owned VRAM: sealed segments + compaction transients.
+    heap: VramHeap,
     /// Sequence number of the *current inserting* epoch (starts at 0;
     /// each seal advances it).
     seq: u64,
@@ -350,18 +365,25 @@ pub struct EpochManager {
     /// [`Epoch::Sealed`]; the current [`Epoch::Inserting`] lives in the
     /// shard GgArrays, not in this store.
     sealed: Vec<Epoch<f32>>,
+    /// Backing allocations of each sealed segment, parallel to `sealed`
+    /// (one allocation per shard destination transferred at commit; a
+    /// single merged allocation after compaction).
+    allocs: Vec<Vec<AllocId>>,
     /// Global start offset of each sealed epoch.
     starts: Vec<u64>,
     total: u64,
 }
 
 impl EpochManager {
-    pub fn new(device: DeviceSpec) -> EpochManager {
+    /// Epoch store with `heap_bytes` of sealed-store VRAM budget.
+    pub fn new(device: DeviceSpec, heap_bytes: u64) -> EpochManager {
         EpochManager {
-            device,
             clock: crate::sim::clock::Clock::new(),
+            heap: VramHeap::with_capacity(device.clone(), heap_bytes),
+            device,
             seq: 0,
             sealed: Vec::new(),
+            allocs: Vec::new(),
             starts: Vec::new(),
             total: 0,
         }
@@ -385,12 +407,56 @@ impl EpochManager {
         self.clock.now_us()
     }
 
-    /// Absorb a freshly sealed epoch (`Inserting → Sealed` transition);
-    /// returns the new inserting-epoch sequence number.
-    pub fn absorb(&mut self, flat: ShardedFlattened<f32>) -> u64 {
+    /// The epoch-owned heap (sealed bytes + compaction transients).
+    pub fn heap(&self) -> &VramHeap {
+        &self.heap
+    }
+
+    /// Mutable heap access for the commit step of a seal: shards
+    /// transfer their flatten destinations in here
+    /// ([`Shard::commit_seal`]).
+    pub fn heap_mut(&mut self) -> &mut VramHeap {
+        &mut self.heap
+    }
+
+    /// Bytes of VRAM currently held by the sealed store.
+    pub fn sealed_bytes(&self) -> u64 {
+        self.heap.used()
+    }
+
+    /// Reserve-check for the commit phase of a seal: can the epoch store
+    /// adopt `bytes` more sealed bytes? Checked once for the whole
+    /// cross-shard seal *before* any shard commits, so the per-shard
+    /// transfers ([`Shard::commit_seal`]) can never fail mid-commit.
+    pub fn can_accept(&self, bytes: u64) -> Result<(), OomError> {
+        if bytes > self.heap.free_bytes() {
+            Err(OomError {
+                requested: bytes,
+                free: self.heap.free_bytes(),
+                capacity: self.heap.capacity(),
+            })
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Absorb a freshly sealed epoch (`Inserting → Sealed` transition)
+    /// together with its backing allocations — already transferred into
+    /// this manager's heap by the shards' commit step. Returns the new
+    /// inserting-epoch sequence number.
+    pub fn absorb(&mut self, flat: ShardedFlattened<f32>, allocs: Vec<AllocId>) -> u64 {
+        debug_assert_eq!(
+            allocs
+                .iter()
+                .map(|&a| self.heap.size_of(a).expect("segment alloc must live in the epoch heap"))
+                .sum::<u64>(),
+            flat.len() as u64 * 4,
+            "sealed segment allocations must cover exactly the segment bytes"
+        );
         self.starts.push(self.total);
         self.total += flat.len() as u64;
         self.sealed.push(Epoch::Sealed(flat));
+        self.allocs.push(allocs);
         self.seq += 1;
         self.seq
     }
@@ -468,18 +534,27 @@ impl EpochManager {
     /// sealed pass (the per-segment space overhead is what Tarjan–Zwick
     /// resizable-array bounds target). Returns the simulated µs charged.
     ///
-    /// Modeling limitation: only *time* is charged. The sealed bytes'
-    /// simulated VRAM stays with the per-shard seal destinations
-    /// ([`Shard::commit_seal`]) — the total is identical before and
-    /// after a merge — but the transient 2× residency a real gather
-    /// needs (sources + destination live simultaneously) is not pushed
-    /// through a heap, so a budget too tight for that transient cannot
-    /// OOM here. Moving sealed residency into an epoch-owned heap is
-    /// tracked in ROADMAP.
-    pub fn compact(&mut self) -> f64 {
+    /// A real VRAM transaction, mirroring the seal two-phase commit:
+    ///
+    /// 1. **Reserve** — the merged destination is allocated from the
+    ///    epoch heap while every source segment is still resident (the
+    ///    gather's transient 2× residency). A budget too tight for the
+    ///    transient fails *here*, and the abort is byte-identical:
+    ///    segments, backing allocations, contents and `sealed_len` are
+    ///    exactly as before, and no time beyond the failed reserve is
+    ///    charged.
+    /// 2. **Commit** — one gather pass into the destination, then the
+    ///    source allocations are freed and the store re-indexes over the
+    ///    single merged segment.
+    pub fn compact(&mut self) -> Result<f64, OomError> {
         if self.sealed.len() <= 1 {
-            return 0.0;
+            return Ok(0.0);
         }
+        let t0 = self.clock.now_us();
+        // Phase 1 — reserve the merged destination (2× transient).
+        let bytes = self.total * 4;
+        let dst = self.heap.alloc(bytes, &mut self.clock)?;
+        // Phase 2 — commit: gather, free the sources, keep the merge.
         let parts: Vec<ShardedFlattened<f32>> = self
             .sealed
             .drain(..)
@@ -490,7 +565,6 @@ impl EpochManager {
             .collect();
         let merged = flatten::merge_segments(parts);
         debug_assert_eq!(merged.len() as u64, self.total);
-        let t0 = self.clock.now_us();
         let n = self.total;
         let tpb = 1024u32;
         let blocks = crate::util::math::ceil_div(n, tpb as u64);
@@ -501,15 +575,21 @@ impl EpochManager {
             self.device.cost.coalesced_eff,
         );
         kernel::launch(&self.device, &mut self.clock, &profile);
+        for id in self.allocs.drain(..).flatten() {
+            self.heap.free(id, &mut self.clock);
+        }
         self.starts = vec![0];
         self.sealed = vec![Epoch::Sealed(merged)];
-        self.clock.now_us() - t0
+        self.allocs = vec![vec![dst]];
+        Ok(self.clock.now_us() - t0)
     }
 
     /// Compact when the sealed-segment count exceeds `max_segments`
-    /// (`0` disables compaction). Returns the gather's simulated µs when
-    /// a pass ran.
-    pub fn maybe_compact(&mut self, max_segments: usize) -> Option<f64> {
+    /// (`0` disables compaction). `Some(Ok(µs))` when a gather ran,
+    /// `Some(Err(oom))` when a pass was due but the epoch heap cannot
+    /// hold the transient 2× (the store is left untouched and keeps
+    /// serving; the next seal retries).
+    pub fn maybe_compact(&mut self, max_segments: usize) -> Option<Result<f64, OomError>> {
         if max_segments == 0 || self.sealed.len() <= max_segments {
             None
         } else {
@@ -517,9 +597,13 @@ impl EpochManager {
         }
     }
 
-    /// Drop all sealed epochs (service `Clear`). The epoch counter keeps
-    /// advancing — epochs are points in time, not storage.
+    /// Drop all sealed epochs and release their VRAM (service `Clear`).
+    /// The epoch counter keeps advancing — epochs are points in time,
+    /// not storage.
     pub fn reset(&mut self) {
+        for id in self.allocs.drain(..).flatten() {
+            self.heap.free(id, &mut self.clock);
+        }
         self.sealed.clear();
         self.starts.clear();
         self.total = 0;
@@ -572,27 +656,47 @@ mod tests {
     }
 
     #[test]
-    fn committed_seals_stay_vram_resident_until_reset() {
+    fn commit_seal_transfers_destination_to_the_epoch_heap() {
         let mut s = shard(4, 1 << 24);
+        let mut eh = VramHeap::with_capacity(DeviceSpec::a100(), 1 << 20);
         s.apply_counts(&[25, 25, 25, 25], &vec![1.0; 100]);
         let used_growable = s.heap_used();
         let mut f1 = s.seal_flatten().unwrap();
         assert_eq!(f1.data.len(), 100);
         assert!(f1.alloc.is_some(), "caller owns the destination until commit/abort");
-        assert!(s.heap_used() > used_growable, "sealed dst resident");
-        s.commit_seal(f1.alloc.take());
-        // Growable storage released; sealed dst (100 × 4 B) still held.
-        assert_eq!(s.heap_used(), 400);
+        assert!(s.heap_used() > used_growable, "sealed dst resident in the shard heap pre-commit");
+        let id1 = s.commit_seal(f1.alloc.take(), &mut eh).expect("destination transferred");
+        // Growable storage released AND the sealed dst moved out: the
+        // shard's budget is fully free for the next epoch, while the
+        // epoch heap owns the 100 × 4 B segment.
+        assert_eq!(s.heap_used(), 0, "sealed bytes must not squat on the shard budget");
+        assert_eq!(eh.used(), 400);
+        assert_eq!(eh.size_of(id1), Some(400));
         assert_eq!(s.len(), 0);
-        // Next epoch: insert, seal again — BOTH epochs' destinations stay
-        // resident (sealed data is live until reset).
+        // Next epoch: insert, seal again — both epochs accumulate in the
+        // epoch heap, none in the shard heap.
         s.apply_counts(&[5, 5, 5, 5], &vec![2.0; 20]);
         let mut f2 = s.seal_flatten().unwrap();
         assert_eq!(f2.data.len(), 20);
-        s.commit_seal(f2.alloc.take());
-        assert_eq!(s.heap_used(), 480, "both sealed epochs occupy simulated VRAM");
-        s.reset();
+        s.commit_seal(f2.alloc.take(), &mut eh);
         assert_eq!(s.heap_used(), 0);
+        assert_eq!(eh.used(), 480, "both sealed epochs live in the epoch-owned heap");
+    }
+
+    #[test]
+    fn commit_seal_panics_without_epoch_reservation() {
+        // The contract: can_accept must be checked for the whole seal
+        // before any shard commits. A too-small epoch heap at commit
+        // time is a torn transaction — it must fail loudly, not leak.
+        let mut s = shard(2, 1 << 24);
+        let mut eh = VramHeap::with_capacity(DeviceSpec::a100(), 16);
+        s.apply_counts(&[10, 10], &vec![1.0; 20]);
+        let mut f = s.seal_flatten().unwrap();
+        let alloc = f.alloc.take();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            s.commit_seal(alloc, &mut eh);
+        }));
+        assert!(result.is_err(), "unreserved commit must panic");
     }
 
     #[test]
@@ -632,17 +736,28 @@ mod tests {
         assert_eq!(s.get(2), Some(33.0));
     }
 
+    /// Absorb host-built values into an [`EpochManager`] the way the
+    /// service does: one backing allocation in the epoch heap per
+    /// segment (a throwaway clock takes the malloc charge).
+    fn absorb_vals(em: &mut EpochManager, vals: Vec<f32>) -> u64 {
+        let bytes = vals.len() as u64 * 4;
+        let mut c = crate::sim::clock::Clock::new();
+        let id = em.heap_mut().alloc(bytes, &mut c).expect("test epoch heap too small");
+        em.absorb(
+            flatten::concat(vec![Flattened { data: vals, report: Default::default(), alloc: None }]),
+            vec![id],
+        )
+    }
+
     #[test]
     fn epoch_manager_orders_and_reads_sealed_epochs() {
-        let mut em = EpochManager::new(DeviceSpec::a100());
+        let mut em = EpochManager::new(DeviceSpec::a100(), 1 << 20);
         assert_eq!(em.seq(), 0);
         assert_eq!(em.get(0), None);
-        let mk = |vals: Vec<f32>| {
-            flatten::concat(vec![Flattened { data: vals, report: Default::default(), alloc: None }])
-        };
-        assert_eq!(em.absorb(mk(vec![1.0, 2.0, 3.0])), 1);
-        assert_eq!(em.absorb(mk(vec![10.0])), 2);
+        assert_eq!(absorb_vals(&mut em, vec![1.0, 2.0, 3.0]), 1);
+        assert_eq!(absorb_vals(&mut em, vec![10.0]), 2);
         assert_eq!(em.sealed_len(), 4);
+        assert_eq!(em.sealed_bytes(), 16, "epoch heap holds exactly the sealed bytes");
         assert_eq!(em.sealed_epochs(), 2);
         assert_eq!(em.get(0), Some(1.0));
         assert_eq!(em.get(2), Some(3.0));
@@ -661,35 +776,73 @@ mod tests {
         assert!((em.now_us() - us).abs() < 1e-9);
         em.reset();
         assert_eq!(em.sealed_len(), 0);
+        assert_eq!(em.sealed_bytes(), 0, "reset must release the sealed store's VRAM");
         assert_eq!(em.seq(), 2, "epoch counter survives reset");
     }
 
     #[test]
     fn compaction_merges_segments_byte_identically() {
-        let mut em = EpochManager::new(DeviceSpec::a100());
-        let mk = |vals: Vec<f32>| {
-            flatten::concat(vec![Flattened { data: vals, report: Default::default(), alloc: None }])
-        };
-        em.absorb(mk(vec![1.0, 2.0]));
-        em.absorb(mk(vec![3.0]));
-        em.absorb(mk(vec![4.0, 5.0, 6.0]));
+        let mut em = EpochManager::new(DeviceSpec::a100(), 1 << 20);
+        absorb_vals(&mut em, vec![1.0, 2.0]);
+        absorb_vals(&mut em, vec![3.0]);
+        absorb_vals(&mut em, vec![4.0, 5.0, 6.0]);
         let before: Vec<f32> = em.segments().flat_map(|s| s.to_vec()).collect();
         assert_eq!(em.sealed_epochs(), 3);
         assert!(em.maybe_compact(4).is_none(), "under threshold: no pass");
         assert!(em.maybe_compact(0).is_none(), "0 disables compaction");
-        let us = em.maybe_compact(2).expect("over threshold: gather pass");
+        let us = em.maybe_compact(2).expect("over threshold: gather pass").expect("budget fits");
         assert!(us > 0.0, "gather pass must charge the flat-path clock");
         assert_eq!(em.sealed_epochs(), 1);
         assert_eq!(em.sealed_len(), 6);
         let after: Vec<f32> = em.segments().flat_map(|s| s.to_vec()).collect();
         assert_eq!(after, before, "compaction must not change sealed bytes");
+        assert_eq!(em.sealed_bytes(), 24, "steady-state residency unchanged by the merge");
+        assert_eq!(em.heap().peak(), 48, "the gather's transient 2× went through the heap");
         assert_eq!(em.get(0), Some(1.0));
         assert_eq!(em.get(5), Some(6.0));
         assert_eq!(em.get(6), None);
         assert_eq!(em.seq(), 3, "compaction is storage-only; epochs are points in time");
         // A single segment is already compact: no-op, no charge.
-        assert_eq!(em.compact(), 0.0);
+        assert_eq!(em.compact().unwrap(), 0.0);
         assert_eq!(em.sealed_epochs(), 1);
+    }
+
+    #[test]
+    fn compaction_oom_aborts_byte_identically() {
+        // Budget fits the sealed bytes (3 × 8 elements = 96 B) but not
+        // the merge's transient 2× (needs another 96 B, only 32 free).
+        let mut em = EpochManager::new(DeviceSpec::a100(), 128);
+        absorb_vals(&mut em, (0..8).map(|i| i as f32).collect());
+        absorb_vals(&mut em, (8..16).map(|i| i as f32).collect());
+        absorb_vals(&mut em, (16..24).map(|i| i as f32).collect());
+        assert_eq!(em.sealed_bytes(), 96);
+        let before: Vec<f32> = em.segments().flat_map(|s| s.to_vec()).collect();
+        let t_before = em.now_us();
+        let err = em.maybe_compact(2).expect("over threshold").unwrap_err();
+        assert_eq!(err.requested, 96);
+        assert_eq!(err.free, 32);
+        // Abort is byte-identical: segments, bytes, length, residency and
+        // even the flat-path clock are exactly as before.
+        assert_eq!(em.sealed_epochs(), 3, "segments retained");
+        assert_eq!(em.sealed_len(), 24);
+        assert_eq!(em.sealed_bytes(), 96);
+        let after: Vec<f32> = em.segments().flat_map(|s| s.to_vec()).collect();
+        assert_eq!(after, before);
+        assert_eq!(em.now_us(), t_before, "failed reserve must not charge time");
+        assert_eq!(em.get(23), Some(23.0));
+        // An adequate budget commits: same bytes, one segment, sources
+        // freed (residency back to 1× after the transient).
+        let mut big = EpochManager::new(DeviceSpec::a100(), 192);
+        absorb_vals(&mut big, (0..8).map(|i| i as f32).collect());
+        absorb_vals(&mut big, (8..16).map(|i| i as f32).collect());
+        absorb_vals(&mut big, (16..24).map(|i| i as f32).collect());
+        let us = big.maybe_compact(2).expect("over threshold").expect("2× transient fits");
+        assert!(us > 0.0);
+        assert_eq!(big.sealed_epochs(), 1);
+        assert_eq!(big.sealed_bytes(), 96, "sources freed on commit");
+        assert_eq!(big.heap().peak(), 192);
+        let merged: Vec<f32> = big.segments().flat_map(|s| s.to_vec()).collect();
+        assert_eq!(merged, before, "compaction under a tight-but-adequate budget is byte-identical");
     }
 
     #[test]
@@ -717,10 +870,10 @@ mod tests {
         let counts = vec![n / 32; 32];
         s.apply_counts(&counts, &vec![0.5; n]);
         let unsealed_us = s.charge_rw_block(30.0);
+        let mut em = EpochManager::new(DeviceSpec::a100(), 1 << 30);
         let mut flat = s.seal_flatten().unwrap();
-        s.commit_seal(flat.alloc.take());
-        let mut em = EpochManager::new(DeviceSpec::a100());
-        em.absorb(flatten::concat(vec![flat]));
+        let id = s.commit_seal(flat.alloc.take(), em.heap_mut()).expect("transferred");
+        em.absorb(flatten::concat(vec![flat]), vec![id]);
         let sealed_us = em.work(30);
         assert!(
             sealed_us < unsealed_us / 2.0,

@@ -207,7 +207,7 @@ pub fn shard_scaling() -> CsvTable {
             c.call(Request::Insert { values: vec![1.0f32; n] });
             sent += n;
         }
-        let _ = c.call(Request::Query { index: 0 });
+        // Stats barriers pending batches itself.
         let snap = c.call(Request::Stats).expect_stats();
         c.shutdown();
         if shards == 1 {
@@ -217,7 +217,11 @@ pub fn shard_scaling() -> CsvTable {
             shards.to_string(),
             format!("{:.4}", snap.sim_insert_ms),
             format!("{:.4}", snap.device_insert_ms),
-            format!("{:.2}", sim1 / snap.sim_insert_ms),
+            // Defined 1.0 for an idle insert ledger — no silent 0/0.
+            format!(
+                "{:.2}",
+                if snap.sim_insert_ms > 0.0 { sim1 / snap.sim_insert_ms } else { 1.0 }
+            ),
         ]);
     }
     t

@@ -19,8 +19,10 @@ pub struct Flattened<T> {
     pub report: OpReport,
     /// The destination allocation in the source array's heap, so callers
     /// can govern the flat copy's simulated VRAM: release it for a
-    /// throwaway snapshot, or retain it while the flat view stays live
-    /// (a sealed epoch).
+    /// throwaway snapshot, or — for a sealed epoch — *transfer* it into
+    /// the epoch-owned heap at commit
+    /// ([`crate::sim::memory::VramHeap::transfer_to`]), so the shard's
+    /// budget is freed for the next epoch while the bytes stay resident.
     pub alloc: Option<AllocId>,
 }
 
@@ -98,10 +100,13 @@ pub fn concat<T: Copy + Default>(parts: Vec<Flattened<T>>) -> ShardedFlattened<T
 /// concatenation of the inputs; the rebuilt index maps global offsets to
 /// `(original_segment, local)` coordinates.
 ///
-/// Host-side data movement only: the caller owns the modeled cost (one
-/// read+write gather pass over the merged bytes, charged to whichever
-/// clock owns the sealed store — see
-/// [`crate::coordinator::shard::EpochManager::compact`]).
+/// Host-side data movement only: the caller owns the *transaction* —
+/// both the modeled time (one read+write gather pass over the merged
+/// bytes) and the simulated VRAM (the merged destination must be
+/// reserved while the source segments are still resident, the gather's
+/// transient 2×, and the sources freed only on commit). See
+/// [`crate::coordinator::shard::EpochManager::compact`], which can
+/// therefore OOM and abort without calling this at all.
 pub fn merge_segments<T: Copy + Default>(parts: Vec<ShardedFlattened<T>>) -> ShardedFlattened<T> {
     concat(
         parts

@@ -48,6 +48,18 @@
 //!   device-seconds (`device_*`), whose ratio is the observed
 //!   shard-parallel speedup — the quantity the paper measures and a
 //!   summed ledger can never show.
+//! * **Epoch-owned VRAM** — one physical budget, carved once: the
+//!   sealed store's heap (`CoordinatorConfig::epoch_heap`) first, the
+//!   per-shard heaps from the remainder. A seal is a real memory
+//!   transaction: flatten every shard, reserve epoch-store admission
+//!   for the whole seal, then *transfer* each flatten destination out
+//!   of its shard heap into the [`coordinator::shard::EpochManager`]'s
+//!   heap ([`sim::memory::VramHeap::transfer_to`] — an accounting move,
+//!   not allocator traffic). Old epochs never squat on live-epoch
+//!   growth budgets, any failure aborts the whole seal in a single pass
+//!   with every byte restored, and `Stats` reports a real ledger
+//!   (`sealed_bytes`, `heap_used_bytes`) that conserves every byte
+//!   across seal → compact → clear.
 //! * **Sealed-epoch compaction** — each seal adds one flat segment, and
 //!   the sealed work pass launches one kernel per segment (separate
 //!   device buffers), so fragmentation costs launch overhead on every
@@ -55,7 +67,12 @@
 //!   one modeled gather pass
 //!   ([`coordinator::shard::EpochManager::compact`]) merges the
 //!   segments byte-identically into one, buying those launches back.
-//!   `Work` also skips the `rw_b` launch on empty live shards, so a
+//!   The gather is its own VRAM transaction — the merged destination is
+//!   reserved while the sources are still resident (the transient 2× a
+//!   real gather needs) — so a tight epoch heap makes compaction OOM
+//!   and abort byte-identically, surfaced in `Response::Sealed` and the
+//!   `compaction_ooms` metric while the store keeps serving. `Work`
+//!   also skips the `rw_b` launch on empty live shards, so a
 //!   fully-sealed store pays only the flat-path passes.
 //!
 //! See `examples/sharded_two_phase.rs` for the end-to-end flow and

@@ -105,6 +105,33 @@ impl VramHeap {
         Ok(ids)
     }
 
+    /// Move a live allocation into `dst`, a heap drawing on a different
+    /// simulated budget (e.g. a shard heap → the epoch-owned sealed
+    /// store). The backing bytes stay resident at the same device
+    /// address — no `cudaMalloc`/`cudaFree` is issued and no latency is
+    /// charged; only the accounting owner changes. Fails with `dst`'s
+    /// shortfall — and leaves **both** heaps untouched — when `dst`
+    /// lacks capacity, so callers can use it as the commit step of a
+    /// reserve-then-commit transaction.
+    pub fn transfer_to(&mut self, id: AllocId, dst: &mut VramHeap) -> Result<AllocId, OomError> {
+        let bytes = *self.allocs.get(&id).expect("transfer of unknown AllocId");
+        if dst.used + bytes > dst.capacity {
+            return Err(OomError {
+                requested: bytes,
+                free: dst.capacity - dst.used,
+                capacity: dst.capacity,
+            });
+        }
+        self.allocs.remove(&id);
+        self.used -= bytes;
+        dst.used += bytes;
+        dst.peak = dst.peak.max(dst.used);
+        let new_id = AllocId(dst.next_id);
+        dst.next_id += 1;
+        dst.allocs.insert(new_id, bytes);
+        Ok(new_id)
+    }
+
     /// Free an allocation.
     pub fn free(&mut self, id: AllocId, clock: &mut Clock) {
         let bytes = self.allocs.remove(&id).expect("double free / unknown AllocId");
@@ -241,6 +268,47 @@ mod tests {
         let big = c.now_us() - t1;
         assert!(big > small, "big {big} small {small}");
         assert!(big < small * 1.1, "big {big} small {small}");
+    }
+
+    #[test]
+    fn transfer_moves_accounting_without_allocator_traffic() {
+        let (mut src, mut c) = heap();
+        let mut dst = VramHeap::with_capacity(DeviceSpec::a100(), 4096);
+        let id = src.alloc(1000, &mut c).unwrap();
+        let (allocs_before, frees_before) = (src.alloc_calls(), src.free_calls());
+        let t_before = c.now_us();
+        let new_id = src.transfer_to(id, &mut dst).unwrap();
+        // Ownership moved: bytes left src, arrived in dst, same size.
+        assert_eq!(src.used(), 0);
+        assert_eq!(src.live_allocations(), 0);
+        assert_eq!(dst.used(), 1000);
+        assert_eq!(dst.peak(), 1000);
+        assert_eq!(dst.size_of(new_id), Some(1000));
+        assert_eq!(src.size_of(id), None, "old id is dead in the source heap");
+        // No cudaMalloc/cudaFree and no latency: pure accounting.
+        assert_eq!((src.alloc_calls(), src.free_calls()), (allocs_before, frees_before));
+        assert_eq!(dst.alloc_calls(), 0);
+        assert_eq!(c.now_us(), t_before);
+        // The transferred allocation is freeable in its new heap.
+        dst.free(new_id, &mut c);
+        assert_eq!(dst.used(), 0);
+    }
+
+    #[test]
+    fn transfer_oom_leaves_both_heaps_untouched() {
+        let (mut src, mut c) = heap();
+        let mut dst = VramHeap::with_capacity(DeviceSpec::a100(), 512);
+        let resident = dst.alloc(300, &mut c).unwrap();
+        let id = src.alloc(400, &mut c).unwrap();
+        let err = src.transfer_to(id, &mut dst).unwrap_err();
+        assert_eq!(err.requested, 400);
+        assert_eq!(err.free, 212);
+        assert_eq!(err.capacity, 512);
+        // Abort is byte-identical on both sides.
+        assert_eq!(src.used(), 400);
+        assert_eq!(src.size_of(id), Some(400));
+        assert_eq!(dst.used(), 300);
+        assert_eq!(dst.size_of(resident), Some(300));
     }
 
     #[test]

@@ -23,6 +23,7 @@ fn cfg(blocks: usize, use_artifacts: bool) -> CoordinatorConfig {
         use_artifacts,
         work_iters: 30,
         heap_capacity: None,
+        epoch_heap: None,
         shards: 1,
         compact_segments: 4,
     }
@@ -175,7 +176,7 @@ fn concurrent_clients_conserve_elements() {
     for h in handles {
         h.join().unwrap();
     }
-    let _ = coord.call(Request::Query { index: 0 }); // barrier
+    // Stats barriers pending batches itself.
     let s = match coord.call(Request::Stats) {
         Response::Stats(s) => s,
         other => panic!("{other:?}"),
@@ -207,7 +208,7 @@ fn oom_injection_degrades_gracefully() {
     for _ in 0..40 {
         coord.call(Request::Insert { values: vec![1.5f32; 1000] });
     }
-    let _ = coord.call(Request::Query { index: 0 }); // barrier
+    // Stats barriers pending batches itself.
     let s = match coord.call(Request::Stats) {
         Response::Stats(s) => s,
         other => panic!("{other:?}"),

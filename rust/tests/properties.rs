@@ -3,7 +3,10 @@
 //! correctness, LFVector capacity bounds, batcher conservation, VMM
 //! accounting.
 
+use ggarray::coordinator::batcher::BatchConfig;
+use ggarray::coordinator::request::{Request, Response};
 use ggarray::coordinator::router::{self, Policy};
+use ggarray::coordinator::service::{Coordinator, CoordinatorConfig};
 use ggarray::ggarray::index::PrefixIndex;
 use ggarray::ggarray::lfvector::LfVector;
 use ggarray::insertion::assign_indices;
@@ -510,4 +513,114 @@ fn prop_scan_artifacts_match_oracle_when_available() {
             assert_eq!(offsets, want.iter().map(|&x| x as i64).collect::<Vec<_>>(), "{fam} case {case}");
         }
     }
+}
+
+#[test]
+fn prop_heap_accounting_conserved_across_seal_compact_clear() {
+    // The sealed store is epoch-owned VRAM now, so conservation is a
+    // checkable ledger property: after EVERY op (insert / seal / flatten
+    // / clear), the bytes resident in the shard heaps plus the epoch
+    // heap must equal the allocated bytes Stats reports, sealed-store
+    // residency must equal sealed_len × 4, and an op that FAILS (seal or
+    // flatten OOM under the tight budget) must leave length, sealed
+    // bytes and total heap usage byte-identically untouched — the
+    // two-phase abort contract, exercised over random traces.
+    let gen = CountsVec { max_len: 20, max_val: 5 };
+    check("heap accounting conserved", 0x5EA1ED, 24, &gen, |ops| {
+        for (budget, heap_capacity, epoch_heap) in [
+            ("full-device", None, None),
+            ("tight", Some(24 * 1024), Some(8 * 1024)),
+        ] {
+            let cfg = CoordinatorConfig {
+                blocks: 8,
+                shards: 2,
+                first_bucket_size: 16,
+                use_artifacts: false,
+                compact_segments: 2,
+                heap_capacity,
+                epoch_heap,
+                // Nothing flushes on its own: every flush happens at an
+                // op barrier, keeping traces deterministic.
+                batch: BatchConfig {
+                    max_values: 1 << 20,
+                    max_delay: std::time::Duration::from_secs(3600),
+                },
+                ..CoordinatorConfig::default()
+            };
+            let c = Coordinator::start(cfg);
+            let mut counter = 0u64;
+            for (i, &op) in ops.iter().enumerate() {
+                let before = c.call(Request::Stats).expect_stats();
+                let (what, failed) = match op % 5 {
+                    0 | 1 => {
+                        let n: usize = if op % 5 == 0 { 64 } else { 800 };
+                        let values: Vec<f32> = (0..n)
+                            .map(|k| ggarray::workload::synth_f32(counter + k as u64))
+                            .collect();
+                        counter += n as u64;
+                        c.call(Request::Insert { values });
+                        ("insert", false)
+                    }
+                    2 => match c.call(Request::Seal) {
+                        Response::Sealed { .. } => ("seal", false),
+                        Response::Error(_) => ("seal-oom", true),
+                        other => return Err(format!("seal: {other:?}")),
+                    },
+                    3 => match c.call(Request::Flatten) {
+                        Response::Flattened { .. } => ("flatten", false),
+                        Response::Error(_) => ("flatten-oom", true),
+                        other => return Err(format!("flatten: {other:?}")),
+                    },
+                    _ => {
+                        c.call(Request::Clear);
+                        ("clear", false)
+                    }
+                };
+                let snap = c.call(Request::Stats).expect_stats();
+                if snap.heap_used_bytes != snap.allocated_bytes {
+                    return Err(format!(
+                        "op {i} ({what}, {budget}): heap bytes {} != allocated {}",
+                        snap.heap_used_bytes, snap.allocated_bytes
+                    ));
+                }
+                if snap.sealed_bytes != snap.sealed_len * 4 {
+                    return Err(format!(
+                        "op {i} ({what}, {budget}): sealed bytes {} != sealed_len*4 {}",
+                        snap.sealed_bytes,
+                        snap.sealed_len * 4
+                    ));
+                }
+                if failed
+                    && (snap.len != before.len
+                        || snap.sealed_bytes != before.sealed_bytes
+                        || snap.sealed_segments != before.sealed_segments
+                        || snap.heap_used_bytes != before.heap_used_bytes)
+                {
+                    return Err(format!(
+                        "op {i} ({what}, {budget}): failed op tore state: \
+                         len {}→{}, sealed {}→{} B ({}→{} segments), heap {}→{} B",
+                        before.len,
+                        snap.len,
+                        before.sealed_bytes,
+                        snap.sealed_bytes,
+                        before.sealed_segments,
+                        snap.sealed_segments,
+                        before.heap_used_bytes,
+                        snap.heap_used_bytes
+                    ));
+                }
+            }
+            // Clear must hand every byte back, in both budget regimes.
+            c.call(Request::Clear);
+            let last = c.call(Request::Stats).expect_stats();
+            if last.heap_used_bytes != 0 || last.sealed_bytes != 0 {
+                return Err(format!(
+                    "{budget}: Clear leaked {} heap B / {} sealed B",
+                    last.heap_used_bytes, last.sealed_bytes
+                ));
+            }
+            c.shutdown();
+        }
+        Ok(())
+    });
 }
