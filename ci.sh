@@ -42,4 +42,13 @@ echo "== smoke: shard bench (parallel time model gate) =="
 #   * sealed work cheaper than unsealed at 1 and 4 shards.
 cargo bench --bench bench_shards
 
+echo "== smoke: hot-path bench (BENCH_hotpath.json + wall-clock gate) =="
+# bench_hotpath --smoke: short steady-state runs of insert dispatch /
+# pooled seal / sealed query at 1 and 4 shards. Writes BENCH_hotpath.json
+# at the repo root (the perf trajectory) and exits non-zero when
+# steady-state insert dispatch regresses >25% against the committed
+# baseline; skipped gracefully when the baseline file is absent (first
+# run). Bypass with GG_BENCH_GATE=off on noisy machines.
+cargo bench --bench bench_hotpath -- --smoke
+
 echo "ci.sh: all green"

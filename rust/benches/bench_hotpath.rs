@@ -1,10 +1,29 @@
-//! §Perf hot-path microbenches: the *real* (wall-clock) cost of every
-//! operation on the request path — LFVector appends, routing, prefix
-//! lookups, rw passes, flatten, and PJRT execution. These are the numbers
-//! the performance pass optimises; before/after lands in EXPERIMENTS.md.
-//! Run: `cargo bench --bench bench_hotpath`
+//! §Perf hot-path benches: the *real* (wall-clock) cost of the request
+//! path — steady-state insert dispatch through the scratch arena, the
+//! pooled seal/flatten gather, sealed queries, and the underlying
+//! micro-operations (LFVector appends, routing, prefix lookups, rw
+//! passes, PJRT execution).
+//!
+//! Emits `BENCH_hotpath.json` at the **repo root** so the perf
+//! trajectory is recorded PR over PR, and exits non-zero when
+//! steady-state insert dispatch regresses more than
+//! [`GATE_TOLERANCE`] against the committed baseline (skipped when no
+//! baseline exists — e.g. the first run — or `GG_BENCH_GATE=off`).
+//! See EXPERIMENTS.md §Perf for the field definitions and how to
+//! re-baseline.
+//!
+//! Run: `cargo bench --bench bench_hotpath` (full) or
+//!      `cargo bench --bench bench_hotpath -- --smoke` (CI smoke: fewer
+//!      iterations, micro benches skipped).
 
-use ggarray::coordinator::router::{self, Policy};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use ggarray::coordinator::batcher::BatchConfig;
+use ggarray::coordinator::request::{Request, Response};
+use ggarray::coordinator::router::{self, DispatchScratch, Policy};
+use ggarray::coordinator::service::{dispatch_insert, Coordinator, CoordinatorConfig};
+use ggarray::coordinator::shard::{Shard, ShardConfig};
 use ggarray::ggarray::array::{GgArray, GgConfig};
 use ggarray::ggarray::flatten::flatten;
 use ggarray::ggarray::index::PrefixIndex;
@@ -14,13 +33,152 @@ use ggarray::runtime::{ArtifactManifest, Executor};
 use ggarray::sim::clock::Clock;
 use ggarray::sim::memory::VramHeap;
 use ggarray::sim::spec::DeviceSpec;
-use ggarray::util::benchkit::{black_box, BenchSuite};
+use ggarray::util::benchkit::{black_box, BenchConfig, BenchSuite};
+use ggarray::util::json::{self, Json};
 use ggarray::util::rng::Rng;
+use ggarray::workload::synth_f32;
 
-fn main() {
-    let mut suite = BenchSuite::new("hotpath — real wall-clock of the request-path operations");
+/// Elements per steady-state measurement (the issue's 1e6 f32).
+const ELEMENTS: usize = 1_000_000;
+/// Dispatch batch size (ELEMENTS / BATCHES values per batch).
+const BATCHES: usize = 20;
+/// Regression gate: fail when steady-state insert dispatch is slower
+/// than baseline × (1 + GATE_TOLERANCE).
+const GATE_TOLERANCE: f64 = 0.25;
+
+fn repo_root() -> PathBuf {
+    // cargo runs bench binaries with cwd = the package root (rust/);
+    // the workspace root is one level up.
+    std::env::var("CARGO_MANIFEST_DIR")
+        .map(|m| PathBuf::from(m).join(".."))
+        .unwrap_or_else(|_| PathBuf::from("."))
+}
+
+fn build_shards(shard_count: usize, blocks_total: usize) -> Vec<Shard> {
+    (0..shard_count)
+        .map(|id| {
+            Shard::new(ShardConfig {
+                id,
+                blocks: blocks_total / shard_count,
+                first_bucket_size: 1024,
+                insertion: InsertionKind::WarpScan,
+                device: DeviceSpec::a100(),
+                heap_bytes: 1 << 33,
+            })
+        })
+        .collect()
+}
+
+/// Steady-state insert dispatch: 1e6 f32 per iteration through the
+/// scratch-arena path (route → shard ranges → bulk placement), after a
+/// 1e6-element warm-up so buckets and arena buffers are hot. Returns the
+/// mean µs per 1e6 elements.
+fn bench_insert_dispatch(suite: &mut BenchSuite, shard_count: usize) -> f64 {
+    let blocks_total = 512;
+    let bps = blocks_total / shard_count;
+    let mut shards = build_shards(shard_count, blocks_total);
+    let mut scratch = DispatchScratch::new();
+    let batch: Vec<f32> = (0..(ELEMENTS / BATCHES) as u64).map(synth_f32).collect();
+    let mut seq = 0u64;
+    for _ in 0..BATCHES {
+        dispatch_insert(&mut shards, bps, Policy::Even, seq, &batch, &mut scratch);
+        seq += 1;
+    }
+    let result = suite.bench(
+        &format!("insert dispatch 1e6 f32 ({shard_count} shard{})", if shard_count == 1 { "" } else { "s" }),
+        || {
+            for _ in 0..BATCHES {
+                black_box(dispatch_insert(&mut shards, bps, Policy::Even, seq, &batch, &mut scratch));
+                seq += 1;
+            }
+        },
+    );
+    result.mean_us()
+}
+
+/// Seal (pooled cross-shard gather + epoch commit) and sealed queries
+/// through the running coordinator service. Returns
+/// `(seal_us, query_1k_us)` means.
+fn bench_seal_and_query(suite: &mut BenchSuite, shard_count: usize, samples: usize) -> (f64, f64) {
+    let chunk = ELEMENTS / BATCHES;
+    let c = Coordinator::start(CoordinatorConfig {
+        blocks: 512,
+        shards: shard_count,
+        use_artifacts: false,
+        batch: BatchConfig { max_values: chunk, max_delay: Duration::from_secs(3600) },
+        // Segment hygiene off: each sample times exactly one epoch's
+        // gather, not an occasional compaction pass.
+        compact_segments: 0,
+        ..CoordinatorConfig::default()
+    });
+    let mut counter = 0u64;
+    let mut seal_samples = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        for _ in 0..BATCHES {
+            let values: Vec<f32> = (counter..counter + chunk as u64).map(synth_f32).collect();
+            counter += chunk as u64;
+            c.call(Request::Insert { values });
+        }
+        let t0 = Instant::now();
+        match c.call(Request::Seal) {
+            Response::Sealed { epoch_len, .. } => assert_eq!(epoch_len, ELEMENTS as u64),
+            other => panic!("seal failed: {other:?}"),
+        }
+        seal_samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let seal_us = suite
+        .record_samples(
+            &format!("seal+flatten 1e6 f32 ({shard_count} shard{})", if shard_count == 1 { "" } else { "s" }),
+            &seal_samples,
+        )
+        .mean_us();
+
+    // Sealed queries: 1k random reads over the sealed prefix per sample.
+    let sealed_len = (samples * ELEMENTS) as u64;
+    let mut rng = Rng::new(0xBE7C);
+    let mut query_samples = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..1000 {
+            let idx = rng.below(sealed_len);
+            match c.call(Request::Query { index: idx }) {
+                Response::Value(Some(_)) => {}
+                other => panic!("sealed query({idx}) failed: {other:?}"),
+            }
+        }
+        query_samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let query_us = suite
+        .record_samples(
+            &format!("sealed query ×1k ({shard_count} shard{})", if shard_count == 1 { "" } else { "s" }),
+            &query_samples,
+        )
+        .mean_us();
+    c.shutdown();
+    (seal_us, query_us)
+}
+
+/// Compare fresh steady-state numbers against the committed baseline;
+/// returns the failure messages (empty = gate passes).
+fn gate_against_baseline(baseline: &Json, fresh: &Json) -> Vec<String> {
+    let mut failures = Vec::new();
+    for shard_key in ["1", "4"] {
+        let old = baseline.get("shards").and_then(|s| s.get(shard_key)).and_then(|s| s.get("insert_dispatch_us")).and_then(Json::as_f64);
+        let new = fresh.get("shards").and_then(|s| s.get(shard_key)).and_then(|s| s.get("insert_dispatch_us")).and_then(Json::as_f64);
+        match (old, new) {
+            (Some(old), Some(new)) if new > old * (1.0 + GATE_TOLERANCE) => failures.push(format!(
+                "insert dispatch ({shard_key} shard) regressed: {new:.0} µs vs baseline {old:.0} µs (>{:.0}%)",
+                GATE_TOLERANCE * 100.0
+            )),
+            _ => {}
+        }
+    }
+    failures
+}
+
+fn micro_benches(spec: &DeviceSpec) {
+    let mut suite = BenchSuite::new("hotpath micro — request-path operations");
     suite.banner();
-    let spec = DeviceSpec::a100();
 
     // --- LFVector bulk append (1e6 u32) ---
     let data: Vec<u32> = (0..1_000_000u32).collect();
@@ -44,9 +202,14 @@ fn main() {
         black_box(gg.read_write_block(30.0, |x| *x = x.wrapping_add(1)));
     });
 
-    // --- flatten 1e6 ---
+    // --- flatten 1e6 (collecting) vs pooled destination ---
     suite.bench("ggarray flatten 1e6", || {
         black_box(flatten(&mut gg).unwrap());
+    });
+    let mut pool: Vec<u32> = Vec::new();
+    suite.bench("ggarray flatten_into 1e6 (pooled)", || {
+        pool.clear();
+        black_box(ggarray::ggarray::flatten::flatten_into(&mut gg, &mut pool).unwrap());
     });
 
     // --- prefix index lookups ---
@@ -60,11 +223,16 @@ fn main() {
         }
     });
 
-    // --- router ---
+    // --- router: collecting vs scratch-arena ---
     let sizes: Vec<u64> = (0..512).map(|i| (i * 37) as u64 % 5000).collect();
     for policy in [Policy::Even, Policy::LeastLoaded, Policy::Hash] {
         suite.bench(&format!("route 1e5 into 512 blocks ({})", policy.name()), || {
             black_box(router::route(policy, &sizes, 100_000, 42));
+        });
+        let mut scratch = DispatchScratch::new();
+        scratch.sizes.extend_from_slice(&sizes);
+        suite.bench(&format!("route_into 1e5, 512 blocks ({})", policy.name()), || {
+            black_box(scratch.route(policy, 100_000, 42));
         });
     }
 
@@ -92,4 +260,91 @@ fn main() {
     std::fs::create_dir_all("reports").unwrap();
     std::fs::write("reports/bench_hotpath.md", suite.markdown()).unwrap();
     eprintln!("wrote reports/bench_hotpath.md");
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let spec = DeviceSpec::a100();
+
+    // Steady-state coordinator sections (always run; these feed the
+    // BENCH_hotpath.json trajectory and the regression gate).
+    let mut suite = BenchSuite::new(if smoke {
+        "hotpath steady-state (smoke) — scratch-arena dispatch, pooled seal, sealed query"
+    } else {
+        "hotpath steady-state — scratch-arena dispatch, pooled seal, sealed query"
+    })
+    .with_config(BenchConfig {
+        warmup_iters: 1,
+        min_iters: if smoke { 2 } else { 8 },
+        min_time: Duration::ZERO,
+        max_iters: if smoke { 2 } else { 8 },
+    });
+    suite.banner();
+
+    let seal_samples = if smoke { 2 } else { 5 };
+    let mut shard_sections = Vec::new();
+    for shard_count in [1usize, 4] {
+        let insert_us = bench_insert_dispatch(&mut suite, shard_count);
+        let (seal_us, query_us) = bench_seal_and_query(&mut suite, shard_count, seal_samples);
+        shard_sections.push((
+            shard_count.to_string(),
+            Json::obj(vec![
+                ("insert_dispatch_us", Json::num(insert_us)),
+                ("seal_us", Json::num(seal_us)),
+                ("sealed_query_1k_us", Json::num(query_us)),
+            ]),
+        ));
+    }
+
+    let fresh = Json::obj(vec![
+        ("schema", Json::str("bench_hotpath/v1")),
+        ("smoke", Json::Bool(smoke)),
+        ("elements", Json::num(ELEMENTS as f64)),
+        ("shards", Json::Obj(shard_sections.into_iter().collect())),
+    ]);
+
+    // Gate against the committed baseline before any write.
+    let path = repo_root().join("BENCH_hotpath.json");
+    let gate_enabled = std::env::var("GG_BENCH_GATE").map(|v| v != "off").unwrap_or(true);
+    let mut baseline_exists = true;
+    let failures = match std::fs::read_to_string(&path) {
+        Ok(text) => match json::parse(&text) {
+            Ok(baseline) => gate_against_baseline(&baseline, &fresh),
+            Err(e) => {
+                eprintln!("baseline {path:?} unparsable ({e}); skipping gate");
+                Vec::new()
+            }
+        },
+        Err(_) => {
+            eprintln!("no baseline at {path:?} (first run) — gate skipped");
+            baseline_exists = false;
+            Vec::new()
+        }
+    };
+
+    // Full runs re-baseline; smoke runs only bootstrap a missing file.
+    // Overwriting the committed baseline with 2-iteration smoke numbers
+    // on every ci.sh run would make the gate compare against noise (and
+    // leave the work tree dirty, inviting an accidental commit).
+    if !smoke || !baseline_exists {
+        std::fs::write(&path, fresh.to_string_pretty()).expect("write BENCH_hotpath.json");
+        eprintln!("wrote {}", path.display());
+    } else {
+        eprintln!("smoke run: committed baseline {} left intact", path.display());
+    }
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("REGRESSION: {f}");
+        }
+        if gate_enabled {
+            eprintln!("bench_hotpath: wall-clock gate FAILED (set GG_BENCH_GATE=off to bypass)");
+            std::process::exit(1);
+        }
+        eprintln!("bench_hotpath: regressions reported but GG_BENCH_GATE=off");
+    }
+
+    if !smoke {
+        micro_benches(&spec);
+    }
 }

@@ -36,6 +36,11 @@ pub struct Batch {
 pub struct Batcher {
     cfg: BatchConfig,
     pending: Vec<f32>,
+    /// Recycled batch buffer: a flush hands `pending` out inside the
+    /// [`Batch`] and swaps this in; the consumer returns the buffer via
+    /// [`Batcher::recycle`], so steady-state flushes ping-pong two
+    /// buffers instead of allocating one per flush.
+    spare: Vec<f32>,
     requests: usize,
     oldest: Option<Instant>,
     flushes: u64,
@@ -44,7 +49,15 @@ pub struct Batcher {
 
 impl Batcher {
     pub fn new(cfg: BatchConfig) -> Batcher {
-        Batcher { cfg, pending: Vec::new(), requests: 0, oldest: None, flushes: 0, coalesced_total: 0 }
+        Batcher {
+            cfg,
+            pending: Vec::new(),
+            spare: Vec::new(),
+            requests: 0,
+            oldest: None,
+            flushes: 0,
+            coalesced_total: 0,
+        }
     }
 
     pub fn pending_len(&self) -> usize {
@@ -53,6 +66,13 @@ impl Batcher {
 
     pub fn flushes(&self) -> u64 {
         self.flushes
+    }
+
+    /// Total client requests coalesced across all flushes (the numerator
+    /// of the batching-effectiveness ratio surfaced in
+    /// `MetricsSnapshot`).
+    pub fn coalesced_total(&self) -> u64 {
+        self.coalesced_total
     }
 
     /// Mean requests coalesced per flush (batching effectiveness metric).
@@ -96,12 +116,24 @@ impl Batcher {
     }
 
     fn flush_now(&mut self) -> Batch {
-        let values = std::mem::take(&mut self.pending);
+        // Swap the recycled spare in as the next pending buffer instead
+        // of leaving a fresh (capacity-0) vector behind.
+        let values = std::mem::replace(&mut self.pending, std::mem::take(&mut self.spare));
         let requests = std::mem::replace(&mut self.requests, 0);
         let oldest_age = self.oldest.take().map(|t| t.elapsed()).unwrap_or_default();
         self.flushes += 1;
         self.coalesced_total += requests as u64;
         Batch { values, requests, oldest_age }
+    }
+
+    /// Return a consumed batch's buffer for reuse by a later flush. The
+    /// larger capacity wins, so once the biggest batch size has been
+    /// seen the flush loop stops touching the allocator.
+    pub fn recycle(&mut self, mut values: Vec<f32>) {
+        values.clear();
+        if values.capacity() > self.spare.capacity() {
+            self.spare = values;
+        }
     }
 
     /// Time until the current deadline expires (event-loop park hint).
@@ -145,6 +177,33 @@ mod tests {
         let batch = b.flush().unwrap();
         assert_eq!(batch.values, vec![5.0, 6.0]);
         assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn recycled_buffers_ping_pong_without_reallocating() {
+        let mut b = Batcher::new(BatchConfig { max_values: 8, max_delay: Duration::from_secs(60) });
+        // Flush 1 allocates the first buffer; recycle it.
+        let batch1 = b.push(&[1.0; 8]).expect("size flush");
+        let p1 = batch1.values.as_ptr();
+        b.recycle(batch1.values);
+        // Flush 2's buffer was freshly grown (pending had no capacity
+        // yet); recycling it completes the two-buffer pool.
+        let batch2 = b.push(&[2.0; 8]).expect("size flush");
+        let p2 = batch2.values.as_ptr();
+        b.recycle(batch2.values);
+        // From here on the two buffers ping-pong: every flush hands back
+        // one of the recycled pointers and conserves the values.
+        for round in 0..6 {
+            let batch = b.push(&[round as f32; 8]).expect("size flush");
+            assert_eq!(batch.values, vec![round as f32; 8]);
+            assert!(
+                batch.values.as_ptr() == p1 || batch.values.as_ptr() == p2,
+                "round {round}: flush must reuse a recycled buffer"
+            );
+            b.recycle(batch.values);
+        }
+        assert_eq!(b.flushes(), 8);
+        assert_eq!(b.coalesced_total(), 8);
     }
 
     #[test]

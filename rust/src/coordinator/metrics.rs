@@ -188,6 +188,10 @@ impl Metrics {
             sealed_bytes: 0,
             heap_used_bytes: 0,
             per_shard_len: Vec::new(),
+            // Batcher ledger defaults to zero; the worker attaches the
+            // real counters via [`MetricsSnapshot::with_batching`].
+            flushes: 0,
+            coalesced_requests: 0,
         }
     }
 }
@@ -247,6 +251,11 @@ pub struct MetricsSnapshot {
     /// Live-epoch elements per shard (aggregated OpReports land in the
     /// sim_* ledgers; this exposes the balance).
     pub per_shard_len: Vec<u64>,
+    /// Batcher flushes performed (size, deadline and barrier flushes).
+    pub flushes: u64,
+    /// Client requests coalesced across those flushes — the batcher's
+    /// own ledger, as opposed to the worker-side `batches` counter.
+    pub coalesced_requests: u64,
 }
 
 impl MetricsSnapshot {
@@ -274,6 +283,24 @@ impl MetricsSnapshot {
         self.sealed_bytes = sealed_bytes;
         self.heap_used_bytes = heap_used_bytes;
         self
+    }
+
+    /// Attach the batcher's flush ledger (`coalesced_requests / flushes`
+    /// is the batching-effectiveness ratio from the batcher's own
+    /// accounting).
+    pub fn with_batching(mut self, flushes: u64, coalesced_requests: u64) -> MetricsSnapshot {
+        self.flushes = flushes;
+        self.coalesced_requests = coalesced_requests;
+        self
+    }
+
+    /// Mean requests coalesced per batcher flush (0 before any flush).
+    pub fn flush_coalescing(&self) -> f64 {
+        if self.flushes == 0 {
+            0.0
+        } else {
+            self.coalesced_requests as f64 / self.flushes as f64
+        }
     }
 
     /// Observed shard-parallel speedup: device-seconds issued per
@@ -315,6 +342,7 @@ impl std::fmt::Display for MetricsSnapshot {
         writeln!(f, "insert requests      {}", self.inserts_requested)?;
         writeln!(f, "elements inserted    {}", self.elements_inserted)?;
         writeln!(f, "batches (coalescing) {} ({:.1}×)", self.batches, self.coalescing())?;
+        writeln!(f, "batcher flushes      {} ({:.1}× coalesced)", self.flushes, self.flush_coalescing())?;
         writeln!(f, "work calls           {}", self.work_calls)?;
         writeln!(f, "flattens / seals     {} / {}", self.flattens, self.seals)?;
         writeln!(f, "queries              {}", self.queries)?;
@@ -412,6 +440,18 @@ mod tests {
         assert!((s.sim_work_ms - 0.05).abs() < 1e-12);
         // Speedup over both classes: 450 device µs in 150 wall µs.
         assert!((s.parallel_speedup().unwrap() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn with_batching_attaches_flush_ledger() {
+        let m = Metrics::new();
+        let s = m.snapshot(10, 20, 400).with_batching(4, 10);
+        assert_eq!(s.flushes, 4);
+        assert_eq!(s.coalesced_requests, 10);
+        assert!((s.flush_coalescing() - 2.5).abs() < 1e-12);
+        assert!(s.to_string().contains("batcher flushes"), "{s}");
+        // Before any flush the ratio is a clean zero, not NaN.
+        assert_eq!(m.snapshot(0, 0, 0).flush_coalescing(), 0.0);
     }
 
     #[test]

@@ -40,12 +40,38 @@ impl Policy {
 
 /// Compute per-block insert counts for a batch of `n` elements given the
 /// current per-block sizes. Guarantees `sum(counts) == n` (conservation).
+///
+/// Collecting convenience wrapper over [`route_into`] — callers on the
+/// dispatch hot path hold a [`DispatchScratch`] and route into it
+/// instead of allocating a fresh counts vector per batch.
 pub fn route(policy: Policy, sizes: &[u64], n: usize, batch_seq: u64) -> Vec<usize> {
+    let mut counts = Vec::new();
+    let mut order = Vec::new();
+    route_into(policy, sizes, n, batch_seq, &mut counts, &mut order);
+    counts
+}
+
+/// In-place [`route`]: writes the per-block counts into `counts`
+/// (cleared first) using `order` as index-sort scratch for
+/// [`Policy::LeastLoaded`]. Both buffers keep their capacity across
+/// calls, so a warmed dispatch loop routes without heap traffic. The
+/// decision is identical to the collecting path for every policy (the
+/// LeastLoaded sort breaks size ties by block index, which is exactly
+/// what the previous stable sort produced).
+pub fn route_into(
+    policy: Policy,
+    sizes: &[u64],
+    n: usize,
+    batch_seq: u64,
+    counts: &mut Vec<usize>,
+    order: &mut Vec<usize>,
+) {
     let b = sizes.len();
     assert!(b > 0, "router needs at least one block");
+    counts.clear();
     match policy {
         Policy::Even => {
-            (0..b).map(|i| n / b + usize::from(i < n % b)).collect()
+            counts.extend((0..b).map(|i| n / b + usize::from(i < n % b)));
         }
         Policy::LeastLoaded => {
             // Water-filling: raise the lowest blocks to a common level.
@@ -54,9 +80,13 @@ pub fn route(policy: Policy, sizes: &[u64], n: usize, batch_seq: u64) -> Vec<usi
             // is spread base + at-most-one, so whenever `n` covers the
             // total gap to the tallest block the post-route spread is
             // max−min ≤ 1.
-            let mut order: Vec<usize> = (0..b).collect();
-            order.sort_by_key(|&i| sizes[i]);
-            let mut counts = vec![0usize; b];
+            counts.resize(b, 0);
+            order.clear();
+            order.extend(0..b);
+            // (size, index) key: deterministic tie-break equal to the
+            // stable sort, but through the alloc-free unstable sorter
+            // (a stable `sort_by_key` allocates its merge buffer).
+            order.sort_unstable_by_key(|&i| (sizes[i], i));
             let mut remaining = n as u64;
             // Grow the active prefix: raise the `filled` lowest blocks
             // exactly to the next block's size while the budget covers
@@ -82,13 +112,15 @@ pub fn route(policy: Policy, sizes: &[u64], n: usize, batch_seq: u64) -> Vec<usi
             for (j, &i) in order[..filled].iter().enumerate() {
                 counts[i] = (level - sizes[i] + base + u64::from(j < extra)) as usize;
             }
-            counts
         }
         Policy::Hash => {
-            // Rotate the even split by a hash of the sequence number.
-            let even = route(Policy::Even, sizes, n, 0);
+            // The even split rotated by a hash of the sequence number,
+            // computed directly per slot (no temporary even vector).
             let shift = (batch_seq.wrapping_mul(0x9E3779B97F4A7C15) % b as u64) as usize;
-            (0..b).map(|i| even[(i + b - shift) % b]).collect()
+            counts.extend((0..b).map(|i| {
+                let j = (i + b - shift) % b;
+                n / b + usize::from(j < n % b)
+            }));
         }
     }
 }
@@ -113,6 +145,74 @@ pub fn split_for_shards(counts: &[usize], blocks_per_shard: usize) -> Vec<(usize
         offset += chunk.iter().sum::<usize>();
     }
     out
+}
+
+/// In-place [`split_for_shards`]: writes one `(value_offset, value_len)`
+/// range per shard into `ranges` (cleared first). The range indexes the
+/// *batch value slice* — shard `k`'s values are
+/// `&values[offset..offset + len]` and its counts are
+/// `&counts[k·bps..(k+1)·bps]` — so the dispatcher hands every shard a
+/// sub-slice of the original batch instead of materialising per-shard
+/// vectors. Same contiguity/conservation contract as the collecting
+/// version (which is retained as the reference path).
+pub fn split_for_shards_into(
+    counts: &[usize],
+    blocks_per_shard: usize,
+    ranges: &mut Vec<(usize, usize)>,
+) {
+    assert!(blocks_per_shard > 0, "blocks_per_shard must be positive");
+    assert_eq!(counts.len() % blocks_per_shard, 0, "blocks not divisible into shards");
+    ranges.clear();
+    let mut offset = 0usize;
+    for chunk in counts.chunks(blocks_per_shard) {
+        let len = chunk.iter().sum::<usize>();
+        ranges.push((offset, len));
+        offset += len;
+    }
+}
+
+/// Reusable buffers of the coordinator's dispatch hot path. One arena
+/// lives in the coordinator worker for the whole service lifetime; every
+/// buffer is cleared (capacity retained), never dropped, so the
+/// steady-state batch loop performs zero heap allocations — the
+/// DynaSOAr-style allocation discipline applied to the host side.
+#[derive(Debug, Default)]
+pub struct DispatchScratch {
+    /// Global per-block sizes (the dispatcher refreshes these per batch).
+    pub sizes: Vec<u64>,
+    /// Global per-block insert counts ([`route_into`] output).
+    pub counts: Vec<usize>,
+    /// Per-shard `(value_offset, value_len)` ranges into the batch slice
+    /// ([`split_for_shards_into`] output).
+    pub ranges: Vec<(usize, usize)>,
+    /// Per-shard simulated-clock marks (cost accounting around one op).
+    pub marks: Vec<f64>,
+    /// Index-sort scratch for [`Policy::LeastLoaded`].
+    order: Vec<usize>,
+}
+
+impl DispatchScratch {
+    pub fn new() -> DispatchScratch {
+        DispatchScratch::default()
+    }
+
+    /// Route `n` elements over `self.sizes` into `self.counts`.
+    pub fn route(&mut self, policy: Policy, n: usize, batch_seq: u64) -> &[usize] {
+        route_into(policy, &self.sizes, n, batch_seq, &mut self.counts, &mut self.order);
+        &self.counts
+    }
+
+    /// Slice the routed counts per shard into `self.ranges`.
+    pub fn split_for_shards(&mut self, blocks_per_shard: usize) -> &[(usize, usize)] {
+        split_for_shards_into(&self.counts, blocks_per_shard, &mut self.ranges);
+        &self.ranges
+    }
+
+    /// The counts sub-slice owned by shard `k` (its `blocks_per_shard`
+    /// consecutive blocks of the global decision).
+    pub fn shard_counts(&self, k: usize, blocks_per_shard: usize) -> &[usize] {
+        &self.counts[k * blocks_per_shard..(k + 1) * blocks_per_shard]
+    }
 }
 
 /// Max/min block size after applying `counts` — the balance metric.
@@ -231,6 +331,122 @@ mod tests {
     #[should_panic(expected = "divisible")]
     fn split_for_shards_rejects_ragged() {
         split_for_shards(&[1, 2, 3], 2);
+    }
+
+    /// The pre-refactor copying implementations, retained verbatim as
+    /// the reference the scratch-arena path is property-tested against
+    /// (see also the service-level byte-identity test in
+    /// `tests/properties.rs`).
+    mod reference {
+        use super::super::Policy;
+
+        pub fn route(policy: Policy, sizes: &[u64], n: usize, batch_seq: u64) -> Vec<usize> {
+            let b = sizes.len();
+            assert!(b > 0);
+            match policy {
+                Policy::Even => (0..b).map(|i| n / b + usize::from(i < n % b)).collect(),
+                Policy::LeastLoaded => {
+                    let mut order: Vec<usize> = (0..b).collect();
+                    order.sort_by_key(|&i| sizes[i]); // stable sort
+                    let mut counts = vec![0usize; b];
+                    let mut remaining = n as u64;
+                    let mut level = sizes[order[0]];
+                    let mut filled = 1usize;
+                    while filled < b {
+                        let next = sizes[order[filled]];
+                        let step = (next - level).saturating_mul(filled as u64);
+                        if step > remaining {
+                            break;
+                        }
+                        remaining -= step;
+                        level = next;
+                        filled += 1;
+                    }
+                    let base = remaining / filled as u64;
+                    let extra = (remaining % filled as u64) as usize;
+                    for (j, &i) in order[..filled].iter().enumerate() {
+                        counts[i] = (level - sizes[i] + base + u64::from(j < extra)) as usize;
+                    }
+                    counts
+                }
+                Policy::Hash => {
+                    let even = route(Policy::Even, sizes, n, 0);
+                    let shift = (batch_seq.wrapping_mul(0x9E3779B97F4A7C15) % b as u64) as usize;
+                    (0..b).map(|i| even[(i + b - shift) % b]).collect()
+                }
+            }
+        }
+
+        pub fn split_for_shards(counts: &[usize], bps: usize) -> Vec<(usize, Vec<usize>)> {
+            let mut out = Vec::new();
+            let mut offset = 0usize;
+            for chunk in counts.chunks(bps) {
+                out.push((offset, chunk.to_vec()));
+                offset += chunk.iter().sum::<usize>();
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn route_into_matches_reference_for_every_policy() {
+        let mut rng = crate::util::rng::Rng::new(0xD15);
+        let mut scratch = DispatchScratch::new();
+        for case in 0..300 {
+            let b = rng.range(1, 33) as usize;
+            let sizes: Vec<u64> = (0..b).map(|_| rng.below(1000)).collect();
+            let n = rng.below(5000) as usize;
+            let seq = rng.below(1 << 20);
+            for policy in [Policy::Even, Policy::LeastLoaded, Policy::Hash] {
+                let want = reference::route(policy, &sizes, n, seq);
+                scratch.sizes.clear();
+                scratch.sizes.extend_from_slice(&sizes);
+                let got = scratch.route(policy, n, seq);
+                assert_eq!(got, want, "case {case} {policy:?} sizes={sizes:?} n={n}");
+                // The collecting wrapper agrees too.
+                assert_eq!(route(policy, &sizes, n, seq), want);
+            }
+        }
+    }
+
+    #[test]
+    fn split_into_ranges_match_reference_slices() {
+        let mut rng = crate::util::rng::Rng::new(0x51ab);
+        let mut scratch = DispatchScratch::new();
+        for _ in 0..200 {
+            let shards = rng.range(1, 9) as usize;
+            let bps = rng.range(1, 9) as usize;
+            let counts: Vec<usize> = (0..shards * bps).map(|_| rng.below(100) as usize).collect();
+            let want = reference::split_for_shards(&counts, bps);
+            scratch.counts.clear();
+            scratch.counts.extend_from_slice(&counts);
+            let ranges = scratch.split_for_shards(bps).to_vec();
+            assert_eq!(ranges.len(), want.len());
+            for (k, ((offset, len), (want_off, want_counts))) in
+                ranges.iter().zip(&want).enumerate()
+            {
+                assert_eq!(offset, want_off, "shard {k}");
+                assert_eq!(*len, want_counts.iter().sum::<usize>(), "shard {k}");
+                assert_eq!(scratch.shard_counts(k, bps), &want_counts[..], "shard {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_buffers_keep_capacity_across_batches() {
+        let mut scratch = DispatchScratch::new();
+        scratch.sizes.extend_from_slice(&[5, 5, 5, 5]);
+        scratch.route(Policy::LeastLoaded, 100, 0);
+        scratch.split_for_shards(2);
+        let (pc, pr) = (scratch.counts.as_ptr(), scratch.ranges.as_ptr());
+        for seq in 1..50u64 {
+            scratch.sizes.clear();
+            scratch.sizes.extend_from_slice(&[9, 1, 7, 3]);
+            scratch.route(Policy::LeastLoaded, 64, seq);
+            scratch.split_for_shards(2);
+        }
+        assert_eq!(scratch.counts.as_ptr(), pc, "counts buffer must be reused");
+        assert_eq!(scratch.ranges.as_ptr(), pr, "ranges buffer must be reused");
     }
 
     #[test]

@@ -42,18 +42,19 @@ use std::sync::mpsc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::ggarray::flatten::{self, ShardedFlattened};
+use crate::ggarray::flatten::ShardedFlattened;
 use crate::insertion::InsertionKind;
 use crate::runtime::Executor;
 use crate::sim::clock::{Category, Clock};
+use crate::sim::memory::OomError;
 use crate::sim::spec::DeviceSpec;
 use crate::workload::{synth_f32, Step, WorkloadSpec};
 
 use super::batcher::{BatchConfig, Batcher};
 use super::metrics::{Metrics, ParallelCost};
 use super::request::{checksum, Request, Response};
-use super::router::{self, Policy};
-use super::shard::{EpochManager, Shard, ShardConfig};
+use super::router::{DispatchScratch, Policy};
+use super::shard::{concat_parts, EpochManager, SealPart, Shard, ShardConfig};
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -197,12 +198,71 @@ pub fn split_heap_budget(total: u64, shards: usize) -> Vec<u64> {
     (0..shards as u64).map(|k| base + u64::from(k < rem)).collect()
 }
 
-/// Per-clock snapshot taken at the start of an op; see
-/// [`Worker::cost_since`].
+/// Serial-clock snapshot taken at the start of an op (the per-shard
+/// marks live in the dispatch scratch arena); see [`Worker::cost_since`].
 struct ClockMarks {
-    shards: Vec<f64>,
     epochs: f64,
     coord: f64,
+}
+
+/// Outcome of routing one batch across the shards.
+#[derive(Debug)]
+pub struct DispatchOutcome {
+    /// Elements actually placed across all shards.
+    pub applied: u64,
+    /// The shard that hit its VRAM budget mid-batch, if any. Dispatch
+    /// stops at the first OOMing shard so the surviving data stays a
+    /// contiguous prefix of the batch (byte-identical across shard
+    /// counts even under OOM).
+    pub oom: Option<(usize, OomError)>,
+}
+
+/// The allocation-free core of the insert hot path: refresh the global
+/// per-block sizes in the scratch arena, route the batch, slice the
+/// decision per shard as `(offset, len)` ranges into `values`, and hand
+/// every shard its `&[f32]` sub-slice — no per-shard vectors, no fresh
+/// count buffers, zero heap allocations once the arena and the shard
+/// buckets are warm (regression-tested in `tests/alloc_guard.rs`).
+///
+/// Free-standing so the coordinator worker, the allocation guard and the
+/// wall-clock bench drive the *same* code.
+pub fn dispatch_insert(
+    shards: &mut [Shard],
+    blocks_per_shard: usize,
+    policy: Policy,
+    batch_seq: u64,
+    values: &[f32],
+    scratch: &mut DispatchScratch,
+) -> DispatchOutcome {
+    scratch.sizes.clear();
+    for shard in shards.iter() {
+        scratch.sizes.extend(shard.block_sizes_iter());
+    }
+    scratch.route(policy, values.len(), batch_seq);
+    scratch.split_for_shards(blocks_per_shard);
+    let mut applied = 0u64;
+    let mut oom = None;
+    for (k, shard) in shards.iter_mut().enumerate() {
+        let (offset, take) = scratch.ranges[k];
+        if take == 0 {
+            // No sub-batch → no kernel launch on this shard. Charging
+            // idle shards a phantom insertion pass would let them set
+            // the max-over-shards critical path under skewed routing.
+            continue;
+        }
+        let out =
+            shard.apply_counts(scratch.shard_counts(k, blocks_per_shard), &values[offset..offset + take]);
+        applied += out.applied as u64;
+        if let Some(e) = out.error {
+            // No rollback — elements placed before the OOM stay visible,
+            // matching device semantics; the shard left its index
+            // consistent. But dispatch STOPS here: handing later shards
+            // their slices would leave a mid-stream hole.
+            oom = Some((shard.id(), e));
+            break;
+        }
+    }
+    DispatchOutcome { applied, oom }
 }
 
 enum Envelope {
@@ -308,6 +368,13 @@ struct Worker {
     /// shard-dispatching op — the explicit serial term of the parallel
     /// time model (it cannot overlap with any shard's kernels).
     coord: Clock,
+    /// Dispatch scratch arena: every per-batch buffer of the insert hot
+    /// path lives here for the worker's lifetime — cleared, never
+    /// dropped, so the steady-state loop is allocation-free.
+    scratch: DispatchScratch,
+    /// Pooled destination of `Request::Flatten` snapshots (cleared per
+    /// use, capacity retained across snapshots).
+    flatten_pool: Vec<f32>,
 }
 
 impl Worker {
@@ -356,6 +423,8 @@ impl Worker {
             executor,
             batch_seq: 0,
             coord: Clock::new(),
+            scratch: DispatchScratch::new(),
+            flatten_pool: Vec::new(),
             cfg,
         }
     }
@@ -401,14 +470,13 @@ impl Worker {
     }
 
     /// Snapshot every simulated clock that can advance during one op:
-    /// the per-shard clocks (concurrent), the flat-path clock and the
-    /// coordinator clock (both serial).
-    fn clock_marks(&self) -> ClockMarks {
-        ClockMarks {
-            shards: self.shards.iter().map(|s| s.sim_now_us()).collect(),
-            epochs: self.epochs.now_us(),
-            coord: self.coord.now_us(),
-        }
+    /// the per-shard clocks (concurrent, written into the scratch arena's
+    /// marks buffer), the flat-path clock and the coordinator clock
+    /// (both serial).
+    fn clock_marks(&mut self) -> ClockMarks {
+        self.scratch.marks.clear();
+        self.scratch.marks.extend(self.shards.iter().map(|s| s.sim_now_us()));
+        ClockMarks { epochs: self.epochs.now_us(), coord: self.coord.now_us() }
     }
 
     /// The parallel-model cost of everything since `marks`: shards ran
@@ -417,7 +485,7 @@ impl Worker {
     /// launches that cannot overlap the shard kernels.
     fn cost_since(&self, marks: &ClockMarks) -> ParallelCost {
         let shard_cost = ParallelCost::from_parallel(
-            self.shards.iter().zip(&marks.shards).map(|(s, &t0)| s.sim_now_us() - t0),
+            self.shards.iter().zip(&self.scratch.marks).map(|(s, &t0)| s.sim_now_us() - t0),
         );
         let serial =
             (self.epochs.now_us() - marks.epochs) + (self.coord.now_us() - marks.coord);
@@ -428,15 +496,6 @@ impl Worker {
     /// (routing decision + launch sync on the host).
     fn charge_dispatch(&mut self) {
         self.coord.charge(Category::Host, self.cfg.device.cost.host_sync_us);
-    }
-
-    /// Per-block sizes over the global (all-shard) block space.
-    fn global_sizes(&self) -> Vec<u64> {
-        let mut sizes = Vec::with_capacity(self.cfg.blocks);
-        for shard in &self.shards {
-            sizes.extend(shard.block_sizes());
-        }
-        sizes
     }
 
     /// Read a global index: the sealed prefix first, then the live epoch
@@ -466,63 +525,62 @@ impl Worker {
 
     fn apply_batch(&mut self, values: Vec<f32>, requests: usize) {
         if values.is_empty() {
+            self.batcher.recycle(values);
             return;
         }
         let marks = self.clock_marks();
         self.charge_dispatch();
-        let sizes = self.global_sizes();
-        let counts = router::route(self.cfg.routing, &sizes, values.len(), self.batch_seq);
+        // Scratch-arena dispatch: shard k owns blocks [k·bps, (k+1)·bps)
+        // and receives a contiguous `&values[..]` sub-slice. The
+        // sub-batches execute concurrently on the device (disjoint block
+        // ranges), so the ledger charges the slowest shard, not the sum
+        // — see `cost_since`.
+        let outcome = dispatch_insert(
+            &mut self.shards,
+            self.blocks_per_shard,
+            self.cfg.routing,
+            self.batch_seq,
+            &values,
+            &mut self.scratch,
+        );
         self.batch_seq += 1;
-        // Cross-check the per-block offsets against the AOT scan kernel
-        // when available (the real index-assignment path).
+        #[cfg(debug_assertions)]
+        self.cross_check_scan_offsets(values.len());
+        if let Some((shard, e)) = &outcome.oom {
+            eprintln!("[coordinator] simulated OOM during insert on shard {shard}: {e}");
+            self.metrics.errors += 1;
+        }
+        let cost = self.cost_since(&marks);
+        self.metrics.charge_insert(cost);
+        self.metrics.batches += 1;
+        self.metrics.elements_inserted += outcome.applied;
+        let _ = requests;
+        // The consumed batch buffer returns to the batcher: steady-state
+        // flushes ping-pong two buffers instead of allocating.
+        self.batcher.recycle(values);
+    }
+
+    /// Debug-build-only self-check: cross-check the routed per-block
+    /// offsets against the AOT scan kernel (the real index-assignment
+    /// path) and the host oracle. Release builds skip the whole block —
+    /// the expectation vectors (`counts_i32`, `assign_indices`) were the
+    /// last per-batch allocations on the hot path.
+    #[cfg(debug_assertions)]
+    fn cross_check_scan_offsets(&mut self, batch_len: usize) {
         if let Some(exec) = &self.executor {
-            let counts_i32: Vec<i32> = counts.iter().map(|&c| c as i32).collect();
+            let counts_i32: Vec<i32> = self.scratch.counts.iter().map(|&c| c as i32).collect();
             if let Ok((offsets, total)) = exec.scan_offsets("scan_warp_i32_", &counts_i32) {
-                debug_assert_eq!(total as usize, values.len());
+                debug_assert_eq!(total as usize, batch_len);
                 let expect: Vec<i64> = {
-                    let (o, _) = crate::insertion::assign_indices(0, &counts.iter().map(|&c| c as u32).collect::<Vec<_>>());
+                    let counts_u32: Vec<u32> =
+                        self.scratch.counts.iter().map(|&c| c as u32).collect();
+                    let (o, _) = crate::insertion::assign_indices(0, &counts_u32);
                     o.iter().map(|&x| x as i64).collect()
                 };
                 debug_assert_eq!(offsets, expect, "AOT scan disagrees with host oracle");
                 self.metrics.pjrt_executions += 1;
             }
         }
-        // Slice the global decision per shard: shard k owns blocks
-        // [k·bps, (k+1)·bps) and its values are contiguous in the batch.
-        // The sub-batches execute concurrently on the device (disjoint
-        // block ranges), so the ledger charges the slowest shard, not
-        // the sum — see `cost_since`.
-        let mut applied = 0u64;
-        for (shard, (offset, sub)) in
-            self.shards.iter_mut().zip(router::split_for_shards(&counts, self.blocks_per_shard))
-        {
-            let take: usize = sub.iter().sum();
-            if take == 0 {
-                // No sub-batch → no kernel launch on this shard. Charging
-                // idle shards a phantom insertion pass would let them set
-                // the max-over-shards critical path under skewed routing.
-                continue;
-            }
-            let out = shard.apply_counts(sub, &values[offset..offset + take]);
-            applied += out.applied as u64;
-            if let Some(e) = out.error {
-                eprintln!("[coordinator] simulated OOM during insert on shard {}: {e}", shard.id());
-                // No rollback — elements placed before the OOM stay
-                // visible, matching device semantics; the shard left its
-                // index consistent. But dispatch STOPS here: handing
-                // later shards their slices would leave a mid-stream
-                // hole, so the surviving data would no longer be a
-                // contiguous prefix of the batch (and 1-shard vs N-shard
-                // runs would diverge byte-wise under OOM).
-                self.metrics.errors += 1;
-                break;
-            }
-        }
-        let cost = self.cost_since(&marks);
-        self.metrics.charge_insert(cost);
-        self.metrics.batches += 1;
-        self.metrics.elements_inserted += applied;
-        let _ = requests;
     }
 
     fn handle(&mut self, req: Request) -> Response {
@@ -579,49 +637,58 @@ impl Worker {
                 self.charge_dispatch();
                 // Sealed prefix is already flat; append a non-destructive
                 // flatten of the live epoch — per-shard gathers over
-                // disjoint block ranges, concurrent on the device.
-                let mut data: Vec<f32> = Vec::with_capacity(self.total_len() as usize);
+                // disjoint block ranges, concurrent on the device. The
+                // destination is the worker's pooled snapshot buffer
+                // (cleared per call, capacity retained), so steady-state
+                // snapshots reuse one gather buffer.
+                let mut data = std::mem::take(&mut self.flatten_pool);
+                data.clear();
+                data.reserve(self.total_len() as usize);
                 for segment in self.epochs.segments() {
                     data.extend_from_slice(segment);
                 }
                 let mut failed = None;
                 for shard in &mut self.shards {
-                    match shard.flatten_temp() {
-                        Ok(f) => data.extend_from_slice(&f.data),
-                        Err(e) => {
-                            failed = Some(e);
-                            break;
-                        }
+                    if let Err(e) = shard.flatten_temp_into(&mut data) {
+                        failed = Some(e);
+                        break;
                     }
                 }
                 if let Some(e) = failed {
                     self.metrics.errors += 1;
+                    self.flatten_pool = data;
                     return Response::Error(format!("flatten OOM: {e}"));
                 }
                 self.metrics.flattens += 1;
                 let cost = self.cost_since(&marks);
                 self.metrics.charge_flatten(cost);
-                Response::Flattened {
+                let resp = Response::Flattened {
                     len: data.len() as u64,
                     sim_us: cost.critical_path_us,
                     device_us: cost.total_device_us,
                     checksum: checksum(&data),
-                }
+                };
+                self.flatten_pool = data;
+                resp
             }
             Request::Seal => {
                 self.barrier();
                 let marks = self.clock_marks();
                 self.charge_dispatch();
                 // Two-phase commit across shards. Phase 1 — prepare:
-                // flatten every shard (each destination is a fresh
-                // allocation in its shard's heap), then reserve epoch-
-                // store capacity for the whole seal. Any failure aborts
-                // the entire transaction before a single byte commits.
-                let mut parts = Vec::with_capacity(self.shards.len());
+                // flatten every shard into the pooled gather destination
+                // (leased from the epoch store, sized by the largest
+                // seal seen; each shard's simulated destination is still
+                // a fresh allocation in its own heap), then reserve
+                // epoch-store capacity for the whole seal. Any failure
+                // aborts the entire transaction before a single byte
+                // commits.
+                let mut dst = self.epochs.take_gather_buffer();
+                let mut parts: Vec<SealPart> = Vec::with_capacity(self.shards.len());
                 let mut failed = None;
                 for shard in &mut self.shards {
-                    match shard.seal_flatten() {
-                        Ok(f) => parts.push(f),
+                    match shard.seal_flatten_into(&mut dst) {
+                        Ok(p) => parts.push(p),
                         Err(e) => {
                             failed = Some(format!("seal OOM: {e}"));
                             break;
@@ -632,7 +699,7 @@ impl Worker {
                     // Reserve: the epoch store must be able to adopt
                     // every destination before any shard commits, so the
                     // per-shard transfers below can never fail half-way.
-                    let sealed_bytes: u64 = parts.iter().map(|p| p.data.len() as u64 * 4).sum();
+                    let sealed_bytes: u64 = parts.iter().map(|p| p.len as u64 * 4).sum();
                     if let Err(e) = self.epochs.can_accept(sealed_bytes) {
                         failed = Some(format!("seal OOM (epoch store): {e}"));
                     }
@@ -642,7 +709,8 @@ impl Worker {
                     // their fresh destination and reopen; the tail (the
                     // failure shard included) never flattened and just
                     // reopens — every shard is visited exactly once, so
-                    // nothing is double-reopened or double-freed.
+                    // nothing is double-reopened or double-freed. The
+                    // gather destination returns to the pool.
                     let mut parts = parts.into_iter();
                     for shard in &mut self.shards {
                         match parts.next() {
@@ -650,6 +718,7 @@ impl Worker {
                             None => shard.reopen(),
                         }
                     }
+                    self.epochs.bank_gather_buffer(dst);
                     self.metrics.errors += 1;
                     return Response::Error(msg);
                 }
@@ -661,7 +730,7 @@ impl Worker {
                 for (shard, part) in self.shards.iter_mut().zip(&mut parts) {
                     seg_allocs.extend(shard.commit_seal(part.alloc.take(), self.epochs.heap_mut()));
                 }
-                let flat: ShardedFlattened<f32> = flatten::concat(parts);
+                let flat: ShardedFlattened<f32> = concat_parts(&parts, dst);
                 let epoch_len = flat.len() as u64;
                 let sum = checksum(&flat.data);
                 let epoch = self.epochs.absorb(flat, seg_allocs);
@@ -728,7 +797,8 @@ impl Worker {
                         self.epochs.sealed_epochs(),
                         self.shards.iter().map(|s| s.len() as u64).collect(),
                     )
-                    .with_memory(self.epochs.sealed_bytes(), heap_used);
+                    .with_memory(self.epochs.sealed_bytes(), heap_used)
+                    .with_batching(self.batcher.flushes(), self.batcher.coalesced_total());
                 Response::Stats(snap)
             }
             Request::Clear => {

@@ -30,7 +30,7 @@
 //! makes compaction OOM and abort byte-identically — segments,
 //! allocations and `sealed_len` untouched.
 
-use crate::ggarray::array::{GgArray, GgConfig};
+use crate::ggarray::array::{GgArray, GgConfig, OpReport};
 use crate::ggarray::flatten::{self, Flattened, ShardedFlattened};
 use crate::insertion::{self, InsertionKind, InsertShape};
 use crate::runtime::Executor;
@@ -60,6 +60,33 @@ pub struct ShardInsertOutcome {
     pub sim_us: f64,
     /// The OOM, if the shard's budget ran out mid-batch.
     pub error: Option<OomError>,
+}
+
+/// One shard's contribution to a pooled cross-shard seal
+/// ([`Shard::seal_flatten_into`]): how many elements it appended to the
+/// shared gather destination, its flatten timing report, and the (still
+/// shard-heap-resident) destination allocation whose fate the caller
+/// decides — [`Shard::commit_seal`] or [`Shard::abort_seal`].
+#[derive(Debug)]
+pub struct SealPart {
+    pub len: usize,
+    pub report: OpReport,
+    pub alloc: Option<AllocId>,
+}
+
+/// Assemble the [`ShardedFlattened`] view of a pooled seal from the
+/// per-shard [`SealPart`]s and the shared gather destination they wrote
+/// (shard-major, in seal order) — the zero-extra-copy counterpart of
+/// [`flatten::concat`].
+pub fn concat_parts(parts: &[SealPart], data: Vec<f32>) -> ShardedFlattened<f32> {
+    debug_assert_eq!(parts.iter().map(|p| p.len).sum::<usize>(), data.len());
+    let mut index = crate::ggarray::index::PrefixIndex::new();
+    index.rebuild(parts.iter().map(|p| p.len as u64));
+    let mut report = OpReport::default();
+    for p in parts {
+        report.absorb(&p.report);
+    }
+    ShardedFlattened { data, index, report }
 }
 
 /// One independent GGArray shard with its own VRAM budget. The budget
@@ -112,6 +139,12 @@ impl Shard {
 
     pub fn block_sizes(&self) -> Vec<u64> {
         self.gg.block_sizes()
+    }
+
+    /// Per-block sizes without materialising a vector (dispatch hot
+    /// path: the router extends its scratch buffer from this).
+    pub fn block_sizes_iter(&self) -> impl Iterator<Item = u64> + '_ {
+        self.gg.block_sizes_iter()
     }
 
     pub fn sim_now_us(&self) -> f64 {
@@ -177,11 +210,30 @@ impl Shard {
     /// once every shard of the store succeeded, or [`Shard::abort_seal`]
     /// if any failed — so a cross-shard seal never half-commits VRAM.
     /// On error this shard is reopened untouched.
+    ///
+    /// Collecting wrapper over [`Shard::seal_flatten_into`] — the
+    /// coordinator's seal gathers every shard into one pooled
+    /// destination instead.
     pub fn seal_flatten(&mut self) -> Result<Flattened<f32>, OomError> {
+        let mut data = Vec::new();
+        let part = self.seal_flatten_into(&mut data)?;
+        debug_assert_eq!(part.len, data.len());
+        Ok(Flattened { data, report: part.report, alloc: part.alloc })
+    }
+
+    /// Pooled seal-flatten: append this shard's contents to the shared
+    /// gather destination `dst` (shards land back-to-back in seal order)
+    /// and return the [`SealPart`] bookkeeping — appended length, timing
+    /// report, and the still-shard-heap-resident destination allocation
+    /// whose fate the caller decides. On error nothing is appended and
+    /// this shard is reopened untouched.
+    pub fn seal_flatten_into(&mut self, dst: &mut Vec<f32>) -> Result<SealPart, OomError> {
         self.gg.seal();
-        match flatten::flatten(&mut self.gg) {
-            Ok(f) => Ok(f),
+        let before = dst.len();
+        match flatten::flatten_into(&mut self.gg, dst) {
+            Ok((report, alloc)) => Ok(SealPart { len: dst.len() - before, report, alloc }),
             Err(e) => {
+                debug_assert_eq!(dst.len(), before, "failed flatten must not append");
                 self.gg.reopen();
                 Err(e)
             }
@@ -230,6 +282,19 @@ impl Shard {
             heap.free(dst, clock);
         }
         Ok(f)
+    }
+
+    /// Pooled [`Shard::flatten_temp`]: append this shard's contents to
+    /// the caller's reusable snapshot buffer and release the simulated
+    /// destination immediately. Returns the appended length.
+    pub fn flatten_temp_into(&mut self, dst: &mut Vec<f32>) -> Result<usize, OomError> {
+        let before = dst.len();
+        let (_report, alloc) = flatten::flatten_into(&mut self.gg, dst)?;
+        if let Some(a) = alloc {
+            let (_, heap, clock, _, _, _) = self.gg.parts_mut();
+            heap.free(a, clock);
+        }
+        Ok(dst.len() - before)
     }
 
     /// Reopen without clearing — the abort path when a multi-shard seal
@@ -358,6 +423,11 @@ pub struct EpochManager {
     clock: crate::sim::clock::Clock,
     /// Epoch-owned VRAM: sealed segments + compaction transients.
     heap: VramHeap,
+    /// Recycled gather buffer, sized to the largest seal/compaction seen:
+    /// the next pooled gather leases it ([`EpochManager::take_gather_buffer`])
+    /// instead of allocating, and freed segment buffers are banked back
+    /// ([`EpochManager::bank_gather_buffer`]).
+    pool: Vec<f32>,
     /// Sequence number of the *current inserting* epoch (starts at 0;
     /// each seal advances it).
     seq: u64,
@@ -386,7 +456,34 @@ impl EpochManager {
             allocs: Vec::new(),
             starts: Vec::new(),
             total: 0,
+            pool: Vec::new(),
         }
+    }
+
+    /// Lease the pooled gather buffer: cleared, with the capacity of the
+    /// largest gather banked so far. The caller writes a flat segment
+    /// into it and either absorbs it (sealed epochs own their bytes) or
+    /// banks it back after an abort.
+    pub fn take_gather_buffer(&mut self) -> Vec<f32> {
+        let mut buf = std::mem::take(&mut self.pool);
+        buf.clear();
+        buf
+    }
+
+    /// Return a buffer to the gather pool (aborted seal, freed
+    /// compaction source, cleared store): the larger capacity wins, so
+    /// the pool converges on the largest seal seen and steady churn
+    /// stops allocating gather destinations.
+    pub fn bank_gather_buffer(&mut self, mut buf: Vec<f32>) {
+        buf.clear();
+        if buf.capacity() > self.pool.capacity() {
+            self.pool = buf;
+        }
+    }
+
+    /// Capacity of the banked gather buffer (observability/tests).
+    pub fn gather_pool_capacity(&self) -> usize {
+        self.pool.capacity()
     }
 
     /// Current inserting-epoch sequence number.
@@ -554,7 +651,12 @@ impl EpochManager {
         // Phase 1 — reserve the merged destination (2× transient).
         let bytes = self.total * 4;
         let dst = self.heap.alloc(bytes, &mut self.clock)?;
-        // Phase 2 — commit: gather, free the sources, keep the merge.
+        // Phase 2 — commit: gather into the pooled destination, free the
+        // sources, keep the merge. The host-side mirror of the VRAM
+        // discipline: the gather buffer is leased from the pool and the
+        // largest freed source is banked back, so repeated
+        // seal → compact churn stops allocating host buffers too.
+        let mut data = self.take_gather_buffer();
         let parts: Vec<ShardedFlattened<f32>> = self
             .sealed
             .drain(..)
@@ -563,8 +665,12 @@ impl EpochManager {
                 Epoch::Inserting => None,
             })
             .collect();
-        let merged = flatten::merge_segments(parts);
+        let (index, report) = flatten::merge_segments_into(&parts, &mut data);
+        let merged = ShardedFlattened { data, index, report };
         debug_assert_eq!(merged.len() as u64, self.total);
+        for p in parts {
+            self.bank_gather_buffer(p.data);
+        }
         let n = self.total;
         let tpb = 1024u32;
         let blocks = crate::util::math::ceil_div(n, tpb as u64);
@@ -604,7 +710,13 @@ impl EpochManager {
         for id in self.allocs.drain(..).flatten() {
             self.heap.free(id, &mut self.clock);
         }
-        self.sealed.clear();
+        // Bank the largest dropped segment so the store's next seal
+        // gathers into recycled capacity.
+        for e in self.sealed.drain(..) {
+            if let Epoch::Sealed(v) = e {
+                self.bank_gather_buffer(v.data);
+            }
+        }
         self.starts.clear();
         self.total = 0;
     }
@@ -681,6 +793,55 @@ mod tests {
         s.commit_seal(f2.alloc.take(), &mut eh);
         assert_eq!(s.heap_used(), 0);
         assert_eq!(eh.used(), 480, "both sealed epochs live in the epoch-owned heap");
+    }
+
+    #[test]
+    fn pooled_seal_flatten_appends_shard_after_shard() {
+        // Two shards gather into one shared destination; the assembled
+        // view is byte-identical to the collecting per-shard path.
+        let mut a = shard(2, 1 << 24);
+        let mut b = shard(2, 1 << 24);
+        a.apply_counts(&[3, 2], &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        b.apply_counts(&[1, 2], &[9.0, 8.0, 7.0]);
+        let mut dst = Vec::new();
+        let mut p1 = a.seal_flatten_into(&mut dst).unwrap();
+        let mut p2 = b.seal_flatten_into(&mut dst).unwrap();
+        assert_eq!((p1.len, p2.len), (5, 3));
+        assert_eq!(dst, vec![1.0, 2.0, 3.0, 4.0, 5.0, 9.0, 8.0, 7.0]);
+        assert!(p1.alloc.is_some() && p2.alloc.is_some());
+        let (alloc1, alloc2) = (p1.alloc.take(), p2.alloc.take());
+        let flat = concat_parts(&[p1, p2], dst);
+        assert_eq!(flat.len(), 8);
+        assert_eq!(flat.shard_start(1), 5);
+        assert_eq!(flat.locate(5), Some((1, 0)));
+        // Clean up the simulated destinations (abort path).
+        a.abort_seal(alloc1);
+        b.abort_seal(alloc2);
+        assert_eq!(a.len(), 5);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn gather_pool_banks_the_largest_buffer() {
+        let mut em = EpochManager::new(DeviceSpec::a100(), 1 << 20);
+        assert_eq!(em.gather_pool_capacity(), 0);
+        let first = em.take_gather_buffer();
+        assert_eq!(first.capacity(), 0, "nothing banked yet");
+        em.bank_gather_buffer(Vec::with_capacity(64));
+        em.bank_gather_buffer(Vec::with_capacity(16));
+        assert!(em.gather_pool_capacity() >= 64, "larger capacity wins");
+        let leased = em.take_gather_buffer();
+        assert!(leased.capacity() >= 64);
+        assert!(leased.is_empty(), "leased buffer arrives cleared");
+        assert_eq!(em.gather_pool_capacity(), 0, "pool is empty while leased");
+        // Compaction refills the pool from its freed sources.
+        absorb_vals(&mut em, vec![1.0; 32]);
+        absorb_vals(&mut em, vec![2.0; 48]);
+        em.compact().unwrap();
+        assert!(em.gather_pool_capacity() >= 48, "largest freed source banked");
+        // Reset banks a dropped segment too.
+        em.reset();
+        assert!(em.gather_pool_capacity() >= 80, "merged segment banked on reset");
     }
 
     #[test]

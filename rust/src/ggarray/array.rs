@@ -77,6 +77,13 @@ impl OpReport {
     pub fn total_ms(&self) -> f64 {
         self.us / 1e3
     }
+
+    /// Fold another report into this one (concat/merge bookkeeping).
+    pub fn absorb(&mut self, other: &OpReport) {
+        self.us += other.us;
+        self.buckets_allocated += other.buckets_allocated;
+        self.elements += other.elements;
+    }
 }
 
 /// The growable GPU array.
@@ -201,7 +208,13 @@ impl<T: Copy + Default> GgArray<T> {
 
     /// Per-block sizes (for tests and the coordinator's router).
     pub fn block_sizes(&self) -> Vec<u64> {
-        self.vectors.iter().map(|v| v.len() as u64).collect()
+        self.block_sizes_iter().collect()
+    }
+
+    /// Per-block sizes without materialising a vector — the router input
+    /// on the dispatch hot path (callers extend a reusable buffer).
+    pub fn block_sizes_iter(&self) -> impl Iterator<Item = u64> + '_ {
+        self.vectors.iter().map(|v| v.len() as u64)
     }
 
     // ---------- the paper's operations ----------

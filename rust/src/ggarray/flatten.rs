@@ -86,9 +86,7 @@ pub fn concat<T: Copy + Default>(parts: Vec<Flattened<T>>) -> ShardedFlattened<T
     let mut data = Vec::with_capacity(total);
     let mut report = OpReport::default();
     for p in parts {
-        report.us += p.report.us;
-        report.buckets_allocated += p.report.buckets_allocated;
-        report.elements += p.report.elements;
+        report.absorb(&p.report);
         data.extend_from_slice(&p.data);
     }
     ShardedFlattened { data, index, report }
@@ -108,12 +106,30 @@ pub fn concat<T: Copy + Default>(parts: Vec<Flattened<T>>) -> ShardedFlattened<T
 /// [`crate::coordinator::shard::EpochManager::compact`], which can
 /// therefore OOM and abort without calling this at all.
 pub fn merge_segments<T: Copy + Default>(parts: Vec<ShardedFlattened<T>>) -> ShardedFlattened<T> {
-    concat(
-        parts
-            .into_iter()
-            .map(|p| Flattened { data: p.data, report: p.report, alloc: None })
-            .collect(),
-    )
+    let mut data = Vec::new();
+    let (index, report) = merge_segments_into(&parts, &mut data);
+    ShardedFlattened { data, index, report }
+}
+
+/// Pooled core of [`merge_segments`]: append every segment's data to
+/// `dst` (not cleared — the caller leases and clears the pool) and
+/// return the rebuilt per-segment index plus the summed report. The
+/// sources are only borrowed, so the caller can recycle their buffers —
+/// the epoch store banks the largest freed segment as the gather pool
+/// for the next seal/compaction.
+pub fn merge_segments_into<T: Copy>(
+    parts: &[ShardedFlattened<T>],
+    dst: &mut Vec<T>,
+) -> (PrefixIndex, OpReport) {
+    let mut index = PrefixIndex::new();
+    index.rebuild(parts.iter().map(|p| p.len() as u64));
+    dst.reserve(parts.iter().map(|p| p.data.len()).sum());
+    let mut report = OpReport::default();
+    for p in parts {
+        report.absorb(&p.report);
+        dst.extend_from_slice(&p.data);
+    }
+    (index, report)
 }
 
 /// Flatten every shard and concatenate with a shard-offset index — the
@@ -129,22 +145,60 @@ pub fn merge_segments<T: Copy + Default>(parts: Vec<ShardedFlattened<T>>) -> Sha
 pub fn flatten_concat<T: Copy + Default>(
     shards: &mut [GgArray<T>],
 ) -> Result<ShardedFlattened<T>, OomError> {
-    let mut parts = Vec::with_capacity(shards.len());
+    let mut data = Vec::new();
+    let (index, report) = flatten_concat_into(shards, &mut data)?;
+    Ok(ShardedFlattened { data, index, report })
+}
+
+/// Pooled [`flatten_concat`]: gather every shard's contents directly
+/// into `dst` (appended in shard order — one copy instead of the
+/// flatten-then-concat two) and return the shard-offset index and the
+/// summed report. The per-shard destination allocations are released
+/// before returning, exactly like the collecting version.
+pub fn flatten_concat_into<T: Copy + Default>(
+    shards: &mut [GgArray<T>],
+    dst: &mut Vec<T>,
+) -> Result<(PrefixIndex, OpReport), OomError> {
+    let mut lens = Vec::with_capacity(shards.len());
+    let mut report = OpReport::default();
     for gg in shards.iter_mut() {
-        let mut f = flatten(gg)?;
-        if let Some(dst) = f.alloc.take() {
+        let before = dst.len();
+        let (r, alloc) = flatten_into(gg, dst)?;
+        if let Some(a) = alloc {
             let (_, heap, clock, _, _, _) = gg.parts_mut();
-            heap.free(dst, clock);
+            heap.free(a, clock);
         }
-        parts.push(f);
+        report.absorb(&r);
+        lens.push((dst.len() - before) as u64);
     }
-    Ok(concat(parts))
+    let mut index = PrefixIndex::new();
+    index.rebuild(lens.into_iter());
+    Ok((index, report))
 }
 
 /// Flatten the GGArray into a fresh contiguous (simulated-VRAM-resident)
 /// array. The GGArray keeps its storage — callers typically `clear()` it
 /// afterwards or reuse it for the next growth phase.
+///
+/// Collecting wrapper over [`flatten_into`] — seal/snapshot hot paths
+/// pass a pooled destination instead of taking a fresh vector per call.
 pub fn flatten<T: Copy + Default>(gg: &mut GgArray<T>) -> Result<Flattened<T>, OomError> {
+    let mut data = Vec::new();
+    let (report, alloc) = flatten_into(gg, &mut data)?;
+    Ok(Flattened { data, report, alloc })
+}
+
+/// Pooled [`flatten`]: append the GGArray's contents to `dst` (the
+/// caller-provided reusable destination — not cleared, so multi-shard
+/// gathers land shard-after-shard in one buffer) and return the timing
+/// report plus the destination allocation in the source heap. Charges
+/// are identical to the collecting path: one destination `cudaMalloc`
+/// and one gather kernel; the host copy stays `LfVector::copy_into`'s
+/// segment-wise bulk copy.
+pub fn flatten_into<T: Copy + Default>(
+    gg: &mut GgArray<T>,
+    dst: &mut Vec<T>,
+) -> Result<(OpReport, Option<AllocId>), OomError> {
     let n = gg.len();
     let elem = std::mem::size_of::<T>();
     let spec = gg.spec().clone();
@@ -154,13 +208,14 @@ pub fn flatten<T: Copy + Default>(gg: &mut GgArray<T>) -> Result<Flattened<T>, O
 
     let phase = crate::sim::clock::Phase::start(clock);
     // Destination allocation (one cudaMalloc).
-    let dst = heap.alloc((n * elem) as u64, clock)?;
+    let dst_alloc = heap.alloc((n * elem) as u64, clock)?;
     // Real copy.
-    let mut data = Vec::with_capacity(n);
+    let start = dst.len();
+    dst.reserve(n);
     for v in vectors.iter() {
-        v.copy_into(&mut data);
+        v.copy_into(dst);
     }
-    debug_assert_eq!(data.len(), n);
+    debug_assert_eq!(dst.len() - start, n);
     // Gather kernel: read at block-structured efficiency, write coalesced.
     let read = (n * elem) as f64;
     let write = (n * elem) as f64;
@@ -173,7 +228,7 @@ pub fn flatten<T: Copy + Default>(gg: &mut GgArray<T>) -> Result<Flattened<T>, O
     let profile = KernelProfile::streaming(blocks.max(1), tpb, read + write, eff);
     kernel::launch(&spec, clock, &profile);
     let report = OpReport { us: phase.elapsed_us(clock), buckets_allocated: 0, elements: n as u64 };
-    Ok(Flattened { data, report, alloc: Some(dst) })
+    Ok((report, Some(dst_alloc)))
 }
 
 #[cfg(test)]
@@ -287,6 +342,72 @@ mod tests {
         assert!((merged.report.us - 15.0).abs() < 1e-12);
         let empty: ShardedFlattened<u32> = super::merge_segments(vec![]);
         assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn flatten_into_appends_and_matches_collecting_path() {
+        let cfg = GgConfig { num_blocks: 4, threads_per_block: 256, first_bucket_size: 4, insertion: InsertionKind::WarpScan };
+        let mk = |lo: u32, hi: u32| {
+            let mut g: GgArray<u32> = GgArray::new(cfg.clone(), DeviceSpec::a100());
+            g.insert_bulk(&(lo..hi).collect::<Vec<_>>(), InsertionKind::WarpScan).unwrap();
+            g
+        };
+        let (mut a, mut b) = (mk(0, 100), mk(100, 150));
+        let want_a = flatten(&mut mk(0, 100)).unwrap().data;
+        let want_b = flatten(&mut mk(100, 150)).unwrap().data;
+        // Append semantics: pre-existing contents survive, shards land
+        // back-to-back in one destination.
+        let mut dst = vec![7u32];
+        let (ra, alloc_a) = flatten_into(&mut a, &mut dst).unwrap();
+        let (rb, _alloc_b) = flatten_into(&mut b, &mut dst).unwrap();
+        assert_eq!(dst.len(), 151);
+        assert_eq!(dst[0], 7);
+        assert_eq!(&dst[1..101], &want_a[..]);
+        assert_eq!(&dst[101..], &want_b[..]);
+        assert!(ra.us > 0.0 && rb.us > 0.0);
+        assert!(alloc_a.is_some(), "destination allocation returned to the caller");
+    }
+
+    #[test]
+    fn merge_segments_into_reuses_the_destination_buffer() {
+        let mk = |vals: Vec<u32>| {
+            concat(vec![Flattened { data: vals, report: OpReport::default(), alloc: None }])
+        };
+        let parts = vec![mk(vec![1, 2, 3]), mk(vec![9, 8])];
+        let mut dst: Vec<u32> = Vec::with_capacity(64);
+        let ptr = dst.as_ptr();
+        let (index, _report) = merge_segments_into(&parts, &mut dst);
+        assert_eq!(dst, vec![1, 2, 3, 9, 8]);
+        assert_eq!(dst.as_ptr(), ptr, "pooled destination must not reallocate");
+        assert_eq!(index.locate(3), Some((1, 0)));
+        // Identical bytes to the consuming version.
+        assert_eq!(merge_segments(parts).data, dst);
+    }
+
+    #[test]
+    fn flatten_concat_into_matches_flatten_concat() {
+        let cfg = GgConfig { num_blocks: 2, threads_per_block: 256, first_bucket_size: 4, insertion: InsertionKind::WarpScan };
+        let build = || -> Vec<GgArray<u32>> {
+            (0..3u32)
+                .map(|k| {
+                    let mut g: GgArray<u32> = GgArray::new(cfg.clone(), DeviceSpec::a100());
+                    g.insert_bulk(&(k * 50..k * 50 + 30).collect::<Vec<_>>(), InsertionKind::WarpScan).unwrap();
+                    g
+                })
+                .collect()
+        };
+        let want = flatten_concat(&mut build()).unwrap();
+        let mut shards = build();
+        let mut dst = Vec::new();
+        let (index, report) = flatten_concat_into(&mut shards, &mut dst).unwrap();
+        assert_eq!(dst, want.data);
+        assert_eq!(index.blocks(), 3);
+        assert_eq!(index.start_of(1), want.shard_start(1));
+        assert_eq!(report.elements, 90);
+        // Temp destinations were released: only bucket storage is live.
+        for gg in &shards {
+            assert_eq!(gg.heap().used(), gg.allocated_bytes());
+        }
     }
 
     #[test]

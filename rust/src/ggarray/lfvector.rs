@@ -143,10 +143,18 @@ impl<T: Copy + Default> LfVector<T> {
 
     /// Ensure capacity ≥ `n`, allocating any missing buckets. Returns the
     /// number of buckets allocated.
+    ///
+    /// Starts at the first unallocated bucket rather than bucket 0:
+    /// buckets are always a contiguous prefix (growth fills from 0,
+    /// shrink frees from the tail), so re-walking the allocated prefix
+    /// only charged a phantom CAS race per existing bucket per call —
+    /// N bulk appends paid O(N·log N) CAS-attempt bookkeeping for
+    /// allocations that could never happen.
     pub fn reserve(&mut self, n: usize, heap: &mut VramHeap, clock: &mut Clock) -> Result<usize, OomError> {
         let needed = self.buckets_for(n);
+        let start = self.buckets.iter().take_while(|b| b.is_some()).count();
         let mut allocated = 0;
-        for b in 0..needed {
+        for b in start..needed {
             if self.new_bucket(b, 1, heap, clock)? {
                 allocated += 1;
             }
@@ -383,6 +391,34 @@ mod tests {
         assert_eq!(v.bucket_count(), 1);
         assert_eq!(v.cas_attempts(), 512);
         assert_eq!(heap.alloc_calls(), 1);
+    }
+
+    #[test]
+    fn reserve_skips_the_allocated_bucket_prefix() {
+        // Regression: reserve used to re-run the new_bucket CAS race on
+        // every existing bucket, so each bulk append charged O(log n)
+        // phantom CAS attempts even when no bucket was due.
+        let (mut heap, mut clock) = fixture();
+        let mut v: LfVector<u32> = LfVector::new(4);
+        v.push_back_bulk(&vec![1; 100], &mut heap, &mut clock).unwrap();
+        // buckets_for(100) = 5 with fbs 4 → capacity 124; the next 10
+        // elements fit with no allocation and must cost no bookkeeping.
+        let (cas0, allocs0) = (v.cas_attempts(), heap.alloc_calls());
+        v.push_back_bulk(&vec![2; 10], &mut heap, &mut clock).unwrap();
+        assert_eq!(heap.alloc_calls(), allocs0, "no bucket was due");
+        assert_eq!(v.cas_attempts(), cas0, "no phantom CAS race on the allocated prefix");
+        // Growing past capacity races (and allocates) only the new
+        // buckets, and grow-after-shrink still works through the same
+        // prefix logic.
+        v.push_back_bulk(&vec![3; 100], &mut heap, &mut clock).unwrap();
+        assert_eq!(v.cas_attempts(), cas0 + 1, "exactly the one missing bucket raced");
+        assert_eq!(v.len(), 210);
+        assert_eq!(v.get(209), Some(3));
+        v.truncate(3);
+        v.shrink_to_fit(&mut heap, &mut clock);
+        v.push_back_bulk(&(0..60).collect::<Vec<_>>(), &mut heap, &mut clock).unwrap();
+        assert_eq!(v.len(), 63);
+        assert_eq!(v.get(62), Some(59));
     }
 
     #[test]

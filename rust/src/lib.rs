@@ -74,6 +74,22 @@
 //!   `compaction_ooms` metric while the store keeps serving. `Work`
 //!   also skips the `rw_b` launch on empty live shards, so a
 //!   fully-sealed store pays only the flat-path passes.
+//! * **Zero-copy hot path** — the steady-state dispatch loop is
+//!   allocation-free and copy-minimal on the host side: a
+//!   [`coordinator::router::DispatchScratch`] arena owned by the worker
+//!   holds every per-batch buffer (sizes, counts, per-shard ranges,
+//!   clock marks — cleared, never dropped), routing writes in place and
+//!   hands each shard a `&[f32]` sub-slice of the original batch, the
+//!   batcher recycles its flush buffers, and flatten/seal/compaction
+//!   gather into pooled destinations (the [`coordinator::shard::EpochManager`]
+//!   keeps a gather pool sized to the largest seal seen). Debug-only
+//!   self-checks (the AOT scan cross-check) are compiled out of release
+//!   builds. Guarded by a counting-allocator regression test
+//!   (`tests/alloc_guard.rs`), a byte-identity property test against
+//!   the copying reference path (`tests/properties.rs`), and a
+//!   wall-clock trajectory with a regression gate
+//!   (`BENCH_hotpath.json` via `benches/bench_hotpath.rs`; see
+//!   EXPERIMENTS.md §Perf).
 //!
 //! See `examples/sharded_two_phase.rs` for the end-to-end flow and
 //! `rust/benches/bench_shards.rs` for the scaling shape.

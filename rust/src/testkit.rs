@@ -6,7 +6,60 @@
 //! counterexample reproduces, then panics with the minimal case and the
 //! seed needed to replay it.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::util::rng::Rng;
+
+// ---------------- allocation counting ----------------
+
+static HEAP_ACQUISITIONS: AtomicU64 = AtomicU64::new(0);
+
+/// A counting wrapper around the system allocator for allocation-
+/// regression tests: install it as the `#[global_allocator]` of a
+/// *dedicated* integration-test binary (one test per binary, so no
+/// concurrent test thread muddies the counter) and diff
+/// [`CountingAlloc::allocations`] around the code under test.
+///
+/// Counts heap *acquisitions* — `alloc`, `alloc_zeroed` and `realloc`
+/// (a grow is a new acquisition even when it happens to extend in
+/// place); `dealloc` is free. A steady-state loop that reports a zero
+/// delta therefore provably never touched the allocator.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    pub const fn new() -> CountingAlloc {
+        CountingAlloc
+    }
+
+    /// Heap acquisitions since process start.
+    pub fn allocations() -> u64 {
+        HEAP_ACQUISITIONS.load(Ordering::Relaxed)
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        HEAP_ACQUISITIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        HEAP_ACQUISITIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        HEAP_ACQUISITIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+// ---------------- property harness ----------------
 
 /// A generator of random values of `T` with a shrink strategy.
 pub trait Gen {

@@ -88,6 +88,24 @@ impl BenchSuite {
         self.results.last().unwrap()
     }
 
+    /// Record externally-timed samples (µs per iteration) under the same
+    /// reporting as [`BenchSuite::bench`] — for measurements whose
+    /// setup/teardown cannot live inside a closure (e.g. service calls
+    /// with untimed insert phases between timed seals).
+    pub fn record_samples(&mut self, name: &str, samples: &[f64]) -> &BenchResult {
+        let result = BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(samples),
+            iters: samples.len() as u32,
+        };
+        eprintln!(
+            "  {:<44} {:>12.2} µs/iter  (σ {:.2}, p95 {:.2}, n={})",
+            result.name, result.summary.mean, result.summary.stddev, result.summary.p95, result.iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
     /// Record an externally-computed (e.g. simulated) value so it shows up
     /// in the same table.
     pub fn record(&mut self, name: &str, value_us: f64) {
@@ -157,5 +175,14 @@ mod tests {
         suite.record("table2_static_insert", 7070.0);
         assert_eq!(suite.results[0].summary.mean, 7070.0);
         assert_eq!(suite.results[0].iters, 0);
+    }
+
+    #[test]
+    fn record_samples_summarises_external_timings() {
+        let mut suite = BenchSuite::new("external");
+        let r = suite.record_samples("seal", &[10.0, 20.0, 30.0]);
+        assert!((r.mean_us() - 20.0).abs() < 1e-12);
+        assert_eq!(r.iters, 3);
+        assert!(suite.markdown().contains("seal"));
     }
 }

@@ -1,0 +1,84 @@
+//! Allocation-regression guard for the insert dispatch hot path.
+//!
+//! Installs `testkit::CountingAlloc` as the global allocator and asserts
+//! that the steady-state dispatch loop — global sizes → route → shard
+//! split → per-shard bulk placement → index rebuild — performs **zero**
+//! heap allocations per batch once the scratch arena and the shard's
+//! buckets are warm. This is the tentpole invariant of the zero-copy hot
+//! path: every per-batch buffer lives in the `DispatchScratch` arena
+//! (cleared, never dropped) and routed values flow as sub-slices of the
+//! original batch.
+//!
+//! This file must stay a dedicated test binary with this single test:
+//! a sibling test running concurrently would allocate on another thread
+//! and break the zero-delta assertion.
+
+use ggarray::coordinator::router::{DispatchScratch, Policy};
+use ggarray::coordinator::service::dispatch_insert;
+use ggarray::coordinator::shard::{Shard, ShardConfig};
+use ggarray::insertion::InsertionKind;
+use ggarray::sim::spec::DeviceSpec;
+use ggarray::testkit::CountingAlloc;
+use ggarray::workload::synth_f32;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+#[test]
+fn steady_state_insert_dispatch_is_allocation_free() {
+    // The 1-shard insert case of the acceptance criteria: 4 blocks with
+    // 16Ki-element first buckets.
+    let blocks = 4usize;
+    let mut shards = vec![Shard::new(ShardConfig {
+        id: 0,
+        blocks,
+        first_bucket_size: 1 << 14,
+        insertion: InsertionKind::WarpScan,
+        device: DeviceSpec::a100(),
+        heap_bytes: 1 << 30,
+    })];
+    let mut scratch = DispatchScratch::new();
+    let values: Vec<f32> = (0..1024u64).map(synth_f32).collect();
+
+    // Warm-up: fills the scratch arena, allocates the early buckets and
+    // the simulated clock's ledger entries. 80 batches × 1024 values =
+    // 20480 elements per block; bucket 1 has been allocated by then, so
+    // per-block capacity is 16384 + 32768 = 49152.
+    for seq in 0..80u64 {
+        let out = dispatch_insert(&mut shards, blocks, Policy::Even, seq, &values, &mut scratch);
+        assert_eq!(out.applied, 1024);
+        assert!(out.oom.is_none());
+    }
+
+    // Steady state: the next 16 batches (up to 24576 per block) fit
+    // entirely within allocated bucket capacity — the dispatch loop must
+    // not touch the heap at all.
+    let before = CountingAlloc::allocations();
+    for seq in 80..96u64 {
+        let out = dispatch_insert(&mut shards, blocks, Policy::Even, seq, &values, &mut scratch);
+        assert_eq!(out.applied, 1024);
+    }
+    let delta = CountingAlloc::allocations() - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state insert dispatch performed {delta} heap allocations over 16 batches"
+    );
+
+    // The data actually landed (this is a real insert loop, not a no-op).
+    assert_eq!(shards[0].len(), 96 * 1024);
+    assert_eq!(shards[0].get(0), Some(synth_f32(0)));
+
+    // LeastLoaded routes through the in-place water-filling path (index
+    // sort included) without allocating either. One warm-up call first:
+    // the arena's order buffer is grown lazily by the first LeastLoaded
+    // route.
+    dispatch_insert(&mut shards, blocks, Policy::LeastLoaded, 96, &values, &mut scratch);
+    let before = CountingAlloc::allocations();
+    for seq in 97..104u64 {
+        let out =
+            dispatch_insert(&mut shards, blocks, Policy::LeastLoaded, seq, &values, &mut scratch);
+        assert_eq!(out.applied, 1024);
+    }
+    let delta = CountingAlloc::allocations() - before;
+    assert_eq!(delta, 0, "LeastLoaded dispatch allocated {delta} times");
+}

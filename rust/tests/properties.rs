@@ -624,3 +624,209 @@ fn prop_heap_accounting_conserved_across_seal_compact_clear() {
         Ok(())
     });
 }
+
+// ------------------------------------------------------------------
+// Byte-identity of the scratch-arena hot path (zero-copy dispatch +
+// pooled flatten): for a random workload, every sealed layout and every
+// response payload must match a host-side reference of the pre-refactor
+// copying pipeline — a mirror batcher plus the collecting router applied
+// per global block. The reference is shard-count-agnostic by
+// construction, so the same oracle also proves 1/2/4-shard equivalence.
+// ------------------------------------------------------------------
+
+/// Pre-refactor reference: per-call batching (flush at `max_values`,
+/// barrier before observers) and global per-block routing with the
+/// collecting `router::route`, materialising every buffer the old path
+/// materialised.
+struct ReferenceStore {
+    chunk: usize,
+    routing: Policy,
+    pending: Vec<f32>,
+    blocks: Vec<Vec<f32>>,
+    sealed: Vec<f32>,
+    batch_seq: u64,
+}
+
+impl ReferenceStore {
+    fn new(blocks: usize, chunk: usize, routing: Policy) -> ReferenceStore {
+        ReferenceStore {
+            chunk,
+            routing,
+            pending: Vec::new(),
+            blocks: vec![Vec::new(); blocks],
+            sealed: Vec::new(),
+            batch_seq: 0,
+        }
+    }
+
+    fn push(&mut self, values: &[f32]) {
+        self.pending.extend_from_slice(values);
+        if self.pending.len() >= self.chunk {
+            self.flush();
+        }
+    }
+
+    fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let values = std::mem::take(&mut self.pending);
+        let sizes: Vec<u64> = self.blocks.iter().map(|b| b.len() as u64).collect();
+        let counts = router::route(self.routing, &sizes, values.len(), self.batch_seq);
+        self.batch_seq += 1;
+        let mut off = 0usize;
+        for (b, &c) in counts.iter().enumerate() {
+            self.blocks[b].extend_from_slice(&values[off..off + c]);
+            off += c;
+        }
+    }
+
+    /// Seal: drain the live blocks (block-major order) behind the sealed
+    /// prefix; returns this epoch's flat data.
+    fn seal(&mut self) -> Vec<f32> {
+        self.flush();
+        let mut epoch = Vec::new();
+        for b in &mut self.blocks {
+            epoch.append(b);
+        }
+        self.sealed.extend_from_slice(&epoch);
+        epoch
+    }
+
+    /// Full flatten: sealed prefix then the live epoch in block order.
+    fn flat(&self) -> Vec<f32> {
+        let mut all = self.sealed.clone();
+        for b in &self.blocks {
+            all.extend_from_slice(b);
+        }
+        all
+    }
+
+    fn total_len(&self) -> usize {
+        self.sealed.len() + self.blocks.iter().map(|b| b.len()).sum::<usize>() + self.pending.len()
+    }
+}
+
+#[test]
+fn prop_scratch_dispatch_byte_identical_to_copying_reference() {
+    use ggarray::coordinator::request::checksum;
+    use ggarray::workload::synth_f32;
+
+    let gen = PairGen(U64Range { lo: 1, hi: 48 }, CountsVec { max_len: 12, max_val: 600 });
+    check("scratch-arena path ≡ copying reference (1/2/4 shards)", 0x5EA1, 32, &gen, |(chunk, ops)| {
+        let chunk = *chunk as usize;
+        for policy in [Policy::Even, Policy::LeastLoaded, Policy::Hash] {
+            for shards in [1usize, 2, 4] {
+                let cfg = CoordinatorConfig {
+                    blocks: 8,
+                    shards,
+                    first_bucket_size: 16,
+                    use_artifacts: false,
+                    routing: policy,
+                    batch: BatchConfig {
+                        max_values: chunk,
+                        max_delay: std::time::Duration::from_secs(3600),
+                    },
+                    ..CoordinatorConfig::default()
+                };
+                let c = Coordinator::start(cfg);
+                let mut reference = ReferenceStore::new(8, chunk, policy);
+                let mut counter = 0u64;
+                let ctx = |i: usize| format!("{policy:?}/{shards} shards, op {i}");
+                for (i, &op) in ops.iter().enumerate() {
+                    match op % 7 {
+                        0 => {
+                            let expect = reference.seal();
+                            match c.call(Request::Seal) {
+                                Response::Sealed { epoch_len, sealed_len, checksum: sum, .. } => {
+                                    if epoch_len != expect.len() as u64 {
+                                        return Err(format!(
+                                            "{}: epoch_len {epoch_len} != {}",
+                                            ctx(i),
+                                            expect.len()
+                                        ));
+                                    }
+                                    if sum != checksum(&expect) {
+                                        return Err(format!("{}: seal checksum diverged", ctx(i)));
+                                    }
+                                    if sealed_len != reference.sealed.len() as u64 {
+                                        return Err(format!("{}: sealed_len diverged", ctx(i)));
+                                    }
+                                }
+                                other => return Err(format!("{}: seal failed: {other:?}", ctx(i))),
+                            }
+                        }
+                        1 => {
+                            reference.flush(); // Flatten barriers pending inserts
+                            let expect = reference.flat();
+                            match c.call(Request::Flatten) {
+                                Response::Flattened { len, checksum: sum, .. } => {
+                                    if len != expect.len() as u64 || sum != checksum(&expect) {
+                                        return Err(format!("{}: flatten diverged", ctx(i)));
+                                    }
+                                }
+                                other => {
+                                    return Err(format!("{}: flatten failed: {other:?}", ctx(i)))
+                                }
+                            }
+                        }
+                        2 => {
+                            reference.flush(); // Query barriers pending inserts
+                            let flat = reference.flat();
+                            let idx = (i as u64).wrapping_mul(2654435761) % flat.len().max(1) as u64;
+                            let got = c.call(Request::Query { index: idx }).expect_value();
+                            let want = flat.get(idx as usize).copied();
+                            if got != want {
+                                return Err(format!(
+                                    "{}: query({idx}) = {got:?} != {want:?}",
+                                    ctx(i)
+                                ));
+                            }
+                        }
+                        _ => {
+                            let values: Vec<f32> =
+                                (0..op as u64).map(|k| synth_f32(counter + k)).collect();
+                            counter += op as u64;
+                            reference.push(&values);
+                            match c.call(Request::Insert { values }) {
+                                Response::Inserted { count, len, .. } => {
+                                    if count != op as u64 {
+                                        return Err(format!("{}: count diverged", ctx(i)));
+                                    }
+                                    if len != reference.total_len() as u64 {
+                                        return Err(format!(
+                                            "{}: len {len} != reference {}",
+                                            ctx(i),
+                                            reference.total_len()
+                                        ));
+                                    }
+                                }
+                                other => {
+                                    return Err(format!("{}: insert failed: {other:?}", ctx(i)))
+                                }
+                            }
+                        }
+                    }
+                }
+                // Final barrier: one last seal + flatten must agree too
+                // (covers workloads whose tail stayed pending).
+                let expect = reference.seal();
+                let (_, epoch_len, _, _, sum) = c.call(Request::Seal).expect_sealed();
+                if epoch_len != expect.len() as u64 || sum != checksum(&expect) {
+                    return Err(format!("{policy:?}/{shards}: final seal diverged"));
+                }
+                let full = reference.flat();
+                match c.call(Request::Flatten) {
+                    Response::Flattened { len, checksum: sum, .. } => {
+                        if len != full.len() as u64 || sum != checksum(&full) {
+                            return Err(format!("{policy:?}/{shards}: final flatten diverged"));
+                        }
+                    }
+                    other => return Err(format!("final flatten failed: {other:?}")),
+                }
+                c.shutdown();
+            }
+        }
+        Ok(())
+    });
+}
