@@ -24,7 +24,13 @@ trap 'rm -rf "$SMOKE_OUT"' EXIT
 echo "== smoke: experiment binary (fig3, small sweep) =="
 cargo run --release --bin repro -- fig3 --steps 4 --draws 200 --quiet --out "$SMOKE_OUT"
 
-echo "== smoke: sharded two-phase example (byte-identity + sealed payoff) =="
+echo "== smoke: sharded two-phase example, serial executors (GG_THREADS=1) =="
+# The example also asserts serial ≡ pooled checksums internally, so each
+# run covers both modes' layouts; running it under both GG_THREADS
+# settings additionally smoke-tests the env-var resolution path.
+GG_THREADS=1 cargo run --release --example sharded_two_phase
+
+echo "== smoke: sharded two-phase example, default executor pool =="
 cargo run --release --example sharded_two_phase
 
 echo "== smoke: tight-heap churn (compaction OOM/abort path end-to-end) =="
@@ -42,13 +48,20 @@ echo "== smoke: shard bench (parallel time model gate) =="
 #   * sealed work cheaper than unsealed at 1 and 4 shards.
 cargo bench --bench bench_shards
 
-echo "== smoke: hot-path bench (BENCH_hotpath.json + wall-clock gate) =="
-# bench_hotpath --smoke: short steady-state runs of insert dispatch /
-# pooled seal / sealed query at 1 and 4 shards. Writes BENCH_hotpath.json
-# at the repo root (the perf trajectory) and exits non-zero when
-# steady-state insert dispatch regresses >25% against the committed
-# baseline; skipped gracefully when the baseline file is absent (first
-# run). Bypass with GG_BENCH_GATE=off on noisy machines.
+echo "== smoke: hot-path bench (BENCH_hotpath.json + wall-clock gates) =="
+# bench_hotpath --smoke: short steady-state runs of insert dispatch
+# (serial and through the executor pool) / pooled seal / sealed query at
+# 1 and 4 shards. Writes BENCH_hotpath.json (schema bench_hotpath/v2) at
+# the repo root (the perf trajectory) and exits non-zero when:
+#   * steady-state insert dispatch regresses >25% vs the committed
+#     baseline (1-shard serial, 4-shard pooled),
+#   * the pooled-seal median regresses >25% (4 shards),
+#   * the measured 4-shard-pooled vs 1-shard-serial insert-dispatch
+#     wall-clock speedup for the large-batch steady-state run is ≤ 1.0
+#     (the executor-pool acceptance gate — needs no baseline).
+# Regression gates are skipped gracefully when no v2 baseline exists
+# (first run / schema migration). Bypass everything with
+# GG_BENCH_GATE=off on noisy machines.
 cargo bench --bench bench_hotpath -- --smoke
 
 echo "ci.sh: all green"

@@ -4,15 +4,20 @@
 //! fast-access view — and run the work phase at static-array cost while
 //! the next insert epoch opens behind it.
 //!
-//! Demonstrates the two headline properties of the sharded design:
+//! Demonstrates the headline properties of the sharded design:
 //!
 //! 1. **Layout invariance** — global routing + per-shard slicing makes
 //!    the sealed bytes identical for any shard count (1 vs 4 here);
 //! 2. **Two-phase payoff** — work over sealed (flat) epochs simulates
-//!    markedly cheaper than the same work over unsealed GGArray data.
+//!    markedly cheaper than the same work over unsealed GGArray data;
+//! 3. **Executor-mode invariance** — the persistent shard-executor pool
+//!    (really-parallel per-shard execution) is byte-identical to the
+//!    serial worker, while the *measured* wall ledger shows where the
+//!    host time went.
 //!
 //! ```sh
-//! cargo run --release --example sharded_two_phase
+//! cargo run --release --example sharded_two_phase            # default pool
+//! GG_THREADS=1 cargo run --release --example sharded_two_phase  # serial
 //! ```
 
 use std::time::Duration;
@@ -43,9 +48,10 @@ fn config(shards: usize) -> CoordinatorConfig {
 }
 
 /// Run a workload and capture (run summary, final flatten checksum,
-/// final metrics snapshot).
-fn run(w: &WorkloadSpec, shards: usize) -> (WorkloadRun, u64, MetricsSnapshot) {
-    let c = Coordinator::start(config(shards));
+/// final metrics snapshot). `executor_threads` 0 = config default
+/// (GG_THREADS env / auto), 1 = serial worker, ≥2 = persistent pool.
+fn run_with(w: &WorkloadSpec, shards: usize, executor_threads: usize) -> (WorkloadRun, u64, MetricsSnapshot) {
+    let c = Coordinator::start(CoordinatorConfig { executor_threads, ..config(shards) });
     let run = drive_workload(&c, w, CHUNK);
     let final_checksum = match c.call(Request::Flatten) {
         Response::Flattened { checksum, len, .. } => {
@@ -57,6 +63,11 @@ fn run(w: &WorkloadSpec, shards: usize) -> (WorkloadRun, u64, MetricsSnapshot) {
     let stats = c.call(Request::Stats).expect_stats();
     c.shutdown();
     (run, final_checksum, stats)
+}
+
+/// Run under the config default executor mode (GG_THREADS env / auto).
+fn run(w: &WorkloadSpec, shards: usize) -> (WorkloadRun, u64, MetricsSnapshot) {
+    run_with(w, shards, 0)
 }
 
 fn main() {
@@ -107,6 +118,33 @@ fn main() {
         stats4.device_insert_ms
     );
 
-    println!("\n--- 4-shard coordinator metrics ---\n{stats4}");
+    // --- executor-mode invariance: serial worker ≡ persistent pool ---
+    // The same 4-shard workload through executor_threads = 1 (serial)
+    // and = 2 (one executor thread per shard) must be byte-identical —
+    // including the simulated ledger. What differs is the *measured*
+    // wall ledger: the pool's fan-out tracks the sim critical path, the
+    // serial loop tracks the device sum.
+    let (run_serial, final_serial, stats_serial) = run_with(&sealed_wl, 4, 1);
+    let (run_pooled, final_pooled, stats_pooled) = run_with(&sealed_wl, 4, 2);
+    assert_eq!(
+        run_serial.seal_checksums, run_pooled.seal_checksums,
+        "serial and pooled executors must seal byte-identical epochs"
+    );
+    assert_eq!(final_serial, final_pooled, "final flatten must be byte-identical across modes");
+    assert_eq!(
+        run_serial.seal_sim_us, run_pooled.seal_sim_us,
+        "the simulated ledger must not depend on the executor mode"
+    );
+    println!("\nexecutor modes (4 shards): serial ≡ pooled sealed bytes ✓");
+    println!(
+        "  serial  (1 thread):   insert wall {:>8.3} ms, seal wall {:>8.3} ms",
+        stats_serial.wall_insert_ms, stats_serial.wall_flatten_ms
+    );
+    println!(
+        "  pooled  ({} threads):  insert wall {:>8.3} ms, seal wall {:>8.3} ms",
+        stats_pooled.executors, stats_pooled.wall_insert_ms, stats_pooled.wall_flatten_ms
+    );
+
+    println!("\n--- 4-shard coordinator metrics (default executor mode) ---\n{stats4}");
     println!("\nsharded_two_phase OK");
 }

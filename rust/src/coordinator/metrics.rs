@@ -102,6 +102,18 @@ pub struct Metrics {
     pub device_insert_us: f64,
     pub device_work_us: f64,
     pub device_flatten_us: f64,
+    /// *Measured* host wall-clock µs per op class — the time the worker
+    /// actually spent in the shard-dispatching section (executor-pool
+    /// fan-out + barrier, or the serial loop). Where `sim_*` is the
+    /// modeled critical path and `device_*` the modeled sum, `wall_*` is
+    /// what the machine really did: with the pool enabled it should
+    /// scale like `sim_*` across shard counts, and a pooled-vs-serial
+    /// comparison of the same workload is the *measured* shard speedup
+    /// (`bench_hotpath` records it as the 4-vs-1 columns; seal wall time
+    /// lands in `wall_flatten_us`, mirroring the sim ledger).
+    pub wall_insert_us: f64,
+    pub wall_work_us: f64,
+    pub wall_flatten_us: f64,
     /// Wall-clock per-request latency (µs).
     latency: Welford,
 }
@@ -127,6 +139,9 @@ impl Metrics {
             device_insert_us: 0.0,
             device_work_us: 0.0,
             device_flatten_us: 0.0,
+            wall_insert_us: 0.0,
+            wall_work_us: 0.0,
+            wall_flatten_us: 0.0,
             latency: Welford::new(),
         }
     }
@@ -173,6 +188,9 @@ impl Metrics {
             device_insert_ms: self.device_insert_us / 1e3,
             device_work_ms: self.device_work_us / 1e3,
             device_flatten_ms: self.device_flatten_us / 1e3,
+            wall_insert_ms: self.wall_insert_us / 1e3,
+            wall_work_ms: self.wall_work_us / 1e3,
+            wall_flatten_ms: self.wall_flatten_us / 1e3,
             mean_latency_us: self.latency.mean(),
             p_latency_count: self.latency.count(),
             len,
@@ -192,6 +210,9 @@ impl Metrics {
             // real counters via [`MetricsSnapshot::with_batching`].
             flushes: 0,
             coalesced_requests: 0,
+            // Serial execution unless the worker attaches its pool via
+            // [`MetricsSnapshot::with_executors`].
+            executors: 1,
         }
     }
 }
@@ -227,6 +248,13 @@ pub struct MetricsSnapshot {
     pub device_insert_ms: f64,
     pub device_work_ms: f64,
     pub device_flatten_ms: f64,
+    /// Measured host wall-clock ms per op class (the shard-dispatching
+    /// sections only — fan-out + barrier, or the serial loop). Seal wall
+    /// time lands in `wall_flatten_ms`, mirroring the sim ledger. See
+    /// EXPERIMENTS.md §Perf "measured vs modeled parallelism".
+    pub wall_insert_ms: f64,
+    pub wall_work_ms: f64,
+    pub wall_flatten_ms: f64,
     pub mean_latency_us: f64,
     pub p_latency_count: u64,
     pub len: u64,
@@ -256,6 +284,10 @@ pub struct MetricsSnapshot {
     /// Client requests coalesced across those flushes — the batcher's
     /// own ledger, as opposed to the worker-side `batches` counter.
     pub coalesced_requests: u64,
+    /// Shard-executor threads behind the worker: 1 = serial execution on
+    /// the worker thread, N = persistent pool with one executor per
+    /// shard ([`crate::coordinator::pool::ShardPool`]).
+    pub executors: usize,
 }
 
 impl MetricsSnapshot {
@@ -291,6 +323,13 @@ impl MetricsSnapshot {
     pub fn with_batching(mut self, flushes: u64, coalesced_requests: u64) -> MetricsSnapshot {
         self.flushes = flushes;
         self.coalesced_requests = coalesced_requests;
+        self
+    }
+
+    /// Attach the shard-executor context (1 = serial worker, N = pooled
+    /// with one executor thread per shard).
+    pub fn with_executors(mut self, executors: usize) -> MetricsSnapshot {
+        self.executors = executors;
         self
     }
 
@@ -359,6 +398,15 @@ impl std::fmt::Display for MetricsSnapshot {
                 Some(s) => format!("{s:.2}×"),
                 None => "—".into(),
             }
+        )?;
+        writeln!(
+            f,
+            "wall insert/work/flat {:.2} / {:.2} / {:.2} ms (measured, {} executor{})",
+            self.wall_insert_ms,
+            self.wall_work_ms,
+            self.wall_flatten_ms,
+            self.executors,
+            if self.executors == 1 { ": serial" } else { "s: pooled" }
         )?;
         writeln!(f, "mean request latency {:.1} µs over {}", self.mean_latency_us, self.p_latency_count)?;
         writeln!(
@@ -452,6 +500,24 @@ mod tests {
         assert!(s.to_string().contains("batcher flushes"), "{s}");
         // Before any flush the ratio is a clean zero, not NaN.
         assert_eq!(m.snapshot(0, 0, 0).flush_coalescing(), 0.0);
+    }
+
+    #[test]
+    fn wall_ledger_and_executor_context_flow_into_snapshot() {
+        let mut m = Metrics::new();
+        m.wall_insert_us = 1500.0;
+        m.wall_work_us = 250.0;
+        m.wall_flatten_us = 4000.0;
+        let s = m.snapshot(10, 20, 400);
+        assert!((s.wall_insert_ms - 1.5).abs() < 1e-12);
+        assert!((s.wall_work_ms - 0.25).abs() < 1e-12);
+        assert!((s.wall_flatten_ms - 4.0).abs() < 1e-12);
+        assert_eq!(s.executors, 1, "serial until the worker attaches its pool");
+        assert!(s.to_string().contains("1 executor: serial"), "{s}");
+        let s = s.with_executors(4);
+        assert_eq!(s.executors, 4);
+        assert!(s.to_string().contains("4 executors: pooled"), "{s}");
+        assert!(s.to_string().contains("wall insert/work/flat"), "{s}");
     }
 
     #[test]

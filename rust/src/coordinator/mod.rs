@@ -14,11 +14,15 @@
 //! time is
 //! charged under the parallel time model ([`metrics::ParallelCost`]):
 //! critical path (max over concurrent shards) for the wall-model,
-//! sum for the `device_*` aggregate totals. See [`service`] for the
-//! event loop.
+//! sum for the `device_*` aggregate totals — and shard execution is
+//! *really* concurrent through the persistent [`pool::ShardPool`]
+//! (one executor thread + mailbox per shard; serial mode stays
+//! byte-identical via `CoordinatorConfig::executor_threads`). See
+//! [`service`] for the event loop.
 
 pub mod batcher;
 pub mod metrics;
+pub mod pool;
 pub mod request;
 pub mod router;
 pub mod service;

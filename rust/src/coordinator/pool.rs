@@ -1,0 +1,571 @@
+//! Persistent shard-executor pool: the threads that turn the simulated
+//! max-over-shards critical path into *measured* wall-clock parallelism.
+//!
+//! The coordinator's parallel time model (PR 2) charges each dispatching
+//! op the slowest shard, mirroring the paper's concurrent thread blocks —
+//! but until this pool, every shard still *executed* serially on the one
+//! worker thread, so the wall numbers never showed the speedup the sim
+//! ledger promised. [`ShardPool`] closes that gap: N long-lived executor
+//! threads (one per shard) are spawned once at `Coordinator::start`, each
+//! parked on a pre-allocated SPSC mailbox (one `Mutex` + two `Condvar`s —
+//! std only, deps are vendored). A shard-dispatching op fans one job per
+//! shard out to the mailboxes and fans back in at a barrier — the
+//! host-side analogue of the paper's per-block `__syncthreads()`.
+//!
+//! ## Ownership and safety
+//!
+//! Shards stay owned by the coordinator worker (it needs cheap direct
+//! access for routing, stats, and queries between ops); executor threads
+//! hold **no** shard state. Each fan-out *leases* shard `k` to executor
+//! `k` for exactly one job: the job carries raw pointers, and the public
+//! `run_*` methods restore safety structurally —
+//!
+//! * submission and the blocking join happen inside one `&mut`-borrowing
+//!   call, so the worker provably cannot touch a shard, the batch
+//!   values, or a gather destination while a job referencing them is in
+//!   flight;
+//! * each executor receives a distinct shard and (for gathers) a
+//!   disjoint destination sub-slice, so concurrent jobs never alias;
+//! * every mailbox holds at most one job and one result (SPSC by
+//!   construction — the worker is the single producer, the executor the
+//!   single consumer).
+//!
+//! ## Zero-alloc steady state
+//!
+//! Mailboxes are pre-allocated at pool construction; jobs and results
+//! are plain enums moved through an `Option` slot in place. A
+//! steady-state insert batch therefore performs **zero** heap
+//! allocations end-to-end, mailbox handoff included — extended coverage
+//! in `tests/alloc_guard.rs` (4-shard pooled section).
+//!
+//! ## Byte-identity
+//!
+//! Per-shard operations are the *same* `Shard` methods the serial path
+//! calls, and each shard's simulated clock/heap is touched only by its
+//! own job, so execution order across shards cannot change any per-shard
+//! state. The service pre-screens VRAM demand before fanning out (a
+//! guaranteed-fit op cannot OOM mid-flight) and falls back to the serial
+//! path otherwise, so even OOM traces are byte-identical across executor
+//! modes — property-tested in `tests/properties.rs`.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::sim::memory::OomError;
+
+use super::router::DispatchScratch;
+use super::service::DispatchOutcome;
+use super::shard::{SealPart, Shard, ShardInsertOutcome};
+
+/// One leased unit of work for one shard. Pointers travel as `usize` so
+/// the enum is trivially `Send`; the public `run_*` wrappers are the only
+/// constructors and uphold the lease contract documented on the module.
+enum Job {
+    /// Apply a routed sub-batch: `counts` is the shard's slice of the
+    /// global per-block decision, `values` its contiguous sub-slice of
+    /// the batch.
+    Insert { shard: usize, counts: usize, counts_len: usize, values: usize, values_len: usize },
+    /// One work call on this shard: the real numeric update (host path)
+    /// plus the modeled `rw_b` charge on non-empty shards.
+    Work { shard: usize, iters: u32 },
+    /// Non-destructive snapshot gather into a disjoint destination
+    /// sub-slice (simulated destination released immediately).
+    FlattenTemp { shard: usize, dst: usize, dst_len: usize },
+    /// Seal phase-1 gather into a disjoint destination sub-slice (the
+    /// destination allocation stays live in the shard heap — the
+    /// caller's two-phase commit decides its fate).
+    SealFlatten { shard: usize, dst: usize, dst_len: usize },
+}
+
+/// Result slot contents, one variant per job kind.
+enum JobResult {
+    Insert(ShardInsertOutcome),
+    Work { pjrt: u64 },
+    Flatten(Result<usize, OomError>),
+    Seal(Result<SealPart, OomError>),
+}
+
+/// SPSC mailbox: the worker deposits one [`Job`], the executor deposits
+/// one [`JobResult`]. Pre-allocated; steady-state traffic is two `Option`
+/// moves and two condvar signals per op, no heap.
+struct Mailbox {
+    slot: Mutex<Slot>,
+    job_ready: Condvar,
+    result_ready: Condvar,
+}
+
+struct Slot {
+    job: Option<Job>,
+    result: Option<JobResult>,
+    shutdown: bool,
+}
+
+impl Mailbox {
+    fn new() -> Mailbox {
+        Mailbox {
+            slot: Mutex::new(Slot { job: None, result: None, shutdown: false }),
+            job_ready: Condvar::new(),
+            result_ready: Condvar::new(),
+        }
+    }
+}
+
+/// Execute one leased job.
+///
+/// SAFETY: the submitting `run_*` call (a) derived every pointer from a
+/// live `&mut` borrow it holds across submit *and* join, (b) handed this
+/// executor a shard and destination range no concurrent job references,
+/// and (c) blocks until this result is deposited — so for the job's
+/// lifetime this thread is the sole accessor of every pointed-to region.
+fn execute(job: Job) -> JobResult {
+    unsafe {
+        match job {
+            Job::Insert { shard, counts, counts_len, values, values_len } => {
+                let shard = &mut *(shard as *mut Shard);
+                let counts = std::slice::from_raw_parts(counts as *const usize, counts_len);
+                let values = std::slice::from_raw_parts(values as *const f32, values_len);
+                JobResult::Insert(shard.apply_counts(counts, values))
+            }
+            Job::Work { shard, iters } => {
+                let shard = &mut *(shard as *mut Shard);
+                // Same per-shard sequence as the serial worker: real
+                // numeric update (host path — the PJRT client is not
+                // shared across executors; see `Worker::handle`), then
+                // the modeled rw_b launch on non-empty shards.
+                let pjrt = shard.work_pass(None, iters);
+                if !shard.is_empty() {
+                    shard.charge_rw_block(iters as f64);
+                }
+                JobResult::Work { pjrt }
+            }
+            Job::FlattenTemp { shard, dst, dst_len } => {
+                let shard = &mut *(shard as *mut Shard);
+                let dst = std::slice::from_raw_parts_mut(dst as *mut f32, dst_len);
+                JobResult::Flatten(shard.flatten_temp_to_slice(dst))
+            }
+            Job::SealFlatten { shard, dst, dst_len } => {
+                let shard = &mut *(shard as *mut Shard);
+                let dst = std::slice::from_raw_parts_mut(dst as *mut f32, dst_len);
+                JobResult::Seal(shard.seal_flatten_to_slice(dst))
+            }
+        }
+    }
+}
+
+/// The persistent executor pool: one thread + mailbox per shard, spawned
+/// once and reused for every subsequent fan-out (never per batch).
+pub struct ShardPool {
+    mailboxes: Vec<Arc<Mailbox>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    /// Spawn `threads` executor threads (one per shard slot). Threads
+    /// park on their mailbox condvar between jobs — no busy-waiting.
+    pub fn new(threads: usize) -> ShardPool {
+        assert!(threads > 0, "executor pool needs at least one thread");
+        let mailboxes: Vec<Arc<Mailbox>> = (0..threads).map(|_| Arc::new(Mailbox::new())).collect();
+        let handles = mailboxes
+            .iter()
+            .enumerate()
+            .map(|(k, mb)| {
+                let mb = Arc::clone(mb);
+                std::thread::Builder::new()
+                    .name(format!("ggarray-shard-exec-{k}"))
+                    .spawn(move || {
+                        let mut guard = mb.slot.lock().unwrap();
+                        loop {
+                            if guard.shutdown {
+                                return;
+                            }
+                            if let Some(job) = guard.job.take() {
+                                drop(guard);
+                                let result = execute(job);
+                                guard = mb.slot.lock().unwrap();
+                                debug_assert!(guard.result.is_none(), "SPSC: stale result");
+                                guard.result = Some(result);
+                                mb.result_ready.notify_one();
+                            } else {
+                                guard = mb.job_ready.wait(guard).unwrap();
+                            }
+                        }
+                    })
+                    .expect("spawn shard executor")
+            })
+            .collect();
+        ShardPool { mailboxes, handles }
+    }
+
+    /// Number of executor threads (== shard slots).
+    pub fn threads(&self) -> usize {
+        self.mailboxes.len()
+    }
+
+    /// Deposit one job in mailbox `k` and wake its executor.
+    fn submit(&self, k: usize, job: Job) {
+        let mut slot = self.mailboxes[k].slot.lock().unwrap();
+        debug_assert!(slot.job.is_none() && slot.result.is_none(), "SPSC: mailbox {k} busy");
+        slot.job = Some(job);
+        drop(slot);
+        self.mailboxes[k].job_ready.notify_one();
+    }
+
+    /// Block until mailbox `k`'s executor deposits its result.
+    fn join(&self, k: usize) -> JobResult {
+        let mb = &self.mailboxes[k];
+        let mut slot = mb.slot.lock().unwrap();
+        loop {
+            if let Some(result) = slot.result.take() {
+                return result;
+            }
+            slot = mb.result_ready.wait(slot).unwrap();
+        }
+    }
+
+    /// Fan an already-routed insert batch out to the executors and fan
+    /// back in: shard `k` applies `scratch.shard_counts(k, bps)` to its
+    /// contiguous `&values[off..off+len]` sub-slice (ranges from
+    /// `scratch.ranges`), concurrently across shards. Shards whose range
+    /// is empty get no job — no phantom kernels, same as the serial loop.
+    ///
+    /// The caller pre-screened VRAM demand (`insert_demand_fits`), so no
+    /// shard can OOM; should one anyway (a pre-screen bug), the lowest
+    /// failing shard is surfaced in the outcome, mirroring the serial
+    /// error report.
+    pub fn run_insert(
+        &self,
+        shards: &mut [Shard],
+        blocks_per_shard: usize,
+        values: &[f32],
+        scratch: &DispatchScratch,
+    ) -> DispatchOutcome {
+        let n = shards.len();
+        debug_assert!(n <= self.threads());
+        // All shard pointers derive from one base pointer whose
+        // provenance covers the whole slice, and `shards` is not
+        // reborrowed until every job has joined — the fan-out window
+        // contains no live reference that could alias an executor's
+        // write.
+        let base = shards.as_mut_ptr();
+        for k in 0..n {
+            let (offset, take) = scratch.ranges[k];
+            if take == 0 {
+                continue;
+            }
+            let counts = scratch.shard_counts(k, blocks_per_shard);
+            let sub = &values[offset..offset + take];
+            self.submit(
+                k,
+                Job::Insert {
+                    shard: unsafe { base.add(k) } as usize,
+                    counts: counts.as_ptr() as usize,
+                    counts_len: counts.len(),
+                    values: sub.as_ptr() as usize,
+                    values_len: sub.len(),
+                },
+            );
+        }
+        // Barrier: collect in shard order (the shard id order the serial
+        // loop reports in, and the order `cost_since` folds deltas in).
+        let mut applied = 0u64;
+        let mut oom_k: Option<(usize, OomError)> = None;
+        for k in 0..n {
+            if scratch.ranges[k].1 == 0 {
+                continue;
+            }
+            match self.join(k) {
+                JobResult::Insert(out) => {
+                    applied += out.applied as u64;
+                    if let Some(e) = out.error {
+                        debug_assert!(false, "insert fan-out OOM despite pre-screen on shard {k}");
+                        if oom_k.is_none() {
+                            oom_k = Some((k, e));
+                        }
+                    }
+                }
+                _ => unreachable!("insert mailbox returned a foreign result"),
+            }
+        }
+        // Post-barrier: safe to borrow the shards again.
+        DispatchOutcome { applied, oom: oom_k.map(|(k, e)| (shards[k].id(), e)) }
+    }
+
+    /// One work call fanned across non-empty shards: per-shard numeric
+    /// update plus the modeled `rw_b` charge, concurrently. Empty live
+    /// shards get no job at all — the serial loop does nothing to them
+    /// either (no data, no rw_b launch), so on a mostly-sealed store the
+    /// fan-out pays zero handoffs instead of a wake/join round trip per
+    /// idle shard per call. Returns PJRT executions performed (always 0
+    /// — executors run the host path).
+    pub fn run_work(&self, shards: &mut [Shard], iters: u32) -> u64 {
+        let n = shards.len();
+        debug_assert!(n <= self.threads());
+        // Snapshot emptiness before any job is in flight: work never
+        // changes a shard's length, so the skip decision is stable, and
+        // reading it later would alias the executors' writes.
+        let active: Vec<bool> = shards.iter().map(|s| !s.is_empty()).collect();
+        let base = shards.as_mut_ptr();
+        for k in 0..n {
+            if active[k] {
+                self.submit(k, Job::Work { shard: unsafe { base.add(k) } as usize, iters });
+            }
+        }
+        let mut pjrt = 0u64;
+        for k in 0..n {
+            if !active[k] {
+                continue;
+            }
+            match self.join(k) {
+                JobResult::Work { pjrt: p } => pjrt += p,
+                _ => unreachable!("work mailbox returned a foreign result"),
+            }
+        }
+        pjrt
+    }
+
+    /// Parallel snapshot gather: shard `k` writes its contents into
+    /// `dst[ranges[k].0 .. +ranges[k].1]` (disjoint by construction —
+    /// ranges are the prefix sums of the shard lengths) and releases its
+    /// simulated destination. The caller pre-screened VRAM fit; an
+    /// unexpected failure is surfaced as the lowest failing shard's
+    /// error (the destination contents are discarded by the caller).
+    pub fn run_flatten_temp(
+        &self,
+        shards: &mut [Shard],
+        dst: &mut [f32],
+        ranges: &[(usize, usize)],
+    ) -> Result<(), OomError> {
+        let n = shards.len();
+        debug_assert_eq!(n, ranges.len());
+        debug_assert_eq!(ranges.iter().map(|r| r.1).sum::<usize>(), dst.len());
+        let shard_base = shards.as_mut_ptr();
+        let dst_base = dst.as_mut_ptr() as usize;
+        for (k, &(off, len)) in ranges.iter().enumerate() {
+            self.submit(
+                k,
+                Job::FlattenTemp {
+                    shard: unsafe { shard_base.add(k) } as usize,
+                    dst: dst_base + off * std::mem::size_of::<f32>(),
+                    dst_len: len,
+                },
+            );
+        }
+        let mut failed: Option<OomError> = None;
+        for k in 0..n {
+            match self.join(k) {
+                JobResult::Flatten(Ok(_)) => {}
+                JobResult::Flatten(Err(e)) => {
+                    debug_assert!(false, "flatten fan-out OOM despite pre-screen on shard {k}");
+                    if failed.is_none() {
+                        failed = Some(e);
+                    }
+                }
+                _ => unreachable!("flatten mailbox returned a foreign result"),
+            }
+        }
+        match failed {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Parallel seal phase-1 gather: shard `k` seals and flattens into
+    /// its disjoint `ranges[k]` sub-slice of the shared destination,
+    /// concurrently. Per-shard results land in `out` in shard order
+    /// (`Ok(SealPart)` whose destination allocation the caller's
+    /// two-phase commit owns, or the shard's `Err` — the failing shard
+    /// already reopened itself, exactly like the appending path).
+    pub fn run_seal(
+        &self,
+        shards: &mut [Shard],
+        dst: &mut [f32],
+        ranges: &[(usize, usize)],
+        out: &mut Vec<Result<SealPart, OomError>>,
+    ) {
+        let n = shards.len();
+        debug_assert_eq!(n, ranges.len());
+        debug_assert_eq!(ranges.iter().map(|r| r.1).sum::<usize>(), dst.len());
+        let shard_base = shards.as_mut_ptr();
+        let dst_base = dst.as_mut_ptr() as usize;
+        for (k, &(off, len)) in ranges.iter().enumerate() {
+            self.submit(
+                k,
+                Job::SealFlatten {
+                    shard: unsafe { shard_base.add(k) } as usize,
+                    dst: dst_base + off * std::mem::size_of::<f32>(),
+                    dst_len: len,
+                },
+            );
+        }
+        for k in 0..n {
+            match self.join(k) {
+                JobResult::Seal(r) => out.push(r),
+                _ => unreachable!("seal mailbox returned a foreign result"),
+            }
+        }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        for mb in &self.mailboxes {
+            // Poison-tolerant: a panicked executor already holds a dead
+            // thread — still signal the healthy ones, and never panic
+            // inside drop (a double panic would abort the process).
+            let mut slot = match mb.slot.lock() {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            slot.shutdown = true;
+            drop(slot);
+            mb.job_ready.notify_one();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::Policy;
+    use crate::coordinator::shard::ShardConfig;
+    use crate::insertion::InsertionKind;
+    use crate::sim::spec::DeviceSpec;
+
+    fn build_shards(n: usize, blocks: usize) -> Vec<Shard> {
+        (0..n)
+            .map(|id| {
+                Shard::new(ShardConfig {
+                    id,
+                    blocks,
+                    first_bucket_size: 16,
+                    insertion: InsertionKind::WarpScan,
+                    device: DeviceSpec::a100(),
+                    heap_bytes: 1 << 26,
+                })
+            })
+            .collect()
+    }
+
+    /// Route + split a batch the way the service does.
+    fn routed(shards: &[Shard], bps: usize, n: usize, scratch: &mut DispatchScratch) {
+        scratch.sizes.clear();
+        for shard in shards.iter() {
+            scratch.sizes.extend(shard.block_sizes_iter());
+        }
+        scratch.route(Policy::Even, n, 0);
+        scratch.split_for_shards(bps);
+    }
+
+    #[test]
+    fn pooled_insert_matches_serial_per_shard_state() {
+        let bps = 2;
+        let values: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let mut scratch = DispatchScratch::new();
+
+        let mut serial = build_shards(4, bps);
+        routed(&serial, bps, values.len(), &mut scratch);
+        let mut applied_serial = 0u64;
+        for (k, shard) in serial.iter_mut().enumerate() {
+            let (off, take) = scratch.ranges[k];
+            let out = shard.apply_counts(scratch.shard_counts(k, bps), &values[off..off + take]);
+            assert!(out.error.is_none());
+            applied_serial += out.applied as u64;
+        }
+
+        let pool = ShardPool::new(4);
+        let mut pooled = build_shards(4, bps);
+        routed(&pooled, bps, values.len(), &mut scratch);
+        let out = pool.run_insert(&mut pooled, bps, &values, &scratch);
+        assert_eq!(out.applied, applied_serial);
+        assert!(out.oom.is_none());
+        for (s, p) in serial.iter().zip(&pooled) {
+            assert_eq!(s.len(), p.len());
+            assert_eq!(s.heap_used(), p.heap_used());
+            assert_eq!(s.sim_now_us(), p.sim_now_us(), "per-shard clocks must agree exactly");
+            for i in 0..s.len() as u64 {
+                assert_eq!(s.get(i), p.get(i));
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_work_matches_serial_values_and_clocks() {
+        let bps = 2;
+        let values: Vec<f32> = (0..256).map(|i| i as f32 * 0.5).collect();
+        let mut scratch = DispatchScratch::new();
+        let mut serial = build_shards(2, bps);
+        routed(&serial, bps, values.len(), &mut scratch);
+        for (k, shard) in serial.iter_mut().enumerate() {
+            let (off, take) = scratch.ranges[k];
+            shard.apply_counts(scratch.shard_counts(k, bps), &values[off..off + take]);
+        }
+        let pool = ShardPool::new(2);
+        let mut pooled = build_shards(2, bps);
+        routed(&pooled, bps, values.len(), &mut scratch);
+        pool.run_insert(&mut pooled, bps, &values, &scratch);
+
+        for shard in serial.iter_mut() {
+            shard.work_pass(None, 30);
+            if !shard.is_empty() {
+                shard.charge_rw_block(30.0);
+            }
+        }
+        assert_eq!(pool.run_work(&mut pooled, 30), 0);
+        for (s, p) in serial.iter().zip(&pooled) {
+            assert_eq!(s.get(0), p.get(0));
+            assert_eq!(s.sim_now_us(), p.sim_now_us());
+        }
+    }
+
+    #[test]
+    fn pooled_gathers_write_disjoint_ranges_in_shard_order() {
+        let bps = 2;
+        let values: Vec<f32> = (0..300).map(|i| i as f32).collect();
+        let mut scratch = DispatchScratch::new();
+        let pool = ShardPool::new(3);
+        let mut shards = build_shards(3, bps);
+        routed(&shards, bps, values.len(), &mut scratch);
+        pool.run_insert(&mut shards, bps, &values, &scratch);
+
+        // Reference: serial appending flatten.
+        let mut reference = Vec::new();
+        let mut check = build_shards(3, bps);
+        routed(&check, bps, values.len(), &mut scratch);
+        for (k, shard) in check.iter_mut().enumerate() {
+            let (off, take) = scratch.ranges[k];
+            shard.apply_counts(scratch.shard_counts(k, bps), &values[off..off + take]);
+        }
+        for shard in check.iter_mut() {
+            shard.flatten_temp_into(&mut reference).unwrap();
+        }
+
+        let lens: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        let ranges = scratch.fill_gather_ranges(lens.into_iter()).to_vec();
+        let mut dst = vec![0.0f32; values.len()];
+        pool.run_flatten_temp(&mut shards, &mut dst, &ranges).unwrap();
+        assert_eq!(dst, reference, "parallel gather must be byte-identical to serial append");
+
+        // Seal gather: parts in shard order, destination allocs live.
+        let mut seal_dst = vec![0.0f32; values.len()];
+        let mut parts = Vec::new();
+        pool.run_seal(&mut shards, &mut seal_dst, &ranges, &mut parts);
+        assert_eq!(seal_dst, reference);
+        assert_eq!(parts.len(), 3);
+        for (k, (part, shard)) in parts.into_iter().zip(shards.iter_mut()).enumerate() {
+            let mut part = part.expect("pre-screened seal cannot OOM");
+            assert_eq!(part.len, ranges[k].1);
+            assert!(part.alloc.is_some());
+            shard.abort_seal(part.alloc.take()); // clean up the lease
+        }
+    }
+
+    #[test]
+    fn pool_drop_joins_executors() {
+        let pool = ShardPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        drop(pool); // must not hang or leak threads
+    }
+}

@@ -185,6 +185,12 @@ pub struct DispatchScratch {
     /// Per-shard `(value_offset, value_len)` ranges into the batch slice
     /// ([`split_for_shards_into`] output).
     pub ranges: Vec<(usize, usize)>,
+    /// Per-shard `(offset, len)` ranges into a shared gather destination
+    /// (the executor pool's parallel flatten/seal fan-out) — index-based
+    /// like `ranges`, so jobs carry plain offsets instead of borrows, and
+    /// kept separate from `ranges` so a barriered gather never clobbers
+    /// the last routed batch's slicing.
+    pub gather_ranges: Vec<(usize, usize)>,
     /// Per-shard simulated-clock marks (cost accounting around one op).
     pub marks: Vec<f64>,
     /// Index-sort scratch for [`Policy::LeastLoaded`].
@@ -212,6 +218,23 @@ impl DispatchScratch {
     /// consecutive blocks of the global decision).
     pub fn shard_counts(&self, k: usize, blocks_per_shard: usize) -> &[usize] {
         &self.counts[k * blocks_per_shard..(k + 1) * blocks_per_shard]
+    }
+
+    /// Fill `self.gather_ranges` with the prefix-sum carve of a shared
+    /// gather destination: shard `k` owns `(Σ lens[..k], lens[k])`. The
+    /// buffer keeps its capacity across calls, so steady-state gathers
+    /// slice without heap traffic.
+    pub fn fill_gather_ranges(
+        &mut self,
+        lens: impl Iterator<Item = usize>,
+    ) -> &[(usize, usize)] {
+        self.gather_ranges.clear();
+        let mut offset = 0usize;
+        for len in lens {
+            self.gather_ranges.push((offset, len));
+            offset += len;
+        }
+        &self.gather_ranges
     }
 }
 
@@ -430,6 +453,24 @@ mod tests {
                 assert_eq!(scratch.shard_counts(k, bps), &want_counts[..], "shard {k}");
             }
         }
+    }
+
+    #[test]
+    fn gather_ranges_are_prefix_sums_and_reuse_capacity() {
+        let mut scratch = DispatchScratch::new();
+        let ranges = scratch.fill_gather_ranges([3usize, 0, 7, 2].into_iter()).to_vec();
+        assert_eq!(ranges, vec![(0, 3), (3, 0), (3, 7), (10, 2)]);
+        let ptr = scratch.gather_ranges.as_ptr();
+        for _ in 0..10 {
+            scratch.fill_gather_ranges([1usize, 2, 3, 4].into_iter());
+        }
+        assert_eq!(scratch.gather_ranges.as_ptr(), ptr, "gather ranges buffer must be reused");
+        assert_eq!(scratch.gather_ranges, vec![(0, 1), (1, 2), (3, 3), (6, 4)]);
+        // Disjoint from the insert ranges.
+        scratch.counts.extend_from_slice(&[5, 5]);
+        scratch.split_for_shards(1);
+        assert_eq!(scratch.ranges, vec![(0, 5), (5, 5)]);
+        assert_eq!(scratch.gather_ranges, vec![(0, 1), (1, 2), (3, 3), (6, 4)]);
     }
 
     #[test]

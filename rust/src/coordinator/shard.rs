@@ -137,6 +137,20 @@ impl Shard {
         self.gg.heap().used()
     }
 
+    /// Free bytes left in this shard's VRAM budget — the executor pool's
+    /// OOM pre-screen compares bucket/flatten demand against this before
+    /// fanning an op out (a guaranteed-fit op cannot OOM mid-flight, so
+    /// the parallel path never has to unwind a half-applied batch).
+    pub fn heap_free(&self) -> u64 {
+        self.gg.heap().free_bytes()
+    }
+
+    /// First-bucket size of this shard's LFVectors (bucket-demand
+    /// arithmetic for the insert pre-screen).
+    pub fn first_bucket_size(&self) -> usize {
+        self.gg.config().first_bucket_size
+    }
+
     pub fn block_sizes(&self) -> Vec<u64> {
         self.gg.block_sizes()
     }
@@ -240,6 +254,25 @@ impl Shard {
         }
     }
 
+    /// Slice-target [`Shard::seal_flatten_into`]: gather this shard's
+    /// contents into `dst` (exactly `len` slots, carved by the caller out
+    /// of the shared seal destination) with identical simulated charges —
+    /// the executor pool's phase-1 seal gather runs one of these per
+    /// shard concurrently, each into its disjoint sub-slice. On error
+    /// nothing meaningful was written and this shard is reopened
+    /// untouched, exactly like the appending path.
+    pub fn seal_flatten_to_slice(&mut self, dst: &mut [f32]) -> Result<SealPart, OomError> {
+        self.gg.seal();
+        let len = dst.len();
+        match flatten::flatten_to_slice(&mut self.gg, dst) {
+            Ok((report, alloc)) => Ok(SealPart { len, report, alloc }),
+            Err(e) => {
+                self.gg.reopen();
+                Err(e)
+            }
+        }
+    }
+
     /// Commit a successful seal: *transfer* the epoch's flatten
     /// destination out of this shard's heap into the epoch-owned sealed
     /// store (the bytes stay resident on the device; only the accounting
@@ -295,6 +328,20 @@ impl Shard {
             heap.free(a, clock);
         }
         Ok(dst.len() - before)
+    }
+
+    /// Slice-target [`Shard::flatten_temp_into`] for the executor pool's
+    /// parallel snapshot gather: write this shard's contents into `dst`
+    /// (exactly `len` slots) and release the simulated destination
+    /// immediately, with charges identical to the appending path.
+    pub fn flatten_temp_to_slice(&mut self, dst: &mut [f32]) -> Result<usize, OomError> {
+        let len = dst.len();
+        let (_report, alloc) = flatten::flatten_to_slice(&mut self.gg, dst)?;
+        if let Some(a) = alloc {
+            let (_, heap, clock, _, _, _) = self.gg.parts_mut();
+            heap.free(a, clock);
+        }
+        Ok(len)
     }
 
     /// Reopen without clearing — the abort path when a multi-shard seal
@@ -470,12 +517,24 @@ impl EpochManager {
         buf
     }
 
+    /// Lease the pooled gather buffer **without clearing**: stale
+    /// elements from the banked buffer are retained (they are
+    /// initialized memory). For callers that overwrite an exact prefix
+    /// anyway — the executor pool's parallel seal gather writes every
+    /// slot of its carve — this skips the `resize` zero-fill a cleared
+    /// lease would force, which would otherwise be a serial full-buffer
+    /// memset ahead of the parallel writes.
+    pub fn take_gather_buffer_uncleared(&mut self) -> Vec<f32> {
+        std::mem::take(&mut self.pool)
+    }
+
     /// Return a buffer to the gather pool (aborted seal, freed
     /// compaction source, cleared store): the larger capacity wins, so
     /// the pool converges on the largest seal seen and steady churn
-    /// stops allocating gather destinations.
-    pub fn bank_gather_buffer(&mut self, mut buf: Vec<f32>) {
-        buf.clear();
+    /// stops allocating gather destinations. Contents are retained (and
+    /// never read as data) so an uncleared re-lease can size itself
+    /// without re-initializing slots it is about to overwrite.
+    pub fn bank_gather_buffer(&mut self, buf: Vec<f32>) {
         if buf.capacity() > self.pool.capacity() {
             self.pool = buf;
         }

@@ -200,6 +200,48 @@ pub fn flatten_into<T: Copy + Default>(
     dst: &mut Vec<T>,
 ) -> Result<(OpReport, Option<AllocId>), OomError> {
     let n = gg.len();
+    let start = dst.len();
+    dst.reserve(n);
+    let out = flatten_charged(gg, |vectors| {
+        for v in vectors.iter() {
+            v.copy_into(dst);
+        }
+    })?;
+    debug_assert_eq!(dst.len() - start, n);
+    Ok(out)
+}
+
+/// Slice-target [`flatten_into`]: gather the GGArray's contents into
+/// `dst`, which must hold exactly `gg.len()` slots — the caller carved it
+/// out of a larger pre-sized buffer. Simulated charges (one destination
+/// `cudaMalloc`, one gather kernel) are identical to the appending path;
+/// what changes is only where the host copy lands, which is what lets
+/// the executor pool run per-shard gathers concurrently into disjoint
+/// sub-slices of one seal destination.
+pub fn flatten_to_slice<T: Copy + Default>(
+    gg: &mut GgArray<T>,
+    dst: &mut [T],
+) -> Result<(OpReport, Option<AllocId>), OomError> {
+    let n = gg.len();
+    assert_eq!(dst.len(), n, "flatten destination must be exactly len slots");
+    flatten_charged(gg, |vectors| {
+        let mut off = 0usize;
+        for v in vectors.iter() {
+            off += v.copy_to_slice(&mut dst[off..]);
+        }
+        debug_assert_eq!(off, n);
+    })
+}
+
+/// Shared core of [`flatten_into`] / [`flatten_to_slice`]: one
+/// destination `cudaMalloc` in the source heap, the host copy (the
+/// caller decides where it lands), one gather kernel — charged in that
+/// order so both variants advance the shard clock identically.
+fn flatten_charged<T: Copy + Default>(
+    gg: &mut GgArray<T>,
+    copy: impl FnOnce(&[crate::ggarray::lfvector::LfVector<T>]),
+) -> Result<(OpReport, Option<AllocId>), OomError> {
+    let n = gg.len();
     let elem = std::mem::size_of::<T>();
     let spec = gg.spec().clone();
     let blocks = gg.num_blocks() as u64;
@@ -210,12 +252,7 @@ pub fn flatten_into<T: Copy + Default>(
     // Destination allocation (one cudaMalloc).
     let dst_alloc = heap.alloc((n * elem) as u64, clock)?;
     // Real copy.
-    let start = dst.len();
-    dst.reserve(n);
-    for v in vectors.iter() {
-        v.copy_into(dst);
-    }
-    debug_assert_eq!(dst.len() - start, n);
+    copy(vectors.as_slice());
     // Gather kernel: read at block-structured efficiency, write coalesced.
     let read = (n * elem) as f64;
     let write = (n * elem) as f64;
@@ -366,6 +403,29 @@ mod tests {
         assert_eq!(&dst[101..], &want_b[..]);
         assert!(ra.us > 0.0 && rb.us > 0.0);
         assert!(alloc_a.is_some(), "destination allocation returned to the caller");
+    }
+
+    #[test]
+    fn flatten_to_slice_matches_appending_path_bytes_and_charges() {
+        let cfg = GgConfig { num_blocks: 4, threads_per_block: 256, first_bucket_size: 4, insertion: InsertionKind::WarpScan };
+        let build = || {
+            let mut g: GgArray<u32> = GgArray::new(cfg.clone(), DeviceSpec::a100());
+            g.insert_bulk(&(0..333).collect::<Vec<_>>(), InsertionKind::WarpScan).unwrap();
+            g
+        };
+        let mut a = build();
+        let mut b = build();
+        let mut via_into = Vec::new();
+        let (ra, alloc_a) = flatten_into(&mut a, &mut via_into).unwrap();
+        // The carved-destination twin: same bytes, same simulated charges,
+        // same destination allocation in the source heap.
+        let mut via_slice = vec![0u32; 333];
+        let (rb, alloc_b) = flatten_to_slice(&mut b, &mut via_slice).unwrap();
+        assert_eq!(via_slice, via_into);
+        assert!((ra.us - rb.us).abs() < 1e-12, "identical simulated charge");
+        assert_eq!(a.clock().now_us(), b.clock().now_us(), "identical clock advance");
+        assert!(alloc_a.is_some() && alloc_b.is_some());
+        assert_eq!(a.heap().used(), b.heap().used());
     }
 
     #[test]

@@ -23,10 +23,28 @@ struct Bucket<T> {
     data: Vec<T>,
 }
 
+/// Number of buckets needed to hold `n` elements with first-bucket size
+/// `fbs` (the smallest `k` with `fbs·(2^k − 1) ≥ n`). Free-standing so
+/// admission prechecks (e.g. the executor pool's OOM pre-screen) can
+/// compute bucket demand without holding a vector.
+#[inline]
+pub fn buckets_for_len(fbs: usize, n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let fbs = fbs as u64;
+    // smallest k with fbs·(2^k − 1) ≥ n
+    let blocks = ceil_div(n as u64 + fbs, fbs); // (n + fbs)/fbs rounded up = 2^k lower bound
+    (64 - (blocks - 1).leading_zeros()) as usize
+}
+
 /// A single LFVector — in GGArray there is exactly one per thread block.
 #[derive(Debug)]
 pub struct LfVector<T> {
     first_bucket_size: usize,
+    /// `log2(first_bucket_size)` — the constructor asserts a power of
+    /// two, so the sealed-query index math divides by shifting.
+    fbs_log2: u32,
     len: usize,
     buckets: Vec<Option<Bucket<T>>>,
     /// CAS guards of Algorithm 2 (`isbucket`): true once some thread has
@@ -42,6 +60,7 @@ impl<T: Copy + Default> LfVector<T> {
         assert!(first_bucket_size.is_power_of_two(), "first bucket size must be a power of two");
         LfVector {
             first_bucket_size,
+            fbs_log2: first_bucket_size.trailing_zeros(),
             len: 0,
             buckets: Vec::new(),
             isbucket: Vec::new(),
@@ -68,6 +87,7 @@ impl<T: Copy + Default> LfVector<T> {
 
     /// Capacity of bucket `b`: `fbs · 2^b` (paper Algorithm 2:
     /// `bsize = 2^{log(first_block_size)+b}`).
+    #[inline]
     pub fn bucket_capacity(&self, b: usize) -> usize {
         self.first_bucket_size << b
     }
@@ -89,23 +109,22 @@ impl<T: Copy + Default> LfVector<T> {
 
     /// Map an element index to (bucket, offset). Panics if out of the
     /// addressable range.
+    ///
+    /// `first_bucket_size` is a power of two (constructor invariant), so
+    /// the `idx / fbs` division and the `fbs · (2^b − 1)` bucket-start
+    /// product both reduce to shifts — this runs once per element on the
+    /// sealed-query bench path.
     #[inline]
     pub fn locate(&self, idx: usize) -> (usize, usize) {
-        let fbs = self.first_bucket_size;
-        let b = ilog2((idx / fbs + 1) as u64) as usize;
-        let start = fbs * ((1usize << b) - 1);
+        let b = ilog2(((idx >> self.fbs_log2) + 1) as u64) as usize;
+        let start = ((1usize << b) - 1) << self.fbs_log2;
         (b, idx - start)
     }
 
     /// Number of buckets needed for a length of `n`.
+    #[inline]
     pub fn buckets_for(&self, n: usize) -> usize {
-        if n == 0 {
-            return 0;
-        }
-        let fbs = self.first_bucket_size as u64;
-        // smallest k with fbs·(2^k − 1) ≥ n
-        let blocks = ceil_div(n as u64 + fbs, fbs); // (n + fbs)/fbs rounded up = 2^k lower bound
-        (64 - (blocks - 1).leading_zeros()) as usize
+        buckets_for_len(self.first_bucket_size, n)
     }
 
     /// Paper Algorithm 2 (`new_bucket`): ensure bucket `b` exists,
@@ -254,6 +273,28 @@ impl<T: Copy + Default> LfVector<T> {
                 remaining -= take;
             }
         }
+    }
+
+    /// Copy the live elements into the front of `out` (which must hold at
+    /// least `len` slots) and return the count written — the slice-target
+    /// twin of [`LfVector::copy_into`] for gathers whose destination
+    /// ranges are carved up front (the executor pool's parallel flatten
+    /// writes disjoint sub-slices of one buffer concurrently).
+    pub fn copy_to_slice(&self, out: &mut [T]) -> usize {
+        debug_assert!(out.len() >= self.len, "destination slice too small");
+        let mut written = 0usize;
+        for b in 0..self.buckets.len() {
+            if written == self.len {
+                break;
+            }
+            let cap = self.bucket_capacity(b);
+            if let Some(bucket) = self.buckets[b].as_ref() {
+                let take = (self.len - written).min(cap);
+                out[written..written + take].copy_from_slice(&bucket.data[..take]);
+                written += take;
+            }
+        }
+        written
     }
 
     /// Drop all buckets, releasing simulated VRAM.
@@ -434,6 +475,50 @@ mod tests {
         });
         assert_eq!(sum, 2 + 3 + 31 + 5 + 6 + 7 + 8);
         assert_eq!(v.get(2), Some(31));
+    }
+
+    #[test]
+    fn copy_to_slice_matches_copy_into() {
+        let (mut heap, mut clock) = fixture();
+        let mut v: LfVector<u32> = LfVector::new(4);
+        let data: Vec<u32> = (0..77).map(|i| i * 7 + 1).collect();
+        v.push_back_bulk(&data, &mut heap, &mut clock).unwrap();
+        let mut via_into = Vec::new();
+        v.copy_into(&mut via_into);
+        // An oversized destination: only the front `len` slots written.
+        let mut via_slice = vec![u32::MAX; 100];
+        assert_eq!(v.copy_to_slice(&mut via_slice), 77);
+        assert_eq!(&via_slice[..77], &via_into[..]);
+        assert!(via_slice[77..].iter().all(|&x| x == u32::MAX));
+        // Empty vector writes nothing.
+        let e: LfVector<u32> = LfVector::new(4);
+        assert_eq!(e.copy_to_slice(&mut via_slice), 0);
+    }
+
+    #[test]
+    fn buckets_for_len_free_fn_matches_method() {
+        let v: LfVector<u32> = LfVector::new(4);
+        for n in 0..200usize {
+            assert_eq!(buckets_for_len(4, n), v.buckets_for(n), "n={n}");
+        }
+        for fbs in [1usize, 2, 8, 1024] {
+            let v: LfVector<u8> = LfVector::new(fbs);
+            for n in [0usize, 1, fbs, fbs + 1, 3 * fbs, 100 * fbs] {
+                assert_eq!(buckets_for_len(fbs, n), v.buckets_for(n), "fbs={fbs} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn locate_shift_math_handles_fbs_one() {
+        // fbs=1 (fbs_log2=0): bucket0 = idx 0, bucket1 = 1..3, bucket2 = 3..7.
+        let v: LfVector<u8> = LfVector::new(1);
+        assert_eq!(v.locate(0), (0, 0));
+        assert_eq!(v.locate(1), (1, 0));
+        assert_eq!(v.locate(2), (1, 1));
+        assert_eq!(v.locate(3), (2, 0));
+        assert_eq!(v.locate(6), (2, 3));
+        assert_eq!(v.locate(7), (3, 0));
     }
 
     #[test]

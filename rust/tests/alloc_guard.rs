@@ -7,14 +7,20 @@
 //! buckets are warm. This is the tentpole invariant of the zero-copy hot
 //! path: every per-batch buffer lives in the `DispatchScratch` arena
 //! (cleared, never dropped) and routed values flow as sub-slices of the
-//! original batch.
+//! original batch. The 4-shard section extends the guarantee across the
+//! executor pool's mailbox handoff: fan-out, the concurrent per-shard
+//! applies on the executor threads, and the barrier join are all
+//! allocation-free too (the counter is global, so executor-thread
+//! allocations would break the zero delta just the same).
 //!
 //! This file must stay a dedicated test binary with this single test:
 //! a sibling test running concurrently would allocate on another thread
-//! and break the zero-delta assertion.
+//! and break the zero-delta assertion. (The executor pool's own threads
+//! are part of the system under test, not bystanders.)
 
+use ggarray::coordinator::pool::ShardPool;
 use ggarray::coordinator::router::{DispatchScratch, Policy};
-use ggarray::coordinator::service::dispatch_insert;
+use ggarray::coordinator::service::{dispatch_insert, dispatch_insert_pooled};
 use ggarray::coordinator::shard::{Shard, ShardConfig};
 use ggarray::insertion::InsertionKind;
 use ggarray::sim::spec::DeviceSpec;
@@ -24,19 +30,27 @@ use ggarray::workload::synth_f32;
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc::new();
 
+fn build_shards(shard_count: usize, blocks_per_shard: usize) -> Vec<Shard> {
+    (0..shard_count)
+        .map(|id| {
+            Shard::new(ShardConfig {
+                id,
+                blocks: blocks_per_shard,
+                first_bucket_size: 1 << 14,
+                insertion: InsertionKind::WarpScan,
+                device: DeviceSpec::a100(),
+                heap_bytes: 1 << 30,
+            })
+        })
+        .collect()
+}
+
 #[test]
 fn steady_state_insert_dispatch_is_allocation_free() {
     // The 1-shard insert case of the acceptance criteria: 4 blocks with
     // 16Ki-element first buckets.
     let blocks = 4usize;
-    let mut shards = vec![Shard::new(ShardConfig {
-        id: 0,
-        blocks,
-        first_bucket_size: 1 << 14,
-        insertion: InsertionKind::WarpScan,
-        device: DeviceSpec::a100(),
-        heap_bytes: 1 << 30,
-    })];
+    let mut shards = build_shards(1, blocks);
     let mut scratch = DispatchScratch::new();
     let values: Vec<f32> = (0..1024u64).map(synth_f32).collect();
 
@@ -81,4 +95,42 @@ fn steady_state_insert_dispatch_is_allocation_free() {
     }
     let delta = CountingAlloc::allocations() - before;
     assert_eq!(delta, 0, "LeastLoaded dispatch allocated {delta} times");
+
+    // ------------------------------------------------------------------
+    // 4-shard dispatch with the executor pool: the zero-allocation
+    // invariant must hold across the mailbox handoff — job deposit,
+    // condvar wake, the concurrent per-shard applies on the executor
+    // threads, result deposit, and the barrier join. The global counter
+    // sees every thread, so this proves the whole fan-out round trip
+    // never touches the allocator in steady state.
+    // ------------------------------------------------------------------
+    let bps = 1usize; // 4 shards × 1 block: every shard gets a sub-batch
+    let mut shards = build_shards(4, bps);
+    let pool = ShardPool::new(4);
+    // Warm-up: spawns nothing (threads already live), but fills buckets,
+    // arena buffers, mailbox/condvar internals and the clock ledgers.
+    for seq in 0..80u64 {
+        let out =
+            dispatch_insert_pooled(&pool, &mut shards, bps, Policy::Even, seq, &values, &mut scratch);
+        assert_eq!(out.applied, 1024);
+        assert!(out.oom.is_none());
+    }
+    let before = CountingAlloc::allocations();
+    for seq in 80..96u64 {
+        let out =
+            dispatch_insert_pooled(&pool, &mut shards, bps, Policy::Even, seq, &values, &mut scratch);
+        assert_eq!(out.applied, 1024);
+    }
+    let delta = CountingAlloc::allocations() - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state pooled 4-shard dispatch performed {delta} heap allocations over 16 batches \
+         (the mailbox handoff must stay allocation-free)"
+    );
+    // The data landed across all four shards — a real concurrent loop.
+    assert_eq!(shards.iter().map(|s| s.len()).sum::<usize>(), 96 * 1024);
+    for shard in &shards {
+        assert_eq!(shard.len(), 24 * 1024);
+    }
+    assert_eq!(shards[0].get(0), Some(synth_f32(0)));
 }

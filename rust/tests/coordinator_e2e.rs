@@ -26,6 +26,7 @@ fn cfg(blocks: usize, use_artifacts: bool) -> CoordinatorConfig {
         epoch_heap: None,
         shards: 1,
         compact_segments: 4,
+        executor_threads: 0,
     }
 }
 

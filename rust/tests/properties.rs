@@ -625,6 +625,112 @@ fn prop_heap_accounting_conserved_across_seal_compact_clear() {
     });
 }
 
+/// Executor-mode byte-identity: a random workload (insert / work / seal
+/// / flatten / clear / query) replayed at 1/2/4 shards through the
+/// serial worker (`executor_threads = 1`) and the persistent executor
+/// pool (`executor_threads = 2` → one thread per shard) must produce
+/// **identical response payloads** — checksums, lengths, and the
+/// simulated `sim_us`/`device_us` times exactly (per-shard clocks see
+/// the same charge sequence in both modes; only the host thread doing
+/// the work changes). Runs under a full-device budget and a tight one,
+/// so the OOM paths (which the pool pre-screens and routes down the
+/// serial fallback) are byte-identical too. The serial side is itself
+/// pinned to the copying reference by
+/// [`prop_scratch_dispatch_byte_identical_to_copying_reference`], so
+/// this transitively anchors the pool to the original pipeline.
+#[test]
+fn prop_executor_modes_byte_identical_across_shard_counts() {
+    use ggarray::workload::synth_f32;
+
+    let gen = PairGen(U64Range { lo: 1, hi: 48 }, CountsVec { max_len: 14, max_val: 700 });
+    check("serial ≡ pooled executors (1/2/4 shards)", 0xEC5EC, 16, &gen, |(chunk, ops)| {
+        let chunk = *chunk as usize;
+        for (budget, heap_capacity, epoch_heap) in [
+            ("full-device", None, None),
+            ("tight", Some(24 * 1024), Some(8 * 1024)),
+        ] {
+            for shards in [1usize, 2, 4] {
+                let start = |threads: usize| {
+                    Coordinator::start(CoordinatorConfig {
+                        blocks: 8,
+                        shards,
+                        first_bucket_size: 16,
+                        use_artifacts: false,
+                        compact_segments: 2,
+                        heap_capacity,
+                        epoch_heap,
+                        executor_threads: threads,
+                        batch: BatchConfig {
+                            max_values: chunk,
+                            max_delay: std::time::Duration::from_secs(3600),
+                        },
+                        ..CoordinatorConfig::default()
+                    })
+                };
+                let serial = start(1);
+                let pooled = start(2);
+                let mut counter = 0u64;
+                for (i, &op) in ops.iter().enumerate() {
+                    let req = match op % 8 {
+                        0 => Request::Seal,
+                        1 => Request::Flatten,
+                        2 => Request::Work { calls: 1 + (op as u32 % 2) },
+                        3 => Request::Query { index: (i as u64).wrapping_mul(2654435761) % 2048 },
+                        4 => Request::Clear,
+                        _ => {
+                            let values: Vec<f32> =
+                                (0..op as u64).map(|k| synth_f32(counter + k)).collect();
+                            counter += op as u64;
+                            Request::Insert { values }
+                        }
+                    };
+                    let a = serial.call(req.clone());
+                    let b = pooled.call(req);
+                    let (a, b) = (format!("{a:?}"), format!("{b:?}"));
+                    if a != b {
+                        return Err(format!(
+                            "{budget}/{shards} shards, op {i}: serial {a} != pooled {b}"
+                        ));
+                    }
+                }
+                // Final seal + flatten barrier the tail, then the
+                // observable state must agree field for field.
+                for req in [Request::Seal, Request::Flatten] {
+                    let a = format!("{:?}", serial.call(req.clone()));
+                    let b = format!("{:?}", pooled.call(req));
+                    if a != b {
+                        return Err(format!("{budget}/{shards} shards, final: {a} != {b}"));
+                    }
+                }
+                let sa = serial.call(Request::Stats).expect_stats();
+                let sb = pooled.call(Request::Stats).expect_stats();
+                let fields = |s: &ggarray::coordinator::metrics::MetricsSnapshot| {
+                    (
+                        (s.len, s.sealed_len, s.sealed_segments),
+                        (s.sealed_bytes, s.heap_used_bytes, s.allocated_bytes),
+                        (s.errors, s.seals, s.compactions, s.compaction_ooms, s.elements_inserted),
+                        (s.sim_insert_ms, s.sim_work_ms, s.sim_flatten_ms),
+                        (s.device_insert_ms, s.device_work_ms, s.device_flatten_ms),
+                    )
+                };
+                if fields(&sa) != fields(&sb) {
+                    return Err(format!(
+                        "{budget}/{shards} shards: stats diverged\n serial {:?}\n pooled {:?}",
+                        fields(&sa),
+                        fields(&sb)
+                    ));
+                }
+                if sb.executors != shards {
+                    return Err(format!("pooled run must report {shards} executors, got {}", sb.executors));
+                }
+                serial.shutdown();
+                pooled.shutdown();
+            }
+        }
+        Ok(())
+    });
+}
+
 // ------------------------------------------------------------------
 // Byte-identity of the scratch-arena hot path (zero-copy dispatch +
 // pooled flatten): for a random workload, every sealed layout and every
