@@ -24,10 +24,20 @@ trap 'rm -rf "$SMOKE_OUT"' EXIT
 echo "== smoke: experiment binary (fig3, small sweep) =="
 cargo run --release --bin repro -- fig3 --steps 4 --draws 200 --quiet --out "$SMOKE_OUT"
 
+echo "== smoke: frontend backpressure (typed-rejection contract) =="
+# frontend_backpressure fills a bounded session window and asserts the
+# admission contract: full channel → typed Rejected with the payload
+# handed back (no panic, no silent drop), the queue drains at the next
+# sync point, subsequent requests succeed, and the shed_requests ledger
+# in Stats matches exactly the rejections the clients observed.
+cargo test -q --test frontend_backpressure
+
 echo "== smoke: sharded two-phase example, serial executors (GG_THREADS=1) =="
-# The example also asserts serial ≡ pooled checksums internally, so each
-# run covers both modes' layouts; running it under both GG_THREADS
-# settings additionally smoke-tests the env-var resolution path.
+# The example also asserts serial ≡ pooled checksums internally AND that
+# two concurrent client sessions (AtBarrier merge) seal byte-identical
+# epochs to the single-client run; each run covers both executor modes'
+# layouts, and running it under both GG_THREADS settings additionally
+# smoke-tests the env-var resolution path.
 GG_THREADS=1 cargo run --release --example sharded_two_phase
 
 echo "== smoke: sharded two-phase example, default executor pool =="
@@ -63,5 +73,16 @@ echo "== smoke: hot-path bench (BENCH_hotpath.json + wall-clock gates) =="
 # (first run / schema migration). Bypass everything with
 # GG_BENCH_GATE=off on noisy machines.
 cargo bench --bench bench_hotpath -- --smoke
+
+echo "== smoke: frontend bench (BENCH_frontend.json, report-only) =="
+# bench_frontend --smoke: sustained multi-client admission throughput
+# and p50/p99 latency at 1/8/64 client threads through bounded sessions
+# (eager merge). Writes BENCH_frontend.json (schema bench_frontend/v1)
+# at the repo root. Report-only — no regression gate yet — but the run
+# itself asserts conservation (sealed epoch == sum of accepted ledgers)
+# and that the shed metric matches client-observed rejections, so a
+# frontend correctness break fails CI here too. Smoke runs never
+# overwrite an existing schema-matching baseline.
+cargo bench --bench bench_frontend -- --smoke
 
 echo "ci.sh: all green"

@@ -23,10 +23,11 @@
 use std::time::Duration;
 
 use ggarray::coordinator::batcher::BatchConfig;
+use ggarray::coordinator::frontend::{ClientSession, FrontendConfig, MergePolicy};
 use ggarray::coordinator::metrics::MetricsSnapshot;
 use ggarray::coordinator::request::{Request, Response};
 use ggarray::coordinator::service::{drive_workload, Coordinator, CoordinatorConfig, WorkloadRun};
-use ggarray::workload::WorkloadSpec;
+use ggarray::workload::{synth_f32, Step, WorkloadSpec};
 
 const FINAL_SIZE: u64 = 1 << 18; // 262144 elements after 3 doubling phases
 const PHASES: u32 = 3;
@@ -145,6 +146,92 @@ fn main() {
         stats_pooled.executors, stats_pooled.wall_insert_ms, stats_pooled.wall_flatten_ms
     );
 
+    // --- multi-client session frontend: 2 concurrent clients ≡ 1 ---
+    // The same sealed workload pushed by two racing client threads
+    // through bounded sessions (AtBarrier merge: pools drain only at
+    // sync points, in client-id order) must seal the exact same epochs
+    // as the single-client runs above. Client 0 takes the low half of
+    // every insert step and client 1 the high half, so the merged value
+    // stream equals the serial one.
+    let session_seals = run_sessions(&sealed_wl, 4);
+    assert_eq!(
+        session_seals, run4.seal_checksums,
+        "2 concurrent sessions must seal byte-identical epochs to 1 client"
+    );
+    println!("\nsession frontend (4 shards): 2 concurrent clients ≡ 1 client sealed bytes ✓");
+
     println!("\n--- 4-shard coordinator metrics (default executor mode) ---\n{stats4}");
     println!("\nsharded_two_phase OK");
+}
+
+/// Push `[from, to)` of the global value stream through one session in
+/// CHUNK-sized requests, retrying on typed rejections. Returns the shed
+/// count the client observed.
+fn push_range(sess: &mut ClientSession, from: u64, to: u64) -> u64 {
+    let mut sheds = 0u64;
+    let mut at = from;
+    while at < to {
+        let take = CHUNK.min((to - at) as usize);
+        let values: Vec<f32> = (0..take as u64).map(|i| synth_f32(at + i)).collect();
+        let (adm, retries) = sess.insert_retrying(values);
+        assert!(adm.is_accepted(), "insert [{at}..{}) not admitted: {adm:?}", at + take as u64);
+        sheds += retries;
+        at += take as u64;
+    }
+    sheds
+}
+
+/// Drive the workload through TWO concurrent client sessions (each
+/// insert step split in half across racing threads) and return the
+/// per-epoch seal checksums.
+fn run_sessions(w: &WorkloadSpec, shards: usize) -> Vec<u64> {
+    let c = Coordinator::start(CoordinatorConfig {
+        // AtBarrier pins the merge order (client-id ascending at each
+        // sync point) so the sealed layout is timing-independent.
+        frontend: FrontendConfig { merge: MergePolicy::AtBarrier, ..FrontendConfig::default() },
+        ..config(shards)
+    });
+    let mut s0 = c.session();
+    let mut s1 = c.session();
+    let (mut counter, mut sheds, mut seals) = (0u64, 0u64, Vec::new());
+    for step in &w.steps {
+        match step {
+            Step::Insert(n) => {
+                let mid = counter + n / 2;
+                let end = counter + n;
+                let (a, b) = std::thread::scope(|scope| {
+                    let h0 = scope.spawn(|| push_range(&mut s0, counter, mid));
+                    let h1 = scope.spawn(|| push_range(&mut s1, mid, end));
+                    (h0.join().expect("client 0 panicked"), h1.join().expect("client 1 panicked"))
+                });
+                sheds += a + b;
+                counter = end;
+                // Pin the merge order per insert *step*: Stats is a sync
+                // point, so both pools drain here — client 0's half then
+                // client 1's half — which makes the merged stream exactly
+                // the serial [start, end) order even when two Insert
+                // steps share one epoch (the workload's opening step).
+                // Every request is a full CHUNK, so this adds no extra
+                // batch-flush boundary either.
+                c.call(Request::Stats);
+            }
+            Step::Work(calls) => match c.call(Request::Work { calls: *calls }) {
+                Response::Worked { .. } => {}
+                other => panic!("work failed: {other:?}"),
+            },
+            Step::Flatten => {
+                c.call(Request::Flatten);
+            }
+            Step::Seal => match c.call(Request::Seal) {
+                Response::Sealed { checksum, .. } => seals.push(checksum),
+                other => panic!("seal failed: {other:?}"),
+            },
+        }
+    }
+    let snap = c.call(Request::Stats).expect_stats();
+    assert_eq!(snap.len, counter, "every admitted value must land");
+    assert_eq!(snap.sessions, 2);
+    assert_eq!(snap.shed_requests, sheds, "shed ledger must match client-observed rejections");
+    c.shutdown();
+    seals
 }

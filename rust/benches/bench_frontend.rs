@@ -1,0 +1,174 @@
+//! §Frontend bench: sustained multi-client throughput and per-request
+//! admission latency through the bounded session frontend, at 1/8/64
+//! client threads against one coordinator (4 shards, eager merge).
+//!
+//! Each client thread pushes a fixed share of the total values in
+//! 256-value insert requests through its own [`ClientSession`],
+//! retrying (with the hint, capped) on typed rejections. The run ends
+//! with a seal barrier, so the wall clock covers admission + cross-client
+//! merge + dispatch + seal — and the sealed epoch length must equal the
+//! sum of the clients' accepted-value ledgers (nothing dropped, nothing
+//! duplicated). Shed counts observed by the clients must match the
+//! coordinator's `shed_requests` metric exactly.
+//!
+//! Emits `BENCH_frontend.json` (schema `bench_frontend/v1`) at the repo
+//! root: per client level, sustained requests/sec plus mean/p50/p99
+//! admission latency (µs) and the shed count. Report-only — no
+//! regression gate yet (see EXPERIMENTS.md §Frontend for the field
+//! definitions and re-baselining rules).
+//!
+//! Run: `cargo bench --bench bench_frontend` (full, 4M values) or
+//!      `cargo bench --bench bench_frontend -- --smoke` (CI, 400k).
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use ggarray::coordinator::request::{Admission, Request, Response};
+use ggarray::coordinator::service::{Coordinator, CoordinatorConfig};
+use ggarray::util::benchkit::BenchSuite;
+use ggarray::util::benchreport::{self, FrontendClientRow, FRONTEND_SCHEMA};
+use ggarray::util::json;
+use ggarray::util::stats::percentile;
+use ggarray::workload::synth_f32;
+
+/// Values per insert request (fixed, so req/s and values/s are
+/// proportional across client levels).
+const VALUES_PER_REQUEST: usize = 256;
+const CLIENT_LEVELS: [usize; 3] = [1, 8, 64];
+
+fn repo_root() -> PathBuf {
+    std::env::var("CARGO_MANIFEST_DIR")
+        .map(|m| PathBuf::from(m).join(".."))
+        .unwrap_or_else(|_| PathBuf::from("."))
+}
+
+/// One client level: `clients` threads split `total_values` evenly,
+/// each timing every request from first `try_insert` to acceptance
+/// (retries included). Returns the report row.
+fn run_level(suite: &mut BenchSuite, clients: usize, total_values: u64) -> FrontendClientRow {
+    let c = Coordinator::start(CoordinatorConfig {
+        blocks: 512,
+        shards: 4,
+        use_artifacts: false,
+        ..CoordinatorConfig::default()
+    });
+    let requests_per_client = ((total_values as usize / VALUES_PER_REQUEST) / clients).max(1);
+    let mut sessions: Vec<_> = (0..clients).map(|_| c.session()).collect();
+
+    let t0 = Instant::now();
+    let outcomes: Vec<(Vec<f64>, u64, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = sessions
+            .iter_mut()
+            .enumerate()
+            .map(|(k, sess)| {
+                s.spawn(move || {
+                    let mut latencies = Vec::with_capacity(requests_per_client);
+                    let mut sheds = 0u64;
+                    let mut accepted = 0u64;
+                    for r in 0..requests_per_client {
+                        let base = ((k * requests_per_client + r) * VALUES_PER_REQUEST) as u64;
+                        let mut values: Vec<f32> =
+                            (0..VALUES_PER_REQUEST as u64).map(|i| synth_f32(base + i)).collect();
+                        let q0 = Instant::now();
+                        loop {
+                            match sess.try_insert(values) {
+                                Admission::Accepted { session_values, .. } => {
+                                    accepted = session_values;
+                                    break;
+                                }
+                                Admission::Rejected { retry_after_hint, values: returned } => {
+                                    sheds += 1;
+                                    values = returned;
+                                    std::thread::sleep(
+                                        retry_after_hint.min(Duration::from_micros(100)),
+                                    );
+                                }
+                                Admission::Closed { .. } => panic!("coordinator closed mid-bench"),
+                            }
+                        }
+                        latencies.push(q0.elapsed().as_secs_f64() * 1e6);
+                    }
+                    (latencies, sheds, accepted)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+    });
+
+    // Seal barrier: drains every client pool, applies every batch, and
+    // closes the wall-clock window — "sustained" includes the merge.
+    let epoch_len = match c.call(Request::Seal) {
+        Response::Sealed { epoch_len, .. } => epoch_len,
+        other => panic!("seal failed: {other:?}"),
+    };
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let accepted_total: u64 = outcomes.iter().map(|(_, _, a)| a).sum();
+    let shed_total: u64 = outcomes.iter().map(|(_, s, _)| s).sum();
+    // Conservation: every accepted value is sealed exactly once.
+    assert_eq!(
+        epoch_len, accepted_total,
+        "{clients} clients: sealed epoch must hold exactly the accepted values"
+    );
+    let snap = c.call(Request::Stats).expect_stats();
+    assert_eq!(snap.sessions, clients as u64);
+    assert_eq!(
+        snap.shed_requests, shed_total,
+        "metrics shed ledger must match client-observed rejections"
+    );
+    assert_eq!(snap.admitted_values, accepted_total);
+    c.shutdown();
+
+    let all_latencies: Vec<f64> = outcomes.into_iter().flat_map(|(l, _, _)| l).collect();
+    let requests_total = (clients * requests_per_client) as f64;
+    let row = FrontendClientRow {
+        clients,
+        req_per_s: requests_total / wall_s,
+        mean_us: all_latencies.iter().sum::<f64>() / all_latencies.len() as f64,
+        p50_us: percentile(&all_latencies, 50.0),
+        p99_us: percentile(&all_latencies, 99.0),
+        shed: shed_total,
+    };
+    suite.record_samples(&format!("admission latency ({clients} clients)"), &all_latencies);
+    eprintln!(
+        "  {:<44} {:>12.0} req/s  (p50 {:.2} µs, p99 {:.2} µs, {} shed)",
+        format!("sustained throughput ({clients} clients)"),
+        row.req_per_s,
+        row.p50_us,
+        row.p99_us,
+        row.shed
+    );
+    row
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let total_values: u64 = if smoke { 400_000 } else { 4_000_000 };
+
+    let mut suite = BenchSuite::new(if smoke {
+        "frontend admission (smoke) — bounded sessions, cross-client merge, eager drain"
+    } else {
+        "frontend admission — bounded sessions, cross-client merge, eager drain"
+    });
+    suite.banner();
+
+    let rows: Vec<FrontendClientRow> =
+        CLIENT_LEVELS.iter().map(|&n| run_level(&mut suite, n, total_values)).collect();
+
+    let fresh = benchreport::frontend_report(smoke, VALUES_PER_REQUEST, total_values, &rows);
+    let path = repo_root().join("BENCH_frontend.json");
+    // Same write policy as bench_hotpath: full runs re-baseline, smoke
+    // runs only bootstrap a missing or schema-mismatched file, so ci.sh
+    // never overwrites the committed baseline with smoke noise.
+    let baseline_ok = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| json::parse(&text).ok())
+        .map(|b| benchreport::schema_of(&b) == Some(FRONTEND_SCHEMA))
+        .unwrap_or(false);
+    if !smoke || !baseline_ok {
+        std::fs::write(&path, fresh.to_string_pretty()).expect("write BENCH_frontend.json");
+        eprintln!("wrote {}", path.display());
+    } else {
+        eprintln!("smoke run: committed baseline {} left intact", path.display());
+    }
+}

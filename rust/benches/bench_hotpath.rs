@@ -44,6 +44,9 @@ use ggarray::sim::clock::Clock;
 use ggarray::sim::memory::VramHeap;
 use ggarray::sim::spec::DeviceSpec;
 use ggarray::util::benchkit::{black_box, BenchConfig, BenchSuite};
+use ggarray::util::benchreport::{
+    self, shard_field, speedup_field, HotpathShardRow, HotpathSpeedup, HOTPATH_SCHEMA,
+};
 use ggarray::util::json::{self, Json};
 use ggarray::util::rng::Rng;
 use ggarray::workload::synth_f32;
@@ -61,8 +64,6 @@ const LARGE_BATCH: usize = 250_000;
 /// Regression gate: fail when a gated metric is slower than
 /// baseline × (1 + GATE_TOLERANCE).
 const GATE_TOLERANCE: f64 = 0.25;
-
-const SCHEMA: &str = "bench_hotpath/v2";
 
 fn repo_root() -> PathBuf {
     // cargo runs bench binaries with cwd = the package root (rust/);
@@ -203,9 +204,10 @@ fn bench_seal_and_query(
 /// = all gates pass).
 fn gate_results(baseline: Option<&Json>, fresh: &Json) -> Vec<String> {
     let mut failures = Vec::new();
-    let lookup = |j: &Json, shard: &str, field: &str| {
-        j.get("shards").and_then(|s| s.get(shard)).and_then(|s| s.get(field)).and_then(Json::as_f64)
-    };
+    // The writer and this gate share the benchreport accessors, and the
+    // build → serialize → parse → extract round trip is unit-tested in
+    // util::benchreport (the nesting can no longer drift silently).
+    let lookup = shard_field;
     if let Some(baseline) = baseline {
         // Regression gates: insert dispatch (both shard counts) and the
         // pooled-seal median (4 shards).
@@ -232,9 +234,7 @@ fn gate_results(baseline: Option<&Json>, fresh: &Json) -> Vec<String> {
     // executors time-slice one core and lose to serial by pure handoff
     // overhead with fully correct code, so the gate demotes to a notice
     // there instead of failing CI.
-    if let Some(speedup) =
-        fresh.get("speedup").and_then(|s| s.get("insert_dispatch_large_batch_4v1")).and_then(Json::as_f64)
-    {
+    if let Some(speedup) = speedup_field(fresh, "insert_dispatch_large_batch_4v1") {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         if speedup <= 1.0 {
             if cores >= 2 {
@@ -429,47 +429,33 @@ fn main() {
          seal {seal_speedup:.2}× — sim model predicts up to 4×"
     );
 
-    let fresh = Json::obj(vec![
-        ("schema", Json::str(SCHEMA)),
-        ("smoke", Json::Bool(smoke)),
-        ("elements", Json::num(ELEMENTS as f64)),
-        (
-            "shards",
-            Json::Obj(
-                vec![
-                    (
-                        "1".to_string(),
-                        Json::obj(vec![
-                            ("insert_dispatch_us", Json::num(insert1)),
-                            ("seal_us", Json::num(seal1)),
-                            ("seal_us_median", Json::num(seal1_median)),
-                            ("sealed_query_1k_us", Json::num(query1)),
-                        ]),
-                    ),
-                    (
-                        "4".to_string(),
-                        Json::obj(vec![
-                            ("insert_dispatch_us", Json::num(insert4)),
-                            ("insert_dispatch_serial_us", Json::num(insert4_serial)),
-                            ("seal_us", Json::num(seal4)),
-                            ("seal_us_median", Json::num(seal4_median)),
-                            ("sealed_query_1k_us", Json::num(query4)),
-                        ]),
-                    ),
-                ]
-                .into_iter()
-                .collect(),
-            ),
-        ),
-        (
-            "speedup",
-            Json::obj(vec![
-                ("batch_elements", Json::num(LARGE_BATCH as f64)),
-                ("insert_dispatch_large_batch_4v1", Json::num(insert_speedup)),
-                ("seal_4v1", Json::num(seal_speedup)),
-            ]),
-        ),
-    ]);
+    let fresh = benchreport::hotpath_report(
+        smoke,
+        ELEMENTS,
+        &[
+            HotpathShardRow {
+                shards: 1,
+                insert_dispatch_us: insert1,
+                insert_dispatch_serial_us: None,
+                seal_us: seal1,
+                seal_us_median: seal1_median,
+                sealed_query_1k_us: query1,
+            },
+            HotpathShardRow {
+                shards: 4,
+                insert_dispatch_us: insert4,
+                insert_dispatch_serial_us: Some(insert4_serial),
+                seal_us: seal4,
+                seal_us_median: seal4_median,
+                sealed_query_1k_us: query4,
+            },
+        ],
+        &HotpathSpeedup {
+            batch_elements: LARGE_BATCH,
+            insert_dispatch_large_batch_4v1: insert_speedup,
+            seal_4v1: seal_speedup,
+        },
+    );
 
     // Gate against the committed baseline before any write. A baseline
     // with a different schema (e.g. pre-executor-pool v1) measured a
@@ -479,11 +465,11 @@ fn main() {
     let mut baseline_exists = true;
     let baseline = match std::fs::read_to_string(&path) {
         Ok(text) => match json::parse(&text) {
-            Ok(b) if b.get("schema").and_then(Json::as_str) == Some(SCHEMA) => Some(b),
+            Ok(b) if benchreport::schema_of(&b) == Some(HOTPATH_SCHEMA) => Some(b),
             Ok(b) => {
                 eprintln!(
-                    "baseline {path:?} has schema {:?} (want {SCHEMA}); re-baselining, regression gate skipped",
-                    b.get("schema").and_then(Json::as_str)
+                    "baseline {path:?} has schema {:?} (want {HOTPATH_SCHEMA}); re-baselining, regression gate skipped",
+                    benchreport::schema_of(&b)
                 );
                 baseline_exists = false;
                 None

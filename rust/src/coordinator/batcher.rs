@@ -97,6 +97,16 @@ impl Batcher {
         None
     }
 
+    /// Owned-buffer variant of [`Batcher::push`] for the frontend drain
+    /// loop: the values join the pending batch and the drained client
+    /// buffer goes straight into the recycle pool, so cross-client
+    /// coalescing adds no steady-state worker-side allocations.
+    pub fn push_owned(&mut self, values: Vec<f32>) -> Option<Batch> {
+        let out = self.push(&values);
+        self.recycle(values);
+        out
+    }
+
     /// Deadline check — the event loop calls this on idle ticks.
     pub fn poll_deadline(&mut self) -> Option<Batch> {
         match self.oldest {
@@ -204,6 +214,25 @@ mod tests {
         }
         assert_eq!(b.flushes(), 8);
         assert_eq!(b.coalesced_total(), 8);
+    }
+
+    #[test]
+    fn push_owned_coalesces_and_recycles_the_client_buffer() {
+        let mut b = Batcher::new(BatchConfig { max_values: 8, max_delay: Duration::from_secs(60) });
+        let client_buf = Vec::from([1.0f32; 6]);
+        assert!(b.push_owned(client_buf).is_none());
+        assert_eq!(b.pending_len(), 6);
+        // Second owned push trips the threshold; the flushed batch holds
+        // both requests' values in admission order.
+        let batch = b.push_owned(Vec::from([2.0f32; 6])).expect("size flush");
+        assert_eq!(batch.requests, 2);
+        assert_eq!(&batch.values[..6], &[1.0; 6]);
+        assert_eq!(&batch.values[6..], &[2.0; 6]);
+        // The drained client buffer was recycled into the spare slot, so
+        // the next pending buffer reuses it instead of allocating.
+        b.recycle(batch.values);
+        assert!(b.push_owned(Vec::from([3.0f32; 4])).is_none());
+        assert_eq!(b.pending_len(), 4);
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Multi-client admission frontend for the coordinator.
+//!
+//! The coordinator worker owns the shards and serialises every mutation,
+//! but the request loop it shipped with was single-producer: one
+//! unbounded envelope channel, one caller at a time. This module puts an
+//! admission layer in front of it, in the style of febft's `RqProcessor`:
+//!
+//! * each concurrent writer holds a [`ClientSession`] with a stable
+//!   client id and a monotonic per-session sequence number;
+//! * every session feeds the worker through its own **bounded** MPSC
+//!   channel (`sync_channel(queue_requests)`), so a fast producer can
+//!   never OOM the queue — admission fails fast instead;
+//! * the worker drains all client pools into the shared [`Batcher`]
+//!   (cross-client coalescing into one proposed batch), always in
+//!   ascending client-id order with per-client FIFO preserved.
+//!
+//! # Backpressure contract
+//!
+//! [`ClientSession::try_insert`] never blocks the worker and never drops
+//! silently. When the session's channel is full it returns
+//! [`Admission::Rejected`] with a `retry_after_hint` **and hands the
+//! payload back** so the caller can retry without recloning; the
+//! rejection is counted in the shared shed ledger, which surfaces as
+//! `shed_requests` in the metrics snapshot. A rejected request consumes
+//! no sequence number — the accepted stream stays contiguous.
+//!
+//! # Determinism contract
+//!
+//! The sealed layout depends only on the order values reach the batcher
+//! (flushes are size-triggered, never timing-triggered mid-stream). Two
+//! merge policies trade determinism against latency:
+//!
+//! * [`MergePolicy::AtBarrier`] drains client pools **only at sync
+//!   points** (seal / flatten / work / stats / clear / shutdown). With
+//!   clients quiesced before each barrier, the merged stream is exactly
+//!   "phase by phase, client id ascending, per-client FIFO" — a priori
+//!   identical to replaying the same requests serially through one
+//!   session, so sealed epochs are byte-identical.
+//! * [`MergePolicy::Eager`] (default) additionally drains on every
+//!   admission poke and idle tick — the throughput mode, where merge
+//!   order is timing-dependent.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::request::{Admission, Request, Response};
+use super::service::Envelope;
+
+/// When the worker merges admitted client pools into the batcher.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergePolicy {
+    /// Drain on every admission poke and idle tick: lowest latency,
+    /// timing-dependent merge order.
+    Eager,
+    /// Drain only at sync points, in client-id order: with clients
+    /// quiesced at each barrier, sealed layout is byte-identical to a
+    /// serial single-session replay.
+    AtBarrier,
+}
+
+/// Admission-layer configuration, embedded in `CoordinatorConfig`.
+#[derive(Debug, Clone)]
+pub struct FrontendConfig {
+    /// Bound of each client's request channel: the per-session admission
+    /// window. A full channel sheds (typed rejection), it never grows.
+    pub queue_requests: usize,
+    /// Hint returned with [`Admission::Rejected`] — how long the client
+    /// should wait before retrying. Advisory, not enforced.
+    pub retry_after: Duration,
+    pub merge: MergePolicy,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> FrontendConfig {
+        FrontendConfig {
+            queue_requests: 128,
+            retry_after: Duration::from_micros(200),
+            merge: MergePolicy::Eager,
+        }
+    }
+}
+
+/// One admitted insert travelling a session's bounded channel.
+#[derive(Debug)]
+pub struct SessionInsert {
+    /// Per-session monotonic sequence number (admission order).
+    pub seq: u64,
+    pub values: Vec<f32>,
+}
+
+/// State shared between every session and the worker: client-id
+/// allocation plus the admission/shed ledgers. All counters are
+/// monotonic except `pooled_values`, a gauge of admitted-but-unmerged
+/// values.
+#[derive(Debug, Default)]
+pub struct FrontendShared {
+    next_client: AtomicU64,
+    pooled_values: AtomicUsize,
+    shed_requests: AtomicU64,
+}
+
+impl FrontendShared {
+    /// Sessions ever opened on this coordinator.
+    pub fn sessions(&self) -> u64 {
+        self.next_client.load(Ordering::Acquire)
+    }
+
+    /// Requests shed by admission (typed rejections) across all sessions.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_requests.load(Ordering::Acquire)
+    }
+
+    /// Values admitted but not yet merged into the batcher (gauge).
+    pub fn pooled_values(&self) -> usize {
+        self.pooled_values.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn allocate_client(&self) -> u64 {
+        self.next_client.fetch_add(1, Ordering::AcqRel)
+    }
+
+    pub(crate) fn add_pooled(&self, n: usize) {
+        self.pooled_values.fetch_add(n, Ordering::AcqRel);
+    }
+
+    pub(crate) fn sub_pooled(&self, n: usize) {
+        self.pooled_values.fetch_sub(n, Ordering::AcqRel);
+    }
+
+    pub(crate) fn add_shed(&self) {
+        self.shed_requests.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+/// Worker-side end of one session: the bounded receiver plus the next
+/// sequence number expected from it (admission-order contiguity check).
+pub(crate) struct ClientLane {
+    pub(crate) id: u64,
+    pub(crate) rx: Receiver<SessionInsert>,
+    pub(crate) next_seq: u64,
+}
+
+/// A client's handle into the admission layer. Obtained from
+/// `Coordinator::session()`; one per writer thread (`Send`, not
+/// `Clone` — the sequence number is the session's identity).
+///
+/// Inserts go through [`ClientSession::try_insert`] (bounded, sheds on
+/// overload); every other request kind goes through
+/// [`ClientSession::call`], which is synchronous and acts as a barrier
+/// for this session's admitted inserts under any [`MergePolicy`].
+pub struct ClientSession {
+    id: u64,
+    next_seq: u64,
+    accepted_values: u64,
+    data: SyncSender<SessionInsert>,
+    tx: mpsc::Sender<Envelope>,
+    shared: Arc<FrontendShared>,
+    retry_after: Duration,
+    eager: bool,
+}
+
+impl ClientSession {
+    /// Open a session: allocate a client id, build the bounded data
+    /// channel, and register the worker-side lane. Data admitted before
+    /// the registration envelope is processed simply waits in the
+    /// channel — no ordering race.
+    pub(crate) fn connect(
+        tx: mpsc::Sender<Envelope>,
+        shared: Arc<FrontendShared>,
+        cfg: &FrontendConfig,
+    ) -> ClientSession {
+        let id = shared.allocate_client();
+        let (data, rx) = mpsc::sync_channel::<SessionInsert>(cfg.queue_requests.max(1));
+        let _ = tx.send(Envelope::Register { id, rx });
+        ClientSession {
+            id,
+            next_seq: 0,
+            accepted_values: 0,
+            data,
+            tx,
+            shared,
+            retry_after: cfg.retry_after,
+            eager: cfg.merge == MergePolicy::Eager,
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Sequence number the next accepted insert will get (== accepted
+    /// request count so far).
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Values accepted through this session so far (the client-side
+    /// ledger the worker's `elements_inserted` must reconcile with).
+    pub fn accepted_values(&self) -> u64 {
+        self.accepted_values
+    }
+
+    /// Non-blocking admission. `Accepted` took ownership of the payload;
+    /// `Rejected`/`Closed` hand it back untouched so the caller can
+    /// retry or repurpose it without a clone.
+    pub fn try_insert(&mut self, values: Vec<f32>) -> Admission {
+        let n = values.len();
+        // Optimistically count the values as pooled *before* try_send:
+        // once the send succeeds the worker may drain (and decrement)
+        // immediately, so incrementing afterwards could underflow the
+        // gauge. Roll back on rejection.
+        self.shared.add_pooled(n);
+        match self.data.try_send(SessionInsert { seq: self.next_seq, values }) {
+            Ok(()) => {
+                self.next_seq += 1;
+                self.accepted_values += n as u64;
+                if self.eager {
+                    let _ = self.tx.send(Envelope::Poke);
+                }
+                Admission::Accepted { seq: self.next_seq - 1, session_values: self.accepted_values }
+            }
+            Err(TrySendError::Full(ins)) => {
+                self.shared.sub_pooled(n);
+                self.shared.add_shed();
+                Admission::Rejected { retry_after_hint: self.retry_after, values: ins.values }
+            }
+            Err(TrySendError::Disconnected(ins)) => {
+                self.shared.sub_pooled(n);
+                Admission::Closed { values: ins.values }
+            }
+        }
+    }
+
+    /// Admission with bounded-sleep retries until accepted (or the
+    /// coordinator closes). Returns the final admission plus how many
+    /// times this request was shed along the way.
+    ///
+    /// Under [`MergePolicy::AtBarrier`] a full channel only drains at a
+    /// sync point, so callers must size `queue_requests` to cover a full
+    /// between-barriers burst — this helper cannot unstick an
+    /// under-provisioned window on its own.
+    pub fn insert_retrying(&mut self, values: Vec<f32>) -> (Admission, u64) {
+        let mut sheds = 0u64;
+        let mut payload = values;
+        loop {
+            match self.try_insert(payload) {
+                Admission::Rejected { retry_after_hint, values } => {
+                    sheds += 1;
+                    payload = values;
+                    std::thread::sleep(retry_after_hint.min(Duration::from_millis(1)));
+                }
+                done => return (done, sheds),
+            }
+        }
+    }
+
+    /// Synchronous request on the control channel (same contract as
+    /// `Client::call`). Seal/flatten/work/stats/clear are sync points:
+    /// the worker drains every registered client pool before serving
+    /// them, so this session's accepted inserts are always visible to
+    /// its own subsequent sync calls.
+    pub fn call(&self, req: Request) -> Response {
+        let (rtx, rrx) = mpsc::channel();
+        if self.tx.send(Envelope::Call(req, rtx)).is_err() {
+            return Response::Error("coordinator stopped".into());
+        }
+        rrx.recv().unwrap_or_else(|_| Response::Error("coordinator dropped reply".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::request::{checksum, Request};
+    use super::super::service::{Coordinator, CoordinatorConfig};
+    use super::*;
+
+    fn frontend_cfg(merge: MergePolicy) -> CoordinatorConfig {
+        CoordinatorConfig {
+            blocks: 8,
+            shards: 1,
+            first_bucket_size: 16,
+            use_artifacts: false,
+            frontend: FrontendConfig { queue_requests: 8, merge, ..FrontendConfig::default() },
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    #[test]
+    fn session_ids_monotonic_and_counted() {
+        let c = Coordinator::start(frontend_cfg(MergePolicy::Eager));
+        let a = c.session();
+        let b = c.session();
+        assert_eq!(a.id(), 0);
+        assert_eq!(b.id(), 1);
+        let snap = c.call(Request::Stats).expect_stats();
+        assert_eq!(snap.sessions, 2);
+        c.shutdown();
+    }
+
+    #[test]
+    fn at_barrier_merges_in_client_id_order() {
+        // Session 1 admits first, session 0 second — AtBarrier still
+        // merges client 0 before client 1 at the flatten barrier, so the
+        // layout matches the deterministic merge order, not wall time.
+        let c = Coordinator::start(frontend_cfg(MergePolicy::AtBarrier));
+        let mut s0 = c.session();
+        let mut s1 = c.session();
+        let (seq, total) = s1.try_insert(vec![10.0, 11.0]).expect_accepted();
+        assert_eq!((seq, total), (0, 2));
+        let (seq, total) = s0.try_insert(vec![1.0, 2.0]).expect_accepted();
+        assert_eq!((seq, total), (0, 2));
+        match s0.call(Request::Flatten) {
+            Response::Flattened { len, checksum: got, .. } => {
+                assert_eq!(len, 4);
+                assert_eq!(got, checksum(&[1.0, 2.0, 10.0, 11.0]));
+            }
+            other => panic!("flatten failed: {other:?}"),
+        }
+        assert_eq!(s0.accepted_values(), 2);
+        assert_eq!(s1.accepted_values(), 2);
+        c.shutdown();
+    }
+
+    #[test]
+    fn session_insert_then_own_sync_call_sees_data() {
+        let c = Coordinator::start(frontend_cfg(MergePolicy::Eager));
+        let mut s = c.session();
+        for i in 0..4 {
+            let adm = s.try_insert(vec![i as f32; 8]);
+            assert!(adm.is_accepted(), "unexpected admission: {adm:?}");
+        }
+        assert_eq!(s.next_seq(), 4);
+        let snap = s.call(Request::Stats).expect_stats();
+        assert_eq!(snap.len, 32);
+        assert_eq!(snap.admitted_requests, 4);
+        assert_eq!(snap.admitted_values, 32);
+        assert_eq!(snap.shed_requests, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn closed_coordinator_hands_payload_back() {
+        let c = Coordinator::start(frontend_cfg(MergePolicy::Eager));
+        let mut s = c.session();
+        c.shutdown();
+        match s.try_insert(vec![1.0, 2.0, 3.0]) {
+            Admission::Closed { values } => assert_eq!(values, vec![1.0, 2.0, 3.0]),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        assert!(matches!(s.call(Request::Stats), Response::Error(_)));
+    }
+}

@@ -79,6 +79,14 @@ pub struct Metrics {
     started: Instant,
     pub inserts_requested: u64,
     pub elements_inserted: u64,
+    /// Frontend-admitted insert requests the worker has merged out of the
+    /// client pools (each also counts once in `inserts_requested`).
+    pub admitted_requests: u64,
+    /// Values carried by those merged requests.
+    pub admitted_values: u64,
+    /// Frontend drain sweeps that moved at least one pooled request into
+    /// the batcher (febft-style "proposed batch" formations).
+    pub proposals: u64,
     pub batches: u64,
     pub work_calls: u64,
     pub flattens: u64,
@@ -124,6 +132,9 @@ impl Metrics {
             started: Instant::now(),
             inserts_requested: 0,
             elements_inserted: 0,
+            admitted_requests: 0,
+            admitted_values: 0,
+            proposals: 0,
             batches: 0,
             work_calls: 0,
             flattens: 0,
@@ -173,6 +184,9 @@ impl Metrics {
             uptime_s: self.started.elapsed().as_secs_f64(),
             inserts_requested: self.inserts_requested,
             elements_inserted: self.elements_inserted,
+            admitted_requests: self.admitted_requests,
+            admitted_values: self.admitted_values,
+            proposals: self.proposals,
             batches: self.batches,
             work_calls: self.work_calls,
             flattens: self.flattens,
@@ -213,6 +227,11 @@ impl Metrics {
             // Serial execution unless the worker attaches its pool via
             // [`MetricsSnapshot::with_executors`].
             executors: 1,
+            // Frontend session/shed context defaults to "no sessions";
+            // the worker attaches the shared admission ledger via
+            // [`MetricsSnapshot::with_frontend`].
+            sessions: 0,
+            shed_requests: 0,
         }
     }
 }
@@ -229,6 +248,14 @@ pub struct MetricsSnapshot {
     pub uptime_s: f64,
     pub inserts_requested: u64,
     pub elements_inserted: u64,
+    /// Frontend-admitted insert requests merged out of client pools
+    /// (subset of `inserts_requested`; `Request::Insert` calls on the
+    /// legacy single-producer path don't count here).
+    pub admitted_requests: u64,
+    /// Values carried by those merged requests.
+    pub admitted_values: u64,
+    /// Frontend drain sweeps that moved pooled requests into the batcher.
+    pub proposals: u64,
     pub batches: u64,
     pub work_calls: u64,
     pub flattens: u64,
@@ -288,6 +315,12 @@ pub struct MetricsSnapshot {
     /// the worker thread, N = persistent pool with one executor per
     /// shard ([`crate::coordinator::pool::ShardPool`]).
     pub executors: usize,
+    /// Client sessions ever opened on the admission frontend.
+    pub sessions: u64,
+    /// Insert requests shed by admission (typed `Rejected` responses):
+    /// the backpressure ledger — every rejection a client observed is
+    /// counted here, never dropped silently.
+    pub shed_requests: u64,
 }
 
 impl MetricsSnapshot {
@@ -330,6 +363,16 @@ impl MetricsSnapshot {
     /// with one executor thread per shard).
     pub fn with_executors(mut self, executors: usize) -> MetricsSnapshot {
         self.executors = executors;
+        self
+    }
+
+    /// Attach the admission frontend's shared ledger (session count and
+    /// shed-request total live in atomics outside the worker's
+    /// [`Metrics`], since sessions update them without a worker round
+    /// trip).
+    pub fn with_frontend(mut self, sessions: u64, shed_requests: u64) -> MetricsSnapshot {
+        self.sessions = sessions;
+        self.shed_requests = shed_requests;
         self
     }
 
@@ -382,6 +425,11 @@ impl std::fmt::Display for MetricsSnapshot {
         writeln!(f, "elements inserted    {}", self.elements_inserted)?;
         writeln!(f, "batches (coalescing) {} ({:.1}×)", self.batches, self.coalescing())?;
         writeln!(f, "batcher flushes      {} ({:.1}× coalesced)", self.flushes, self.flush_coalescing())?;
+        writeln!(
+            f,
+            "frontend sessions    {} ({} admitted requests / {} values, {} shed, {} proposals)",
+            self.sessions, self.admitted_requests, self.admitted_values, self.shed_requests, self.proposals
+        )?;
         writeln!(f, "work calls           {}", self.work_calls)?;
         writeln!(f, "flattens / seals     {} / {}", self.flattens, self.seals)?;
         writeln!(f, "queries              {}", self.queries)?;
@@ -518,6 +566,27 @@ mod tests {
         assert_eq!(s.executors, 4);
         assert!(s.to_string().contains("4 executors: pooled"), "{s}");
         assert!(s.to_string().contains("wall insert/work/flat"), "{s}");
+    }
+
+    #[test]
+    fn with_frontend_attaches_admission_ledger() {
+        let mut m = Metrics::new();
+        m.admitted_requests = 12;
+        m.admitted_values = 480;
+        m.proposals = 3;
+        let s = m.snapshot(480, 512, 2048);
+        // Worker-side admission counters flow through snapshot()...
+        assert_eq!(s.admitted_requests, 12);
+        assert_eq!(s.admitted_values, 480);
+        assert_eq!(s.proposals, 3);
+        // ...while the shared session/shed ledger defaults to zero until
+        // the worker attaches it.
+        assert_eq!((s.sessions, s.shed_requests), (0, 0));
+        let s = s.with_frontend(2, 5);
+        assert_eq!(s.sessions, 2);
+        assert_eq!(s.shed_requests, 5);
+        assert!(s.to_string().contains("frontend sessions"), "{s}");
+        assert!(s.to_string().contains("5 shed"), "{s}");
     }
 
     #[test]

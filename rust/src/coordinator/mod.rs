@@ -19,8 +19,20 @@
 //! (one executor thread + mailbox per shard; serial mode stays
 //! byte-identical via `CoordinatorConfig::executor_threads`). See
 //! [`service`] for the event loop.
+//!
+//! Concurrent writers enter through the admission [`frontend`]: each
+//! holds a [`frontend::ClientSession`] (stable client id, monotonic
+//! sequence numbers) feeding the worker over its own *bounded* channel.
+//! A full channel sheds with a typed `Rejected { retry_after_hint }` —
+//! payload handed back, counted in the `shed_requests` metric — never
+//! blocking the worker and never dropping silently. The worker merges
+//! all client pools into the shared [`batcher::Batcher`] in ascending
+//! client-id order with per-client FIFO preserved, so under
+//! [`frontend::MergePolicy::AtBarrier`] sealed layouts are byte-identical
+//! to a serial single-session replay of the same requests.
 
 pub mod batcher;
+pub mod frontend;
 pub mod metrics;
 pub mod pool;
 pub mod request;

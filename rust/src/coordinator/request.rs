@@ -1,5 +1,7 @@
 //! Request/response protocol of the coordinator service.
 
+use std::time::Duration;
+
 use super::metrics::MetricsSnapshot;
 
 /// Operations a client can submit.
@@ -127,6 +129,41 @@ impl Response {
     }
 }
 
+/// Admission verdict for a session insert (the bounded-frontend
+/// counterpart of `Response::Inserted`). Backpressure contract: a
+/// non-accepted verdict always hands the payload back — admission never
+/// drops values silently and never blocks the worker.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Admission {
+    /// The insert was admitted to the session's bounded channel.
+    Accepted {
+        /// Sequence number this request got (per-session, monotonic,
+        /// gap-free over accepted requests).
+        seq: u64,
+        /// Total values accepted through the session so far.
+        session_values: u64,
+    },
+    /// The session's channel is full: load was shed. Retry after the
+    /// hint (advisory); the payload is returned untouched.
+    Rejected { retry_after_hint: Duration, values: Vec<f32> },
+    /// The coordinator has stopped; the payload is returned untouched.
+    Closed { values: Vec<f32> },
+}
+
+impl Admission {
+    pub fn is_accepted(&self) -> bool {
+        matches!(self, Admission::Accepted { .. })
+    }
+
+    /// Convenience for tests: `(seq, session_values)` or panic.
+    pub fn expect_accepted(self) -> (u64, u64) {
+        match self {
+            Admission::Accepted { seq, session_values } => (seq, session_values),
+            other => panic!("expected Accepted, got {other:?}"),
+        }
+    }
+}
+
 /// Order-sensitive checksum used by `Flattened` (FNV-1a over bit
 /// patterns).
 pub fn checksum(data: &[f32]) -> u64 {
@@ -153,5 +190,31 @@ mod tests {
     #[should_panic(expected = "expected Inserted")]
     fn expect_inserted_panics_on_error() {
         Response::Error("nope".into()).expect_inserted();
+    }
+
+    #[test]
+    fn admission_verdicts_round_trip_payloads() {
+        let accepted = Admission::Accepted { seq: 3, session_values: 40 };
+        assert!(accepted.is_accepted());
+        assert_eq!(accepted.expect_accepted(), (3, 40));
+        let rejected = Admission::Rejected {
+            retry_after_hint: Duration::from_micros(200),
+            values: vec![1.0, 2.0],
+        };
+        assert!(!rejected.is_accepted());
+        match rejected {
+            Admission::Rejected { retry_after_hint, values } => {
+                assert_eq!(retry_after_hint, Duration::from_micros(200));
+                assert_eq!(values, vec![1.0, 2.0]);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "expected Accepted")]
+    fn expect_accepted_panics_on_rejection() {
+        Admission::Rejected { retry_after_hint: Duration::ZERO, values: Vec::new() }
+            .expect_accepted();
     }
 }

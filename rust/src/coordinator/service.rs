@@ -50,7 +50,8 @@
 //! in-process service is equivalent to (and simpler than) a tokio
 //! single-worker runtime.
 
-use std::sync::mpsc;
+use std::sync::mpsc::{self, Receiver, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -64,6 +65,7 @@ use crate::sim::spec::DeviceSpec;
 use crate::workload::{synth_f32, Step, WorkloadSpec};
 
 use super::batcher::{BatchConfig, Batcher};
+use super::frontend::{ClientLane, ClientSession, FrontendConfig, FrontendShared, MergePolicy, SessionInsert};
 use super::metrics::{Metrics, ParallelCost};
 use super::pool::ShardPool;
 use super::request::{checksum, Request, Response};
@@ -116,6 +118,10 @@ pub struct CoordinatorConfig {
     /// clamp to it). `0` = auto: honour the `GG_THREADS` environment
     /// variable if set, else pool whenever there is more than one shard.
     pub executor_threads: usize,
+    /// Multi-client admission layer (see [`super::frontend`]): per-session
+    /// bounded channel depth, retry hint, and the merge policy governing
+    /// when pooled client requests coalesce into the batcher.
+    pub frontend: FrontendConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -134,6 +140,7 @@ impl Default for CoordinatorConfig {
             shards: 1,
             compact_segments: 4,
             executor_threads: 0,
+            frontend: FrontendConfig::default(),
         }
     }
 }
@@ -396,14 +403,40 @@ fn gather_demand_fits(shards: &[Shard]) -> bool {
     shards.iter().all(|s| s.len() as u64 * 4 <= s.heap_free())
 }
 
-enum Envelope {
+/// Requests that act as frontend sync points: every registered client
+/// pool is merged into the batcher before these are served. Queries and
+/// legacy inserts deliberately do NOT drain — a read must not perturb
+/// the deterministic merge order, so mid-phase queries observe state
+/// frozen at the last sync point (plus legacy-path inserts).
+fn needs_frontend_barrier(req: &Request) -> bool {
+    matches!(
+        req,
+        Request::Seal
+            | Request::Flatten
+            | Request::Work { .. }
+            | Request::Stats
+            | Request::Clear
+            | Request::Shutdown
+    )
+}
+
+pub(crate) enum Envelope {
     Call(Request, mpsc::Sender<Response>),
+    /// A new [`ClientSession`] handing the worker its lane: the receiving
+    /// end of the session's bounded data channel.
+    Register { id: u64, rx: Receiver<SessionInsert> },
+    /// A session admitted an insert (eager merge mode): wake the worker
+    /// so it drains the client pools without waiting for a sync point.
+    Poke,
 }
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
     tx: mpsc::Sender<Envelope>,
     worker: Option<JoinHandle<()>>,
+    /// Admission-frontend state shared with every [`ClientSession`].
+    shared: Arc<FrontendShared>,
+    frontend_cfg: FrontendConfig,
 }
 
 impl Coordinator {
@@ -419,11 +452,14 @@ impl Coordinator {
     pub fn try_start(cfg: CoordinatorConfig) -> Result<Coordinator, ConfigError> {
         cfg.validate()?;
         let (tx, rx) = mpsc::channel::<Envelope>();
+        let shared = Arc::new(FrontendShared::default());
+        let frontend_cfg = cfg.frontend.clone();
+        let worker_shared = Arc::clone(&shared);
         let worker = std::thread::Builder::new()
             .name("ggarray-coordinator".into())
-            .spawn(move || Worker::new(cfg).run(rx))
+            .spawn(move || Worker::new(cfg, worker_shared).run(rx))
             .expect("spawn coordinator worker");
-        Ok(Coordinator { tx, worker: Some(worker) })
+        Ok(Coordinator { tx, worker: Some(worker), shared, frontend_cfg })
     }
 
     /// Synchronous call (delegates to a [`Client`] over the same
@@ -441,6 +477,15 @@ impl Coordinator {
     /// its own reply channel; the worker serialises requests).
     pub fn client(&self) -> Client {
         Client { tx: self.tx.clone() }
+    }
+
+    /// Open an admission-controlled [`ClientSession`]: a stable client
+    /// id, a monotonic sequence number, and a **bounded** insert channel
+    /// that sheds (typed rejection) instead of growing without limit.
+    /// One per writer thread; see [`super::frontend`] for the
+    /// backpressure and determinism contracts.
+    pub fn session(&self) -> ClientSession {
+        ClientSession::connect(self.tx.clone(), Arc::clone(&self.shared), &self.frontend_cfg)
     }
 
     /// Graceful stop.
@@ -510,12 +555,17 @@ struct Worker {
     /// spawned once here, never per batch; shard-dispatching ops fan out
     /// to it and fan back in at a barrier.
     pool: Option<ShardPool>,
+    /// Admission ledger shared with every [`ClientSession`].
+    shared: Arc<FrontendShared>,
+    /// Registered client lanes, kept sorted by client id — the
+    /// deterministic drain order of the cross-client merge.
+    lanes: Vec<ClientLane>,
 }
 
 impl Worker {
     /// Build the worker state. The config was validated by
     /// [`Coordinator::try_start`], so the geometry divides evenly here.
-    fn new(cfg: CoordinatorConfig) -> Worker {
+    fn new(cfg: CoordinatorConfig, shared: Arc<FrontendShared>) -> Worker {
         debug_assert!(cfg.validate().is_ok());
         let blocks_per_shard = cfg.blocks / cfg.shards;
         let executor = if cfg.use_artifacts {
@@ -564,6 +614,8 @@ impl Worker {
             scratch: DispatchScratch::new(),
             flatten_pool: Vec::new(),
             pool,
+            shared,
+            lanes: Vec::new(),
             cfg,
         }
     }
@@ -577,6 +629,14 @@ impl Worker {
                 .max(Duration::from_micros(100));
             match rx.recv_timeout(wait) {
                 Ok(Envelope::Call(req, reply)) => {
+                    // Sync points merge every client pool first (the
+                    // barrier drain), so a session's accepted inserts are
+                    // always visible to the sync ops that follow them —
+                    // and so the AtBarrier merge order is exactly
+                    // client-id ascending, per-client FIFO.
+                    if needs_frontend_barrier(&req) && !self.lanes.is_empty() {
+                        self.drain_frontend(true);
+                    }
                     let t0 = Instant::now();
                     let stop = matches!(req, Request::Shutdown);
                     let resp = self.handle(req);
@@ -586,9 +646,21 @@ impl Worker {
                         return;
                     }
                 }
+                Ok(Envelope::Register { id, rx }) => {
+                    let at = self.lanes.partition_point(|l| l.id < id);
+                    self.lanes.insert(at, ClientLane { id, rx, next_seq: 0 });
+                }
+                Ok(Envelope::Poke) => {
+                    if self.cfg.frontend.merge == MergePolicy::Eager {
+                        self.drain_frontend(false);
+                    }
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     if let Some(batch) = self.batcher.poll_deadline() {
                         self.apply_batch(batch.values, batch.requests);
+                    }
+                    if self.cfg.frontend.merge == MergePolicy::Eager && !self.lanes.is_empty() {
+                        self.drain_frontend(false);
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Disconnected) => return,
@@ -659,6 +731,65 @@ impl Worker {
     fn barrier(&mut self) {
         if let Some(batch) = self.batcher.flush() {
             self.apply_batch(batch.values, batch.requests);
+        }
+    }
+
+    /// Merge admitted client-pool inserts into the batcher (the
+    /// febft-style proposal step): sweep the lanes in ascending client-id
+    /// order, moving each lane's queued requests in FIFO order, each
+    /// sweep bounded to `queue_requests` per lane so one hot producer
+    /// cannot starve the loop. A `barrier` drain repeats the sweep until
+    /// nothing moves (quiesced clients ⇒ one productive sweep), a
+    /// pressure drain (poke / idle tick, eager mode) does one sweep.
+    /// Size-triggered batch flushes dispatch inline, preserving the
+    /// merged stream order.
+    fn drain_frontend(&mut self, barrier: bool) {
+        loop {
+            let mut moved = 0usize;
+            let mut lane_idx = 0;
+            while lane_idx < self.lanes.len() {
+                let mut disconnected = false;
+                for _ in 0..self.cfg.frontend.queue_requests.max(1) {
+                    let lane = &mut self.lanes[lane_idx];
+                    match lane.rx.try_recv() {
+                        Ok(ins) => {
+                            debug_assert_eq!(
+                                ins.seq, lane.next_seq,
+                                "client {} admission stream must be gap-free",
+                                lane.id
+                            );
+                            lane.next_seq = ins.seq + 1;
+                            moved += 1;
+                            self.shared.sub_pooled(ins.values.len());
+                            self.metrics.inserts_requested += 1;
+                            self.metrics.admitted_requests += 1;
+                            self.metrics.admitted_values += ins.values.len() as u64;
+                            if let Some(batch) = self.batcher.push_owned(ins.values) {
+                                self.apply_batch(batch.values, batch.requests);
+                            }
+                        }
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            // Session dropped and its pool is fully
+                            // drained (Disconnected is only returned on
+                            // an empty buffer) — retire the lane.
+                            disconnected = true;
+                            break;
+                        }
+                    }
+                }
+                if disconnected {
+                    self.lanes.remove(lane_idx);
+                } else {
+                    lane_idx += 1;
+                }
+            }
+            if moved > 0 {
+                self.metrics.proposals += 1;
+            }
+            if !(barrier && moved > 0) {
+                return;
+            }
         }
     }
 
@@ -1044,7 +1175,8 @@ impl Worker {
                     )
                     .with_memory(self.epochs.sealed_bytes(), heap_used)
                     .with_batching(self.batcher.flushes(), self.batcher.coalesced_total())
-                    .with_executors(self.pool.as_ref().map(|p| p.threads()).unwrap_or(1));
+                    .with_executors(self.pool.as_ref().map(|p| p.threads()).unwrap_or(1))
+                    .with_frontend(self.shared.sessions(), self.shared.shed_total());
                 Response::Stats(snap)
             }
             Request::Clear => {

@@ -105,6 +105,25 @@
 //!   wall-clock trajectory with a regression gate
 //!   (`BENCH_hotpath.json` via `benches/bench_hotpath.rs`; see
 //!   EXPERIMENTS.md §Perf).
+//! * **Multi-client admission frontend** — the coordinator serves many
+//!   concurrent clients through bounded
+//!   [`coordinator::frontend::ClientSession`] handles: each session
+//!   owns a bounded request
+//!   channel (the admission window) and a monotonic sequence counter,
+//!   and the worker coalesces all client pools into the shared batcher
+//!   in client-id order (per-client FIFO) before every sync point.
+//!   Backpressure *sheds instead of blocking* — a full window returns a
+//!   typed [`coordinator::request::Admission::Rejected`] with the
+//!   payload handed back and a retry hint; the worker never waits on a
+//!   slow client and every shed lands in the `shed_requests` metric.
+//!   Under [`coordinator::frontend::MergePolicy::AtBarrier`] the merged
+//!   value stream — and therefore the sealed layout, byte-for-byte — is
+//!   a pure function of the per-client traces, independent of thread
+//!   timing (property-tested at 1/4/16 clients × 1/2/4 shards × both
+//!   executor modes against a serial single-session replay; sustained
+//!   req/s and p50/p99 admission latency tracked in
+//!   `BENCH_frontend.json` via `benches/bench_frontend.rs`; see
+//!   EXPERIMENTS.md §Frontend).
 //!
 //! See `examples/sharded_two_phase.rs` for the end-to-end flow and
 //! `rust/benches/bench_shards.rs` for the scaling shape.
@@ -140,7 +159,8 @@ pub mod prelude {
         memmap::MemMapArray, semistatic::SemiStaticArray, static_array::StaticArray, GrowableArray,
     };
     pub use crate::coordinator::{
-        request::{Request, Response},
+        frontend::{ClientSession, FrontendConfig, MergePolicy},
+        request::{Admission, Request, Response},
         service::{drive_workload, Coordinator, CoordinatorConfig, WorkloadRun},
         shard::{Epoch, EpochManager, Shard, ShardConfig},
     };

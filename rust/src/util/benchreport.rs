@@ -1,0 +1,244 @@
+//! Machine-readable bench report schemas (the `BENCH_*.json` baselines
+//! at the repo root): typed row structs, report builders and field
+//! accessors shared by the bench binaries and their regression gates.
+//!
+//! The point of centralising this: the JSON nesting a gate *reads* is
+//! produced by the same code the bench *writes*, and the round trip
+//! (build → serialize → parse → extract gate fields) is unit-tested
+//! here once instead of being desk-checked in every bench binary.
+
+use std::collections::BTreeMap;
+
+use super::json::Json;
+
+/// Schema tag of `BENCH_hotpath.json` (see `benches/bench_hotpath.rs`).
+pub const HOTPATH_SCHEMA: &str = "bench_hotpath/v2";
+/// Schema tag of `BENCH_frontend.json` (see `benches/bench_frontend.rs`).
+pub const FRONTEND_SCHEMA: &str = "bench_frontend/v1";
+
+/// One `shards.<n>` row of the hotpath report.
+#[derive(Debug, Clone)]
+pub struct HotpathShardRow {
+    pub shards: usize,
+    /// Median wall µs of one large-batch insert dispatch.
+    pub insert_dispatch_us: f64,
+    /// Same dispatch forced through the serial loop at this shard count
+    /// — only recorded for multi-shard rows (the 1-shard dispatch *is*
+    /// serial), `None` omits the field from the JSON.
+    pub insert_dispatch_serial_us: Option<f64>,
+    pub seal_us: f64,
+    pub seal_us_median: f64,
+    pub sealed_query_1k_us: f64,
+}
+
+impl HotpathShardRow {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("insert_dispatch_us", Json::num(self.insert_dispatch_us)),
+            ("seal_us", Json::num(self.seal_us)),
+            ("seal_us_median", Json::num(self.seal_us_median)),
+            ("sealed_query_1k_us", Json::num(self.sealed_query_1k_us)),
+        ];
+        if let Some(serial) = self.insert_dispatch_serial_us {
+            fields.push(("insert_dispatch_serial_us", Json::num(serial)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// The hotpath report's `speedup` section (absolute-gate inputs).
+#[derive(Debug, Clone)]
+pub struct HotpathSpeedup {
+    pub batch_elements: usize,
+    pub insert_dispatch_large_batch_4v1: f64,
+    pub seal_4v1: f64,
+}
+
+/// Assemble a `bench_hotpath/v2` report (rows keyed by shard count:
+/// `"1"`, `"4"`, …).
+pub fn hotpath_report(
+    smoke: bool,
+    elements: usize,
+    rows: &[HotpathShardRow],
+    speedup: &HotpathSpeedup,
+) -> Json {
+    let shards: BTreeMap<String, Json> =
+        rows.iter().map(|r| (r.shards.to_string(), r.to_json())).collect();
+    Json::obj(vec![
+        ("schema", Json::str(HOTPATH_SCHEMA)),
+        ("smoke", Json::Bool(smoke)),
+        ("elements", Json::num(elements as f64)),
+        ("shards", Json::Obj(shards)),
+        (
+            "speedup",
+            Json::obj(vec![
+                ("batch_elements", Json::num(speedup.batch_elements as f64)),
+                (
+                    "insert_dispatch_large_batch_4v1",
+                    Json::num(speedup.insert_dispatch_large_batch_4v1),
+                ),
+                ("seal_4v1", Json::num(speedup.seal_4v1)),
+            ]),
+        ),
+    ])
+}
+
+/// One `clients.<n>` row of the frontend report.
+#[derive(Debug, Clone)]
+pub struct FrontendClientRow {
+    pub clients: usize,
+    /// Sustained admitted requests per second, seal barrier included.
+    pub req_per_s: f64,
+    /// Per-request admission latency (µs): mean / p50 / p99 across all
+    /// client threads, retries included.
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// Typed rejections observed by the clients at this level.
+    pub shed: u64,
+}
+
+/// Assemble a `bench_frontend/v1` report (rows keyed by client count).
+pub fn frontend_report(
+    smoke: bool,
+    values_per_request: usize,
+    total_values: u64,
+    rows: &[FrontendClientRow],
+) -> Json {
+    let clients: BTreeMap<String, Json> = rows
+        .iter()
+        .map(|r| {
+            (
+                r.clients.to_string(),
+                Json::obj(vec![
+                    ("req_per_s", Json::num(r.req_per_s)),
+                    ("mean_us", Json::num(r.mean_us)),
+                    ("p50_us", Json::num(r.p50_us)),
+                    ("p99_us", Json::num(r.p99_us)),
+                    ("shed", Json::num(r.shed as f64)),
+                ]),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::str(FRONTEND_SCHEMA)),
+        ("smoke", Json::Bool(smoke)),
+        ("values_per_request", Json::num(values_per_request as f64)),
+        ("total_values", Json::num(total_values as f64)),
+        ("clients", Json::Obj(clients)),
+    ])
+}
+
+/// The report's schema tag (`None` on malformed reports).
+pub fn schema_of(report: &Json) -> Option<&str> {
+    report.get("schema").and_then(Json::as_str)
+}
+
+/// `shards.<shards>.<field>` of a hotpath report — the accessor the
+/// regression gate uses on baseline and fresh alike.
+pub fn shard_field(report: &Json, shards: &str, field: &str) -> Option<f64> {
+    report.get("shards").and_then(|s| s.get(shards)).and_then(|s| s.get(field)).and_then(Json::as_f64)
+}
+
+/// `speedup.<field>` of a hotpath report (absolute-gate input).
+pub fn speedup_field(report: &Json, field: &str) -> Option<f64> {
+    report.get("speedup").and_then(|s| s.get(field)).and_then(Json::as_f64)
+}
+
+/// `clients.<clients>.<field>` of a frontend report.
+pub fn client_field(report: &Json, clients: &str, field: &str) -> Option<f64> {
+    report.get("clients").and_then(|c| c.get(clients)).and_then(|c| c.get(field)).and_then(Json::as_f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::json;
+    use super::*;
+
+    /// The CHANGES.md-flagged gap: the v2 nesting was desk-checked only.
+    /// Build a populated report, serialize, re-parse, and assert every
+    /// gate-relevant field survives the round trip.
+    #[test]
+    fn hotpath_v2_round_trips_gate_fields() {
+        let rows = [
+            HotpathShardRow {
+                shards: 1,
+                insert_dispatch_us: 812.25,
+                insert_dispatch_serial_us: None,
+                seal_us: 1900.5,
+                seal_us_median: 1875.125,
+                sealed_query_1k_us: 42.75,
+            },
+            HotpathShardRow {
+                shards: 4,
+                insert_dispatch_us: 310.5,
+                insert_dispatch_serial_us: Some(905.25),
+                seal_us: 760.75,
+                seal_us_median: 741.5,
+                sealed_query_1k_us: 43.25,
+            },
+        ];
+        let speedup = HotpathSpeedup {
+            batch_elements: 1 << 20,
+            insert_dispatch_large_batch_4v1: 2.615,
+            seal_4v1: 2.53,
+        };
+        let report = hotpath_report(false, 1 << 22, &rows, &speedup);
+        let parsed = json::parse(&report.to_string_pretty()).expect("self-produced JSON parses");
+        assert_eq!(schema_of(&parsed), Some(HOTPATH_SCHEMA));
+        assert_eq!(parsed.get("smoke").and_then(Json::as_bool), Some(false));
+        // The three relative-gate tuples...
+        assert_eq!(shard_field(&parsed, "1", "insert_dispatch_us"), Some(812.25));
+        assert_eq!(shard_field(&parsed, "4", "insert_dispatch_us"), Some(310.5));
+        assert_eq!(shard_field(&parsed, "4", "seal_us_median"), Some(741.5));
+        // ...the absolute speedup gate...
+        assert_eq!(speedup_field(&parsed, "insert_dispatch_large_batch_4v1"), Some(2.615));
+        assert_eq!(speedup_field(&parsed, "seal_4v1"), Some(2.53));
+        // ...and the serial-loop column only where it was measured.
+        assert_eq!(shard_field(&parsed, "4", "insert_dispatch_serial_us"), Some(905.25));
+        assert_eq!(shard_field(&parsed, "1", "insert_dispatch_serial_us"), None);
+    }
+
+    #[test]
+    fn frontend_v1_round_trips_latency_fields() {
+        let rows = [
+            FrontendClientRow {
+                clients: 1,
+                req_per_s: 51_250.5,
+                mean_us: 18.125,
+                p50_us: 15.5,
+                p99_us: 90.25,
+                shed: 0,
+            },
+            FrontendClientRow {
+                clients: 64,
+                req_per_s: 310_000.75,
+                mean_us: 205.5,
+                p50_us: 180.25,
+                p99_us: 1450.125,
+                shed: 37,
+            },
+        ];
+        let report = frontend_report(true, 256, 4_000_000, &rows);
+        let parsed = json::parse(&report.to_string_pretty()).expect("self-produced JSON parses");
+        assert_eq!(schema_of(&parsed), Some(FRONTEND_SCHEMA));
+        assert_eq!(parsed.get("smoke").and_then(Json::as_bool), Some(true));
+        assert_eq!(parsed.get("values_per_request").and_then(Json::as_f64), Some(256.0));
+        assert_eq!(parsed.get("total_values").and_then(Json::as_f64), Some(4_000_000.0));
+        assert_eq!(client_field(&parsed, "1", "req_per_s"), Some(51_250.5));
+        assert_eq!(client_field(&parsed, "1", "p50_us"), Some(15.5));
+        assert_eq!(client_field(&parsed, "64", "p99_us"), Some(1450.125));
+        assert_eq!(client_field(&parsed, "64", "shed"), Some(37.0));
+        // Unknown rows/fields read as None, not panics — the gate's
+        // missing-baseline path.
+        assert_eq!(client_field(&parsed, "8", "req_per_s"), None);
+        assert_eq!(client_field(&parsed, "64", "nope"), None);
+    }
+
+    #[test]
+    fn schema_mismatch_is_detectable() {
+        let report = frontend_report(false, 64, 1000, &[]);
+        assert_ne!(schema_of(&report), Some(HOTPATH_SCHEMA));
+        assert_eq!(shard_field(&report, "1", "insert_dispatch_us"), None);
+    }
+}

@@ -8,6 +8,7 @@
 
 pub mod argparse;
 pub mod benchkit;
+pub mod benchreport;
 pub mod csv;
 pub mod json;
 pub mod math;

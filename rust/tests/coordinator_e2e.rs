@@ -5,6 +5,7 @@
 use std::time::Duration;
 
 use ggarray::coordinator::batcher::BatchConfig;
+use ggarray::coordinator::frontend::FrontendConfig;
 use ggarray::coordinator::request::{checksum, Request, Response};
 use ggarray::coordinator::router::Policy;
 use ggarray::coordinator::service::{Coordinator, CoordinatorConfig};
@@ -27,6 +28,7 @@ fn cfg(blocks: usize, use_artifacts: bool) -> CoordinatorConfig {
         shards: 1,
         compact_segments: 4,
         executor_threads: 0,
+        frontend: FrontendConfig::default(),
     }
 }
 

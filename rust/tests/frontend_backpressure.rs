@@ -1,0 +1,128 @@
+//! Backpressure contract of the admission frontend: a full bounded
+//! client channel sheds with a typed rejection — payload handed back,
+//! no panic, no unbounded queue growth, no silent drop — the queue
+//! drains at the next sync point, subsequent requests succeed, and the
+//! `shed_requests` ledger in `Stats` matches exactly the rejections the
+//! clients observed.
+
+use std::time::Duration;
+
+use ggarray::coordinator::frontend::{FrontendConfig, MergePolicy};
+use ggarray::coordinator::request::{Admission, Request};
+use ggarray::coordinator::service::{Coordinator, CoordinatorConfig};
+
+fn cfg(queue_requests: usize, merge: MergePolicy) -> CoordinatorConfig {
+    CoordinatorConfig {
+        blocks: 8,
+        shards: 1,
+        first_bucket_size: 16,
+        use_artifacts: false,
+        frontend: FrontendConfig {
+            queue_requests,
+            retry_after: Duration::from_micros(50),
+            merge,
+        },
+        ..CoordinatorConfig::default()
+    }
+}
+
+#[test]
+fn full_channel_sheds_typed_then_drains_and_recovers() {
+    // AtBarrier: nothing drains until a sync point, so the 4-deep window
+    // fills deterministically.
+    let c = Coordinator::start(cfg(4, MergePolicy::AtBarrier));
+    let mut s = c.session();
+
+    // Fill the window: 4 accepted requests, gap-free sequence numbers,
+    // running value ledger.
+    for i in 0..4u64 {
+        let (seq, session_values) = s.try_insert(vec![i as f32; 8]).expect_accepted();
+        assert_eq!(seq, i);
+        assert_eq!(session_values, (i + 1) * 8);
+    }
+
+    // Overflow: typed rejection every time — payload returned intact,
+    // positive retry hint, and NO sequence number consumed.
+    for _ in 0..3 {
+        match s.try_insert(vec![99.0; 8]) {
+            Admission::Rejected { retry_after_hint, values } => {
+                assert!(retry_after_hint > Duration::ZERO);
+                assert_eq!(values, vec![99.0; 8], "rejected payload must come back untouched");
+            }
+            other => panic!("expected Rejected on a full channel, got {other:?}"),
+        }
+    }
+    assert_eq!(s.next_seq(), 4, "rejections must not consume sequence numbers");
+    assert_eq!(s.accepted_values(), 32);
+
+    // Stats is a sync point: the window drains into the batcher and the
+    // shed ledger matches the three rejections observed above.
+    let snap = s.call(Request::Stats).expect_stats();
+    assert_eq!(snap.len, 32, "all accepted values visible after the sync point");
+    assert_eq!(snap.admitted_requests, 4);
+    assert_eq!(snap.admitted_values, 32);
+    assert_eq!(snap.shed_requests, 3);
+    assert_eq!(snap.sessions, 1);
+    assert_eq!(snap.errors, 0);
+
+    // The drained window accepts again; the sequence resumes where the
+    // accepted stream left off.
+    let (seq, session_values) = s.try_insert(vec![7.0; 8]).expect_accepted();
+    assert_eq!(seq, 4);
+    assert_eq!(session_values, 40);
+    let snap = s.call(Request::Stats).expect_stats();
+    assert_eq!(snap.len, 40);
+    assert_eq!(snap.shed_requests, 3, "recovery must not shed");
+    c.shutdown();
+}
+
+#[test]
+fn retrying_under_sustained_overload_loses_nothing() {
+    // Eager merge, 2-deep window, single hot producer: the worker drains
+    // on pokes, so insert_retrying always gets through eventually. Every
+    // value must land exactly once and every observed rejection must be
+    // ledgered.
+    let c = Coordinator::start(cfg(2, MergePolicy::Eager));
+    let mut s = c.session();
+    let mut sheds_observed = 0u64;
+    for i in 0..200u64 {
+        let (adm, sheds) = s.insert_retrying(vec![i as f32; 16]);
+        assert!(adm.is_accepted(), "request {i} must eventually be admitted: {adm:?}");
+        sheds_observed += sheds;
+    }
+    let snap = s.call(Request::Stats).expect_stats();
+    assert_eq!(snap.len, 200 * 16, "no accepted value may be dropped");
+    assert_eq!(snap.admitted_requests, 200);
+    assert_eq!(snap.admitted_values, 200 * 16);
+    assert_eq!(
+        snap.shed_requests, sheds_observed,
+        "metrics shed ledger must match client-observed rejections"
+    );
+    assert_eq!(snap.errors, 0);
+    c.shutdown();
+}
+
+#[test]
+fn shed_ledger_aggregates_across_sessions() {
+    let c = Coordinator::start(cfg(2, MergePolicy::AtBarrier));
+    let mut s0 = c.session();
+    let mut s1 = c.session();
+    for s in [&mut s0, &mut s1] {
+        // Fill the 2-deep window, then observe 2 rejections.
+        for _ in 0..2 {
+            assert!(s.try_insert(vec![1.0; 4]).is_accepted());
+        }
+        for _ in 0..2 {
+            assert!(
+                matches!(s.try_insert(vec![2.0; 4]), Admission::Rejected { .. }),
+                "window full: expected a typed rejection"
+            );
+        }
+    }
+    let snap = c.call(Request::Stats).expect_stats();
+    assert_eq!(snap.sessions, 2);
+    assert_eq!(snap.len, 16, "2 sessions × 2 accepted requests × 4 values");
+    assert_eq!(snap.admitted_requests, 4);
+    assert_eq!(snap.shed_requests, 4, "sheds from both sessions aggregate");
+    c.shutdown();
+}

@@ -936,3 +936,244 @@ fn prop_scratch_dispatch_byte_identical_to_copying_reference() {
         Ok(())
     });
 }
+
+// ------------------------------------------------------------------
+// Concurrency byte-identity of the admission frontend: N client threads
+// racing real interleavings through bounded sessions must produce the
+// exact same sealed layout, responses and stats ledger as one session
+// replaying the same requests serially in the deterministic merge order
+// (phase-major, client-id ascending, per-client FIFO) — the AtBarrier
+// contract that makes the multi-client frontend safe to reason about.
+// ------------------------------------------------------------------
+
+/// Whether a trace position issues a query after its insert (a fixed
+/// rule of the plan, so concurrent and serial runs query identically).
+fn plan_queries(values_len: usize, sealed_before: u64) -> bool {
+    values_len % 3 == 0 && sealed_before > 0
+}
+
+/// Deterministic query index for a trace position.
+fn plan_query_index(phase: usize, client: usize, req: usize, sealed_before: u64) -> u64 {
+    ((phase * 31 + client * 7 + req) as u64).wrapping_mul(2654435761) % sealed_before
+}
+
+/// Admit one request, retrying on (typed) shed. The test sizes the
+/// admission window over the largest per-phase burst, so rejections
+/// cannot actually occur here — the loop just keeps the call total.
+fn admit(sess: &mut ggarray::coordinator::frontend::ClientSession, vals: &[f32]) {
+    use ggarray::coordinator::request::Admission;
+    let mut payload = vals.to_vec();
+    loop {
+        match sess.try_insert(payload) {
+            Admission::Accepted { .. } => return,
+            Admission::Rejected { values, .. } => {
+                payload = values;
+                std::thread::yield_now();
+            }
+            Admission::Closed { .. } => panic!("coordinator closed mid-trace"),
+        }
+    }
+}
+
+/// Drive one full run of a planned trace. `plan[p][c]` holds client
+/// `c`'s requests for phase `p`; each phase ends with a seal issued
+/// after every client quiesced. `concurrent` races one thread per
+/// client inside each phase; serial replays the merge order through a
+/// single session. Returns (per-seal responses, per-position query
+/// responses in (phase, client, request) order, per-session accepted
+/// ledgers, final stats).
+fn run_planned_trace(
+    cfg: CoordinatorConfig,
+    plan: &[Vec<Vec<Vec<f32>>>],
+    sealed_before: &[u64],
+    concurrent: bool,
+) -> (Vec<String>, Vec<String>, Vec<u64>, ggarray::coordinator::metrics::MetricsSnapshot) {
+    let clients = plan[0].len();
+    let c = Coordinator::start(cfg);
+    let mut seals = Vec::new();
+    let mut queries = Vec::new();
+    let sessions = if concurrent {
+        let mut sessions: Vec<_> = (0..clients).map(|_| c.session()).collect();
+        for (p, phase) in plan.iter().enumerate() {
+            let before = sealed_before[p];
+            let phase_queries: Vec<Vec<String>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = sessions
+                    .iter_mut()
+                    .zip(phase)
+                    .enumerate()
+                    .map(|(cid, (sess, reqs))| {
+                        scope.spawn(move || {
+                            let mut qs = Vec::new();
+                            for (r, vals) in reqs.iter().enumerate() {
+                                admit(sess, vals);
+                                if plan_queries(vals.len(), before) {
+                                    let idx = plan_query_index(p, cid, r, before);
+                                    let resp = sess.call(Request::Query { index: idx });
+                                    qs.push(format!("{resp:?}"));
+                                }
+                            }
+                            qs
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("client thread panicked")).collect()
+            });
+            queries.extend(phase_queries.into_iter().flatten());
+            seals.push(format!("{:?}", c.call(Request::Seal)));
+        }
+        sessions
+    } else {
+        let mut sess = c.session();
+        for (p, phase) in plan.iter().enumerate() {
+            let before = sealed_before[p];
+            for (cid, reqs) in phase.iter().enumerate() {
+                for (r, vals) in reqs.iter().enumerate() {
+                    admit(&mut sess, vals);
+                    if plan_queries(vals.len(), before) {
+                        let idx = plan_query_index(p, cid, r, before);
+                        queries.push(format!("{:?}", sess.call(Request::Query { index: idx })));
+                    }
+                }
+            }
+            seals.push(format!("{:?}", c.call(Request::Seal)));
+        }
+        vec![sess]
+    };
+    let ledgers: Vec<u64> = sessions.iter().map(|s| s.accepted_values()).collect();
+    let stats = c.call(Request::Stats).expect_stats();
+    c.shutdown();
+    (seals, queries, ledgers, stats)
+}
+
+#[test]
+fn prop_concurrent_clients_byte_identical() {
+    use ggarray::coordinator::frontend::{FrontendConfig, MergePolicy};
+    use ggarray::workload::synth_f32;
+
+    const PHASES: usize = 2;
+
+    let gen = PairGen(U64Range { lo: 1, hi: 64 }, CountsVec { max_len: 18, max_val: 120 });
+    check("concurrent clients ≡ serial merge-order replay", 0xFACADE, 6, &gen, |(chunk, sizes)| {
+        let chunk = *chunk as usize;
+        for clients in [1usize, 4, 16] {
+            // Distribute the request sizes round-robin over (phase,
+            // client), then synthesise values in the deterministic merge
+            // order so the data an element carries is a function of the
+            // plan, not of admission timing.
+            let mut shape = vec![vec![Vec::<usize>::new(); clients]; PHASES];
+            for (r, &sz) in sizes.iter().enumerate() {
+                shape[r % PHASES][(r / PHASES) % clients].push(sz as usize);
+            }
+            let mut counter = 0u64;
+            let mut sealed_before = Vec::with_capacity(PHASES);
+            let plan: Vec<Vec<Vec<Vec<f32>>>> = shape
+                .iter()
+                .map(|phase| {
+                    sealed_before.push(counter);
+                    phase
+                        .iter()
+                        .map(|reqs| {
+                            reqs.iter()
+                                .map(|&sz| {
+                                    let vals: Vec<f32> =
+                                        (0..sz as u64).map(|k| synth_f32(counter + k)).collect();
+                                    counter += sz as u64;
+                                    vals
+                                })
+                                .collect()
+                        })
+                        .collect()
+                })
+                .collect();
+            let expected_ledger: Vec<u64> = (0..clients)
+                .map(|cid| {
+                    plan.iter()
+                        .map(|phase| phase[cid].iter().map(|v| v.len() as u64).sum::<u64>())
+                        .sum()
+                })
+                .collect();
+
+            for shards in [1usize, 2, 4] {
+                let cfg = |threads: usize| CoordinatorConfig {
+                    blocks: 8,
+                    shards,
+                    first_bucket_size: 16,
+                    use_artifacts: false,
+                    compact_segments: 2,
+                    executor_threads: threads,
+                    batch: BatchConfig {
+                        max_values: chunk,
+                        max_delay: std::time::Duration::from_secs(3600),
+                    },
+                    // The admission window must cover a full per-client
+                    // phase burst: AtBarrier only drains at sync points,
+                    // so an under-provisioned window would shed forever
+                    // mid-phase (documented frontend constraint).
+                    frontend: FrontendConfig {
+                        queue_requests: 64,
+                        merge: MergePolicy::AtBarrier,
+                        ..FrontendConfig::default()
+                    },
+                    ..CoordinatorConfig::default()
+                };
+                let fields = |s: &ggarray::coordinator::metrics::MetricsSnapshot| {
+                    // Everything observable except `sessions` (clients vs
+                    // 1 by construction) and wall-clock latency/uptime.
+                    (
+                        (s.len, s.sealed_len, s.sealed_segments, s.per_shard_len.clone()),
+                        (s.sealed_bytes, s.heap_used_bytes, s.allocated_bytes),
+                        (s.errors, s.seals, s.queries, s.inserts_requested, s.elements_inserted),
+                        (s.admitted_requests, s.admitted_values, s.shed_requests, s.proposals),
+                        (s.batches, s.flushes, s.coalesced_requests, s.compactions, s.compaction_ooms),
+                        (s.sim_insert_ms, s.sim_work_ms, s.sim_flatten_ms),
+                        (s.device_insert_ms, s.device_work_ms, s.device_flatten_ms),
+                    )
+                };
+                let (g_seals, g_queries, g_ledgers, g_stats) =
+                    run_planned_trace(cfg(1), &plan, &sealed_before, false);
+                if g_ledgers != vec![expected_ledger.iter().sum::<u64>()] {
+                    return Err(format!(
+                        "{clients} clients/{shards} shards: serial replay accepted {g_ledgers:?}, \
+                         plan holds {} values",
+                        expected_ledger.iter().sum::<u64>()
+                    ));
+                }
+                for threads in [1usize, 2] {
+                    let ctx = format!("{clients} clients/{shards} shards/{threads} threads");
+                    let (seals, queries, ledgers, stats) =
+                        run_planned_trace(cfg(threads), &plan, &sealed_before, true);
+                    if seals != g_seals {
+                        return Err(format!(
+                            "{ctx}: sealed epochs diverged from serial replay\n concurrent {seals:?}\n serial {g_seals:?}"
+                        ));
+                    }
+                    if queries != g_queries {
+                        return Err(format!("{ctx}: query responses diverged"));
+                    }
+                    if ledgers != expected_ledger {
+                        return Err(format!(
+                            "{ctx}: per-client accepted ledgers {ledgers:?} != plan {expected_ledger:?}"
+                        ));
+                    }
+                    if stats.shed_requests != 0 {
+                        return Err(format!("{ctx}: unexpected sheds ({})", stats.shed_requests));
+                    }
+                    if fields(&stats) != fields(&g_stats) {
+                        return Err(format!(
+                            "{ctx}: stats ledger diverged\n concurrent {:?}\n serial {:?}",
+                            fields(&stats),
+                            fields(&g_stats)
+                        ));
+                    }
+                    if stats.sessions != clients as u64 {
+                        return Err(format!(
+                            "{ctx}: expected {clients} sessions, got {}",
+                            stats.sessions
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
