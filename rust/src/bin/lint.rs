@@ -1,0 +1,434 @@
+//! Repo lint: the static-analysis gate for the concurrency-sensitive
+//! parts of the crate (`cargo run --bin lint`; wired into ci.sh,
+//! including `--quick`).
+//!
+//! Four textual rule classes over `src/**/*.rs`:
+//!
+//! * **U — unsafe hygiene**: every `unsafe {` block and `unsafe impl`
+//!   must carry a `// SAFETY:` justification on the same line or in the
+//!   contiguous comment block directly above it. (`unsafe fn`
+//!   *declarations* are exempt — they document their contract with a
+//!   `# Safety` doc section; the compiler's `unsafe_op_in_unsafe_fn`
+//!   deny in lib.rs forces their bodies back through `unsafe {`
+//!   blocks, which this rule does check.)
+//! * **P — pointer provenance**: raw-pointer↔`usize` laundering
+//!   (`ptr as usize`, integer `as *mut`) is rejected everywhere except
+//!   the provenance-preserving wrapper `src/sync/sendptr.rs`. Crossing
+//!   a thread boundary as an integer strips provenance and hides the
+//!   aliasing contract from both the compiler and Miri — use
+//!   `SendPtr`/`SendSlice`/`SendSliceMut`.
+//! * **F — facade bypass**: `src/coordinator/**` must not name
+//!   `std::sync`/`std::thread` directly — all synchronisation goes
+//!   through the `crate::sync` facade so `--cfg ggcheck` can swap in
+//!   the model checker. A direct import silently opts that state out
+//!   of model checking.
+//! * **A — hot-path allocation**: files listed in
+//!   `hotpath_manifest.txt` (crate-root relative) must keep non-test
+//!   code free of heap-allocating calls (`vec![`, `.to_vec()`,
+//!   `format!(`, `String::from(`, `.to_string()`, `Box::new(`,
+//!   `.to_owned()`) — the review-time twin of the alloc-counter test.
+//!
+//! Shared conventions: everything from the first `#[cfg(test)]` line to
+//! end-of-file is skipped (the repo keeps test modules last);
+//! `//`-comments are stripped before token matching (string literals
+//! are tracked, block comments are not — keep `/* */` out of linted
+//! code); a deliberate exception is waived inline with
+//! `// lint: allow(alloc|ptr-cast|std-sync) — <reason>`. This file is
+//! excluded from its own walk (its rule tables would self-match).
+//!
+//! Exit codes: 0 clean, 1 violations, 2 internal error.
+//! `--self-test` seeds one violation of each rule class (plus clean,
+//! waived and `#[cfg(test)]` twins) in a temp tree and asserts the
+//! engine catches exactly the seeded set — proving a non-zero exit for
+//! every class — then cleans up.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Violation {
+    /// Crate-root-relative path, e.g. `src/coordinator/pool.rs`.
+    file: String,
+    line: usize,
+    rule: char,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lint: {}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+const ALLOC_TOKENS: &[&str] = &[
+    "vec![",
+    ".to_vec()",
+    "format!(",
+    "String::from(",
+    ".to_string()",
+    "Box::new(",
+    ".to_owned()",
+];
+
+/// Strip a trailing `//` comment, tracking double-quoted string
+/// literals so `"//"` inside a string survives. Returns the code part.
+fn strip_line_comment(line: &str) -> &str {
+    let bytes = line.as_bytes();
+    let mut in_string = false;
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' if in_string => i += 1, // skip escaped char
+            b'"' => in_string = !in_string,
+            b'/' if !in_string && i + 1 < bytes.len() && bytes[i + 1] == b'/' => {
+                return &line[..i];
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    line
+}
+
+/// `needle` present in `hay` with non-word characters (or edges) on
+/// both sides.
+fn word_match(hay: &str, needle: &str) -> Option<usize> {
+    let is_word = |c: u8| c.is_ascii_alphanumeric() || c == b'_';
+    let bytes = hay.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(needle) {
+        let at = from + pos;
+        let before_ok = at == 0 || !is_word(bytes[at - 1]);
+        let after = at + needle.len();
+        let after_ok = after >= bytes.len() || !is_word(bytes[after]);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        from = at + needle.len().max(1);
+    }
+    None
+}
+
+fn has_waiver(raw_line: &str, class: &str) -> bool {
+    raw_line.contains(&format!("lint: allow({class})"))
+}
+
+/// `// SAFETY:` on this raw line, or anywhere in the contiguous block
+/// of comment lines directly above it.
+fn has_adjacent_safety(raw_lines: &[&str], idx: usize) -> bool {
+    if raw_lines[idx].contains("SAFETY:") {
+        return true;
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let t = raw_lines[i].trim_start();
+        if t.starts_with("//") {
+            if t.contains("SAFETY:") {
+                return true;
+            }
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+/// Lint one file's contents. `rel` is crate-root relative with `/`
+/// separators (e.g. `src/coordinator/pool.rs`).
+fn lint_file(rel: &str, contents: &str, hot_manifest: &[String], out: &mut Vec<Violation>) {
+    let raw_lines: Vec<&str> = contents.lines().collect();
+    let in_coordinator = rel.starts_with("src/coordinator/");
+    let is_hot = hot_manifest.iter().any(|m| m == rel);
+    let ptr_whitelisted = rel == "src/sync/sendptr.rs";
+
+    for (i, raw) in raw_lines.iter().enumerate() {
+        if raw.trim() == "#[cfg(test)]" {
+            break; // convention: test modules run to end-of-file
+        }
+        let code = strip_line_comment(raw);
+        if code.trim().is_empty() {
+            continue;
+        }
+        let lineno = i + 1;
+
+        // U — unsafe blocks / impls need an adjacent SAFETY comment.
+        if let Some(at) = word_match(code, "unsafe") {
+            let rest = code[at + "unsafe".len()..].trim_start();
+            let is_fn_decl = rest.starts_with("fn ") || rest.starts_with("fn<");
+            if !is_fn_decl && !has_adjacent_safety(&raw_lines, i) {
+                out.push(Violation {
+                    file: rel.into(),
+                    line: lineno,
+                    rule: 'U',
+                    msg: "`unsafe` without an adjacent `// SAFETY:` justification".into(),
+                });
+            }
+        }
+
+        // P — pointer-provenance laundering through usize.
+        if !ptr_whitelisted && !has_waiver(raw, "ptr-cast") {
+            let ptr_to_int = code.contains("as usize")
+                && (code.contains("ptr")
+                    || code.contains("*mut")
+                    || code.contains("*const")
+                    || code.contains(".add("));
+            let int_to_ptr = (code.contains("as *mut") || code.contains("as *const"))
+                && code.contains("usize");
+            if ptr_to_int || int_to_ptr {
+                out.push(Violation {
+                    file: rel.into(),
+                    line: lineno,
+                    rule: 'P',
+                    msg: "raw-pointer/usize cast outside sync::sendptr — use SendPtr/SendSlice"
+                        .into(),
+                });
+            }
+        }
+
+        // F — coordinator must use the crate::sync facade.
+        if in_coordinator
+            && !has_waiver(raw, "std-sync")
+            && (code.contains("std::sync") || code.contains("std::thread"))
+        {
+            out.push(Violation {
+                file: rel.into(),
+                line: lineno,
+                rule: 'F',
+                msg: "direct std::sync/std::thread in coordinator/ bypasses the crate::sync facade"
+                    .into(),
+            });
+        }
+
+        // A — no heap allocation in manifest-listed hot-path modules.
+        if is_hot && !has_waiver(raw, "alloc") {
+            if let Some(tok) = ALLOC_TOKENS.iter().find(|t| code.contains(**t)) {
+                out.push(Violation {
+                    file: rel.into(),
+                    line: lineno,
+                    rule: 'A',
+                    msg: format!("heap-allocating `{tok}` in hot-path module (hotpath_manifest.txt)"),
+                });
+            }
+        }
+    }
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir entry in {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn read_manifest(crate_root: &Path) -> Result<Vec<String>, String> {
+    let path = crate_root.join("hotpath_manifest.txt");
+    let text = fs::read_to_string(&path)
+        .map_err(|e| format!("hot-path manifest {} unreadable: {e}", path.display()))?;
+    let mut entries = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if !crate_root.join(line).is_file() {
+            return Err(format!("hot-path manifest lists nonexistent file: {line}"));
+        }
+        entries.push(line.to_string());
+    }
+    Ok(entries)
+}
+
+/// Run every rule over `<crate_root>/src`, returning violations sorted
+/// by (file, line).
+fn run(crate_root: &Path) -> Result<Vec<Violation>, String> {
+    let manifest = read_manifest(crate_root)?;
+    let src = crate_root.join("src");
+    let mut files = Vec::new();
+    walk_rs(&src, &mut files)?;
+    files.sort();
+    let mut violations = Vec::new();
+    for path in &files {
+        let rel_os = path
+            .strip_prefix(crate_root)
+            .map_err(|_| format!("file {} escapes crate root", path.display()))?;
+        let rel = rel_os.to_string_lossy().replace('\\', "/");
+        if rel == "src/bin/lint.rs" {
+            continue; // the lint's own rule tables would self-match
+        }
+        let contents = fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        lint_file(&rel, &contents, &manifest, &mut violations);
+    }
+    violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(violations)
+}
+
+fn exit_code_for(violations: &[Violation]) -> u8 {
+    if violations.is_empty() {
+        0
+    } else {
+        1
+    }
+}
+
+// ---------------- self-test ----------------
+
+/// Seed one violation of each rule class (plus clean / waived /
+/// cfg(test) twins that must NOT fire), run the engine, and assert the
+/// report matches exactly — including that the seeded tree's exit code
+/// is non-zero. Files live in a temp tree that is removed afterwards.
+fn self_test() -> Result<(), String> {
+    let root = std::env::temp_dir().join(format!("gg-lint-selftest-{}", std::process::id()));
+    let result = seed_and_check(&root);
+    let _ = fs::remove_dir_all(&root); // best-effort cleanup either way
+    result
+}
+
+fn write(root: &Path, rel: &str, contents: &str) -> Result<(), String> {
+    let path = root.join(rel);
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent).map_err(|e| format!("mkdir {}: {e}", parent.display()))?;
+    }
+    fs::write(&path, contents).map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+fn seed_and_check(root: &Path) -> Result<(), String> {
+    // Manifest covers only hot.rs; bad_sync.rs proves rule F fires on
+    // non-manifest coordinator files too.
+    write(root, "hotpath_manifest.txt", "src/coordinator/hot.rs\n")?;
+
+    // Rule A seed + waived twin + cfg(test)-skipped twin.
+    write(
+        root,
+        "src/coordinator/hot.rs",
+        concat!(
+            "pub fn hot(n: usize) -> Vec<u8> {\n",
+            "    let v = vec![0u8; n]; // seeded violation: rule A\n",
+            "    v\n",
+            "}\n",
+            "pub fn cold() -> Vec<u8> {\n",
+            "    vec![1u8] // lint: allow(alloc) — seeded waiver, must not fire\n",
+            "}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    pub fn in_tests() -> String { format!(\"skipped\") }\n",
+            "}\n",
+        ),
+    )?;
+
+    // Rule F seed (coordinator file naming std::sync directly).
+    write(
+        root,
+        "src/coordinator/bad_sync.rs",
+        "pub fn bypass() {\n    let _m = std::sync::Mutex::new(0u32); // seeded violation: rule F\n}\n",
+    )?;
+
+    // Rule U seed + SAFETY-commented twin that must not fire.
+    write(
+        root,
+        "src/bad_unsafe.rs",
+        concat!(
+            "pub fn naked(p: &mut u32) {\n",
+            "    unsafe { std::ptr::write(p, 1) } // seeded violation: rule U\n",
+            "}\n",
+            "pub fn documented(p: &mut u32) {\n",
+            "    // SAFETY: `p` is a live exclusive borrow, so the write\n",
+            "    // is just `*p = 2` spelled with ptr::write.\n",
+            "    unsafe { std::ptr::write(p, 2) }\n",
+            "}\n",
+        ),
+    )?;
+
+    // Rule P seed (and its SAFETY comment keeps rule U out of the way).
+    write(
+        root,
+        "src/bad_cast.rs",
+        "pub fn launder(ptr: *mut u8) -> usize {\n    ptr as usize // seeded violation: rule P\n}\n",
+    )?;
+
+    // A fully clean file: no rule may fire on it.
+    write(
+        root,
+        "src/clean.rs",
+        "pub fn add(a: u64, b: u64) -> u64 {\n    a.wrapping_add(b)\n}\n",
+    )?;
+
+    let violations = run(root)?;
+    for v in &violations {
+        println!("self-test observed: {v}");
+    }
+
+    let expected: &[(char, &str, usize)] = &[
+        ('P', "src/bad_cast.rs", 2),
+        ('U', "src/bad_unsafe.rs", 2),
+        ('F', "src/coordinator/bad_sync.rs", 2),
+        ('A', "src/coordinator/hot.rs", 2),
+    ];
+    if violations.len() != expected.len() {
+        return Err(format!(
+            "self-test: expected exactly {} violations (one per rule class), got {}",
+            expected.len(),
+            violations.len()
+        ));
+    }
+    for (rule, file, line) in expected {
+        let hit = violations
+            .iter()
+            .any(|v| v.rule == *rule && v.file == *file && v.line == *line);
+        if !hit {
+            return Err(format!("self-test: seeded rule-{rule} violation in {file}:{line} was not caught"));
+        }
+        println!("self-test: rule {rule} fires and exits non-zero");
+    }
+    if exit_code_for(&violations) == 0 {
+        return Err("self-test: seeded tree must produce a non-zero exit code".into());
+    }
+    println!("lint self-test passed: all {} rule classes fire, twins stay clean", expected.len());
+    Ok(())
+}
+
+// ---------------- entry ----------------
+
+fn main() -> ExitCode {
+    let self_test_mode = std::env::args().any(|a| a == "--self-test");
+    if self_test_mode {
+        return match self_test() {
+            Ok(()) => ExitCode::from(0),
+            Err(e) => {
+                eprintln!("lint --self-test FAILED: {e}");
+                ExitCode::from(1)
+            }
+        };
+    }
+
+    let crate_root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    match run(crate_root) {
+        Ok(violations) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            if violations.is_empty() {
+                println!("lint: clean ({} rules over src/)", 4);
+                ExitCode::from(0)
+            } else {
+                eprintln!("lint: {} violation(s)", violations.len());
+                ExitCode::from(exit_code_for(&violations))
+            }
+        }
+        Err(e) => {
+            eprintln!("lint: internal error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,835 @@
+//! Bounded exhaustive-interleaving model checker for the coordinator's
+//! concurrency protocols (vendor-free, in the spirit of `rust/vendor/`).
+//!
+//! The checker runs a *model* — a closure that spawns logical threads
+//! through [`rt::spawn`] and synchronises through the [`crate::sync`]
+//! facade — under a cooperative scheduler that serialises execution:
+//! exactly one model thread runs at a time, and control returns to the
+//! scheduler at every *yield point* (every lock, channel op, atomic op,
+//! or explicit [`rt::yield_point`]). At each point where more than one
+//! thread is runnable the scheduler records a decision, and a
+//! depth-first search over those decisions enumerates every bounded
+//! schedule. A failing schedule (assertion panic, deadlock, or step
+//! budget exhaustion) is reported as a [`Failure`] carrying a compact
+//! *schedule seed* (`"0.2.1"` — the dot-separated choice indices) which
+//! [`replay`] re-executes deterministically.
+//!
+//! Model semantics (documented limitations):
+//!
+//! * **Sequential consistency only.** The facade's model atomics map
+//!   every ordering to `SeqCst`; relaxed-memory reorderings are out of
+//!   scope. The protocols under test (mailbox handoff, admission shed,
+//!   barrier drain) are lock/channel based, where SeqCst is the
+//!   intended contract.
+//! * **Spurious wakeups are the norm.** `Condvar::notify_*` wakes every
+//!   waiter; woken threads re-contend for the mutex and re-check their
+//!   predicate. This is a sound superset of `std`, which also permits
+//!   spurious wakeups — code that survives the model survives `std`.
+//! * **Deadlock detection.** A state with unfinished threads and no
+//!   runnable thread fails the schedule; lost-wakeup bugs surface here.
+//! * **Scheduling decisions are only recorded when there is a real
+//!   choice** (two or more runnable threads), so seeds stay compact and
+//!   replay stays stable across engine-internal bookkeeping steps.
+//!
+//! The engine itself is plain safe `std` code compiled in every build
+//! (its own unit tests run under tier-1); the instrumented sync
+//! primitives that route onto [`rt`] live in `crate::sync::model` and
+//! only compile under `--cfg ggcheck`. See `rust/tests/model_check.rs`
+//! for the protocol suites and `EXPERIMENTS.md` §Analysis for the
+//! matrix.
+
+use std::cell::{Cell, RefCell};
+use std::fmt;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver as StdReceiver, Sender as StdSender};
+use std::sync::{Arc, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+use std::thread::JoinHandle;
+
+// ------------------------------------------------------------------ API
+
+/// Exploration budget for one [`check`] call.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Stop after this many schedules and report `complete: false`.
+    pub max_schedules: usize,
+    /// Fail a single schedule after this many scheduler steps
+    /// (livelock guard — e.g. a spin loop that never blocks).
+    pub max_steps_per_schedule: usize,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config { max_schedules: 100_000, max_steps_per_schedule: 10_000 }
+    }
+}
+
+/// Summary of a completed (non-failing) exploration.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Number of distinct schedules executed.
+    pub schedules: usize,
+    /// True iff the DFS exhausted every schedule within budget.
+    pub complete: bool,
+    /// Deepest decision stack seen across all schedules.
+    pub max_decisions: usize,
+}
+
+/// A failing schedule: what went wrong and how to re-run it.
+#[derive(Debug, Clone)]
+pub struct Failure {
+    /// Model name passed to [`check`].
+    pub name: String,
+    /// Panic message, deadlock report, or budget overrun.
+    pub message: String,
+    /// The scheduling choices that led here (one entry per decision
+    /// point with ≥ 2 runnable threads).
+    pub schedule: Vec<usize>,
+}
+
+impl Failure {
+    /// Compact replay seed: dot-separated decision indices, `"-"` for
+    /// the empty (fully forced) schedule.
+    pub fn seed(&self) -> String {
+        if self.schedule.is_empty() {
+            "-".to_string()
+        } else {
+            let parts: Vec<String> = self.schedule.iter().map(|c| c.to_string()).collect();
+            parts.join(".")
+        }
+    }
+}
+
+impl fmt::Display for Failure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "model check '{}' failed: {}", self.name, self.message)?;
+        writeln!(f, "  schedule seed: {}", self.seed())?;
+        write!(
+            f,
+            "  replay: ggarray::checker::replay(\"{}\", \"{}\", <model>)",
+            self.name,
+            self.seed()
+        )
+    }
+}
+
+impl std::error::Error for Failure {}
+
+/// Parse a seed printed by [`Failure::seed`] back into choice indices.
+pub fn parse_seed(seed: &str) -> Result<Vec<usize>, String> {
+    let trimmed = seed.trim();
+    if trimmed.is_empty() || trimmed == "-" {
+        return Ok(Vec::new());
+    }
+    trimmed
+        .split('.')
+        .map(|p| p.parse::<usize>().map_err(|e| format!("bad seed component '{p}': {e}")))
+        .collect()
+}
+
+/// Exhaustively explore the model's bounded schedules. Returns the
+/// exploration [`Report`] on success or the first failing schedule.
+///
+/// The model closure is invoked once per schedule and must construct
+/// all of its state fresh on each call (the closure is the root model
+/// thread; spawn more with [`rt::spawn`]).
+pub fn check(
+    name: &str,
+    cfg: &Config,
+    model: impl Fn() + Send + Sync + 'static,
+) -> Result<Report, Failure> {
+    let model: Arc<dyn Fn() + Send + Sync> = Arc::new(model);
+    let mut script: Vec<usize> = Vec::new();
+    let mut schedules = 0usize;
+    let mut max_decisions = 0usize;
+    loop {
+        if schedules >= cfg.max_schedules {
+            return Ok(Report { schedules, complete: false, max_decisions });
+        }
+        schedules += 1;
+        match run_one(&model, &script, cfg.max_steps_per_schedule) {
+            RunOutcome::Failed { message, schedule } => {
+                return Err(Failure { name: name.to_string(), message, schedule });
+            }
+            RunOutcome::Done { decisions } => {
+                max_decisions = max_decisions.max(decisions.len());
+                // Backtrack to the deepest decision with an unexplored
+                // sibling; absence means the DFS is exhausted.
+                let mut next: Option<Vec<usize>> = None;
+                for i in (0..decisions.len()).rev() {
+                    let (chosen, alternatives) = decisions[i];
+                    if chosen + 1 < alternatives {
+                        let mut s: Vec<usize> =
+                            decisions[..i].iter().map(|d| d.0).collect();
+                        s.push(chosen + 1);
+                        next = Some(s);
+                        break;
+                    }
+                }
+                match next {
+                    Some(s) => script = s,
+                    None => return Ok(Report { schedules, complete: true, max_decisions }),
+                }
+            }
+        }
+    }
+}
+
+/// [`check`] that panics with the full [`Failure`] display (seed
+/// included) — the form the model-check tests use.
+pub fn check_or_panic(name: &str, cfg: &Config, model: impl Fn() + Send + Sync + 'static) -> Report {
+    match check(name, cfg, model) {
+        Ok(report) => report,
+        Err(failure) => panic!("{failure}"),
+    }
+}
+
+/// Re-run one specific schedule from its printed seed. `Ok(())` means
+/// the schedule no longer fails (e.g. after a fix); `Err` carries the
+/// reproduced failure.
+pub fn replay(
+    name: &str,
+    seed: &str,
+    model: impl Fn() + Send + Sync + 'static,
+) -> Result<(), Failure> {
+    let script = match parse_seed(seed) {
+        Ok(s) => s,
+        Err(message) => {
+            return Err(Failure { name: name.to_string(), message, schedule: Vec::new() })
+        }
+    };
+    let model: Arc<dyn Fn() + Send + Sync> = Arc::new(model);
+    match run_one(&model, &script, Config::default().max_steps_per_schedule) {
+        RunOutcome::Done { .. } => Ok(()),
+        RunOutcome::Failed { message, schedule } => {
+            Err(Failure { name: name.to_string(), message, schedule })
+        }
+    }
+}
+
+// --------------------------------------------------------------- engine
+
+/// Scheduler → model-thread step permit (or cancellation).
+enum Go {
+    Step,
+    Cancel,
+}
+
+/// Panic payload used to unwind cancelled model threads without
+/// tripping the panic hook (`resume_unwind` skips it by design).
+struct CancelToken;
+
+/// Model thread → scheduler notifications. `Yielded`/`Blocked`/
+/// `Finished` all simply return control (the thread updated its own
+/// phase first); `Panicked` carries the failure message.
+enum Event {
+    Yielded(usize),
+    Blocked(usize),
+    Finished(usize),
+    Panicked(usize, String),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum BlockOn {
+    Mutex(usize),
+    Resource(usize),
+    Join(usize),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Phase {
+    Runnable,
+    Blocked(BlockOn),
+    Finished,
+}
+
+struct ThreadSlot {
+    phase: Phase,
+    go_tx: StdSender<Go>,
+    handle: Option<JoinHandle<()>>,
+}
+
+struct State {
+    threads: Vec<ThreadSlot>,
+    /// `true` = held. Index is the id minted by [`rt::new_mutex`].
+    mutexes: Vec<bool>,
+    /// Wait-resource id counter (condvars, channels).
+    next_resource: usize,
+    event_tx: StdSender<Event>,
+}
+
+struct Execution {
+    state: StdMutex<State>,
+}
+
+/// Poison-tolerant state lock: the engine never panics while holding
+/// it, but a cancelled thread may have unwound through a frame that
+/// did — tolerate rather than cascade.
+fn lock_state(exec: &Execution) -> StdMutexGuard<'_, State> {
+    exec.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct Ctx {
+    exec: Arc<Execution>,
+    tid: usize,
+    go_rx: StdReceiver<Go>,
+    event_tx: StdSender<Event>,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = RefCell::new(None);
+    /// Set once this model thread has been handed [`Go::Cancel`]. From
+    /// that point the thread is unwinding via [`CancelToken`]; rt calls
+    /// reached from `Drop` impls during that unwind must neither block
+    /// (the scheduler is no longer stepping us — a recv would hang the
+    /// teardown join) nor panic (a second panic during unwind aborts),
+    /// so they degrade to non-blocking no-ops.
+    static CANCELLED: Cell<bool> = Cell::new(false);
+}
+
+fn with_ctx<R>(f: impl FnOnce(&Ctx) -> R) -> R {
+    CTX.with(|c| {
+        let b = c.borrow();
+        let ctx = b
+            .as_ref()
+            .expect("checker rt call outside a model-checked execution (rt::active() was false)");
+        f(ctx)
+    })
+}
+
+/// Park until the scheduler grants the next step. Cancellation (or a
+/// vanished scheduler) unwinds silently via [`CancelToken`].
+fn wait_go(ctx: &Ctx) {
+    match ctx.go_rx.recv() {
+        Ok(Go::Step) => {}
+        Ok(Go::Cancel) | Err(_) => {
+            CANCELLED.with(|c| c.set(true));
+            resume_unwind(Box::new(CancelToken));
+        }
+    }
+}
+
+fn wake_where(st: &mut State, on: BlockOn) {
+    for t in &mut st.threads {
+        if t.phase == Phase::Blocked(on) {
+            t.phase = Phase::Runnable;
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "model thread panicked (non-string payload)".to_string()
+    }
+}
+
+/// Register and start one model thread (used for the root thread and by
+/// [`rt::spawn`]). The new OS thread parks in [`wait_go`] before
+/// touching the model, preserving the one-runner-at-a-time invariant.
+fn spawn_model_thread(exec: &Arc<Execution>, f: Box<dyn FnOnce() + Send + 'static>) -> usize {
+    let (go_tx, go_rx) = channel::<Go>();
+    let (tid, event_tx) = {
+        let mut st = lock_state(exec);
+        let tid = st.threads.len();
+        st.threads.push(ThreadSlot { phase: Phase::Runnable, go_tx, handle: None });
+        (tid, st.event_tx.clone())
+    };
+    let exec2 = Arc::clone(exec);
+    let handle = std::thread::Builder::new()
+        .name(format!("ggcheck-{tid}"))
+        .spawn(move || {
+            CTX.with(|c| {
+                *c.borrow_mut() = Some(Ctx { exec: exec2, tid, go_rx, event_tx });
+            });
+            // First step permit: the spawner is still mid-step.
+            with_ctx(wait_go);
+            let result = catch_unwind(AssertUnwindSafe(f));
+            match result {
+                Ok(()) => {
+                    with_ctx(|ctx| {
+                        {
+                            let mut st = lock_state(&ctx.exec);
+                            st.threads[ctx.tid].phase = Phase::Finished;
+                            wake_where(&mut st, BlockOn::Join(ctx.tid));
+                        }
+                        ctx.event_tx.send(Event::Finished(ctx.tid)).ok();
+                    });
+                }
+                Err(payload) => {
+                    if payload.downcast_ref::<CancelToken>().is_some() {
+                        // Cancelled by the scheduler: exit silently,
+                        // the scheduler is already joining us.
+                    } else {
+                        let msg = panic_message(payload.as_ref());
+                        with_ctx(|ctx| {
+                            {
+                                let mut st = lock_state(&ctx.exec);
+                                st.threads[ctx.tid].phase = Phase::Finished;
+                                wake_where(&mut st, BlockOn::Join(ctx.tid));
+                            }
+                            ctx.event_tx.send(Event::Panicked(ctx.tid, msg)).ok();
+                        });
+                    }
+                }
+            }
+        })
+        .expect("spawn model-checker thread");
+    {
+        let mut st = lock_state(exec);
+        st.threads[tid].handle = Some(handle);
+    }
+    tid
+}
+
+enum RunOutcome {
+    Done { decisions: Vec<(usize, usize)> },
+    Failed { message: String, schedule: Vec<usize> },
+}
+
+/// Execute one schedule. `script` forces the recorded decisions (DFS
+/// prefix or replay seed); beyond it the scheduler defaults to choice 0.
+fn run_one(model: &Arc<dyn Fn() + Send + Sync>, script: &[usize], max_steps: usize) -> RunOutcome {
+    let (event_tx, event_rx) = channel::<Event>();
+    let exec = Arc::new(Execution {
+        state: StdMutex::new(State {
+            threads: Vec::new(),
+            mutexes: Vec::new(),
+            next_resource: 0,
+            event_tx,
+        }),
+    });
+    let m = Arc::clone(model);
+    spawn_model_thread(&exec, Box::new(move || m()));
+
+    let mut decisions: Vec<(usize, usize)> = Vec::new();
+    let mut steps = 0usize;
+    let mut failure: Option<String> = None;
+
+    loop {
+        let runnable: Vec<usize> = {
+            let st = lock_state(&exec);
+            st.threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.phase == Phase::Runnable)
+                .map(|(i, _)| i)
+                .collect()
+        };
+        if runnable.is_empty() {
+            let unfinished: Vec<usize> = {
+                let st = lock_state(&exec);
+                st.threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| t.phase != Phase::Finished)
+                    .map(|(i, _)| i)
+                    .collect()
+            };
+            if !unfinished.is_empty() {
+                failure = Some(format!(
+                    "deadlock: threads {unfinished:?} blocked with no runnable thread"
+                ));
+            }
+            break;
+        }
+        steps += 1;
+        if steps > max_steps {
+            failure =
+                Some(format!("step budget exceeded ({max_steps} steps): possible livelock"));
+            break;
+        }
+        let pick = if runnable.len() > 1 {
+            let want = script.get(decisions.len()).copied().unwrap_or(0);
+            if want >= runnable.len() {
+                failure = Some(format!(
+                    "schedule seed invalid at decision {} ({} runnable, seed wanted {})",
+                    decisions.len(),
+                    runnable.len(),
+                    want
+                ));
+                break;
+            }
+            decisions.push((want, runnable.len()));
+            want
+        } else {
+            0
+        };
+        let tid = runnable[pick];
+        let go_tx = {
+            let st = lock_state(&exec);
+            st.threads[tid].go_tx.clone()
+        };
+        if go_tx.send(Go::Step).is_err() {
+            failure = Some(format!("model thread {tid} exited without reporting an event"));
+            break;
+        }
+        match event_rx.recv() {
+            Ok(Event::Yielded(_)) | Ok(Event::Blocked(_)) | Ok(Event::Finished(_)) => {}
+            Ok(Event::Panicked(_, msg)) => {
+                failure = Some(msg);
+                break;
+            }
+            Err(_) => {
+                failure = Some("model thread hung up without sending an event".to_string());
+                break;
+            }
+        }
+    }
+
+    // Tear down: every non-finished thread is parked in wait_go (the
+    // lockstep invariant), so a Cancel permit unwinds it; then join all
+    // handles so no model thread outlives its schedule.
+    let handles: Vec<JoinHandle<()>> = {
+        let mut st = lock_state(&exec);
+        for t in &mut st.threads {
+            if t.phase != Phase::Finished {
+                t.go_tx.send(Go::Cancel).ok();
+            }
+        }
+        st.threads.iter_mut().filter_map(|t| t.handle.take()).collect()
+    };
+    for h in handles {
+        let _ = h.join();
+    }
+
+    match failure {
+        None => RunOutcome::Done { decisions },
+        Some(message) => RunOutcome::Failed {
+            message,
+            schedule: decisions.iter().map(|d| d.0).collect(),
+        },
+    }
+}
+
+// ------------------------------------------------------------------- rt
+
+/// Runtime hooks the instrumented `crate::sync::model` primitives call
+/// into. Everything here must only run on a model thread (inside a
+/// [`check`] execution); [`rt::active`] is the discriminator the
+/// dual-flavor facade types use at construction time.
+///
+/// Contract for callers (the facade): operations that *release* or
+/// *wake* ([`rt::mutex_release`], [`rt::wake_resource`]) never yield
+/// and never panic — they are called from `Drop` impls and must be
+/// unwind-safe. Operations that *acquire* or *block* yield first, so
+/// every contended transition is a scheduling decision.
+pub mod rt {
+    use super::*;
+
+    /// True iff the calling thread is a model thread of a live
+    /// execution. The facade checks this at construction time to pick
+    /// the std or model flavor.
+    pub fn active() -> bool {
+        CTX.with(|c| c.borrow().is_some())
+    }
+
+    /// True iff this model thread is unwinding after a scheduler
+    /// cancellation. The facade's blocking loops bail out instead of
+    /// spinning/blocking when this is set (see `CANCELLED`).
+    pub fn cancelled() -> bool {
+        CANCELLED.with(|c| c.get())
+    }
+
+    /// Hand control to the scheduler; returns when this thread is next
+    /// scheduled. Every visible side effect boundary in the facade
+    /// routes through here.
+    pub fn yield_point() {
+        if cancelled() {
+            return;
+        }
+        with_ctx(|ctx| {
+            ctx.event_tx.send(Event::Yielded(ctx.tid)).ok();
+            wait_go(ctx);
+        });
+    }
+
+    /// Mint a model mutex; returns its id.
+    pub fn new_mutex() -> usize {
+        with_ctx(|ctx| {
+            let mut st = lock_state(&ctx.exec);
+            let id = st.mutexes.len();
+            st.mutexes.push(false);
+            id
+        })
+    }
+
+    /// Attempt to take the mutex. No yield — callers yield first.
+    /// During cancellation unwind the lock always "succeeds": the
+    /// execution's state is already condemned and the caller must be
+    /// allowed to finish its `Drop` without blocking.
+    pub fn mutex_try_acquire(id: usize) -> bool {
+        if cancelled() {
+            return true;
+        }
+        with_ctx(|ctx| {
+            let mut st = lock_state(&ctx.exec);
+            if st.mutexes[id] {
+                false
+            } else {
+                st.mutexes[id] = true;
+                true
+            }
+        })
+    }
+
+    /// Release the mutex and make its blocked waiters runnable. Never
+    /// yields (safe from `Drop`, including during unwind).
+    pub fn mutex_release(id: usize) {
+        if cancelled() {
+            return;
+        }
+        with_ctx(|ctx| {
+            let mut st = lock_state(&ctx.exec);
+            st.mutexes[id] = false;
+            wake_where(&mut st, BlockOn::Mutex(id));
+        });
+    }
+
+    /// Park this thread until [`mutex_release`] of `id` wakes it.
+    pub fn block_on_mutex(id: usize) {
+        block(BlockOn::Mutex(id));
+    }
+
+    /// Mint a wait-resource id (condvar or channel wakeup set).
+    pub fn new_resource() -> usize {
+        with_ctx(|ctx| {
+            let mut st = lock_state(&ctx.exec);
+            let id = st.next_resource;
+            st.next_resource += 1;
+            id
+        })
+    }
+
+    /// Park this thread until [`wake_resource`] of `id` wakes it.
+    pub fn block_on_resource(id: usize) {
+        block(BlockOn::Resource(id));
+    }
+
+    /// Make every thread parked on `id` runnable (notify-all / spurious
+    /// wakeup superset). Never yields (safe from `Drop`).
+    pub fn wake_resource(id: usize) {
+        if cancelled() {
+            return;
+        }
+        with_ctx(|ctx| {
+            let mut st = lock_state(&ctx.exec);
+            wake_where(&mut st, BlockOn::Resource(id));
+        });
+    }
+
+    /// Spawn a model thread; returns its tid for [`join`].
+    pub fn spawn(f: impl FnOnce() + Send + 'static) -> usize {
+        with_ctx(|ctx| spawn_model_thread(&ctx.exec, Box::new(f)))
+    }
+
+    /// True iff `tid` has finished (normally or by panic).
+    pub fn thread_finished(tid: usize) -> bool {
+        with_ctx(|ctx| {
+            let st = lock_state(&ctx.exec);
+            st.threads[tid].phase == Phase::Finished
+        })
+    }
+
+    /// Block until `tid` finishes. Cooperative: between the yield and
+    /// the block no other thread runs, so the finish wakeup cannot be
+    /// missed. Returns immediately during cancellation unwind.
+    pub fn join(tid: usize) {
+        loop {
+            if cancelled() {
+                return;
+            }
+            yield_point();
+            if thread_finished(tid) {
+                return;
+            }
+            block(BlockOn::Join(tid));
+        }
+    }
+
+    fn block(on: BlockOn) {
+        if cancelled() {
+            return;
+        }
+        with_ctx(|ctx| {
+            {
+                let mut st = lock_state(&ctx.exec);
+                st.threads[ctx.tid].phase = Phase::Blocked(on);
+            }
+            ctx.event_tx.send(Event::Blocked(ctx.tid)).ok();
+            wait_go(ctx);
+        });
+    }
+}
+
+// ---------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn single_thread_model_is_one_forced_schedule() {
+        let report = check("single", &Config::default(), || {
+            rt::yield_point();
+            rt::yield_point();
+            rt::yield_point();
+        })
+        .expect("no failure");
+        assert_eq!(report.schedules, 1, "one thread → every choice forced");
+        assert!(report.complete);
+        assert_eq!(report.max_decisions, 0);
+    }
+
+    fn two_yielders_model() {
+        let a = rt::spawn(|| {
+            rt::yield_point();
+            rt::yield_point();
+        });
+        let b = rt::spawn(|| {
+            rt::yield_point();
+            rt::yield_point();
+        });
+        rt::join(a);
+        rt::join(b);
+    }
+
+    #[test]
+    fn exploration_is_exhaustive_and_deterministic() {
+        let r1 = check("two-yielders", &Config::default(), two_yielders_model).expect("ok");
+        let r2 = check("two-yielders", &Config::default(), two_yielders_model).expect("ok");
+        assert!(r1.complete && r2.complete);
+        assert!(r1.schedules > 1, "two free threads must interleave");
+        assert_eq!(r1.schedules, r2.schedules, "DFS must be deterministic");
+        assert_eq!(r1.max_decisions, r2.max_decisions);
+    }
+
+    #[test]
+    fn schedule_budget_caps_exploration() {
+        let cfg = Config { max_schedules: 3, max_steps_per_schedule: 10_000 };
+        let report = check("capped", &cfg, two_yielders_model).expect("ok");
+        assert_eq!(report.schedules, 3);
+        assert!(!report.complete);
+    }
+
+    /// Classic lost update: two threads read-modify-write a shared
+    /// counter with a yield between load and store.
+    fn racy_increment_model() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mk = |c: Arc<AtomicUsize>| {
+            move || {
+                let v = c.load(Ordering::SeqCst);
+                rt::yield_point();
+                c.store(v + 1, Ordering::SeqCst);
+            }
+        };
+        let a = rt::spawn(mk(Arc::clone(&counter)));
+        let b = rt::spawn(mk(Arc::clone(&counter)));
+        rt::join(a);
+        rt::join(b);
+        assert_eq!(counter.load(Ordering::SeqCst), 2, "lost update");
+    }
+
+    #[test]
+    fn racy_increment_is_caught_and_seed_replays() {
+        let failure = check("racy-increment", &Config::default(), racy_increment_model)
+            .expect_err("the race must be found");
+        assert!(failure.message.contains("lost update"), "message: {}", failure.message);
+        let seed = failure.seed();
+        assert!(parse_seed(&seed).is_ok());
+        let replayed = replay("racy-increment", &seed, racy_increment_model)
+            .expect_err("seed must reproduce the failure");
+        assert!(replayed.message.contains("lost update"));
+    }
+
+    /// Raw lock protocol used by the facade's model mutex: yield, try,
+    /// block on contention.
+    fn raw_lock(id: usize) {
+        loop {
+            rt::yield_point();
+            if rt::mutex_try_acquire(id) {
+                return;
+            }
+            rt::block_on_mutex(id);
+        }
+    }
+
+    fn abba_model() {
+        let a = rt::new_mutex();
+        let b = rt::new_mutex();
+        let t1 = rt::spawn(move || {
+            raw_lock(a);
+            rt::yield_point();
+            raw_lock(b);
+            rt::mutex_release(b);
+            rt::mutex_release(a);
+        });
+        let t2 = rt::spawn(move || {
+            raw_lock(b);
+            rt::yield_point();
+            raw_lock(a);
+            rt::mutex_release(a);
+            rt::mutex_release(b);
+        });
+        rt::join(t1);
+        rt::join(t2);
+    }
+
+    #[test]
+    fn abba_deadlock_is_detected_with_replayable_seed() {
+        let failure =
+            check("abba", &Config::default(), abba_model).expect_err("deadlock must be found");
+        assert!(failure.message.contains("deadlock"), "message: {}", failure.message);
+        let replayed =
+            replay("abba", &failure.seed(), abba_model).expect_err("seed must reproduce");
+        assert!(replayed.message.contains("deadlock"));
+    }
+
+    #[test]
+    fn mutex_protocol_has_no_false_deadlocks() {
+        // Same ABBA bodies but with a consistent lock order: must
+        // explore completely with zero failures.
+        let report = check("ordered-locks", &Config::default(), || {
+            let a = rt::new_mutex();
+            let b = rt::new_mutex();
+            let t1 = rt::spawn(move || {
+                raw_lock(a);
+                rt::yield_point();
+                raw_lock(b);
+                rt::mutex_release(b);
+                rt::mutex_release(a);
+            });
+            let t2 = rt::spawn(move || {
+                raw_lock(a);
+                rt::yield_point();
+                raw_lock(b);
+                rt::mutex_release(b);
+                rt::mutex_release(a);
+            });
+            rt::join(t1);
+            rt::join(t2);
+        })
+        .expect("consistent lock order cannot deadlock");
+        assert!(report.complete);
+    }
+
+    #[test]
+    fn seed_codec_round_trips() {
+        assert_eq!(parse_seed("0.2.1").unwrap(), vec![0, 2, 1]);
+        assert_eq!(parse_seed("-").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_seed("").unwrap(), Vec::<usize>::new());
+        assert!(parse_seed("0.x.1").is_err());
+        let f = Failure {
+            name: "n".into(),
+            message: "m".into(),
+            schedule: vec![0, 2, 1],
+        };
+        assert_eq!(f.seed(), "0.2.1");
+        let empty = Failure { name: "n".into(), message: "m".into(), schedule: vec![] };
+        assert_eq!(empty.seed(), "-");
+        assert_eq!(parse_seed(&empty.seed()).unwrap(), Vec::<usize>::new());
+    }
+}

@@ -2,6 +2,10 @@
 //! device-sized batch, flushing on size or deadline — amortising kernel
 //! launches and the per-insert scan overhead exactly the way a serving
 //! router amortises prefill batches.
+//!
+//! This module is listed in `rust/hotpath_manifest.txt`: the repo lint
+//! (`cargo run --bin lint`) rejects heap-allocating calls in its
+//! non-test code, pinning the buffer-recycling contract below.
 
 use std::time::{Duration, Instant};
 

@@ -12,7 +12,13 @@
 //!   never OOM the queue — admission fails fast instead;
 //! * the worker drains all client pools into the shared [`Batcher`]
 //!   (cross-client coalescing into one proposed batch), always in
-//!   ascending client-id order with per-client FIFO preserved.
+//!   ascending client-id order with per-client FIFO preserved — the
+//!   sweep itself lives here as [`drain_lanes`], shared by the worker,
+//!   the [`FrontendRig`] test harness, and the `ggcheck` model suite.
+//!
+//! All synchronisation comes from the [`crate::sync`] facade, so under
+//! `--cfg ggcheck` the admission window, the shed path, and the barrier
+//! drain are exhaustively model-checked (`tests/model_check.rs`).
 //!
 //! # Backpressure contract
 //!
@@ -22,7 +28,9 @@
 //! payload back** so the caller can retry without recloning; the
 //! rejection is counted in the shared shed ledger, which surfaces as
 //! `shed_requests` in the metrics snapshot. A rejected request consumes
-//! no sequence number — the accepted stream stays contiguous.
+//! no sequence number — the accepted stream stays contiguous (pinned by
+//! `rejected_admission_rolls_back_ledgers_exactly` and model-checked
+//! under every bounded interleaving).
 //!
 //! # Determinism contract
 //!
@@ -40,9 +48,10 @@
 //!   admission poke and idle tick — the throughput mode, where merge
 //!   order is timing-dependent.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
+use crate::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::sync::mpsc::{self, Receiver, SyncSender, TryRecvError, TrySendError};
+use crate::sync::thread;
+use crate::sync::Arc;
 use std::time::Duration;
 
 use super::request::{Admission, Request, Response};
@@ -140,6 +149,144 @@ pub(crate) struct ClientLane {
     pub(crate) id: u64,
     pub(crate) rx: Receiver<SessionInsert>,
     pub(crate) next_seq: u64,
+}
+
+/// What one [`drain_lanes`] call moved.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DrainStats {
+    /// Requests moved out of client pools.
+    pub moved_requests: u64,
+    /// Values inside those requests.
+    pub moved_values: u64,
+    /// Outer sweeps that moved at least one request (each counts as one
+    /// proposal in the worker's metrics).
+    pub productive_sweeps: u64,
+}
+
+/// The merge sweep shared by the worker's event loop, the
+/// [`FrontendRig`] harness, and the model-check suite: visit the lanes
+/// in ascending client-id order (the `lanes` vec is kept sorted by the
+/// registrar), move each lane's queued requests in FIFO order — at most
+/// `per_sweep` per lane per sweep, so one hot producer cannot starve
+/// the loop — and hand every request to `sink` *after* updating the
+/// gap-free sequence check and the shared pooled gauge. Disconnected
+/// lanes (session dropped, pool fully drained) are retired in place. A
+/// `barrier` drain repeats the sweep until nothing moves (quiesced
+/// clients ⇒ one productive sweep); a pressure drain does one sweep.
+pub(crate) fn drain_lanes(
+    lanes: &mut Vec<ClientLane>,
+    shared: &FrontendShared,
+    per_sweep: usize,
+    barrier: bool,
+    mut sink: impl FnMut(u64, SessionInsert),
+) -> DrainStats {
+    let mut stats = DrainStats::default();
+    loop {
+        let mut moved = 0usize;
+        let mut lane_idx = 0;
+        while lane_idx < lanes.len() {
+            let mut disconnected = false;
+            for _ in 0..per_sweep.max(1) {
+                let lane = &mut lanes[lane_idx];
+                match lane.rx.try_recv() {
+                    Ok(ins) => {
+                        debug_assert_eq!(
+                            ins.seq, lane.next_seq,
+                            "client {} admission stream must be gap-free",
+                            lane.id
+                        );
+                        lane.next_seq = ins.seq + 1;
+                        moved += 1;
+                        stats.moved_requests += 1;
+                        stats.moved_values += ins.values.len() as u64;
+                        shared.sub_pooled(ins.values.len());
+                        sink(lane.id, ins);
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        // Session dropped and its pool is fully drained
+                        // (Disconnected is only returned on an empty
+                        // buffer) — retire the lane.
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+            if disconnected {
+                lanes.remove(lane_idx);
+            } else {
+                lane_idx += 1;
+            }
+        }
+        if moved > 0 {
+            stats.productive_sweeps += 1;
+        }
+        if !(barrier && moved > 0) {
+            return stats;
+        }
+    }
+}
+
+/// A worker-less admission frontend for tests: real sessions, real
+/// bounded channels, real [`drain_lanes`] sweep — but the drain is
+/// driven explicitly by the test instead of a live event loop, which
+/// makes shed/rollback/ordering assertions deterministic. The `ggcheck`
+/// model suite drives the same rig under the checker's scheduler.
+pub struct FrontendRig {
+    shared: Arc<FrontendShared>,
+    tx: mpsc::Sender<Envelope>,
+    rx: mpsc::Receiver<Envelope>,
+    cfg: FrontendConfig,
+    lanes: Vec<ClientLane>,
+}
+
+impl FrontendRig {
+    pub fn new(cfg: FrontendConfig) -> FrontendRig {
+        let (tx, rx) = mpsc::channel();
+        FrontendRig {
+            shared: Arc::new(FrontendShared::default()),
+            tx,
+            rx,
+            cfg,
+            lanes: Vec::new(),
+        }
+    }
+
+    /// Open a session against the rig (same path as
+    /// `Coordinator::session`).
+    pub fn session(&self) -> ClientSession {
+        ClientSession::connect(self.tx.clone(), Arc::clone(&self.shared), &self.cfg)
+    }
+
+    /// Process queued `Register` envelopes into lanes (sorted insert,
+    /// exactly like the worker). `Poke`s are ignored — the rig drains
+    /// explicitly — and `Call`s are dropped (their reply channel closes,
+    /// signalling "coordinator stopped" to the caller).
+    pub fn absorb_registrations(&mut self) {
+        while let Ok(env) = self.rx.try_recv() {
+            if let Envelope::Register { id, rx } = env {
+                let at = self.lanes.partition_point(|l| l.id < id);
+                self.lanes.insert(at, ClientLane { id, rx, next_seq: 0 });
+            }
+        }
+    }
+
+    /// One explicit merge: absorb pending registrations, then run the
+    /// worker's sweep, handing each drained insert to `sink` in merge
+    /// order.
+    pub fn drain(&mut self, barrier: bool, sink: impl FnMut(u64, SessionInsert)) -> DrainStats {
+        self.absorb_registrations();
+        drain_lanes(&mut self.lanes, &self.shared, self.cfg.queue_requests.max(1), barrier, sink)
+    }
+
+    /// Registered (non-retired) lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn shared(&self) -> &FrontendShared {
+        &self.shared
+    }
 }
 
 /// A client's handle into the admission layer. Obtained from
@@ -249,7 +396,7 @@ impl ClientSession {
                 Admission::Rejected { retry_after_hint, values } => {
                     sheds += 1;
                     payload = values;
-                    std::thread::sleep(retry_after_hint.min(Duration::from_millis(1)));
+                    thread::sleep(retry_after_hint.min(Duration::from_millis(1)));
                 }
                 done => return (done, sheds),
             }
@@ -350,5 +497,54 @@ mod tests {
             other => panic!("expected Closed, got {other:?}"),
         }
         assert!(matches!(s.call(Request::Stats), Response::Error(_)));
+    }
+
+    /// The CHANGES.md "watch" item pinned as a test: a `Rejected`
+    /// admission must leave the pooled-values gauge, the session's
+    /// sequence counter, and the shed ledger exactly consistent — no
+    /// leaked gauge, no consumed seq, exactly one shed. Deterministic
+    /// (worker-less rig, explicit drain); the `ggcheck` model suite
+    /// re-checks the same invariants under every bounded interleaving.
+    #[test]
+    fn rejected_admission_rolls_back_ledgers_exactly() {
+        let cfg = FrontendConfig {
+            queue_requests: 2,
+            merge: MergePolicy::AtBarrier,
+            ..FrontendConfig::default()
+        };
+        let mut rig = FrontendRig::new(cfg);
+        let mut s = rig.session();
+        assert!(s.try_insert(vec![1.0; 3]).is_accepted());
+        assert!(s.try_insert(vec![2.0; 4]).is_accepted());
+        assert_eq!(rig.shared().pooled_values(), 7);
+        assert_eq!(s.next_seq(), 2);
+
+        // Window full: the third insert sheds. Payload handed back,
+        // gauge rolled back, no sequence number consumed, one shed.
+        match s.try_insert(vec![3.0; 5]) {
+            Admission::Rejected { values, .. } => assert_eq!(values, vec![3.0; 5]),
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        assert_eq!(rig.shared().pooled_values(), 7, "rejected values must not stay pooled");
+        assert_eq!(rig.shared().shed_total(), 1);
+        assert_eq!(s.next_seq(), 2, "a rejection consumes no sequence number");
+        assert_eq!(s.accepted_values(), 7);
+
+        // Barrier drain: exactly the accepted stream arrives, gap-free,
+        // and the gauge returns to zero.
+        let mut got = Vec::new();
+        let stats = rig.drain(true, |id, ins| got.push((id, ins.seq, ins.values.len())));
+        assert_eq!(stats.moved_requests, 2);
+        assert_eq!(stats.moved_values, 7);
+        assert_eq!(stats.productive_sweeps, 1);
+        assert_eq!(got, vec![(0, 0, 3), (0, 1, 4)]);
+        assert_eq!(rig.shared().pooled_values(), 0);
+        assert_eq!(rig.lanes(), 1);
+
+        // Window freed: the next insert takes the next seq; the shed
+        // ledger is monotonic.
+        let (seq, _) = s.try_insert(vec![4.0; 2]).expect_accepted();
+        assert_eq!(seq, 2);
+        assert_eq!(rig.shared().shed_total(), 1);
     }
 }

@@ -7,25 +7,33 @@
 //! worker thread, so the wall numbers never showed the speedup the sim
 //! ledger promised. [`ShardPool`] closes that gap: N long-lived executor
 //! threads (one per shard) are spawned once at `Coordinator::start`, each
-//! parked on a pre-allocated SPSC mailbox (one `Mutex` + two `Condvar`s —
-//! std only, deps are vendored). A shard-dispatching op fans one job per
-//! shard out to the mailboxes and fans back in at a barrier — the
-//! host-side analogue of the paper's per-block `__syncthreads()`.
+//! parked on a pre-allocated SPSC [`Mailbox`] (one `Mutex` + two
+//! `Condvar`s from the [`crate::sync`] facade — `std` in normal builds,
+//! the model-checkable flavor under `--cfg ggcheck`). A shard-dispatching
+//! op fans one job per shard out to the mailboxes and fans back in at a
+//! barrier — the host-side analogue of the paper's per-block
+//! `__syncthreads()`. The handoff/barrier/shutdown protocol itself is
+//! exhaustively model-checked in `tests/model_check.rs`.
 //!
 //! ## Ownership and safety
 //!
 //! Shards stay owned by the coordinator worker (it needs cheap direct
 //! access for routing, stats, and queries between ops); executor threads
 //! hold **no** shard state. Each fan-out *leases* shard `k` to executor
-//! `k` for exactly one job: the job carries raw pointers, and the public
-//! `run_*` methods restore safety structurally —
+//! `k` for exactly one job: the job carries provenance-preserving
+//! [`SendPtr`]/[`SendSlice`]/[`SendSliceMut`] wrappers (never
+//! pointer→`usize` laundering), and the public `run_*` methods restore
+//! safety structurally —
 //!
 //! * submission and the blocking join happen inside one `&mut`-borrowing
 //!   call, so the worker provably cannot touch a shard, the batch
 //!   values, or a gather destination while a job referencing them is in
 //!   flight;
-//! * each executor receives a distinct shard and (for gathers) a
-//!   disjoint destination sub-slice, so concurrent jobs never alias;
+//! * each executor receives a distinct shard (its pointer taken from a
+//!   distinct `iter_mut` element) and, for gathers, a destination
+//!   sub-slice carved disjoint with `split_at_mut` *before* wrapping —
+//!   so concurrent jobs never alias, by construction rather than by
+//!   offset arithmetic;
 //! * every mailbox holds at most one job and one result (SPSC by
 //!   construction — the worker is the single producer, the executor the
 //!   single consumer).
@@ -36,7 +44,9 @@
 //! are plain enums moved through an `Option` slot in place. A
 //! steady-state insert batch therefore performs **zero** heap
 //! allocations end-to-end, mailbox handoff included — extended coverage
-//! in `tests/alloc_guard.rs` (4-shard pooled section).
+//! in `tests/alloc_guard.rs` (4-shard pooled section). This module is in
+//! the lint's hot-path manifest (`rust/hotpath_manifest.txt`), so CI
+//! rejects new allocating calls here.
 //!
 //! ## Byte-identity
 //!
@@ -48,8 +58,8 @@
 //! path otherwise, so even OOM traces are byte-identical across executor
 //! modes — property-tested in `tests/properties.rs`.
 
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use crate::sync::thread;
+use crate::sync::{Arc, Condvar, Mutex, MutexGuard, SendPtr, SendSlice, SendSliceMut};
 
 use crate::sim::memory::OomError;
 
@@ -57,24 +67,25 @@ use super::router::DispatchScratch;
 use super::service::DispatchOutcome;
 use super::shard::{SealPart, Shard, ShardInsertOutcome};
 
-/// One leased unit of work for one shard. Pointers travel as `usize` so
-/// the enum is trivially `Send`; the public `run_*` wrappers are the only
-/// constructors and uphold the lease contract documented on the module.
+/// One leased unit of work for one shard. `Send` falls out of the
+/// wrapper types' leases (no integer casts); the public `run_*` wrappers
+/// are the only constructors and uphold the lease contract documented on
+/// the module.
 enum Job {
     /// Apply a routed sub-batch: `counts` is the shard's slice of the
     /// global per-block decision, `values` its contiguous sub-slice of
     /// the batch.
-    Insert { shard: usize, counts: usize, counts_len: usize, values: usize, values_len: usize },
+    Insert { shard: SendPtr<Shard>, counts: SendSlice<usize>, values: SendSlice<f32> },
     /// One work call on this shard: the real numeric update (host path)
     /// plus the modeled `rw_b` charge on non-empty shards.
-    Work { shard: usize, iters: u32 },
+    Work { shard: SendPtr<Shard>, iters: u32 },
     /// Non-destructive snapshot gather into a disjoint destination
     /// sub-slice (simulated destination released immediately).
-    FlattenTemp { shard: usize, dst: usize, dst_len: usize },
+    FlattenTemp { shard: SendPtr<Shard>, dst: SendSliceMut<f32> },
     /// Seal phase-1 gather into a disjoint destination sub-slice (the
     /// destination allocation stays live in the shard heap — the
     /// caller's two-phase commit decides its fate).
-    SealFlatten { shard: usize, dst: usize, dst_len: usize },
+    SealFlatten { shard: SendPtr<Shard>, dst: SendSliceMut<f32> },
 }
 
 /// Result slot contents, one variant per job kind.
@@ -85,69 +96,154 @@ enum JobResult {
     Seal(Result<SealPart, OomError>),
 }
 
-/// SPSC mailbox: the worker deposits one [`Job`], the executor deposits
-/// one [`JobResult`]. Pre-allocated; steady-state traffic is two `Option`
-/// moves and two condvar signals per op, no heap.
-struct Mailbox {
-    slot: Mutex<Slot>,
+/// SPSC mailbox: the single producer deposits one job, the single
+/// consumer deposits one result. Pre-allocated; steady-state traffic is
+/// two `Option` moves and two condvar signals per op, no heap.
+///
+/// Generic over the job/result payloads so the model-check suite can
+/// drive the *exact* production protocol (`submit`/`executor_loop`/
+/// `join`/`signal_shutdown`) with observable payloads.
+pub struct Mailbox<J, R> {
+    slot: Mutex<Slot<J, R>>,
     job_ready: Condvar,
     result_ready: Condvar,
 }
 
-struct Slot {
-    job: Option<Job>,
-    result: Option<JobResult>,
+struct Slot<J, R> {
+    job: Option<J>,
+    result: Option<R>,
     shutdown: bool,
 }
 
-impl Mailbox {
-    fn new() -> Mailbox {
+impl<J, R> Mailbox<J, R> {
+    pub fn new() -> Mailbox<J, R> {
         Mailbox {
             slot: Mutex::new(Slot { job: None, result: None, shutdown: false }),
             job_ready: Condvar::new(),
             result_ready: Condvar::new(),
         }
     }
+
+    /// Poison-tolerant slot lock: shutdown/teardown paths run from
+    /// `Drop` and must never double-panic; the slot state is two
+    /// `Option`s and a flag, meaningful even after a payload panic.
+    fn lock_slot(&self) -> MutexGuard<'_, Slot<J, R>> {
+        self.slot.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Deposit one job and wake the executor. SPSC contract: the
+    /// producer never submits while a job or result is outstanding.
+    pub fn submit(&self, job: J) {
+        let mut slot = self.lock_slot();
+        debug_assert!(slot.job.is_none() && slot.result.is_none(), "SPSC: mailbox busy");
+        slot.job = Some(job);
+        drop(slot);
+        self.job_ready.notify_one();
+    }
+
+    /// Block until the executor deposits its result (the fan-in
+    /// barrier: no result is ever read before this).
+    pub fn join(&self) -> R {
+        let mut slot = self.lock_slot();
+        loop {
+            if let Some(result) = slot.result.take() {
+                return result;
+            }
+            slot = self.result_ready.wait(slot).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Flag shutdown and wake the executor. Never panics (called from
+    /// `Drop`).
+    pub fn signal_shutdown(&self) {
+        let mut slot = self.lock_slot();
+        slot.shutdown = true;
+        drop(slot);
+        self.job_ready.notify_one();
+    }
+
+    /// The executor side: park on the mailbox, run each job through
+    /// `run`, deposit the result, repeat until shutdown. Checking
+    /// `shutdown` only with the slot lock held (and after draining any
+    /// pending job takes priority below it) means a submitted job is
+    /// never lost to a racing shutdown signal.
+    pub fn executor_loop(&self, mut run: impl FnMut(J) -> R) {
+        let mut guard = self.lock_slot();
+        loop {
+            if guard.shutdown {
+                return;
+            }
+            if let Some(job) = guard.job.take() {
+                drop(guard);
+                let result = run(job);
+                guard = self.lock_slot();
+                debug_assert!(guard.result.is_none(), "SPSC: stale result");
+                guard.result = Some(result);
+                self.result_ready.notify_one();
+            } else {
+                guard = self.job_ready.wait(guard).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+    }
+}
+
+impl<J, R> Default for Mailbox<J, R> {
+    fn default() -> Mailbox<J, R> {
+        Mailbox::new()
+    }
 }
 
 /// Execute one leased job.
 ///
-/// SAFETY: the submitting `run_*` call (a) derived every pointer from a
-/// live `&mut` borrow it holds across submit *and* join, (b) handed this
-/// executor a shard and destination range no concurrent job references,
-/// and (c) blocks until this result is deposited — so for the job's
-/// lifetime this thread is the sole accessor of every pointed-to region.
+/// Every `unsafe` block below re-materialises a reference from a lease
+/// wrapper; the shared justification is the module's lease contract:
+/// the submitting `run_*` call (a) derived every wrapper from a live
+/// borrow it holds across submit *and* join, (b) handed this executor a
+/// shard and destination range no concurrent job references, and (c)
+/// blocks until this result is deposited — so for the job's lifetime
+/// this thread is the sole accessor of every pointed-to region.
 fn execute(job: Job) -> JobResult {
-    unsafe {
-        match job {
-            Job::Insert { shard, counts, counts_len, values, values_len } => {
-                let shard = &mut *(shard as *mut Shard);
-                let counts = std::slice::from_raw_parts(counts as *const usize, counts_len);
-                let values = std::slice::from_raw_parts(values as *const f32, values_len);
-                JobResult::Insert(shard.apply_counts(counts, values))
+    match job {
+        Job::Insert { shard, counts, values } => {
+            // SAFETY: lease contract above — exclusive shard access
+            // for the duration of the job.
+            let shard = unsafe { shard.deref_mut() };
+            // SAFETY: lease contract above — the scratch counts and
+            // batch values are borrowed by the blocked submitter and
+            // written by no one.
+            let counts = unsafe { counts.as_slice() };
+            // SAFETY: as for `counts`.
+            let values = unsafe { values.as_slice() };
+            JobResult::Insert(shard.apply_counts(counts, values))
+        }
+        Job::Work { shard, iters } => {
+            // SAFETY: lease contract above — exclusive shard access.
+            let shard = unsafe { shard.deref_mut() };
+            // Same per-shard sequence as the serial worker: real
+            // numeric update (host path — the PJRT client is not
+            // shared across executors; see `Worker::handle`), then
+            // the modeled rw_b launch on non-empty shards.
+            let pjrt = shard.work_pass(None, iters);
+            if !shard.is_empty() {
+                shard.charge_rw_block(iters as f64);
             }
-            Job::Work { shard, iters } => {
-                let shard = &mut *(shard as *mut Shard);
-                // Same per-shard sequence as the serial worker: real
-                // numeric update (host path — the PJRT client is not
-                // shared across executors; see `Worker::handle`), then
-                // the modeled rw_b launch on non-empty shards.
-                let pjrt = shard.work_pass(None, iters);
-                if !shard.is_empty() {
-                    shard.charge_rw_block(iters as f64);
-                }
-                JobResult::Work { pjrt }
-            }
-            Job::FlattenTemp { shard, dst, dst_len } => {
-                let shard = &mut *(shard as *mut Shard);
-                let dst = std::slice::from_raw_parts_mut(dst as *mut f32, dst_len);
-                JobResult::Flatten(shard.flatten_temp_to_slice(dst))
-            }
-            Job::SealFlatten { shard, dst, dst_len } => {
-                let shard = &mut *(shard as *mut Shard);
-                let dst = std::slice::from_raw_parts_mut(dst as *mut f32, dst_len);
-                JobResult::Seal(shard.seal_flatten_to_slice(dst))
-            }
+            JobResult::Work { pjrt }
+        }
+        Job::FlattenTemp { shard, dst } => {
+            // SAFETY: lease contract above — exclusive shard access.
+            let shard = unsafe { shard.deref_mut() };
+            // SAFETY: lease contract above — `dst` was carved disjoint
+            // with split_at_mut before wrapping; no other job holds an
+            // overlapping range.
+            let dst = unsafe { dst.as_mut_slice() };
+            JobResult::Flatten(shard.flatten_temp_to_slice(dst))
+        }
+        Job::SealFlatten { shard, dst } => {
+            // SAFETY: lease contract above — exclusive shard access.
+            let shard = unsafe { shard.deref_mut() };
+            // SAFETY: as for FlattenTemp — disjoint by construction.
+            let dst = unsafe { dst.as_mut_slice() };
+            JobResult::Seal(shard.seal_flatten_to_slice(dst))
         }
     }
 }
@@ -155,8 +251,8 @@ fn execute(job: Job) -> JobResult {
 /// The persistent executor pool: one thread + mailbox per shard, spawned
 /// once and reused for every subsequent fan-out (never per batch).
 pub struct ShardPool {
-    mailboxes: Vec<Arc<Mailbox>>,
-    handles: Vec<JoinHandle<()>>,
+    mailboxes: Vec<Arc<Mailbox<Job, JobResult>>>,
+    handles: Vec<thread::JoinHandle<()>>,
 }
 
 impl ShardPool {
@@ -164,32 +260,16 @@ impl ShardPool {
     /// park on their mailbox condvar between jobs — no busy-waiting.
     pub fn new(threads: usize) -> ShardPool {
         assert!(threads > 0, "executor pool needs at least one thread");
-        let mailboxes: Vec<Arc<Mailbox>> = (0..threads).map(|_| Arc::new(Mailbox::new())).collect();
+        let mailboxes: Vec<Arc<Mailbox<Job, JobResult>>> =
+            (0..threads).map(|_| Arc::new(Mailbox::new())).collect();
         let handles = mailboxes
             .iter()
             .enumerate()
             .map(|(k, mb)| {
                 let mb = Arc::clone(mb);
-                std::thread::Builder::new()
-                    .name(format!("ggarray-shard-exec-{k}"))
-                    .spawn(move || {
-                        let mut guard = mb.slot.lock().unwrap();
-                        loop {
-                            if guard.shutdown {
-                                return;
-                            }
-                            if let Some(job) = guard.job.take() {
-                                drop(guard);
-                                let result = execute(job);
-                                guard = mb.slot.lock().unwrap();
-                                debug_assert!(guard.result.is_none(), "SPSC: stale result");
-                                guard.result = Some(result);
-                                mb.result_ready.notify_one();
-                            } else {
-                                guard = mb.job_ready.wait(guard).unwrap();
-                            }
-                        }
-                    })
+                thread::Builder::new()
+                    .name(format!("ggarray-shard-exec-{k}")) // lint: allow(alloc) — once per pool construction, never per batch
+                    .spawn(move || mb.executor_loop(execute))
                     .expect("spawn shard executor")
             })
             .collect();
@@ -199,27 +279,6 @@ impl ShardPool {
     /// Number of executor threads (== shard slots).
     pub fn threads(&self) -> usize {
         self.mailboxes.len()
-    }
-
-    /// Deposit one job in mailbox `k` and wake its executor.
-    fn submit(&self, k: usize, job: Job) {
-        let mut slot = self.mailboxes[k].slot.lock().unwrap();
-        debug_assert!(slot.job.is_none() && slot.result.is_none(), "SPSC: mailbox {k} busy");
-        slot.job = Some(job);
-        drop(slot);
-        self.mailboxes[k].job_ready.notify_one();
-    }
-
-    /// Block until mailbox `k`'s executor deposits its result.
-    fn join(&self, k: usize) -> JobResult {
-        let mb = &self.mailboxes[k];
-        let mut slot = mb.slot.lock().unwrap();
-        loop {
-            if let Some(result) = slot.result.take() {
-                return result;
-            }
-            slot = mb.result_ready.wait(slot).unwrap();
-        }
     }
 
     /// Fan an already-routed insert batch out to the executors and fan
@@ -241,29 +300,23 @@ impl ShardPool {
     ) -> DispatchOutcome {
         let n = shards.len();
         debug_assert!(n <= self.threads());
-        // All shard pointers derive from one base pointer whose
-        // provenance covers the whole slice, and `shards` is not
-        // reborrowed until every job has joined — the fan-out window
-        // contains no live reference that could alias an executor's
-        // write.
-        let base = shards.as_mut_ptr();
-        for k in 0..n {
+        // Each job's shard pointer comes from a distinct `iter_mut`
+        // element (disjoint provenance — never `base.add(k)` over one
+        // borrow), and `shards` is not reborrowed until every job has
+        // joined, so the fan-out window contains no live reference that
+        // could alias an executor's write.
+        for (k, shard) in shards.iter_mut().enumerate() {
             let (offset, take) = scratch.ranges[k];
             if take == 0 {
                 continue;
             }
             let counts = scratch.shard_counts(k, blocks_per_shard);
             let sub = &values[offset..offset + take];
-            self.submit(
-                k,
-                Job::Insert {
-                    shard: unsafe { base.add(k) } as usize,
-                    counts: counts.as_ptr() as usize,
-                    counts_len: counts.len(),
-                    values: sub.as_ptr() as usize,
-                    values_len: sub.len(),
-                },
-            );
+            self.mailboxes[k].submit(Job::Insert {
+                shard: SendPtr::new(shard),
+                counts: SendSlice::new(counts),
+                values: SendSlice::new(sub),
+            });
         }
         // Barrier: collect in shard order (the shard id order the serial
         // loop reports in, and the order `cost_since` folds deltas in).
@@ -273,7 +326,7 @@ impl ShardPool {
             if scratch.ranges[k].1 == 0 {
                 continue;
             }
-            match self.join(k) {
+            match self.mailboxes[k].join() {
                 JobResult::Insert(out) => {
                     applied += out.applied as u64;
                     if let Some(e) = out.error {
@@ -304,10 +357,9 @@ impl ShardPool {
         // changes a shard's length, so the skip decision is stable, and
         // reading it later would alias the executors' writes.
         let active: Vec<bool> = shards.iter().map(|s| !s.is_empty()).collect();
-        let base = shards.as_mut_ptr();
-        for k in 0..n {
+        for (k, shard) in shards.iter_mut().enumerate() {
             if active[k] {
-                self.submit(k, Job::Work { shard: unsafe { base.add(k) } as usize, iters });
+                self.mailboxes[k].submit(Job::Work { shard: SendPtr::new(shard), iters });
             }
         }
         let mut pjrt = 0u64;
@@ -315,7 +367,7 @@ impl ShardPool {
             if !active[k] {
                 continue;
             }
-            match self.join(k) {
+            match self.mailboxes[k].join() {
                 JobResult::Work { pjrt: p } => pjrt += p,
                 _ => unreachable!("work mailbox returned a foreign result"),
             }
@@ -325,10 +377,12 @@ impl ShardPool {
 
     /// Parallel snapshot gather: shard `k` writes its contents into
     /// `dst[ranges[k].0 .. +ranges[k].1]` (disjoint by construction —
-    /// ranges are the prefix sums of the shard lengths) and releases its
-    /// simulated destination. The caller pre-screened VRAM fit; an
-    /// unexpected failure is surfaced as the lowest failing shard's
-    /// error (the destination contents are discarded by the caller).
+    /// ranges are the prefix sums of the shard lengths, and the
+    /// destination is carved with `split_at_mut` so disjointness is
+    /// structural) and releases its simulated destination. The caller
+    /// pre-screened VRAM fit; an unexpected failure is surfaced as the
+    /// lowest failing shard's error (the destination contents are
+    /// discarded by the caller).
     pub fn run_flatten_temp(
         &self,
         shards: &mut [Shard],
@@ -338,21 +392,22 @@ impl ShardPool {
         let n = shards.len();
         debug_assert_eq!(n, ranges.len());
         debug_assert_eq!(ranges.iter().map(|r| r.1).sum::<usize>(), dst.len());
-        let shard_base = shards.as_mut_ptr();
-        let dst_base = dst.as_mut_ptr() as usize;
-        for (k, &(off, len)) in ranges.iter().enumerate() {
-            self.submit(
-                k,
-                Job::FlattenTemp {
-                    shard: unsafe { shard_base.add(k) } as usize,
-                    dst: dst_base + off * std::mem::size_of::<f32>(),
-                    dst_len: len,
-                },
-            );
+        let mut rest: &mut [f32] = dst;
+        let mut covered = 0usize;
+        for ((k, shard), &(off, len)) in shards.iter_mut().enumerate().zip(ranges.iter()) {
+            debug_assert_eq!(off, covered, "gather ranges must be contiguous prefix sums");
+            let chunk = std::mem::take(&mut rest);
+            let (head, tail) = chunk.split_at_mut(len);
+            rest = tail;
+            covered += len;
+            self.mailboxes[k].submit(Job::FlattenTemp {
+                shard: SendPtr::new(shard),
+                dst: SendSliceMut::new(head),
+            });
         }
         let mut failed: Option<OomError> = None;
         for k in 0..n {
-            match self.join(k) {
+            match self.mailboxes[k].join() {
                 JobResult::Flatten(Ok(_)) => {}
                 JobResult::Flatten(Err(e)) => {
                     debug_assert!(false, "flatten fan-out OOM despite pre-screen on shard {k}");
@@ -385,20 +440,21 @@ impl ShardPool {
         let n = shards.len();
         debug_assert_eq!(n, ranges.len());
         debug_assert_eq!(ranges.iter().map(|r| r.1).sum::<usize>(), dst.len());
-        let shard_base = shards.as_mut_ptr();
-        let dst_base = dst.as_mut_ptr() as usize;
-        for (k, &(off, len)) in ranges.iter().enumerate() {
-            self.submit(
-                k,
-                Job::SealFlatten {
-                    shard: unsafe { shard_base.add(k) } as usize,
-                    dst: dst_base + off * std::mem::size_of::<f32>(),
-                    dst_len: len,
-                },
-            );
+        let mut rest: &mut [f32] = dst;
+        let mut covered = 0usize;
+        for ((k, shard), &(off, len)) in shards.iter_mut().enumerate().zip(ranges.iter()) {
+            debug_assert_eq!(off, covered, "gather ranges must be contiguous prefix sums");
+            let chunk = std::mem::take(&mut rest);
+            let (head, tail) = chunk.split_at_mut(len);
+            rest = tail;
+            covered += len;
+            self.mailboxes[k].submit(Job::SealFlatten {
+                shard: SendPtr::new(shard),
+                dst: SendSliceMut::new(head),
+            });
         }
         for k in 0..n {
-            match self.join(k) {
+            match self.mailboxes[k].join() {
                 JobResult::Seal(r) => out.push(r),
                 _ => unreachable!("seal mailbox returned a foreign result"),
             }
@@ -409,16 +465,11 @@ impl ShardPool {
 impl Drop for ShardPool {
     fn drop(&mut self) {
         for mb in &self.mailboxes {
-            // Poison-tolerant: a panicked executor already holds a dead
-            // thread — still signal the healthy ones, and never panic
-            // inside drop (a double panic would abort the process).
-            let mut slot = match mb.slot.lock() {
-                Ok(guard) => guard,
-                Err(poisoned) => poisoned.into_inner(),
-            };
-            slot.shutdown = true;
-            drop(slot);
-            mb.job_ready.notify_one();
+            // Poison-tolerant (inside signal_shutdown): a panicked
+            // executor already holds a dead thread — still signal the
+            // healthy ones, and never panic inside drop (a double panic
+            // would abort the process).
+            mb.signal_shutdown();
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -567,5 +618,23 @@ mod tests {
         let pool = ShardPool::new(4);
         assert_eq!(pool.threads(), 4);
         drop(pool); // must not hang or leak threads
+    }
+
+    #[test]
+    fn generic_mailbox_round_trips_and_shuts_down() {
+        let mb: Arc<Mailbox<u32, u32>> = Arc::new(Mailbox::new());
+        let worker = {
+            let mb = Arc::clone(&mb);
+            thread::Builder::new()
+                .name("mailbox-test-exec".to_string())
+                .spawn(move || mb.executor_loop(|j| j * 2))
+                .expect("spawn")
+        };
+        mb.submit(21);
+        assert_eq!(mb.join(), 42);
+        mb.submit(7);
+        assert_eq!(mb.join(), 14);
+        mb.signal_shutdown();
+        worker.join().expect("executor exits cleanly");
     }
 }

@@ -50,10 +50,11 @@
 //! in-process service is equivalent to (and simpler than) a tokio
 //! single-worker runtime.
 
-use std::sync::mpsc::{self, Receiver, TryRecvError};
-use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+use crate::sync::mpsc::{self, Receiver};
+use crate::sync::thread::{self, JoinHandle};
+use crate::sync::Arc;
 
 use crate::ggarray::flatten::ShardedFlattened;
 use crate::ggarray::lfvector::buckets_for_len;
@@ -65,7 +66,10 @@ use crate::sim::spec::DeviceSpec;
 use crate::workload::{synth_f32, Step, WorkloadSpec};
 
 use super::batcher::{BatchConfig, Batcher};
-use super::frontend::{ClientLane, ClientSession, FrontendConfig, FrontendShared, MergePolicy, SessionInsert};
+use super::frontend::{
+    drain_lanes, ClientLane, ClientSession, FrontendConfig, FrontendShared, MergePolicy,
+    SessionInsert,
+};
 use super::metrics::{Metrics, ParallelCost};
 use super::pool::ShardPool;
 use super::request::{checksum, Request, Response};
@@ -455,7 +459,7 @@ impl Coordinator {
         let shared = Arc::new(FrontendShared::default());
         let frontend_cfg = cfg.frontend.clone();
         let worker_shared = Arc::clone(&shared);
-        let worker = std::thread::Builder::new()
+        let worker = thread::Builder::new()
             .name("ggarray-coordinator".into())
             .spawn(move || Worker::new(cfg, worker_shared).run(rx))
             .expect("spawn coordinator worker");
@@ -735,62 +739,30 @@ impl Worker {
     }
 
     /// Merge admitted client-pool inserts into the batcher (the
-    /// febft-style proposal step): sweep the lanes in ascending client-id
-    /// order, moving each lane's queued requests in FIFO order, each
-    /// sweep bounded to `queue_requests` per lane so one hot producer
-    /// cannot starve the loop. A `barrier` drain repeats the sweep until
-    /// nothing moves (quiesced clients ⇒ one productive sweep), a
-    /// pressure drain (poke / idle tick, eager mode) does one sweep.
-    /// Size-triggered batch flushes dispatch inline, preserving the
-    /// merged stream order.
+    /// febft-style proposal step). The sweep itself —
+    /// [`super::frontend::drain_lanes`], shared with the `FrontendRig`
+    /// harness and the `ggcheck` model suite — visits lanes in ascending
+    /// client-id order, per-client FIFO, bounded to `queue_requests` per
+    /// lane per sweep so one hot producer cannot starve the loop; a
+    /// `barrier` drain repeats until nothing moves. The worker's sink
+    /// maps each drained insert into metrics and the batcher, with
+    /// size-triggered flushes dispatching inline (preserving merged
+    /// stream order). Lanes are taken out of `self` for the sweep so the
+    /// sink can borrow the worker mutably for `apply_batch`.
     fn drain_frontend(&mut self, barrier: bool) {
-        loop {
-            let mut moved = 0usize;
-            let mut lane_idx = 0;
-            while lane_idx < self.lanes.len() {
-                let mut disconnected = false;
-                for _ in 0..self.cfg.frontend.queue_requests.max(1) {
-                    let lane = &mut self.lanes[lane_idx];
-                    match lane.rx.try_recv() {
-                        Ok(ins) => {
-                            debug_assert_eq!(
-                                ins.seq, lane.next_seq,
-                                "client {} admission stream must be gap-free",
-                                lane.id
-                            );
-                            lane.next_seq = ins.seq + 1;
-                            moved += 1;
-                            self.shared.sub_pooled(ins.values.len());
-                            self.metrics.inserts_requested += 1;
-                            self.metrics.admitted_requests += 1;
-                            self.metrics.admitted_values += ins.values.len() as u64;
-                            if let Some(batch) = self.batcher.push_owned(ins.values) {
-                                self.apply_batch(batch.values, batch.requests);
-                            }
-                        }
-                        Err(TryRecvError::Empty) => break,
-                        Err(TryRecvError::Disconnected) => {
-                            // Session dropped and its pool is fully
-                            // drained (Disconnected is only returned on
-                            // an empty buffer) — retire the lane.
-                            disconnected = true;
-                            break;
-                        }
-                    }
-                }
-                if disconnected {
-                    self.lanes.remove(lane_idx);
-                } else {
-                    lane_idx += 1;
-                }
+        let mut lanes = std::mem::take(&mut self.lanes);
+        let per_sweep = self.cfg.frontend.queue_requests.max(1);
+        let shared = Arc::clone(&self.shared);
+        let stats = drain_lanes(&mut lanes, &shared, per_sweep, barrier, |_, ins| {
+            self.metrics.inserts_requested += 1;
+            self.metrics.admitted_requests += 1;
+            self.metrics.admitted_values += ins.values.len() as u64;
+            if let Some(batch) = self.batcher.push_owned(ins.values) {
+                self.apply_batch(batch.values, batch.requests);
             }
-            if moved > 0 {
-                self.metrics.proposals += 1;
-            }
-            if !(barrier && moved > 0) {
-                return;
-            }
-        }
+        });
+        self.metrics.proposals += stats.productive_sweeps;
+        self.lanes = lanes;
     }
 
     fn apply_batch(&mut self, values: Vec<f32>, requests: usize) {

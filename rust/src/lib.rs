@@ -1,3 +1,4 @@
+#![deny(unsafe_op_in_unsafe_fn)]
 //! # GGArray — a dynamically growable GPU array
 //!
 //! Full-system reproduction of *"GGArray: A Dynamically Growable GPU
@@ -125,6 +126,21 @@
 //!   `BENCH_frontend.json` via `benches/bench_frontend.rs`; see
 //!   EXPERIMENTS.md §Frontend).
 //!
+//! * **Machine-checked concurrency** — the coordinator's locks,
+//!   condvars, atomics, channels and threads all come from the
+//!   [`sync`] facade (std re-exports in normal builds). Under
+//!   `--cfg ggcheck` the facade swaps in instrumented primitives
+//!   driven by the [`checker`] — a bounded exhaustive-interleaving
+//!   model checker (loom-style DFS over yield points, vendor-free)
+//!   that enumerates every schedule of the SPSC mailbox handoff, the
+//!   admission shed/rollback path, and the `AtBarrier` drain order,
+//!   printing a replayable schedule seed on failure
+//!   (`tests/model_check.rs`). Pointer hand-offs to executor threads
+//!   use the provenance-preserving [`sync::SendPtr`] family instead of
+//!   `usize` laundering, and a repo lint (`cargo run --bin lint`)
+//!   gates `unsafe` hygiene, pointer casts, facade bypasses, and
+//!   hot-path allocations in CI. See EXPERIMENTS.md §Analysis.
+//!
 //! See `examples/sharded_two_phase.rs` for the end-to-end flow and
 //! `rust/benches/bench_shards.rs` for the scaling shape.
 //!
@@ -142,12 +158,14 @@
 //! ```
 
 pub mod baselines;
+pub mod checker;
 pub mod coordinator;
 pub mod experiments;
 pub mod ggarray;
 pub mod insertion;
 pub mod runtime;
 pub mod sim;
+pub mod sync;
 pub mod testkit;
 pub mod theory;
 pub mod util;

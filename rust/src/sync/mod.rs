@@ -1,0 +1,60 @@
+//! Synchronisation facade for the coordinator's concurrency core.
+//!
+//! Every lock, condvar, atomic, channel, and thread primitive used by
+//! `coordinator/` imports from here instead of `std::sync` /
+//! `std::thread` (the `lint` binary enforces it). In normal builds the
+//! facade is a zero-cost re-export of `std`. Under `--cfg ggcheck` it
+//! resolves to [`model`] — instrumented primitives that route every
+//! operation through the [`crate::checker::rt`] scheduler hooks, which
+//! is what lets `rust/tests/model_check.rs` exhaustively enumerate the
+//! protocols' bounded interleavings.
+//!
+//! The model flavor is *dual*: each primitive decides at construction
+//! time (via [`crate::checker::rt::active`]) whether it lives inside a
+//! model-checked execution. Outside one it delegates straight to
+//! `std`, so a `ggcheck` build still runs the ordinary unit tests
+//! unchanged; inside one it becomes deterministic and schedulable.
+//!
+//! [`sendptr`] rides along in both flavors: the provenance-preserving
+//! `Send` wrappers the executor pool uses instead of pointer→`usize`
+//! laundering.
+
+pub mod sendptr;
+
+pub use sendptr::{SendPtr, SendSlice, SendSliceMut};
+
+/// `Arc` is pure data sharing — no scheduling decisions — so both
+/// flavors use `std`'s.
+pub use std::sync::Arc;
+
+#[cfg(ggcheck)]
+pub mod model;
+
+#[cfg(ggcheck)]
+pub use model::{Condvar, Mutex, MutexGuard};
+#[cfg(ggcheck)]
+pub use model::{atomic, mpsc, thread};
+
+#[cfg(not(ggcheck))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Atomics (std flavor): plain re-export.
+#[cfg(not(ggcheck))]
+pub mod atomic {
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Channels (std flavor): plain re-export.
+#[cfg(not(ggcheck))]
+pub mod mpsc {
+    pub use std::sync::mpsc::{
+        channel, sync_channel, Receiver, RecvError, RecvTimeoutError, SendError, Sender,
+        SyncSender, TryRecvError, TrySendError,
+    };
+}
+
+/// Threads (std flavor): plain re-export.
+#[cfg(not(ggcheck))]
+pub mod thread {
+    pub use std::thread::{sleep, spawn, yield_now, Builder, JoinHandle};
+}

@@ -1,0 +1,737 @@
+//! Instrumented, deterministically-schedulable sync primitives
+//! (compiled only under `--cfg ggcheck`; see [`crate::sync`]).
+//!
+//! Every type here is *dual-flavor*: at construction it asks
+//! [`rt::active`] whether the calling thread is inside a
+//! [`crate::checker`] execution. Outside one it wraps the `std`
+//! primitive untouched (so a ggcheck build still runs the ordinary
+//! test suite with real concurrency); inside one it routes every
+//! blocking edge through the checker's cooperative scheduler:
+//!
+//! * `Mutex::lock` — yield, then try-acquire, else park on the mutex.
+//! * `Condvar::wait` — release-and-park *atomically* (no yield point
+//!   between the two, so a concurrent notify cannot be missed), then
+//!   re-lock. `notify_*` wakes **all** waiters — a sound superset of
+//!   `std`'s spurious-wakeup licence.
+//! * atomics — one yield before each operation; every ordering is
+//!   strengthened to `SeqCst` (the model checks interleavings, not
+//!   weak-memory reorderings).
+//! * channels — a `VecDeque` behind a host mutex with one checker
+//!   wait-resource per channel; `recv_timeout` **times out
+//!   immediately** when the queue is empty (the model has no clock —
+//!   a timeout is just one more schedulable outcome).
+//! * `thread::sleep` — a plain yield (again: no clock).
+//!
+//! Cancellation rule: when the scheduler condemns a schedule it
+//! unwinds every model thread, and `Drop` impls may re-enter these
+//! primitives mid-unwind. All blocking loops therefore bail out via
+//! [`rt::cancelled`] instead of parking, and all release/wake paths
+//! never yield.
+
+use crate::checker::rt;
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{
+    Arc, LockResult, Mutex as StdMutex, MutexGuard as StdMutexGuard, PoisonError,
+};
+use std::time::Duration;
+
+fn host_lock<T>(m: &StdMutex<T>) -> StdMutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------- Mutex
+
+enum MutexFlavor<T> {
+    Std(StdMutex<T>),
+    Model { id: usize, cell: UnsafeCell<T> },
+}
+
+/// Dual-flavor mutex with the `std::sync::Mutex` lock/poison API.
+pub struct Mutex<T> {
+    inner: MutexFlavor<T>,
+}
+
+// SAFETY: the Std flavor inherits std's Send/Sync. The Model flavor's
+// UnsafeCell is only dereferenced between a successful
+// rt::mutex_try_acquire and the matching rt::mutex_release, and the
+// checker scheduler guarantees at most one holder at a time (single
+// runnable thread + the acquire/release protocol), so cross-thread
+// shared access to the cell is mutually exclusive. `T: Send` is
+// required because the protected value is accessed from whichever
+// thread holds the lock.
+unsafe impl<T: Send> Send for Mutex<T> {}
+// SAFETY: as above — `&Mutex<T>` only exposes `T` through the
+// scheduler-serialised lock protocol.
+unsafe impl<T: Send> Sync for Mutex<T> {}
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Mutex<T> {
+        if rt::active() {
+            Mutex { inner: MutexFlavor::Model { id: rt::new_mutex(), cell: UnsafeCell::new(value) } }
+        } else {
+            Mutex { inner: MutexFlavor::Std(StdMutex::new(value)) }
+        }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match &self.inner {
+            MutexFlavor::Std(m) => match m.lock() {
+                Ok(g) => Ok(MutexGuard { mx: self, std: Some(g), released: false }),
+                Err(poison) => Err(PoisonError::new(MutexGuard {
+                    mx: self,
+                    std: Some(poison.into_inner()),
+                    released: false,
+                })),
+            },
+            MutexFlavor::Model { id, .. } => loop {
+                rt::yield_point();
+                if rt::mutex_try_acquire(*id) {
+                    return Ok(MutexGuard { mx: self, std: None, released: false });
+                }
+                rt::block_on_mutex(*id);
+            },
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Mutex").finish_non_exhaustive()
+    }
+}
+
+/// Guard for [`Mutex`]. The model flavor releases through
+/// [`rt::mutex_release`] on drop (never yielding, so dropping a guard
+/// during unwind is safe).
+pub struct MutexGuard<'a, T> {
+    mx: &'a Mutex<T>,
+    std: Option<StdMutexGuard<'a, T>>,
+    /// Set by `Condvar::wait`, which hands the release to the checker
+    /// itself so the release+park pair stays atomic.
+    released: bool,
+}
+
+impl<'a, T> Deref for MutexGuard<'a, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        match (&self.std, &self.mx.inner) {
+            (Some(g), _) => g,
+            // SAFETY: this guard was created by a successful model
+            // acquire and not yet released; the scheduler serialises
+            // holders, so no aliasing &mut exists.
+            (None, MutexFlavor::Model { cell, .. }) => unsafe { &*cell.get() },
+            (None, MutexFlavor::Std(_)) => unreachable!("std guard lost its inner guard"),
+        }
+    }
+}
+
+impl<'a, T> DerefMut for MutexGuard<'a, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        match (&mut self.std, &self.mx.inner) {
+            (Some(g), _) => g,
+            // SAFETY: exclusive model lock held (see Deref); &mut self
+            // additionally prevents aliasing through this guard.
+            (None, MutexFlavor::Model { cell, .. }) => unsafe { &mut *cell.get() },
+            (None, MutexFlavor::Std(_)) => unreachable!("std guard lost its inner guard"),
+        }
+    }
+}
+
+impl<'a, T> Drop for MutexGuard<'a, T> {
+    fn drop(&mut self) {
+        if self.released || self.std.is_some() {
+            return; // std guard releases itself; waited guards already did
+        }
+        if let MutexFlavor::Model { id, .. } = &self.mx.inner {
+            rt::mutex_release(*id);
+        }
+    }
+}
+
+// -------------------------------------------------------------- Condvar
+
+enum CondvarFlavor {
+    Std(std::sync::Condvar),
+    Model { res: usize },
+}
+
+/// Dual-flavor condition variable (`wait`, `notify_one`, `notify_all`).
+pub struct Condvar {
+    flavor: CondvarFlavor,
+}
+
+impl Condvar {
+    pub fn new() -> Condvar {
+        if rt::active() {
+            Condvar { flavor: CondvarFlavor::Model { res: rt::new_resource() } }
+        } else {
+            Condvar { flavor: CondvarFlavor::Std(std::sync::Condvar::new()) }
+        }
+    }
+
+    pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        match &self.flavor {
+            CondvarFlavor::Std(cv) => {
+                let mx = guard.mx;
+                let std_guard =
+                    guard.std.take().expect("std condvar paired with a model mutex");
+                guard.released = true;
+                drop(guard);
+                match cv.wait(std_guard) {
+                    Ok(g) => Ok(MutexGuard { mx, std: Some(g), released: false }),
+                    Err(poison) => Err(PoisonError::new(MutexGuard {
+                        mx,
+                        std: Some(poison.into_inner()),
+                        released: false,
+                    })),
+                }
+            }
+            CondvarFlavor::Model { res } => {
+                let mx = guard.mx;
+                let id = match &mx.inner {
+                    MutexFlavor::Model { id, .. } => *id,
+                    MutexFlavor::Std(_) => panic!("model condvar paired with a std mutex"),
+                };
+                // Atomic release-and-park: between mutex_release and
+                // block_on_resource there is no yield point, so no
+                // other thread can run and a notify cannot be lost.
+                guard.released = true;
+                drop(guard);
+                rt::mutex_release(id);
+                rt::block_on_resource(*res);
+                mx.lock()
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        match &self.flavor {
+            CondvarFlavor::Std(cv) => cv.notify_one(),
+            CondvarFlavor::Model { res } => {
+                rt::yield_point();
+                rt::wake_resource(*res);
+            }
+        }
+    }
+
+    pub fn notify_all(&self) {
+        match &self.flavor {
+            CondvarFlavor::Std(cv) => cv.notify_all(),
+            CondvarFlavor::Model { res } => {
+                rt::yield_point();
+                rt::wake_resource(*res);
+            }
+        }
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+impl fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Condvar").finish_non_exhaustive()
+    }
+}
+
+// -------------------------------------------------------------- atomics
+
+/// Dual-flavor atomics: one yield point precedes each operation on a
+/// model thread, and every ordering is strengthened to `SeqCst`.
+pub mod atomic {
+    use super::rt;
+    pub use std::sync::atomic::Ordering;
+
+    macro_rules! model_int_atomic {
+        ($name:ident, $prim:ty, $std:ty) => {
+            #[derive(Debug, Default)]
+            pub struct $name {
+                inner: $std,
+            }
+
+            impl $name {
+                pub const fn new(v: $prim) -> $name {
+                    $name { inner: <$std>::new(v) }
+                }
+
+                fn order(&self, order: Ordering) -> Ordering {
+                    if rt::active() {
+                        rt::yield_point();
+                        Ordering::SeqCst
+                    } else {
+                        order
+                    }
+                }
+
+                pub fn load(&self, order: Ordering) -> $prim {
+                    let o = self.order(order);
+                    self.inner.load(o)
+                }
+
+                pub fn store(&self, v: $prim, order: Ordering) {
+                    let o = self.order(order);
+                    self.inner.store(v, o)
+                }
+
+                pub fn swap(&self, v: $prim, order: Ordering) -> $prim {
+                    let o = self.order(order);
+                    self.inner.swap(v, o)
+                }
+
+                pub fn fetch_add(&self, v: $prim, order: Ordering) -> $prim {
+                    let o = self.order(order);
+                    self.inner.fetch_add(v, o)
+                }
+
+                pub fn fetch_sub(&self, v: $prim, order: Ordering) -> $prim {
+                    let o = self.order(order);
+                    self.inner.fetch_sub(v, o)
+                }
+            }
+        };
+    }
+
+    model_int_atomic!(AtomicU64, u64, std::sync::atomic::AtomicU64);
+    model_int_atomic!(AtomicUsize, usize, std::sync::atomic::AtomicUsize);
+
+    #[derive(Debug, Default)]
+    pub struct AtomicBool {
+        inner: std::sync::atomic::AtomicBool,
+    }
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> AtomicBool {
+            AtomicBool { inner: std::sync::atomic::AtomicBool::new(v) }
+        }
+
+        fn order(&self, order: Ordering) -> Ordering {
+            if rt::active() {
+                rt::yield_point();
+                Ordering::SeqCst
+            } else {
+                order
+            }
+        }
+
+        pub fn load(&self, order: Ordering) -> bool {
+            let o = self.order(order);
+            self.inner.load(o)
+        }
+
+        pub fn store(&self, v: bool, order: Ordering) {
+            let o = self.order(order);
+            self.inner.store(v, o)
+        }
+
+        pub fn swap(&self, v: bool, order: Ordering) -> bool {
+            let o = self.order(order);
+            self.inner.swap(v, o)
+        }
+    }
+}
+
+// ------------------------------------------------------------- channels
+
+/// Dual-flavor mpsc with the subset of `std::sync::mpsc` the
+/// coordinator uses (`channel`, `sync_channel`, `send`, `try_send`,
+/// `recv`, `try_recv`, `recv_timeout`). Reuses `std`'s error types so
+/// call sites match on the same variants in both flavors.
+pub mod mpsc {
+    use super::{host_lock, rt, Arc, Duration, StdMutex, VecDeque};
+    use std::fmt;
+    pub use std::sync::mpsc::{
+        RecvError, RecvTimeoutError, SendError, TryRecvError, TrySendError,
+    };
+
+    struct ChanState<T> {
+        q: VecDeque<T>,
+        cap: Option<usize>,
+        senders: usize,
+        receiver_alive: bool,
+    }
+
+    /// Model-flavor channel core. Public only because the enum
+    /// variants below name it; fields stay private.
+    #[doc(hidden)]
+    pub struct Chan<T> {
+        res: usize,
+        state: StdMutex<ChanState<T>>,
+    }
+
+    impl<T> Chan<T> {
+        fn new(cap: Option<usize>) -> Arc<Chan<T>> {
+            Arc::new(Chan {
+                res: rt::new_resource(),
+                state: StdMutex::new(ChanState {
+                    q: VecDeque::new(),
+                    cap,
+                    senders: 1,
+                    receiver_alive: true,
+                }),
+            })
+        }
+
+        fn send(&self, t: T) -> Result<(), SendError<T>> {
+            let mut item = Some(t);
+            loop {
+                if rt::cancelled() {
+                    return Err(SendError(item.take().expect("send item present")));
+                }
+                rt::yield_point();
+                {
+                    let mut st = host_lock(&self.state);
+                    if !st.receiver_alive {
+                        return Err(SendError(item.take().expect("send item present")));
+                    }
+                    let has_room = st.cap.map(|c| st.q.len() < c).unwrap_or(true);
+                    if has_room {
+                        st.q.push_back(item.take().expect("send item present"));
+                        drop(st);
+                        rt::wake_resource(self.res);
+                        return Ok(());
+                    }
+                }
+                rt::block_on_resource(self.res);
+            }
+        }
+
+        fn try_send(&self, t: T) -> Result<(), TrySendError<T>> {
+            rt::yield_point();
+            let mut st = host_lock(&self.state);
+            if !st.receiver_alive {
+                return Err(TrySendError::Disconnected(t));
+            }
+            if let Some(cap) = st.cap {
+                if st.q.len() >= cap {
+                    return Err(TrySendError::Full(t));
+                }
+            }
+            st.q.push_back(t);
+            drop(st);
+            rt::wake_resource(self.res);
+            Ok(())
+        }
+
+        fn recv(&self) -> Result<T, RecvError> {
+            loop {
+                if rt::cancelled() {
+                    return Err(RecvError);
+                }
+                rt::yield_point();
+                {
+                    let mut st = host_lock(&self.state);
+                    if let Some(v) = st.q.pop_front() {
+                        drop(st);
+                        // Bounded senders may be parked waiting for room.
+                        rt::wake_resource(self.res);
+                        return Ok(v);
+                    }
+                    if st.senders == 0 {
+                        return Err(RecvError);
+                    }
+                }
+                rt::block_on_resource(self.res);
+            }
+        }
+
+        fn try_recv(&self) -> Result<T, TryRecvError> {
+            rt::yield_point();
+            let mut st = host_lock(&self.state);
+            match st.q.pop_front() {
+                Some(v) => {
+                    drop(st);
+                    rt::wake_resource(self.res);
+                    Ok(v)
+                }
+                None if st.senders == 0 => Err(TryRecvError::Disconnected),
+                None => Err(TryRecvError::Empty),
+            }
+        }
+
+        /// Model semantics: the checker has no clock, so an empty queue
+        /// "times out" immediately — the timeout branch is just one
+        /// more schedulable outcome of the event loop.
+        fn recv_timeout(&self) -> Result<T, RecvTimeoutError> {
+            match self.try_recv() {
+                Ok(v) => Ok(v),
+                Err(TryRecvError::Disconnected) => Err(RecvTimeoutError::Disconnected),
+                Err(TryRecvError::Empty) => Err(RecvTimeoutError::Timeout),
+            }
+        }
+
+        fn drop_sender(&self) {
+            let mut st = host_lock(&self.state);
+            st.senders -= 1;
+            let disconnected = st.senders == 0;
+            drop(st);
+            if disconnected {
+                rt::wake_resource(self.res);
+            }
+        }
+
+        fn drop_receiver(&self) {
+            let mut st = host_lock(&self.state);
+            st.receiver_alive = false;
+            drop(st);
+            rt::wake_resource(self.res);
+        }
+
+        fn add_sender(&self) {
+            host_lock(&self.state).senders += 1;
+        }
+    }
+
+    pub enum Sender<T> {
+        Std(std::sync::mpsc::Sender<T>),
+        Model(Arc<Chan<T>>),
+    }
+
+    pub enum SyncSender<T> {
+        Std(std::sync::mpsc::SyncSender<T>),
+        Model(Arc<Chan<T>>),
+    }
+
+    pub enum Receiver<T> {
+        Std(std::sync::mpsc::Receiver<T>),
+        Model(Arc<Chan<T>>),
+    }
+
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        if rt::active() {
+            let ch = Chan::new(None);
+            (Sender::Model(Arc::clone(&ch)), Receiver::Model(ch))
+        } else {
+            let (tx, rx) = std::sync::mpsc::channel();
+            (Sender::Std(tx), Receiver::Std(rx))
+        }
+    }
+
+    pub fn sync_channel<T>(bound: usize) -> (SyncSender<T>, Receiver<T>) {
+        if rt::active() {
+            let ch = Chan::new(Some(bound));
+            (SyncSender::Model(Arc::clone(&ch)), Receiver::Model(ch))
+        } else {
+            let (tx, rx) = std::sync::mpsc::sync_channel(bound);
+            (SyncSender::Std(tx), Receiver::Std(rx))
+        }
+    }
+
+    impl<T> Sender<T> {
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            match self {
+                Sender::Std(tx) => tx.send(t),
+                Sender::Model(ch) => ch.send(t),
+            }
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Sender<T> {
+            match self {
+                Sender::Std(tx) => Sender::Std(tx.clone()),
+                Sender::Model(ch) => {
+                    ch.add_sender();
+                    Sender::Model(Arc::clone(ch))
+                }
+            }
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            if let Sender::Model(ch) = self {
+                ch.drop_sender();
+            }
+        }
+    }
+
+    impl<T> SyncSender<T> {
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            match self {
+                SyncSender::Std(tx) => tx.send(t),
+                SyncSender::Model(ch) => ch.send(t),
+            }
+        }
+
+        pub fn try_send(&self, t: T) -> Result<(), TrySendError<T>> {
+            match self {
+                SyncSender::Std(tx) => tx.try_send(t),
+                SyncSender::Model(ch) => ch.try_send(t),
+            }
+        }
+    }
+
+    impl<T> Clone for SyncSender<T> {
+        fn clone(&self) -> SyncSender<T> {
+            match self {
+                SyncSender::Std(tx) => SyncSender::Std(tx.clone()),
+                SyncSender::Model(ch) => {
+                    ch.add_sender();
+                    SyncSender::Model(Arc::clone(ch))
+                }
+            }
+        }
+    }
+
+    impl<T> Drop for SyncSender<T> {
+        fn drop(&mut self) {
+            if let SyncSender::Model(ch) = self {
+                ch.drop_sender();
+            }
+        }
+    }
+
+    impl<T> Receiver<T> {
+        pub fn recv(&self) -> Result<T, RecvError> {
+            match self {
+                Receiver::Std(rx) => rx.recv(),
+                Receiver::Model(ch) => ch.recv(),
+            }
+        }
+
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            match self {
+                Receiver::Std(rx) => rx.try_recv(),
+                Receiver::Model(ch) => ch.try_recv(),
+            }
+        }
+
+        pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+            match self {
+                Receiver::Std(rx) => rx.recv_timeout(timeout),
+                Receiver::Model(ch) => ch.recv_timeout(),
+            }
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            if let Receiver::Model(ch) = self {
+                ch.drop_receiver();
+            }
+        }
+    }
+
+    impl<T> fmt::Debug for Sender<T> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("Sender { .. }")
+        }
+    }
+    impl<T> fmt::Debug for SyncSender<T> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("SyncSender { .. }")
+        }
+    }
+    impl<T> fmt::Debug for Receiver<T> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("Receiver { .. }")
+        }
+    }
+}
+
+// -------------------------------------------------------------- threads
+
+/// Dual-flavor thread spawn/join/sleep/yield. Model threads are
+/// checker-scheduled; the builder name is dropped in that flavor (the
+/// checker names threads by tid).
+pub mod thread {
+    use super::{host_lock, rt, Arc, Duration, StdMutex};
+
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    impl Builder {
+        pub fn new() -> Builder {
+            Builder { name: None }
+        }
+
+        pub fn name(mut self, name: String) -> Builder {
+            self.name = Some(name);
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            if rt::active() {
+                let slot: Arc<StdMutex<Option<T>>> = Arc::new(StdMutex::new(None));
+                let out = Arc::clone(&slot);
+                let tid = rt::spawn(move || {
+                    let v = f();
+                    *host_lock(&out) = Some(v);
+                });
+                Ok(JoinHandle::Model { tid, slot })
+            } else {
+                let mut b = std::thread::Builder::new();
+                if let Some(n) = self.name {
+                    b = b.name(n);
+                }
+                b.spawn(f).map(JoinHandle::Std)
+            }
+        }
+    }
+
+    impl Default for Builder {
+        fn default() -> Builder {
+            Builder::new()
+        }
+    }
+
+    pub enum JoinHandle<T> {
+        Std(std::thread::JoinHandle<T>),
+        Model { tid: usize, slot: Arc<StdMutex<Option<T>>> },
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            match self {
+                JoinHandle::Std(h) => h.join(),
+                JoinHandle::Model { tid, slot } => {
+                    rt::join(tid);
+                    match host_lock(&slot).take() {
+                        Some(v) => Ok(v),
+                        None => Err(Box::new(
+                            "model thread ended without a value (panicked or cancelled)"
+                                .to_string(),
+                        )),
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("facade thread spawn")
+    }
+
+    /// Model flavor: the checker has no clock — sleeping is just a
+    /// scheduling opportunity.
+    pub fn sleep(dur: Duration) {
+        if rt::active() {
+            rt::yield_point();
+        } else {
+            std::thread::sleep(dur);
+        }
+    }
+
+    pub fn yield_now() {
+        if rt::active() {
+            rt::yield_point();
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}

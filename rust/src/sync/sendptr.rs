@@ -1,0 +1,213 @@
+//! Provenance-preserving `Send` pointer wrappers for the executor
+//! pool's lease discipline.
+//!
+//! The pool hands each executor thread raw pointers to shard state and
+//! batch slices that are guaranteed disjoint and outlive the job (the
+//! *lease*: submit → execute → join brackets every access). Before
+//! this module the pointers were laundered through `usize` casts to
+//! make them `Send`, which destroys provenance under strict-provenance
+//! analysis (and Miri). These newtypes keep the pointer a pointer —
+//! same `Send` effect, no integer round-trip — and are the only place
+//! the `lint` binary's ptr-cast rule whitelists.
+//!
+//! Safety protocol shared by all three types:
+//!
+//! * `new` captures the pointer (and length) from a live reference, so
+//!   the wrapper starts with valid provenance for the whole referent.
+//! * The creator must guarantee the referent outlives every dereference
+//!   and that no aliasing access happens concurrently — in the pool
+//!   this is the mailbox lease: the submitting thread blocks in
+//!   `join()` before touching the data again.
+//! * The unsafe `as_*` methods re-materialise the reference with a
+//!   caller-chosen lifetime; the caller asserts the lease is still
+//!   open.
+
+use std::marker::PhantomData;
+
+/// A `Send`able raw `*mut T` with provenance intact. One exclusive
+/// referent — the pool sends exactly one per shard per job.
+#[derive(Debug)]
+pub struct SendPtr<T> {
+    ptr: *mut T,
+    _marker: PhantomData<*mut T>,
+}
+
+// SAFETY: SendPtr is a capability to access one `T` exclusively under
+// the creator's lease discipline (no concurrent aliasing access for
+// the wrapper's lifetime). Moving that capability to another thread is
+// sound exactly when moving a `&mut T` would be, hence `T: Send`.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Wrap an exclusive reference. (Callers pass `&mut T`; the
+    /// coercion to `*mut T` happens at the call site.)
+    pub fn new(ptr: *mut T) -> SendPtr<T> {
+        SendPtr { ptr, _marker: PhantomData }
+    }
+
+    /// Re-materialise the exclusive reference.
+    ///
+    /// # Safety
+    /// The referent must still be alive and the lease still open: no
+    /// other reference (shared or exclusive) to the referent may be
+    /// used for the duration of `'a`.
+    pub unsafe fn deref_mut<'a>(self) -> &'a mut T {
+        // SAFETY: caller upholds liveness + exclusivity per the module
+        // protocol; the pointer carries provenance from `new`'s source
+        // reference.
+        unsafe { &mut *self.ptr }
+    }
+}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> SendPtr<T> {
+        SendPtr { ptr: self.ptr, _marker: PhantomData }
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+/// A `Send`able shared slice (`&[T]` flattened to pointer + len).
+#[derive(Debug)]
+pub struct SendSlice<T> {
+    ptr: *const T,
+    len: usize,
+    _marker: PhantomData<*const T>,
+}
+
+// SAFETY: a SendSlice is a read-only capability over `[T]`; sharing it
+// across threads is sound when `&[T]` would be, hence `T: Sync`.
+unsafe impl<T: Sync> Send for SendSlice<T> {}
+
+impl<T> SendSlice<T> {
+    pub fn new(slice: &[T]) -> SendSlice<T> {
+        SendSlice { ptr: slice.as_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Re-materialise the shared slice.
+    ///
+    /// # Safety
+    /// The slice data must still be alive for `'a`, with no exclusive
+    /// access to it used during `'a`.
+    pub unsafe fn as_slice<'a>(self) -> &'a [T] {
+        // SAFETY: caller upholds liveness + no-writer per the module
+        // protocol; ptr/len came from a real slice in `new`.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl<T> Clone for SendSlice<T> {
+    fn clone(&self) -> SendSlice<T> {
+        SendSlice { ptr: self.ptr, len: self.len, _marker: PhantomData }
+    }
+}
+impl<T> Copy for SendSlice<T> {}
+
+/// A `Send`able exclusive slice (`&mut [T]` flattened to pointer +
+/// len). The pool carves gather destinations into disjoint wrappers
+/// with `split_at_mut` *before* wrapping, so two wrappers never alias.
+#[derive(Debug)]
+pub struct SendSliceMut<T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<*mut T>,
+}
+
+// SAFETY: exclusive capability over `[T]` under the lease discipline;
+// sound to move across threads when `&mut [T]` would be (`T: Send`).
+unsafe impl<T: Send> Send for SendSliceMut<T> {}
+
+impl<T> SendSliceMut<T> {
+    pub fn new(slice: &mut [T]) -> SendSliceMut<T> {
+        SendSliceMut { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Re-materialise the exclusive slice.
+    ///
+    /// # Safety
+    /// The slice data must still be alive for `'a` and this wrapper
+    /// must be the only access path used during `'a` (the wrappers are
+    /// carved disjoint at creation; the lease keeps the parent slice
+    /// untouched until join).
+    pub unsafe fn as_mut_slice<'a>(self) -> &'a mut [T] {
+        // SAFETY: caller upholds liveness + exclusivity per the module
+        // protocol; ptr/len came from a real exclusive slice in `new`.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+}
+
+impl<T> Clone for SendSliceMut<T> {
+    fn clone(&self) -> SendSliceMut<T> {
+        SendSliceMut { ptr: self.ptr, len: self.len, _marker: PhantomData }
+    }
+}
+impl<T> Copy for SendSliceMut<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sendptr_round_trips_exclusive_access() {
+        let mut x = 41u32;
+        let p = SendPtr::new(&mut x);
+        // SAFETY: `x` is alive and no other reference is used while
+        // the re-materialised one exists.
+        let r = unsafe { p.deref_mut() };
+        *r += 1;
+        assert_eq!(x, 42);
+    }
+
+    #[test]
+    fn send_slices_round_trip_and_report_len() {
+        let data = [1.0f32, 2.0, 3.0];
+        let s = SendSlice::new(&data);
+        assert_eq!(s.len(), 3);
+        assert!(!s.is_empty());
+        // SAFETY: `data` is alive, nobody writes it.
+        assert_eq!(unsafe { s.as_slice() }, &[1.0, 2.0, 3.0]);
+
+        let mut buf = [0.0f32; 4];
+        let (head, tail) = buf.split_at_mut(2);
+        let a = SendSliceMut::new(head);
+        let b = SendSliceMut::new(tail);
+        assert_eq!(a.len(), 2);
+        // SAFETY: a and b were carved disjoint; buf is alive.
+        unsafe { a.as_mut_slice() }.fill(1.5);
+        // SAFETY: as above.
+        unsafe { b.as_mut_slice() }.fill(2.5);
+        assert_eq!(buf, [1.5, 1.5, 2.5, 2.5]);
+    }
+
+    #[test]
+    fn wrappers_are_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<SendPtr<u32>>();
+        assert_send::<SendSlice<f32>>();
+        assert_send::<SendSliceMut<f32>>();
+    }
+
+    #[test]
+    fn empty_slices_are_fine() {
+        let empty: [f32; 0] = [];
+        let s = SendSlice::new(&empty);
+        assert!(s.is_empty());
+        // SAFETY: zero-length slices are always valid to form.
+        assert_eq!(unsafe { s.as_slice() }.len(), 0);
+    }
+}

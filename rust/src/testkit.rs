@@ -38,24 +38,36 @@ impl CountingAlloc {
     }
 }
 
+// SAFETY: a pure pass-through to `System` plus a relaxed counter bump —
+// every GlobalAlloc contract obligation (layout validity, pointer
+// ownership, no unwinding) is discharged by delegating to `System`
+// unchanged, and the counter has no effect on allocation behaviour.
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         HEAP_ACQUISITIONS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: caller upholds GlobalAlloc's contract for `layout`;
+        // we forward it to the system allocator unchanged.
+        unsafe { System.alloc(layout) }
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         HEAP_ACQUISITIONS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
+        // SAFETY: caller upholds GlobalAlloc's contract for `layout`;
+        // we forward it to the system allocator unchanged.
+        unsafe { System.alloc_zeroed(layout) }
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         HEAP_ACQUISITIONS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: caller guarantees `ptr` was allocated here with
+        // `layout` and that `new_size` is valid; forwarded unchanged.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: caller guarantees `ptr`/`layout` match the original
+        // allocation; forwarded unchanged.
+        unsafe { System.dealloc(ptr, layout) }
     }
 }
 

@@ -1,0 +1,203 @@
+#![cfg(ggcheck)]
+//! Exhaustive bounded-interleaving model checks for the coordinator's
+//! concurrency protocols (`RUSTFLAGS='--cfg ggcheck' cargo test --test
+//! model_check`; wired as a ci.sh stage).
+//!
+//! Under `--cfg ggcheck` the `ggarray::sync` facade swaps std's
+//! primitives for instrumented ones driven by `ggarray::checker` — a
+//! loom-style DFS over yield points that runs the model closure once
+//! per schedule and enumerates *every* bounded interleaving (each test
+//! asserts `report.complete`). A failing schedule panics with a
+//! replayable seed; `failure_seed_replays_deterministically` proves the
+//! seed → schedule round trip on a deliberately racy model.
+//!
+//! Three protocols are checked, mirroring the crate's real
+//! concurrency surface:
+//!
+//! 1. the SPSC mailbox handoff/barrier/shutdown used by the executor
+//!    pool (no lost job, no result observed before the barrier),
+//! 2. the admission window's shed path (a `Rejected` admission rolls
+//!    back the pooled-values gauge and consumes no sequence number
+//!    under every interleaving),
+//! 3. the `AtBarrier` drain order (client-id ascending, per-client
+//!    FIFO, independent of admission timing).
+
+use ggarray::checker::{self, Config};
+use ggarray::coordinator::frontend::{FrontendConfig, FrontendRig, MergePolicy};
+use ggarray::coordinator::pool::Mailbox;
+use ggarray::coordinator::request::Admission;
+use ggarray::sync::atomic::{AtomicUsize, Ordering};
+use ggarray::sync::{thread, Arc};
+
+// ---------------- protocol 1: SPSC mailbox ----------------
+
+#[test]
+fn mailbox_handoff_barrier_shutdown_all_interleavings() {
+    let report = checker::check("mailbox-handoff", &Config::default(), || {
+        let mb = Arc::new(Mailbox::<u32, u32>::new());
+        let exec = Arc::clone(&mb);
+        let handle = thread::spawn(move || exec.executor_loop(|job| job * 2));
+        // Two full submit → barrier-join cycles: join must return this
+        // job's result (not stale, not early) in every schedule.
+        mb.submit(21);
+        assert_eq!(mb.join(), 42, "lost job or result read before barrier");
+        mb.submit(7);
+        assert_eq!(mb.join(), 14, "second handoff corrupted");
+        mb.signal_shutdown();
+        handle.join().expect("executor must exit cleanly after shutdown");
+    })
+    .unwrap_or_else(|failure| panic!("{failure}"));
+    assert!(report.complete, "mailbox exploration must exhaust its schedules");
+    assert!(report.schedules >= 2, "protocol has real concurrency to explore");
+}
+
+#[test]
+fn mailbox_shutdown_while_idle_never_hangs() {
+    let report = checker::check("mailbox-idle-shutdown", &Config::default(), || {
+        let mb = Arc::new(Mailbox::<u32, u32>::new());
+        let exec = Arc::clone(&mb);
+        // Shutdown racing the executor's very first park: the executor
+        // must observe it whether it arrives before or after parking.
+        let handle = thread::spawn(move || exec.executor_loop(|job| job));
+        mb.signal_shutdown();
+        handle.join().expect("idle executor must exit on shutdown");
+    })
+    .unwrap_or_else(|failure| panic!("{failure}"));
+    assert!(report.complete);
+}
+
+// ---------------- protocol 2: admission shed rollback ----------------
+
+#[test]
+fn admission_shed_rollback_under_all_interleavings() {
+    let report = checker::check("admission-shed-rollback", &Config::default(), || {
+        let cfg = FrontendConfig {
+            queue_requests: 1, // window of one: the second racy insert can shed
+            merge: MergePolicy::AtBarrier,
+            ..FrontendConfig::default()
+        };
+        let mut rig = FrontendRig::new(cfg);
+        let mut session = rig.session();
+        rig.absorb_registrations(); // pre-spawn, so registration is not part of the race
+        assert_eq!(rig.lanes(), 1);
+
+        let client = thread::spawn(move || {
+            let mut accepted = 0u64;
+            let mut rejected = 0u64;
+            for i in 0..2u32 {
+                match session.try_insert(vec![i as f32]) {
+                    Admission::Accepted { seq, .. } => {
+                        assert_eq!(seq, accepted, "accepted stream must be contiguous");
+                        accepted += 1;
+                    }
+                    Admission::Rejected { values, .. } => {
+                        assert_eq!(values.len(), 1, "payload must come back intact");
+                        rejected += 1;
+                    }
+                    Admission::Closed { .. } => panic!("rig never closes the channel"),
+                }
+            }
+            (session, accepted, rejected)
+        });
+
+        // One pressure sweep racing the client's two admissions (this
+        // is what makes accept/accept vs accept/shed schedule-dependent).
+        let mut moved = Vec::new();
+        rig.drain(false, |id, ins| moved.push((id, ins.seq, ins.values.len())));
+        let (session, accepted, rejected) = client.join().expect("client panicked");
+        // Client quiesced: the barrier drain empties what remains.
+        rig.drain(true, |id, ins| moved.push((id, ins.seq, ins.values.len())));
+
+        // The ledgers must reconcile exactly in EVERY interleaving.
+        assert_eq!(accepted + rejected, 2);
+        assert_eq!(session.next_seq(), accepted, "a rejection consumes no sequence number");
+        assert_eq!(rig.shared().shed_total(), rejected, "every shed lands in the ledger");
+        assert_eq!(moved.len() as u64, accepted, "no lost or duplicated admission");
+        assert_eq!(rig.shared().pooled_values(), 0, "pooled gauge must return to zero");
+        for (k, &(id, seq, len)) in moved.iter().enumerate() {
+            assert_eq!((id, len), (0, 1));
+            assert_eq!(seq, k as u64, "worker-observed stream must be gap-free");
+        }
+    })
+    .unwrap_or_else(|failure| panic!("{failure}"));
+    assert!(report.complete, "shed-path exploration must exhaust its schedules");
+    assert!(report.schedules >= 2);
+}
+
+// ---------------- protocol 3: AtBarrier drain order ----------------
+
+#[test]
+fn at_barrier_drain_orders_clients_ascending_fifo() {
+    let report = checker::check("atbarrier-drain-order", &Config::default(), || {
+        let cfg = FrontendConfig {
+            queue_requests: 4, // wide enough that nothing sheds
+            merge: MergePolicy::AtBarrier,
+            ..FrontendConfig::default()
+        };
+        let mut rig = FrontendRig::new(cfg);
+        let mut s0 = rig.session();
+        let mut s1 = rig.session();
+        rig.absorb_registrations();
+        assert_eq!((s0.id(), s1.id(), rig.lanes()), (0, 1, 2));
+
+        let c0 = thread::spawn(move || {
+            for v in [1.0f32, 2.0] {
+                assert!(s0.try_insert(vec![v]).is_accepted());
+            }
+        });
+        let c1 = thread::spawn(move || {
+            for v in [10.0f32, 20.0] {
+                assert!(s1.try_insert(vec![v]).is_accepted());
+            }
+        });
+        c0.join().expect("client 0 panicked");
+        c1.join().expect("client 1 panicked");
+
+        let mut merged = Vec::new();
+        let stats = rig.drain(true, |id, ins| merged.push((id, ins.seq, ins.values[0])));
+        assert_eq!(stats.moved_requests, 4);
+        // However the two admission streams interleaved in wall time,
+        // the barrier merge is a pure function of the per-client traces.
+        assert_eq!(
+            merged,
+            vec![(0, 0, 1.0), (0, 1, 2.0), (1, 0, 10.0), (1, 1, 20.0)],
+            "barrier merge must be client-id ascending with per-client FIFO"
+        );
+        assert_eq!(rig.shared().pooled_values(), 0);
+    })
+    .unwrap_or_else(|failure| panic!("{failure}"));
+    assert!(report.complete, "drain-order exploration must exhaust its schedules");
+    assert!(report.schedules >= 2);
+}
+
+// ---------------- meta: failure seeds replay ----------------
+
+/// A deliberately racy read-modify-write on the facade atomics — the
+/// canonical lost-update bug the checker exists to catch.
+fn racy_gauge_model() {
+    let gauge = Arc::new(AtomicUsize::new(0));
+    let shared = Arc::clone(&gauge);
+    let updater = thread::spawn(move || {
+        let v = shared.load(Ordering::SeqCst);
+        shared.store(v + 1, Ordering::SeqCst);
+    });
+    let v = gauge.load(Ordering::SeqCst);
+    gauge.store(v + 1, Ordering::SeqCst);
+    updater.join().expect("updater panicked");
+    assert_eq!(gauge.load(Ordering::SeqCst), 2, "lost update");
+}
+
+#[test]
+fn failure_seed_replays_deterministically() {
+    let failure = checker::check("racy-gauge", &Config::default(), racy_gauge_model)
+        .expect_err("the load/store race must be caught");
+    assert!(
+        failure.message.contains("lost update"),
+        "unexpected failure mode: {}",
+        failure.message
+    );
+    let seed = failure.seed();
+    let replayed = checker::replay("racy-gauge", &seed, racy_gauge_model)
+        .expect_err("the printed seed must reproduce the failure");
+    assert!(replayed.message.contains("lost update"));
+}
