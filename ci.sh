@@ -29,10 +29,14 @@ fi
 
 echo "== model check: exhaustive bounded interleavings (--cfg ggcheck) =="
 # Swaps the crate::sync facade onto the instrumented model primitives
-# and exhaustively enumerates every bounded schedule of the executor
-# mailbox handoff, the admission shed/rollback path, and the AtBarrier
-# drain order; failures print a replayable schedule seed. The distinct
-# RUSTFLAGS fingerprint makes this a one-off rebuild.
+# and exhaustively enumerates every bounded schedule of the
+# work-stealing scheduler's park/unpark/steal/termination protocol
+# (no lost wakeups on the shared monitor, termination only when the
+# bucket is drained AND every worker is parked, steal order never
+# reordering per-slot commits, shutdown racing first park), the
+# admission shed/rollback path, and the AtBarrier drain order;
+# failures print a replayable schedule seed. The distinct RUSTFLAGS
+# fingerprint makes this a one-off rebuild.
 RUSTFLAGS='--cfg ggcheck' cargo test -q --test model_check
 
 echo "== clippy: -D warnings (curated allows) =="
@@ -72,7 +76,7 @@ echo "== smoke: sharded two-phase example, serial executors (GG_THREADS=1) =="
 # smoke-tests the env-var resolution path.
 GG_THREADS=1 cargo run --release --example sharded_two_phase
 
-echo "== smoke: sharded two-phase example, default executor pool =="
+echo "== smoke: sharded two-phase example, default scheduler =="
 cargo run --release --example sharded_two_phase
 
 echo "== smoke: tight-heap churn (compaction OOM/abort path end-to-end) =="
@@ -92,16 +96,21 @@ cargo bench --bench bench_shards
 
 echo "== smoke: hot-path bench (BENCH_hotpath.json + wall-clock gates) =="
 # bench_hotpath --smoke: short steady-state runs of insert dispatch
-# (serial and through the executor pool) / pooled seal / sealed query at
-# 1 and 4 shards. Writes BENCH_hotpath.json (schema bench_hotpath/v2) at
-# the repo root (the perf trajectory) and exits non-zero when:
+# (serial and through the work-stealing scheduler, including the
+# skewed-routing case with one 3/4-hot shard) / scheduled seal / sealed
+# query at 1 and 4 shards. Writes BENCH_hotpath.json (schema
+# bench_hotpath/v3) at the repo root (the perf trajectory) and exits
+# non-zero when:
 #   * steady-state insert dispatch regresses >25% vs the committed
-#     baseline (1-shard serial, 4-shard pooled),
-#   * the pooled-seal median regresses >25% (4 shards),
-#   * the measured 4-shard-pooled vs 1-shard-serial insert-dispatch
+#     baseline (1-shard serial, 4-shard scheduled, skewed scheduled),
+#   * the scheduled-seal median regresses >25% (4 shards),
+#   * the measured 4-shard-scheduled vs 1-shard-serial insert-dispatch
 #     wall-clock speedup for the large-batch steady-state run is ≤ 1.0
-#     (the executor-pool acceptance gate — needs no baseline).
-# Regression gates are skipped gracefully when no v2 baseline exists
+#     (needs no baseline),
+#   * the skewed-routing speedup fails to beat the old fork/join pool's
+#     max-shard bound of 4/3× (the work-stealing payoff gate — needs no
+#     baseline, demoted to a notice below 4 cores).
+# Regression gates are skipped gracefully when no v3 baseline exists
 # (first run / schema migration). Bypass everything with
 # GG_BENCH_GATE=off on noisy machines.
 cargo bench --bench bench_hotpath -- --smoke

@@ -1,23 +1,29 @@
 //! §Perf hot-path benches: the *real* (wall-clock) cost of the request
 //! path — steady-state insert dispatch through the scratch arena (serial
-//! and through the persistent executor pool), the pooled seal/flatten
+//! and through the work-stealing scheduler), the scheduled seal/flatten
 //! gather, sealed queries, and the underlying micro-operations (LFVector
 //! appends, routing, prefix lookups, rw passes, PJRT execution).
 //!
-//! Emits `BENCH_hotpath.json` (schema `bench_hotpath/v2`) at the **repo
+//! Emits `BENCH_hotpath.json` (schema `bench_hotpath/v3`) at the **repo
 //! root** so the perf trajectory is recorded PR over PR, and exits
 //! non-zero when any of the gates fail (all skipped gracefully when no
-//! v2 baseline exists, all bypassable with `GG_BENCH_GATE=off`):
+//! v3 baseline exists, all bypassable with `GG_BENCH_GATE=off`):
 //!
 //! * steady-state insert dispatch regressed > [`GATE_TOLERANCE`] vs the
-//!   committed baseline (1-shard serial and 4-shard pooled);
-//! * pooled-seal *median* regressed > [`GATE_TOLERANCE`] (4 shards);
-//! * measured 4-shard-pooled-vs-1-shard-serial insert-dispatch speedup
-//!   for the large-batch steady-state run is ≤ 1.0 — the tentpole
-//!   acceptance criterion (absolute, needs no baseline).
+//!   committed baseline (1-shard serial, 4-shard scheduled, and the
+//!   skewed 4-shard scheduled row);
+//! * scheduled-seal *median* regressed > [`GATE_TOLERANCE`] (4 shards);
+//! * measured 4-shard-scheduled-vs-1-shard-serial insert-dispatch
+//!   speedup for the large-batch steady-state run is ≤ 1.0 (absolute,
+//!   needs no baseline);
+//! * the skewed-routing case (one hot shard holding 3/4 of every batch)
+//!   fails to beat [`FORKJOIN_SKEW_BOUND`] — the old fork/join pool's
+//!   max-shard barrier bound, which the work-stealing scheduler exists
+//!   to break (absolute, needs no baseline, ≥ 4 cores).
 //!
 //! See EXPERIMENTS.md §Perf for the field definitions and how to
-//! re-baseline (v1 baselines are treated as absent and rewritten).
+//! re-baseline (v1/v2 baselines measured a different executor and are
+//! treated as absent and rewritten).
 //!
 //! Run: `cargo bench --bench bench_hotpath` (full) or
 //!      `cargo bench --bench bench_hotpath -- --smoke` (CI smoke: fewer
@@ -27,7 +33,7 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use ggarray::coordinator::batcher::BatchConfig;
-use ggarray::coordinator::pool::ShardPool;
+use ggarray::coordinator::scheduler::Scheduler;
 use ggarray::coordinator::request::{Request, Response};
 use ggarray::coordinator::router::{self, DispatchScratch, Policy};
 use ggarray::coordinator::service::{
@@ -57,13 +63,26 @@ const ELEMENTS: usize = 1_000_000;
 /// values per batch).
 const BATCHES: usize = 20;
 /// Batch size of the large-batch speedup run: big enough that per-shard
-/// copy work dominates the mailbox wake latency, which is the regime the
-/// pool is for (the service-shaped 50k batches are also measured, but
-/// the tentpole gate reads this one).
+/// copy work dominates the scheduler's monitor handoff, which is the
+/// regime the worker group is for (the service-shaped 50k batches are
+/// also measured, but the tentpole gate reads this one).
 const LARGE_BATCH: usize = 250_000;
 /// Regression gate: fail when a gated metric is slower than
 /// baseline × (1 + GATE_TOLERANCE).
 const GATE_TOLERANCE: f64 = 0.25;
+/// Hot-shard share of every batch in the skewed-routing case: shard 0
+/// receives `SKEW_HOT_NUM / SKEW_HOT_DEN` of the values (the regime a
+/// Hash-policy remainder run produces when it lands inside one shard,
+/// scaled up to a measurable batch).
+const SKEW_HOT_NUM: usize = 3;
+const SKEW_HOT_DEN: usize = 4;
+/// The old fork/join pool's best possible skewed speedup: it paid the
+/// hot shard's whole copy serially at its barrier, so with 3/4 of the
+/// batch on one shard it could never beat serial by more than
+/// 1 / (3/4) = 4/3 regardless of executor count. The work-stealing
+/// scheduler splits the hot shard into stealable block runs and must
+/// clear this bound.
+const FORKJOIN_SKEW_BOUND: f64 = SKEW_HOT_DEN as f64 / SKEW_HOT_NUM as f64;
 
 fn repo_root() -> PathBuf {
     // cargo runs bench binaries with cwd = the package root (rust/);
@@ -90,13 +109,13 @@ fn build_shards(shard_count: usize, blocks_total: usize) -> Vec<Shard> {
 
 /// Steady-state insert dispatch of `ELEMENTS` f32 per iteration through
 /// the scratch-arena path (route → shard ranges → bulk placement),
-/// serial or through a persistent executor pool, after a full warm-up
-/// iteration so buckets, arena buffers and mailboxes are hot. Returns
-/// `(mean_us, median_us)` per `ELEMENTS` elements.
+/// serial or through the persistent work-stealing scheduler, after a
+/// full warm-up iteration so buckets, arena buffers and worker deques
+/// are hot. Returns `(mean_us, median_us)` per `ELEMENTS` elements.
 fn bench_insert_dispatch(
     suite: &mut BenchSuite,
     shard_count: usize,
-    pool: Option<&ShardPool>,
+    sched: Option<&Scheduler>,
     batch_elems: usize,
     label: &str,
 ) -> (f64, f64) {
@@ -109,10 +128,10 @@ fn bench_insert_dispatch(
     let mut seq = 0u64;
     let mut run = |shards: &mut Vec<Shard>, scratch: &mut DispatchScratch, seq: &mut u64| {
         for _ in 0..batches_per_iter {
-            match pool {
-                Some(pool) => {
+            match sched {
+                Some(sched) => {
                     black_box(dispatch_insert_pooled(
-                        pool, shards, bps, Policy::Even, *seq, &batch, scratch,
+                        sched, shards, bps, Policy::Even, *seq, &batch, scratch,
                     ));
                 }
                 None => {
@@ -127,10 +146,70 @@ fn bench_insert_dispatch(
     (result.mean_us(), result.summary.p50)
 }
 
-/// Seal (cross-shard gather + epoch commit — pooled executors when
-/// `executor_threads > 1`) and sealed queries through the running
-/// coordinator service. Returns `(seal_mean_us, seal_median_us,
-/// query_1k_mean_us)`.
+/// Skewed-routing steady state: shard 0 receives [`SKEW_HOT_NUM`]/
+/// [`SKEW_HOT_DEN`] of every `LARGE_BATCH`-element batch, the rest is
+/// spread evenly over the cold shards. The per-block counts are built
+/// by hand once (a Hash remainder run produces exactly this shape —
+/// one contiguous hot run of blocks — but only at sub-block-count
+/// batch sizes, so the bench scales it to a measurable batch), and the
+/// serial and scheduled runs consume the *identical* pre-routed
+/// scratch: the measured ratio isolates the executor. The old
+/// fork/join pool sat at its barrier for the hot shard's entire copy
+/// ([`FORKJOIN_SKEW_BOUND`]); the scheduler carves the hot shard into
+/// chunk-sized block runs that every worker steals. Returns
+/// `(mean_us, median_us)` per `ELEMENTS` elements.
+fn bench_skewed_insert(suite: &mut BenchSuite, sched: Option<&Scheduler>, label: &str) -> (f64, f64) {
+    let shard_count = 4;
+    let blocks_total = 512;
+    let bps = blocks_total / shard_count;
+    let mut shards = build_shards(shard_count, blocks_total);
+    let mut scratch = DispatchScratch::new();
+    let batch: Vec<f32> = (0..LARGE_BATCH as u64).map(synth_f32).collect();
+    let batches_per_iter = ELEMENTS / LARGE_BATCH;
+    // Hand-routed skew: the hot shard's blocks carry SKEW_HOT of the
+    // batch, the cold blocks split the rest; remainders land on the
+    // first blocks of each region so sum(counts) == LARGE_BATCH holds
+    // exactly (the conservation contract dispatch relies on).
+    let hot = LARGE_BATCH * SKEW_HOT_NUM / SKEW_HOT_DEN;
+    let cold = LARGE_BATCH - hot;
+    let cold_blocks = blocks_total - bps;
+    scratch.counts.clear();
+    for i in 0..blocks_total {
+        scratch.counts.push(if i < bps {
+            hot / bps + usize::from(i < hot % bps)
+        } else {
+            let j = i - bps;
+            cold / cold_blocks + usize::from(j < cold % cold_blocks)
+        });
+    }
+    scratch.split_for_shards(bps);
+    let mut run = |shards: &mut Vec<Shard>, scratch: &DispatchScratch| {
+        for _ in 0..batches_per_iter {
+            match sched {
+                Some(sched) => {
+                    black_box(sched.run_insert(shards, bps, &batch, scratch));
+                }
+                None => {
+                    // The serial dispatch loop on the same fixed routing.
+                    for (k, shard) in shards.iter_mut().enumerate() {
+                        let (off, take) = scratch.ranges[k];
+                        black_box(
+                            shard.apply_counts(scratch.shard_counts(k, bps), &batch[off..off + take]),
+                        );
+                    }
+                }
+            }
+        }
+    };
+    run(&mut shards, &scratch); // warm-up
+    let result = suite.bench(label, || run(&mut shards, &scratch));
+    (result.mean_us(), result.summary.p50)
+}
+
+/// Seal (cross-shard gather + epoch commit — through the work-stealing
+/// scheduler when `executor_threads > 1`, which now names the *worker*
+/// count directly) and sealed queries through the running coordinator
+/// service. Returns `(seal_mean_us, seal_median_us, query_1k_mean_us)`.
 fn bench_seal_and_query(
     suite: &mut BenchSuite,
     shard_count: usize,
@@ -149,7 +228,7 @@ fn bench_seal_and_query(
         compact_segments: 0,
         ..CoordinatorConfig::default()
     });
-    let mode = if executor_threads > 1 { "pooled" } else { "serial" };
+    let mode = if executor_threads > 1 { "scheduled" } else { "serial" };
     let mut counter = 0u64;
     let mut seal_samples = Vec::with_capacity(samples);
     for _ in 0..samples {
@@ -213,8 +292,9 @@ fn gate_results(baseline: Option<&Json>, fresh: &Json) -> Vec<String> {
         // pooled-seal median (4 shards).
         for (shard_key, field, what) in [
             ("1", "insert_dispatch_us", "insert dispatch (1 shard, serial)"),
-            ("4", "insert_dispatch_us", "insert dispatch (4 shards, pooled)"),
-            ("4", "seal_us_median", "pooled-seal median (4 shards)"),
+            ("4", "insert_dispatch_us", "insert dispatch (4 shards, scheduled)"),
+            ("4", "skewed_insert_dispatch_us", "skewed insert dispatch (4 shards, scheduled)"),
+            ("4", "seal_us_median", "scheduled-seal median (4 shards)"),
         ] {
             match (lookup(baseline, shard_key, field), lookup(fresh, shard_key, field)) {
                 (Some(old), Some(new)) if new > old * (1.0 + GATE_TOLERANCE) => {
@@ -234,20 +314,46 @@ fn gate_results(baseline: Option<&Json>, fresh: &Json) -> Vec<String> {
     // executors time-slice one core and lose to serial by pure handoff
     // overhead with fully correct code, so the gate demotes to a notice
     // there instead of failing CI.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     if let Some(speedup) = speedup_field(fresh, "insert_dispatch_large_batch_4v1") {
-        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         if speedup <= 1.0 {
             if cores >= 2 {
                 failures.push(format!(
-                    "measured insert-dispatch speedup (4-shard pooled vs 1-shard serial, \
+                    "measured insert-dispatch speedup (4-shard scheduled vs 1-shard serial, \
                      {LARGE_BATCH}-element batches) is {speedup:.2}× on {cores} cores — the \
-                     executor pool must beat serial wall-clock (> 1.0×)"
+                     scheduler must beat serial wall-clock (> 1.0×)"
                 ));
             } else {
                 eprintln!(
                     "NOTE: measured insert-dispatch speedup {speedup:.2}× ≤ 1.0, but only \
                      {cores} core(s) available — parallel speedup is physically impossible \
                      here; gate skipped"
+                );
+            }
+        }
+    }
+    // The work-stealing payoff gate: under skewed routing the old
+    // fork/join pool was capped at FORKJOIN_SKEW_BOUND (it paid the hot
+    // shard's whole copy at its barrier). The scheduler steals the hot
+    // shard's chunks across all workers, so it must clear that bound —
+    // anything at or below it means the hot-shard barrier penalty is
+    // back. Needs ≥ 4 cores to be meaningful (fewer cores cap the
+    // achievable speedup near the bound itself), so it demotes to a
+    // notice on small runners.
+    if let Some(speedup) = speedup_field(fresh, "skewed_insert_4v1") {
+        if speedup <= FORKJOIN_SKEW_BOUND {
+            if cores >= 4 {
+                failures.push(format!(
+                    "measured skewed insert-dispatch speedup ({SKEW_HOT_NUM}/{SKEW_HOT_DEN}-hot \
+                     shard, 4 workers vs serial) is {speedup:.2}× on {cores} cores — the \
+                     work-stealing scheduler must beat the fork/join max-shard bound \
+                     ({FORKJOIN_SKEW_BOUND:.2}×)"
+                ));
+            } else {
+                eprintln!(
+                    "NOTE: measured skewed insert-dispatch speedup {speedup:.2}× ≤ \
+                     {FORKJOIN_SKEW_BOUND:.2}× bound, but only {cores} core(s) available — \
+                     clearing the fork/join bound needs real 4-way parallelism; gate skipped"
                 );
             }
         }
@@ -363,9 +469,9 @@ fn main() {
     // Steady-state coordinator sections (always run; these feed the
     // BENCH_hotpath.json trajectory and the gates).
     let mut suite = BenchSuite::new(if smoke {
-        "hotpath steady-state (smoke) — scratch-arena dispatch, executor pool, pooled seal, sealed query"
+        "hotpath steady-state (smoke) — scratch-arena dispatch, work-stealing scheduler, scheduled seal, sealed query"
     } else {
-        "hotpath steady-state — scratch-arena dispatch, executor pool, pooled seal, sealed query"
+        "hotpath steady-state — scratch-arena dispatch, work-stealing scheduler, scheduled seal, sealed query"
     })
     .with_config(BenchConfig {
         warmup_iters: 1,
@@ -378,13 +484,15 @@ fn main() {
     let seal_samples = if smoke { 3 } else { 5 };
     let chunk = ELEMENTS / BATCHES;
 
-    // 1 shard: serial (a 1-thread pool would only add handoff latency).
+    // 1 shard: serial (a 1-worker scheduler would only add handoff
+    // latency).
     let (insert1, _) =
         bench_insert_dispatch(&mut suite, 1, None, chunk, "insert dispatch 1e6 f32 (1 shard, serial)");
     let (seal1, seal1_median, query1) = bench_seal_and_query(&mut suite, 1, 1, seal_samples);
 
-    // 4 shards: the production default (pooled), plus the serial loop at
-    // the same shard count so the pool's own win is visible in one file.
+    // 4 shards: the production default (scheduled), plus the serial
+    // loop at the same shard count so the scheduler's own win is
+    // visible in one file.
     let (insert4_serial, _) = bench_insert_dispatch(
         &mut suite,
         4,
@@ -392,20 +500,20 @@ fn main() {
         chunk,
         "insert dispatch 1e6 f32 (4 shards, serial)",
     );
-    let pool4 = ShardPool::new(4);
+    let sched4 = Scheduler::new(4);
     let (insert4, _) = bench_insert_dispatch(
         &mut suite,
         4,
-        Some(&pool4),
+        Some(&sched4),
         chunk,
-        "insert dispatch 1e6 f32 (4 shards, pooled)",
+        "insert dispatch 1e6 f32 (4 shards, scheduled)",
     );
-    let (seal4, seal4_median, query4) = bench_seal_and_query(&mut suite, 4, 2, seal_samples);
+    let (seal4, seal4_median, query4) = bench_seal_and_query(&mut suite, 4, 4, seal_samples);
 
     // Large-batch steady-state speedup run: the tentpole measurement.
     // Per-shard sub-batches are ~62k elements here, so the fan-out copy
-    // work dominates mailbox wakes and the measured speedup reflects the
-    // shard parallelism, not the handoff.
+    // work dominates the monitor handoff and the measured speedup
+    // reflects the shard parallelism.
     let (_, large1_median) = bench_insert_dispatch(
         &mut suite,
         1,
@@ -416,16 +524,32 @@ fn main() {
     let (_, large4_median) = bench_insert_dispatch(
         &mut suite,
         4,
-        Some(&pool4),
+        Some(&sched4),
         LARGE_BATCH,
-        "insert dispatch 1e6 f32, 250k batches (4 shards, pooled)",
+        "insert dispatch 1e6 f32, 250k batches (4 shards, scheduled)",
     );
-    drop(pool4);
+
+    // Skewed routing: the work-stealing payoff case. Same fixed
+    // 3/4-hot-shard routing for both runs; the old fork/join pool was
+    // capped at FORKJOIN_SKEW_BOUND here.
+    let (skew_serial, skew_serial_median) = bench_skewed_insert(
+        &mut suite,
+        None,
+        "skewed insert dispatch 1e6 f32, 3/4-hot shard (4 shards, serial)",
+    );
+    let (skew_sched, skew_sched_median) = bench_skewed_insert(
+        &mut suite,
+        Some(&sched4),
+        "skewed insert dispatch 1e6 f32, 3/4-hot shard (4 shards, scheduled)",
+    );
+    drop(sched4);
 
     let insert_speedup = large1_median / large4_median;
+    let skewed_speedup = skew_serial_median / skew_sched_median;
     let seal_speedup = seal1_median / seal4_median;
     eprintln!(
         "  measured 4v1 speedup: insert dispatch {insert_speedup:.2}× (large batches, medians), \
+         skewed {skewed_speedup:.2}× (fork/join bound {FORKJOIN_SKEW_BOUND:.2}×), \
          seal {seal_speedup:.2}× — sim model predicts up to 4×"
     );
 
@@ -437,6 +561,8 @@ fn main() {
                 shards: 1,
                 insert_dispatch_us: insert1,
                 insert_dispatch_serial_us: None,
+                skewed_insert_dispatch_us: None,
+                skewed_insert_serial_us: None,
                 seal_us: seal1,
                 seal_us_median: seal1_median,
                 sealed_query_1k_us: query1,
@@ -445,6 +571,8 @@ fn main() {
                 shards: 4,
                 insert_dispatch_us: insert4,
                 insert_dispatch_serial_us: Some(insert4_serial),
+                skewed_insert_dispatch_us: Some(skew_sched),
+                skewed_insert_serial_us: Some(skew_serial),
                 seal_us: seal4,
                 seal_us_median: seal4_median,
                 sealed_query_1k_us: query4,
@@ -453,13 +581,14 @@ fn main() {
         &HotpathSpeedup {
             batch_elements: LARGE_BATCH,
             insert_dispatch_large_batch_4v1: insert_speedup,
+            skewed_insert_4v1: skewed_speedup,
             seal_4v1: seal_speedup,
         },
     );
 
     // Gate against the committed baseline before any write. A baseline
-    // with a different schema (e.g. pre-executor-pool v1) measured a
-    // different pipeline — treat it as absent and re-baseline.
+    // with a different schema (v1 pre-pool, v2 fork/join pool) measured
+    // a different executor — treat it as absent and re-baseline.
     let path = repo_root().join("BENCH_hotpath.json");
     let gate_enabled = std::env::var("GG_BENCH_GATE").map(|v| v != "off").unwrap_or(true);
     let mut baseline_exists = true;

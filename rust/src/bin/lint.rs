@@ -49,7 +49,7 @@ use std::process::ExitCode;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 struct Violation {
-    /// Crate-root-relative path, e.g. `src/coordinator/pool.rs`.
+    /// Crate-root-relative path, e.g. `src/coordinator/scheduler/mod.rs`.
     file: String,
     line: usize,
     rule: char,
@@ -137,7 +137,7 @@ fn has_adjacent_safety(raw_lines: &[&str], idx: usize) -> bool {
 }
 
 /// Lint one file's contents. `rel` is crate-root relative with `/`
-/// separators (e.g. `src/coordinator/pool.rs`).
+/// separators (e.g. `src/coordinator/scheduler/group.rs`).
 fn lint_file(rel: &str, contents: &str, hot_manifest: &[String], out: &mut Vec<Violation>) {
     let raw_lines: Vec<&str> = contents.lines().collect();
     let in_coordinator = rel.starts_with("src/coordinator/");

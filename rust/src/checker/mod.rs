@@ -18,8 +18,8 @@
 //!
 //! * **Sequential consistency only.** The facade's model atomics map
 //!   every ordering to `SeqCst`; relaxed-memory reorderings are out of
-//!   scope. The protocols under test (mailbox handoff, admission shed,
-//!   barrier drain) are lock/channel based, where SeqCst is the
+//!   scope. The protocols under test (scheduler monitor, admission
+//!   shed, barrier drain) are lock/channel based, where SeqCst is the
 //!   intended contract.
 //! * **Spurious wakeups are the norm.** `Condvar::notify_*` wakes every
 //!   waiter; woken threads re-contend for the mutex and re-check their

@@ -11,6 +11,7 @@
 
 use std::time::Instant;
 
+use crate::coordinator::scheduler::GroupCounters;
 use crate::util::stats::Welford;
 
 /// Simulated cost of one service operation under the parallel time
@@ -224,9 +225,14 @@ impl Metrics {
             // real counters via [`MetricsSnapshot::with_batching`].
             flushes: 0,
             coalesced_requests: 0,
-            // Serial execution unless the worker attaches its pool via
-            // [`MetricsSnapshot::with_executors`].
+            // Serial execution unless the worker attaches its scheduler
+            // via [`MetricsSnapshot::with_executors`]; the
+            // steal/park/chunk ledger stays zeroed until
+            // [`MetricsSnapshot::with_scheduler`].
             executors: 1,
+            steals: 0,
+            parks: 0,
+            chunks_executed: 0,
             // Frontend session/shed context defaults to "no sessions";
             // the worker attaches the shared admission ledger via
             // [`MetricsSnapshot::with_frontend`].
@@ -312,9 +318,20 @@ pub struct MetricsSnapshot {
     /// own ledger, as opposed to the worker-side `batches` counter.
     pub coalesced_requests: u64,
     /// Shard-executor threads behind the worker: 1 = serial execution on
-    /// the worker thread, N = persistent pool with one executor per
-    /// shard ([`crate::coordinator::pool::ShardPool`]).
+    /// the worker thread, N = N persistent work-stealing workers
+    /// ([`crate::coordinator::scheduler::Scheduler`]; the worker count
+    /// is decoupled from the shard count).
     pub executors: usize,
+    /// Chunks a scheduler worker executed from *another* worker's deque
+    /// (zero in serial mode and under perfectly balanced load).
+    pub steals: u64,
+    /// Times a scheduler worker parked on the shared monitor (every
+    /// `finish` barrier parks all workers, so this grows with phases).
+    pub parks: u64,
+    /// Total chunks executed by the scheduler — conserved against the
+    /// per-op chunk decomposition (fills + work + gather ranges), see
+    /// the scheduler's conservation test.
+    pub chunks_executed: u64,
     /// Client sessions ever opened on the admission frontend.
     pub sessions: u64,
     /// Insert requests shed by admission (typed `Rejected` responses):
@@ -359,10 +376,19 @@ impl MetricsSnapshot {
         self
     }
 
-    /// Attach the shard-executor context (1 = serial worker, N = pooled
-    /// with one executor thread per shard).
+    /// Attach the shard-executor context (1 = serial worker, N = N
+    /// work-stealing scheduler workers).
     pub fn with_executors(mut self, executors: usize) -> MetricsSnapshot {
         self.executors = executors;
+        self
+    }
+
+    /// Attach the scheduler's steal/park/chunk ledger (zeroed default
+    /// for serial mode, where no scheduler exists).
+    pub fn with_scheduler(mut self, counters: GroupCounters) -> MetricsSnapshot {
+        self.steals = counters.steals;
+        self.parks = counters.parks;
+        self.chunks_executed = counters.executed;
         self
     }
 
@@ -454,7 +480,12 @@ impl std::fmt::Display for MetricsSnapshot {
             self.wall_work_ms,
             self.wall_flatten_ms,
             self.executors,
-            if self.executors == 1 { ": serial" } else { "s: pooled" }
+            if self.executors == 1 { ": serial" } else { "s: scheduled" }
+        )?;
+        writeln!(
+            f,
+            "scheduler ledger     {} chunks ({} steals, {} parks)",
+            self.chunks_executed, self.steals, self.parks
         )?;
         writeln!(f, "mean request latency {:.1} µs over {}", self.mean_latency_us, self.p_latency_count)?;
         writeln!(
@@ -560,12 +591,25 @@ mod tests {
         assert!((s.wall_insert_ms - 1.5).abs() < 1e-12);
         assert!((s.wall_work_ms - 0.25).abs() < 1e-12);
         assert!((s.wall_flatten_ms - 4.0).abs() < 1e-12);
-        assert_eq!(s.executors, 1, "serial until the worker attaches its pool");
+        assert_eq!(s.executors, 1, "serial until the worker attaches its scheduler");
         assert!(s.to_string().contains("1 executor: serial"), "{s}");
         let s = s.with_executors(4);
         assert_eq!(s.executors, 4);
-        assert!(s.to_string().contains("4 executors: pooled"), "{s}");
+        assert!(s.to_string().contains("4 executors: scheduled"), "{s}");
         assert!(s.to_string().contains("wall insert/work/flat"), "{s}");
+    }
+
+    #[test]
+    fn with_scheduler_attaches_steal_park_chunk_ledger() {
+        let m = Metrics::new();
+        let s = m.snapshot(10, 20, 400);
+        // Zeroed default: serial mode has no scheduler.
+        assert_eq!((s.steals, s.parks, s.chunks_executed), (0, 0, 0));
+        let s = s.with_scheduler(GroupCounters { steals: 3, parks: 8, executed: 21 });
+        assert_eq!(s.steals, 3);
+        assert_eq!(s.parks, 8);
+        assert_eq!(s.chunks_executed, 21);
+        assert!(s.to_string().contains("21 chunks (3 steals, 8 parks)"), "{s}");
     }
 
     #[test]

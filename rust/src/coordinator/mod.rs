@@ -15,10 +15,12 @@
 //! charged under the parallel time model ([`metrics::ParallelCost`]):
 //! critical path (max over concurrent shards) for the wall-model,
 //! sum for the `device_*` aggregate totals — and shard execution is
-//! *really* concurrent through the persistent [`pool::ShardPool`]
-//! (one executor thread + mailbox per shard; serial mode stays
-//! byte-identical via `CoordinatorConfig::executor_threads`). See
-//! [`service`] for the event loop.
+//! *really* concurrent through the persistent work-stealing
+//! [`scheduler::Scheduler`] (a bucketed worker group with per-worker
+//! deques, steal-on-empty and drained+parked termination detection;
+//! serial mode stays byte-identical via
+//! `CoordinatorConfig::executor_threads`). See [`service`] for the
+//! event loop.
 //!
 //! Concurrent writers enter through the admission [`frontend`]: each
 //! holds a [`frontend::ClientSession`] (stable client id, monotonic
@@ -34,8 +36,8 @@
 pub mod batcher;
 pub mod frontend;
 pub mod metrics;
-pub mod pool;
 pub mod request;
 pub mod router;
+pub mod scheduler;
 pub mod service;
 pub mod shard;

@@ -186,7 +186,7 @@ pub struct DispatchScratch {
     /// ([`split_for_shards_into`] output).
     pub ranges: Vec<(usize, usize)>,
     /// Per-shard `(offset, len)` ranges into a shared gather destination
-    /// (the executor pool's parallel flatten/seal fan-out) — index-based
+    /// (the shard scheduler's parallel flatten/seal fan-out) — index-based
     /// like `ranges`, so jobs carry plain offsets instead of borrows, and
     /// kept separate from `ranges` so a barriered gather never clobbers
     /// the last routed batch's slicing.

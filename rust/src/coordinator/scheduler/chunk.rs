@@ -1,0 +1,122 @@
+//! Stealable work units for the scheduler's fan-out phases.
+//!
+//! A [`Chunk`] is pure *data movement* (plus, for `Work`, the shard's
+//! own clock): every simulated heap/clock charge that a phase owes was
+//! already paid serially, in shard order, by the coordinator before any
+//! chunk was injected (the charge/copy split — see
+//! [`crate::coordinator::shard::Shard::prepare_counts`] /
+//! `seal_flatten_charge` / `flatten_temp_charge`). Host-side copies are
+//! free in simulated time, so executing chunks in *any* steal order
+//! yields byte-identical array contents, heap residency, and exact
+//! `sim_us` — the property `tests/properties.rs` pins across executor
+//! modes.
+//!
+//! ## Lease discipline
+//!
+//! Chunks carry the same provenance-preserving wrappers the old
+//! mailbox pool used ([`SendPtr`]/[`SendSlice`]/[`SendSliceMut`]), with
+//! one refinement: gather chunks re-materialise a *shared* shard
+//! reference (`SendPtr::deref_ref`), so several range chunks of one
+//! large shard read it concurrently, while insert-fill chunks own
+//! disjoint `split_at_mut`-carved block ranges of one shard. The
+//! submitting `run_*` call holds the `&mut [Shard]` borrow across the
+//! whole phase and `WorkPhase::finish` is the barrier, so every
+//! pointed-to region outlives its chunk and is never aliased by a
+//! writer.
+
+use crate::sync::{Arc, SendPtr, SendSlice, SendSliceMut};
+
+use crate::ggarray::lfvector::LfVector;
+use crate::runtime::Executor;
+
+use super::super::shard::Shard;
+
+/// One stealable job. Constructed only by the `run_*` phase builders in
+/// [`super::Scheduler`], which uphold the module's lease contract.
+pub(super) enum Chunk {
+    /// Fill reserved tail slots of a contiguous block range of one
+    /// shard with its contiguous sub-slice of the batch (pure copy;
+    /// the charges happened in `prepare_counts`). `counts[i]` is the
+    /// number of values owed to `blocks[i]`.
+    InsertFill {
+        blocks: SendSliceMut<LfVector<f32>>,
+        counts: SendSlice<usize>,
+        values: SendSlice<f32>,
+    },
+    /// One work call on one shard: the real numeric update plus the
+    /// modeled `rw_b` charge on the shard's *own* clock (safe: work
+    /// chunks are per-shard, so no other chunk touches that clock).
+    /// The PJRT client handle is shared across workers — each worker
+    /// compiles into its own thread-local cache.
+    Work { shard: SendPtr<Shard>, exec: Option<Arc<Executor>>, iters: u32 },
+    /// Copy shard elements `src_start..src_start + dst.len()`
+    /// (block-major flatten order) into a disjoint destination range.
+    /// Reads the shard through a shared reference, so one large shard
+    /// fans out into many concurrent gather chunks.
+    GatherCopy { shard: SendPtr<Shard>, src_start: usize, dst: SendSliceMut<f32> },
+}
+
+impl Chunk {
+    /// Execute one chunk on a worker thread. Returns the number of PJRT
+    /// executions performed (non-zero only for `Work`).
+    ///
+    /// Every `unsafe` block re-materialises a reference from a lease
+    /// wrapper; the shared justification is the module's lease
+    /// contract: the `run_*` call that injected this chunk (a) derived
+    /// every wrapper from a live borrow it holds across the whole
+    /// phase, (b) carved writers disjoint (`split_at_mut` for slices, a
+    /// distinct `iter_mut` element per Work shard) and gave readers no
+    /// concurrent writer, and (c) blocks in `finish()` until this chunk
+    /// completes.
+    pub(super) fn execute(self) -> u64 {
+        match self {
+            Chunk::InsertFill { blocks, counts, values } => {
+                // SAFETY: lease contract above — this chunk is the sole
+                // owner of this block range for the phase.
+                let blocks = unsafe { blocks.as_mut_slice() };
+                // SAFETY: lease contract above — router scratch and
+                // batch values are borrowed by the blocked submitter
+                // and written by no one.
+                let counts = unsafe { counts.as_slice() };
+                // SAFETY: as for `counts`.
+                let values = unsafe { values.as_slice() };
+                let mut off = 0usize;
+                for (v, &c) in blocks.iter_mut().zip(counts) {
+                    if c == 0 {
+                        continue;
+                    }
+                    let start = v.len() - c;
+                    v.write_range(start, &values[off..off + c]);
+                    off += c;
+                }
+                debug_assert_eq!(off, values.len(), "fill chunk must consume its whole sub-slice");
+                0
+            }
+            Chunk::Work { shard, exec, iters } => {
+                // SAFETY: lease contract above — work chunks are
+                // per-shard, so this is the phase's only access path to
+                // this shard (clock included).
+                let shard = unsafe { shard.deref_mut() };
+                // Same per-shard sequence as the serial worker: real
+                // numeric update, then the modeled rw_b launch on
+                // non-empty shards.
+                let pjrt = shard.work_pass(exec.as_deref(), iters);
+                if !shard.is_empty() {
+                    shard.charge_rw_block(iters as f64);
+                }
+                pjrt
+            }
+            Chunk::GatherCopy { shard, src_start, dst } => {
+                // SAFETY: lease contract above — gather phases never
+                // inject a writer for this shard, so shared reads may
+                // alias freely across its range chunks.
+                let shard = unsafe { shard.deref_ref() };
+                // SAFETY: lease contract above — `dst` was carved
+                // disjoint with split_at_mut before wrapping.
+                let dst = unsafe { dst.as_mut_slice() };
+                shard.gather_copy_range(src_start, dst);
+                0
+            }
+        }
+    }
+}

@@ -1,0 +1,627 @@
+//! Work-stealing shard scheduler: the executor layer that turns the
+//! simulated max-over-shards critical path into *measured* wall-clock
+//! parallelism — without inheriting the old pool's max-shard barrier.
+//!
+//! The previous executor (`coordinator/pool.rs`, PR 5) pinned one
+//! thread + SPSC mailbox to each shard: a fan-out paid the latency of
+//! its *slowest* shard at every barrier, so a skewed routing (one hot
+//! shard) ran essentially serially. This subsystem replaces it end to
+//! end with a bucketed worker group:
+//!
+//! * [`group::WorkerGroup`] — N persistent workers, per-worker deques,
+//!   steal-on-empty, one shared Mutex+Condvar monitor, and
+//!   coordinator-side termination detection (bucket drained + all
+//!   workers parked). The protocol is generic over the job type and
+//!   exhaustively model-checked in `tests/model_check.rs`.
+//! * [`chunk::Chunk`] — stealable units: insert dispatch, `Work`,
+//!   `Flatten` and seal phase-1 gathers each decompose into per-shard
+//!   — and, for large shards, sub-shard-range — chunks over
+//!   `SendPtr`/`SendSlice`/`SendSliceMut` leases.
+//!
+//! ## The charge/copy split (byte-identity)
+//!
+//! Serial mode (`GG_THREADS=1`) and the scheduler must agree on every
+//! byte *including exact `sim_us`*. Steal order is nondeterministic, so
+//! no chunk may touch simulated state another chunk can observe. The
+//! scheduler therefore splits every phase:
+//!
+//! 1. **Charge** (coordinator, serial, shard-id order): bucket
+//!    reserves, kernel launches, flatten allocations, index rebuilds —
+//!    every heap/clock mutation, in exactly the serial loop's order
+//!    ([`Shard::prepare_counts`], [`Shard::seal_flatten_charge`],
+//!    [`Shard::flatten_temp_charge`]).
+//! 2. **Copy** (workers, stolen in any order): pure data movement into
+//!    slots the charge phase reserved. Host-side copies are free in
+//!    simulated time, so the charges are *identical* to the fused
+//!    serial operations — pinned per layer by unit tests and end to end
+//!    by the PR 5/PR 6 property suites.
+//!
+//! `Work` is the one exception: its chunks advance their shard's own
+//! clock, which is safe because work chunks stay per-shard (each shard's
+//! clock is touched by exactly one chunk, whatever the steal order) —
+//! and results are committed in deterministic shard/range order
+//! regardless of which worker ran what.
+//!
+//! ## VRAM pre-screen
+//!
+//! Unchanged from the pool: the service fans out only demand-checked
+//! ops (`insert_demand_fits` / `gather_demand_fits`), so a pooled phase
+//! cannot OOM mid-flight; OOM-able batches take the serial prefix path
+//! in every mode. Unexpected errors still unwind in shard order behind
+//! a `debug_assert`.
+//!
+//! ## Zero-alloc steady state
+//!
+//! Worker deques are pre-allocated and keep their capacity across
+//! phases; chunks are plain enums moved by value; `Arc<Executor>`
+//! clones are refcount bumps. A steady-state insert batch performs
+//! **zero** heap allocations end to end (extended coverage in
+//! `tests/alloc_guard.rs`), so this module is in the lint's hot-path
+//! manifest (`rust/hotpath_manifest.txt`).
+
+pub mod group;
+mod chunk;
+
+pub use group::{GroupCounters, WorkerGroup, WorkPhase};
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{Arc, SendPtr, SendSlice, SendSliceMut};
+
+use crate::ggarray::lfvector::LfVector;
+use crate::runtime::Executor;
+use crate::sim::memory::OomError;
+
+use super::router::DispatchScratch;
+use super::service::DispatchOutcome;
+use super::shard::{SealPart, Shard};
+
+use chunk::Chunk;
+
+/// Minimum batch values per insert-fill chunk. Fill chunks group whole
+/// blocks (one `&mut LfVector` lease each) until they hold at least
+/// this many values, so a hot shard fans into several stealable pieces
+/// while a small batch stays one chunk per shard.
+const FILL_CHUNK_ELEMS: usize = 1 << 14;
+
+/// Maximum elements per gather chunk: large shards split into
+/// sub-shard ranges so all workers help drain one hot shard.
+const GATHER_CHUNK_ELEMS: usize = 1 << 15;
+
+/// The shard scheduler: a persistent [`WorkerGroup`] executing
+/// [`Chunk`]s, plus the serial charge-phase drivers. Public API mirrors
+/// the old `ShardPool` (`run_insert` / `run_work` / `run_flatten_temp`
+/// / `run_seal` / `threads`), with two generalisations: the worker
+/// count is decoupled from the shard count, and `run_work` takes the
+/// shared PJRT executor handle.
+pub struct Scheduler {
+    group: WorkerGroup<Chunk>,
+    /// Per-phase PJRT execution tally (sum over shards — order-free).
+    pjrt: Arc<AtomicU64>,
+}
+
+impl Scheduler {
+    /// Spawn `threads` persistent workers. Workers park on the shared
+    /// monitor between phases — no busy-waiting.
+    pub fn new(threads: usize) -> Scheduler {
+        assert!(threads > 0, "scheduler needs at least one worker");
+        let pjrt = Arc::new(AtomicU64::new(0));
+        let acc = Arc::clone(&pjrt);
+        let group = WorkerGroup::new(threads, move |c: Chunk| {
+            let p = c.execute();
+            if p > 0 {
+                acc.fetch_add(p, Ordering::Relaxed);
+            }
+        });
+        Scheduler { group, pjrt }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.group.threads()
+    }
+
+    /// Steal/park/chunk ledger (monotonic over the scheduler's life).
+    pub fn counters(&self) -> GroupCounters {
+        self.group.counters()
+    }
+
+    /// Fan an already-routed insert batch out: charges run serially in
+    /// shard order ([`Shard::prepare_counts`] — byte-identical clocks),
+    /// then the pure fills go to the workers as stealable block-range
+    /// chunks. Shards with an empty range get neither charge nor chunk
+    /// — no phantom kernels, same as the serial loop.
+    ///
+    /// The caller pre-screened VRAM demand (`insert_demand_fits`), so
+    /// no shard can OOM; should one anyway (a pre-screen bug), the
+    /// charge loop stops at the first failing shard exactly like the
+    /// serial prefix path, and the outcome reports it.
+    pub fn run_insert(
+        &self,
+        shards: &mut [Shard],
+        blocks_per_shard: usize,
+        values: &[f32],
+        scratch: &DispatchScratch,
+    ) -> DispatchOutcome {
+        // Phase 1: serial charges, shard-id order.
+        let mut applied = 0u64;
+        let mut oom: Option<(usize, usize, OomError)> = None; // (shard pos, applied prefix, error)
+        for (k, shard) in shards.iter_mut().enumerate() {
+            let (_, take) = scratch.ranges[k];
+            if take == 0 {
+                continue;
+            }
+            let out = shard.prepare_counts(scratch.shard_counts(k, blocks_per_shard), take);
+            applied += out.applied as u64;
+            if let Some(e) = out.error {
+                debug_assert!(false, "insert fan-out OOM despite pre-screen on shard {k}");
+                oom = Some((k, out.applied, e));
+                break;
+            }
+        }
+        // Phase 2: stealable fills over the prepared prefix.
+        let stop = oom.as_ref().map(|t| (t.0, t.1));
+        let mut phase = self.group.phase();
+        for (k, shard) in shards.iter_mut().enumerate() {
+            let (off, take) = scratch.ranges[k];
+            if take == 0 {
+                continue;
+            }
+            let applied_k = match stop {
+                Some((ok, _)) if k > ok => break,
+                Some((ok, a)) if k == ok => a,
+                _ => take,
+            };
+            if applied_k == 0 {
+                continue;
+            }
+            let counts = scratch.shard_counts(k, blocks_per_shard);
+            inject_fill(&mut phase, shard, counts, &values[off..off + applied_k]);
+        }
+        phase.finish();
+        DispatchOutcome { applied, oom: oom.map(|(k, _, e)| (shards[k].id(), e)) }
+    }
+
+    /// One work call fanned across non-empty shards: per-shard numeric
+    /// update plus the modeled `rw_b` charge, concurrently. Empty live
+    /// shards get neither chunk nor charge — the serial loop does
+    /// nothing to them either. `exec` is the shared PJRT handle: pooled
+    /// Work runs the AOT kernels whenever the serial path would (each
+    /// worker compiles into its own thread-local cache). Returns PJRT
+    /// executions performed.
+    pub fn run_work(&self, shards: &mut [Shard], exec: Option<&Arc<Executor>>, iters: u32) -> u64 {
+        self.pjrt.store(0, Ordering::Relaxed);
+        let mut phase = self.group.phase();
+        for shard in shards.iter_mut() {
+            // Read before this shard's chunk exists; work never changes
+            // a shard's length, so the skip decision is stable.
+            if shard.is_empty() {
+                continue;
+            }
+            phase.inject(Chunk::Work {
+                shard: SendPtr::new(shard),
+                exec: exec.map(Arc::clone),
+                iters,
+            });
+        }
+        phase.finish();
+        self.pjrt.load(Ordering::Relaxed)
+    }
+
+    /// Parallel snapshot gather: serial per-shard charges (destination
+    /// alloc + gather kernel, released immediately), then sub-shard
+    /// range chunks copy into disjoint carves of `dst`. The caller
+    /// pre-screened VRAM fit; an unexpected failure surfaces as the
+    /// lowest failing shard's error and skips the (discarded) copy.
+    pub fn run_flatten_temp(
+        &self,
+        shards: &mut [Shard],
+        dst: &mut [f32],
+        ranges: &[(usize, usize)],
+    ) -> Result<(), OomError> {
+        debug_assert_eq!(shards.len(), ranges.len());
+        debug_assert_eq!(ranges.iter().map(|r| r.1).sum::<usize>(), dst.len());
+        let mut failed: Option<OomError> = None;
+        for (k, shard) in shards.iter_mut().enumerate() {
+            match shard.flatten_temp_charge() {
+                Ok(len) => debug_assert_eq!(len, ranges[k].1, "stale gather range for shard {k}"),
+                Err(e) => {
+                    debug_assert!(false, "flatten fan-out OOM despite pre-screen on shard {k}");
+                    if failed.is_none() {
+                        failed = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = failed {
+            return Err(e);
+        }
+        let mut phase = self.group.phase();
+        let mut rest: &mut [f32] = dst;
+        let mut covered = 0usize;
+        for (shard, &(off, len)) in shards.iter_mut().zip(ranges.iter()) {
+            debug_assert_eq!(off, covered, "gather ranges must be contiguous prefix sums");
+            let carve = std::mem::take(&mut rest);
+            let (head, tail) = carve.split_at_mut(len);
+            rest = tail;
+            covered += len;
+            inject_gather(&mut phase, shard, head);
+        }
+        phase.finish();
+        Ok(())
+    }
+
+    /// Seal phase-1 gather: serial seal + flatten charges in shard
+    /// order (results pushed to `out` in that order — `Ok(SealPart)`
+    /// whose destination allocation the caller's two-phase commit owns,
+    /// or the shard's `Err`, the shard having already reopened itself),
+    /// then range chunks copy every successfully charged shard into its
+    /// disjoint carve of `dst`.
+    pub fn run_seal(
+        &self,
+        shards: &mut [Shard],
+        dst: &mut [f32],
+        ranges: &[(usize, usize)],
+        out: &mut Vec<Result<SealPart, OomError>>,
+    ) {
+        debug_assert_eq!(shards.len(), ranges.len());
+        debug_assert_eq!(ranges.iter().map(|r| r.1).sum::<usize>(), dst.len());
+        let base = out.len();
+        for shard in shards.iter_mut() {
+            out.push(shard.seal_flatten_charge());
+        }
+        let mut phase = self.group.phase();
+        let mut rest: &mut [f32] = dst;
+        let mut covered = 0usize;
+        for ((k, shard), &(off, len)) in shards.iter_mut().enumerate().zip(ranges.iter()) {
+            debug_assert_eq!(off, covered, "gather ranges must be contiguous prefix sums");
+            let carve = std::mem::take(&mut rest);
+            let (head, tail) = carve.split_at_mut(len);
+            rest = tail;
+            covered += len;
+            if out[base + k].is_ok() {
+                inject_gather(&mut phase, shard, head);
+            }
+        }
+        phase.finish();
+    }
+}
+
+/// Carve one shard's fill into stealable chunks: contiguous runs of
+/// whole blocks (a block's `LfVector` is one exclusive lease — fills
+/// never split inside a block) holding at least [`FILL_CHUNK_ELEMS`]
+/// values each. `values` is the shard's *applied prefix*: after a
+/// prepare OOM only fully-extended blocks are owed a fill.
+fn inject_fill(
+    phase: &mut WorkPhase<'_, Chunk>,
+    shard: &mut Shard,
+    counts: &[usize],
+    values: &[f32],
+) {
+    let mut blocks: &mut [LfVector<f32>] = shard.vectors_mut();
+    debug_assert_eq!(blocks.len(), counts.len());
+    let mut counts = counts;
+    let mut values = values;
+    while !values.is_empty() {
+        let mut acc = 0usize;
+        let mut nb = 0usize;
+        while nb < counts.len() && acc < FILL_CHUNK_ELEMS && acc + counts[nb] <= values.len() {
+            acc += counts[nb];
+            nb += 1;
+        }
+        if nb == 0 {
+            debug_assert!(false, "fill values not aligned to a whole-block prefix");
+            break;
+        }
+        let rest = std::mem::take(&mut blocks);
+        let (bh, bt) = rest.split_at_mut(nb);
+        blocks = bt;
+        let (ch, ct) = counts.split_at(nb);
+        counts = ct;
+        let (vh, vt) = values.split_at(acc);
+        values = vt;
+        if acc == 0 {
+            continue; // a run of zero-count blocks — nothing to copy
+        }
+        phase.inject(Chunk::InsertFill {
+            blocks: SendSliceMut::new(bh),
+            counts: SendSlice::new(ch),
+            values: SendSlice::new(vh),
+        });
+    }
+}
+
+/// Carve one shard's gather destination into sub-shard range chunks
+/// (shared shard reads — all workers can help drain a hot shard).
+fn inject_gather(phase: &mut WorkPhase<'_, Chunk>, shard: &mut Shard, dst: &mut [f32]) {
+    let sp = SendPtr::new(shard);
+    let mut rest = dst;
+    let mut src = 0usize;
+    while !rest.is_empty() {
+        let take = rest.len().min(GATHER_CHUNK_ELEMS);
+        let carve = std::mem::take(&mut rest);
+        let (head, tail) = carve.split_at_mut(take);
+        rest = tail;
+        phase.inject(Chunk::GatherCopy { shard: sp, src_start: src, dst: SendSliceMut::new(head) });
+        src += take;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::Policy;
+    use crate::coordinator::shard::ShardConfig;
+    use crate::insertion::InsertionKind;
+    use crate::sim::spec::DeviceSpec;
+
+    fn build_shards(n: usize, blocks: usize) -> Vec<Shard> {
+        (0..n)
+            .map(|id| {
+                Shard::new(ShardConfig {
+                    id,
+                    blocks,
+                    first_bucket_size: 16,
+                    insertion: InsertionKind::WarpScan,
+                    device: DeviceSpec::a100(),
+                    heap_bytes: 1 << 26,
+                })
+            })
+            .collect()
+    }
+
+    /// Route + split a batch the way the service does.
+    fn routed(shards: &[Shard], bps: usize, n: usize, scratch: &mut DispatchScratch) {
+        scratch.sizes.clear();
+        for shard in shards.iter() {
+            scratch.sizes.extend(shard.block_sizes_iter());
+        }
+        scratch.route(Policy::Even, n, 0);
+        scratch.split_for_shards(bps);
+    }
+
+    #[test]
+    fn scheduled_insert_matches_serial_per_shard_state() {
+        let bps = 2;
+        let values: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let mut scratch = DispatchScratch::new();
+
+        let mut serial = build_shards(4, bps);
+        routed(&serial, bps, values.len(), &mut scratch);
+        let mut applied_serial = 0u64;
+        for (k, shard) in serial.iter_mut().enumerate() {
+            let (off, take) = scratch.ranges[k];
+            let out = shard.apply_counts(scratch.shard_counts(k, bps), &values[off..off + take]);
+            assert!(out.error.is_none());
+            applied_serial += out.applied as u64;
+        }
+
+        let sched = Scheduler::new(4);
+        let mut pooled = build_shards(4, bps);
+        routed(&pooled, bps, values.len(), &mut scratch);
+        let out = sched.run_insert(&mut pooled, bps, &values, &scratch);
+        assert_eq!(out.applied, applied_serial);
+        assert!(out.oom.is_none());
+        for (s, p) in serial.iter().zip(&pooled) {
+            assert_eq!(s.len(), p.len());
+            assert_eq!(s.heap_used(), p.heap_used());
+            assert_eq!(s.sim_now_us(), p.sim_now_us(), "per-shard clocks must agree exactly");
+            for i in 0..s.len() as u64 {
+                assert_eq!(s.get(i), p.get(i));
+            }
+        }
+        assert_eq!(sched.counters().executed as usize, {
+            // One fill chunk per shard with a non-empty range (batch is
+            // far below FILL_CHUNK_ELEMS, so no shard splits).
+            scratch.ranges.iter().filter(|r| r.1 > 0).count()
+        });
+    }
+
+    #[test]
+    fn more_shards_than_workers_is_legal() {
+        // The old pool pinned thread k to shard k; the scheduler
+        // decouples them — 2 workers drain 4 shards' chunks.
+        let bps = 2;
+        let values: Vec<f32> = (0..800).map(|i| (i % 97) as f32).collect();
+        let mut scratch = DispatchScratch::new();
+
+        let mut serial = build_shards(4, bps);
+        routed(&serial, bps, values.len(), &mut scratch);
+        for (k, shard) in serial.iter_mut().enumerate() {
+            let (off, take) = scratch.ranges[k];
+            shard.apply_counts(scratch.shard_counts(k, bps), &values[off..off + take]);
+        }
+
+        let sched = Scheduler::new(2);
+        let mut pooled = build_shards(4, bps);
+        routed(&pooled, bps, values.len(), &mut scratch);
+        sched.run_insert(&mut pooled, bps, &values, &scratch);
+        for (s, p) in serial.iter().zip(&pooled) {
+            assert_eq!(s.sim_now_us(), p.sim_now_us());
+            for i in 0..s.len() as u64 {
+                assert_eq!(s.get(i), p.get(i));
+            }
+        }
+    }
+
+    #[test]
+    fn scheduled_work_matches_serial_values_and_clocks() {
+        let bps = 2;
+        let values: Vec<f32> = (0..256).map(|i| i as f32 * 0.5).collect();
+        let mut scratch = DispatchScratch::new();
+        let mut serial = build_shards(2, bps);
+        routed(&serial, bps, values.len(), &mut scratch);
+        for (k, shard) in serial.iter_mut().enumerate() {
+            let (off, take) = scratch.ranges[k];
+            shard.apply_counts(scratch.shard_counts(k, bps), &values[off..off + take]);
+        }
+        let sched = Scheduler::new(2);
+        let mut pooled = build_shards(2, bps);
+        routed(&pooled, bps, values.len(), &mut scratch);
+        sched.run_insert(&mut pooled, bps, &values, &scratch);
+
+        for shard in serial.iter_mut() {
+            shard.work_pass(None, 30);
+            if !shard.is_empty() {
+                shard.charge_rw_block(30.0);
+            }
+        }
+        assert_eq!(sched.run_work(&mut pooled, None, 30), 0);
+        for (s, p) in serial.iter().zip(&pooled) {
+            assert_eq!(s.get(0), p.get(0));
+            assert_eq!(s.sim_now_us(), p.sim_now_us());
+        }
+    }
+
+    #[test]
+    fn work_shares_one_executor_handle_across_workers() {
+        // Regression for the deleted "artifacts live → serial path"
+        // special case: pooled Work must accept a live executor handle
+        // and stay byte-identical to the serial path given the same
+        // handle. An empty manifest exercises the full shared-Arc
+        // plumbing (Send + Sync Executor, per-chunk clone) with the
+        // host-fallback numerics.
+        let dir = std::env::temp_dir().join("ggarray_sched_exec_share");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version":1,"entries":{}}"#).unwrap();
+        let exec = Arc::new(Executor::new(&dir).expect("empty manifest loads"));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let bps = 2;
+        let values: Vec<f32> = (0..512).map(|i| i as f32 * 0.25).collect();
+        let mut scratch = DispatchScratch::new();
+        let mut serial = build_shards(4, bps);
+        routed(&serial, bps, values.len(), &mut scratch);
+        for (k, shard) in serial.iter_mut().enumerate() {
+            let (off, take) = scratch.ranges[k];
+            shard.apply_counts(scratch.shard_counts(k, bps), &values[off..off + take]);
+        }
+        let sched = Scheduler::new(4);
+        let mut pooled = build_shards(4, bps);
+        routed(&pooled, bps, values.len(), &mut scratch);
+        sched.run_insert(&mut pooled, bps, &values, &scratch);
+
+        for shard in serial.iter_mut() {
+            shard.work_pass(Some(&*exec), 7);
+            if !shard.is_empty() {
+                shard.charge_rw_block(7.0);
+            }
+        }
+        let pjrt = sched.run_work(&mut pooled, Some(&exec), 7);
+        assert_eq!(pjrt, exec.executions(), "tally must equal the handle's own counter");
+        for (s, p) in serial.iter().zip(&pooled) {
+            assert_eq!(s.sim_now_us(), p.sim_now_us());
+            for i in 0..s.len() as u64 {
+                assert_eq!(s.get(i), p.get(i));
+            }
+        }
+    }
+
+    #[test]
+    fn scheduled_gathers_write_disjoint_ranges_in_shard_order() {
+        let bps = 2;
+        let values: Vec<f32> = (0..300).map(|i| i as f32).collect();
+        let mut scratch = DispatchScratch::new();
+        let sched = Scheduler::new(3);
+        let mut shards = build_shards(3, bps);
+        routed(&shards, bps, values.len(), &mut scratch);
+        sched.run_insert(&mut shards, bps, &values, &scratch);
+
+        // Reference: serial appending flatten.
+        let mut reference = Vec::new();
+        let mut check = build_shards(3, bps);
+        routed(&check, bps, values.len(), &mut scratch);
+        for (k, shard) in check.iter_mut().enumerate() {
+            let (off, take) = scratch.ranges[k];
+            shard.apply_counts(scratch.shard_counts(k, bps), &values[off..off + take]);
+        }
+        for shard in check.iter_mut() {
+            shard.flatten_temp_into(&mut reference).unwrap();
+        }
+
+        let lens: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        let ranges = scratch.fill_gather_ranges(lens.into_iter()).to_vec();
+        let mut dst = vec![0.0f32; values.len()];
+        sched.run_flatten_temp(&mut shards, &mut dst, &ranges).unwrap();
+        assert_eq!(dst, reference, "parallel gather must be byte-identical to serial append");
+
+        // Seal gather: parts in shard order, destination allocs live.
+        let mut seal_dst = vec![0.0f32; values.len()];
+        let mut parts = Vec::new();
+        sched.run_seal(&mut shards, &mut seal_dst, &ranges, &mut parts);
+        assert_eq!(seal_dst, reference);
+        assert_eq!(parts.len(), 3);
+        for (k, (part, shard)) in parts.into_iter().zip(shards.iter_mut()).enumerate() {
+            let mut part = part.expect("pre-screened seal cannot OOM");
+            assert_eq!(part.len, ranges[k].1);
+            assert!(part.alloc.is_some());
+            shard.abort_seal(part.alloc.take()); // clean up the lease
+        }
+    }
+
+    #[test]
+    fn hot_shard_gather_splits_into_range_chunks() {
+        // One shard far above GATHER_CHUNK_ELEMS must fan out into
+        // multiple chunks (the skewed-routing payoff), and the copy
+        // must still be byte-exact at every split boundary.
+        let bps = 2;
+        let n = GATHER_CHUNK_ELEMS * 2 + 1234;
+        let values: Vec<f32> = (0..n).map(|i| (i % 1013) as f32).collect();
+        let mut scratch = DispatchScratch::new();
+        let sched = Scheduler::new(2);
+        let mut shards = build_shards(1, bps);
+        routed(&shards, bps, values.len(), &mut scratch);
+        let out = sched.run_insert(&mut shards, bps, &values, &scratch);
+        assert!(out.oom.is_none());
+        let fills = sched.counters().executed;
+        assert!(fills > 1, "hot-shard fill must split (got {fills} chunks)");
+
+        let ranges = vec![(0usize, n)];
+        let mut dst = vec![0.0f32; n];
+        sched.run_flatten_temp(&mut shards, &mut dst, &ranges).unwrap();
+        let gathers = sched.counters().executed - fills;
+        assert_eq!(gathers, n.div_ceil(GATHER_CHUNK_ELEMS) as u64);
+        let mut reference = Vec::new();
+        shards[0].flatten_temp_into(&mut reference).unwrap();
+        assert_eq!(dst, reference);
+    }
+
+    #[test]
+    fn chunk_ledger_conserves_per_op_counts() {
+        // `chunks_executed` must equal the sum of each op's chunk
+        // decomposition: one fill chunk per shard with a routed range
+        // (small batch — no splitting), one work chunk per non-empty
+        // shard, and ceil(len / GATHER_CHUNK_ELEMS) gather chunks per
+        // non-empty shard.
+        let bps = 2;
+        let values: Vec<f32> = (0..600).map(|i| i as f32).collect();
+        let mut scratch = DispatchScratch::new();
+        let sched = Scheduler::new(3);
+        let mut shards = build_shards(3, bps);
+        routed(&shards, bps, values.len(), &mut scratch);
+        let fills = scratch.ranges.iter().filter(|r| r.1 > 0).count() as u64;
+        sched.run_insert(&mut shards, bps, &values, &scratch);
+        assert_eq!(sched.counters().executed, fills);
+
+        let works = shards.iter().filter(|s| !s.is_empty()).count() as u64;
+        sched.run_work(&mut shards, None, 5);
+        assert_eq!(sched.counters().executed, fills + works);
+
+        let gathers: u64 = shards.iter().map(|s| s.len().div_ceil(GATHER_CHUNK_ELEMS) as u64).sum();
+        let lens: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        let ranges = scratch.fill_gather_ranges(lens.into_iter()).to_vec();
+        let mut dst = vec![0.0f32; values.len()];
+        sched.run_flatten_temp(&mut shards, &mut dst, &ranges).unwrap();
+        assert_eq!(
+            sched.counters().executed,
+            fills + works + gathers,
+            "ledger must conserve the per-op chunk decomposition"
+        );
+    }
+
+    #[test]
+    fn scheduler_drop_joins_workers() {
+        let sched = Scheduler::new(4);
+        assert_eq!(sched.threads(), 4);
+        drop(sched); // must not hang or leak threads
+    }
+}

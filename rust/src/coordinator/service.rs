@@ -34,12 +34,14 @@
 //! [`super::metrics::ParallelCost`].
 //!
 //! Shard execution is **really parallel** by default: the worker owns a
-//! persistent [`ShardPool`] (one executor thread + mailbox per shard,
+//! persistent work-stealing [`Scheduler`] (a bucketed worker group,
 //! spawned once at `Coordinator::start`) and fans insert dispatch, work
-//! passes, snapshot gathers and the seal's phase-1 gather out to all
-//! shards concurrently, joining at a barrier — so the measured `wall_*`
-//! ledger tracks the modeled `sim_*` critical path instead of the
-//! `device_*` sum. Ops that could OOM mid-flight are pre-screened
+//! passes, snapshot gathers and the seal's phase-1 gather out as
+//! stealable per-shard / sub-shard-range chunks — so the measured
+//! `wall_*` ledger tracks the modeled `sim_*` critical path instead of
+//! the `device_*` sum, and a skewed routing no longer pays the
+//! slowest-shard latency at a fork/join barrier (idle workers steal the
+//! hot shard's chunks). Ops that could OOM mid-flight are pre-screened
 //! against exact VRAM demand and fall back to the serial loop when a
 //! fit is not guaranteed, which keeps every trace — OOM traces included
 //! — byte-identical across executor modes
@@ -71,9 +73,9 @@ use super::frontend::{
     SessionInsert,
 };
 use super::metrics::{Metrics, ParallelCost};
-use super::pool::ShardPool;
 use super::request::{checksum, Request, Response};
 use super::router::{DispatchScratch, Policy};
+use super::scheduler::Scheduler;
 use super::shard::{concat_parts, EpochManager, SealPart, Shard, ShardConfig};
 
 /// Service configuration.
@@ -114,13 +116,14 @@ pub struct CoordinatorConfig {
     /// gather pass merging them into a single segment (0 disables).
     pub compact_segments: usize,
     /// Shard-executor parallelism. `1` = serial: the worker applies every
-    /// per-shard op inline on its own thread (byte-identical to the pool
-    /// at every shard count — property-tested). Any value ≥ 2 = pooled:
-    /// a persistent [`ShardPool`] with **one executor thread per shard**
-    /// (the pool mirrors the paper's one-thread-block-per-LFVector-group
-    /// concurrency, so values above the shard count are meaningless and
-    /// clamp to it). `0` = auto: honour the `GG_THREADS` environment
-    /// variable if set, else pool whenever there is more than one shard.
+    /// per-shard op inline on its own thread (byte-identical to the
+    /// scheduler at every shard count — property-tested). Any value ≥ 2
+    /// = scheduled: a persistent work-stealing [`Scheduler`] with that
+    /// many workers — the worker count is decoupled from the shard
+    /// count, so 2 workers can drain 8 shards' chunks and 8 workers can
+    /// gang up on one hot shard's sub-ranges. `0` = auto: honour the
+    /// `GG_THREADS` environment variable if set, else one worker per
+    /// shard whenever there is more than one shard.
     pub executor_threads: usize,
     /// Multi-client admission layer (see [`super::frontend`]): per-session
     /// bounded channel depth, retry hint, and the merge policy governing
@@ -220,19 +223,25 @@ impl CoordinatorConfig {
         (epoch, total - epoch)
     }
 
-    /// Resolve [`CoordinatorConfig::executor_threads`] to an execution
-    /// mode: `true` = persistent pool (one executor thread per shard),
-    /// `false` = serial on the worker thread. `0` defers to the
-    /// `GG_THREADS` environment variable (unparsable values are treated
-    /// as unset), defaulting to pooled whenever there is >1 shard.
-    pub fn pooled_execution(&self) -> bool {
+    /// Resolve [`CoordinatorConfig::executor_threads`] to a scheduler
+    /// worker count: `1` = serial on the worker thread (no scheduler is
+    /// built). `0` defers to the `GG_THREADS` environment variable
+    /// (unparsable values are treated as unset), defaulting to one
+    /// worker per shard whenever there is more than one shard.
+    pub fn executor_workers(&self) -> usize {
         match self.executor_threads {
             0 => match std::env::var("GG_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
-                Some(n) => n > 1,
-                None => self.shards > 1,
+                Some(n) => n.max(1),
+                None => self.shards,
             },
-            n => n > 1,
+            n => n,
         }
+    }
+
+    /// `true` when this config runs the work-stealing scheduler
+    /// (`executor_workers() > 1`), `false` for the serial worker loop.
+    pub fn pooled_execution(&self) -> bool {
+        self.executor_workers() > 1
     }
 }
 
@@ -288,16 +297,17 @@ pub fn dispatch_insert(
     apply_routed_serial(shards, blocks_per_shard, values, scratch)
 }
 
-/// Pooled twin of [`dispatch_insert`]: same global routing, then the
-/// sub-batches fan out to the executor pool and apply on all shards
-/// concurrently, joining at a barrier. Before fanning out, the exact
-/// VRAM demand of the routed decision (missing-bucket bytes per shard)
-/// is checked against each shard's free budget: a guaranteed fit cannot
-/// OOM mid-flight, and anything else falls back to the serial loop —
-/// whose stop-at-first-OOM prefix semantics the parallel path could not
-/// honour — so outcomes are byte-identical across executor modes.
+/// Scheduled twin of [`dispatch_insert`]: same global routing, then the
+/// per-shard charges run serially (byte-identical clocks) and the fills
+/// fan out to the work-stealing scheduler as block-range chunks. Before
+/// fanning out, the exact VRAM demand of the routed decision
+/// (missing-bucket bytes per shard) is checked against each shard's
+/// free budget: a guaranteed fit cannot OOM mid-flight, and anything
+/// else falls back to the serial loop — whose stop-at-first-OOM prefix
+/// semantics the parallel path could not honour — so outcomes are
+/// byte-identical across executor modes.
 pub fn dispatch_insert_pooled(
-    pool: &ShardPool,
+    sched: &Scheduler,
     shards: &mut [Shard],
     blocks_per_shard: usize,
     policy: Policy,
@@ -309,7 +319,7 @@ pub fn dispatch_insert_pooled(
     if !insert_demand_fits(shards, blocks_per_shard, scratch) {
         return apply_routed_serial(shards, blocks_per_shard, values, scratch);
     }
-    pool.run_insert(shards, blocks_per_shard, values, scratch)
+    sched.run_insert(shards, blocks_per_shard, values, scratch)
 }
 
 /// Routing half of a dispatch: refresh the global per-block sizes in the
@@ -542,7 +552,10 @@ struct Worker {
     epochs: EpochManager,
     batcher: Batcher,
     metrics: Metrics,
-    executor: Option<Executor>,
+    /// Shared AOT/PJRT executor handle: `Arc`ed so pooled Work hands
+    /// every scheduler worker the same compiled-kernel manifest (each
+    /// worker lazily compiles into its own thread-local cache).
+    executor: Option<Arc<Executor>>,
     batch_seq: u64,
     /// Serial coordinator clock: host-side sync charged once per
     /// shard-dispatching op — the explicit serial term of the parallel
@@ -555,10 +568,11 @@ struct Worker {
     /// Pooled destination of `Request::Flatten` snapshots (cleared per
     /// use, capacity retained across snapshots).
     flatten_pool: Vec<f32>,
-    /// Persistent shard-executor pool (`None` = serial execution):
+    /// Persistent work-stealing scheduler (`None` = serial execution):
     /// spawned once here, never per batch; shard-dispatching ops fan out
-    /// to it and fan back in at a barrier.
-    pool: Option<ShardPool>,
+    /// to it as stealable chunks and its `finish` barrier (all chunks
+    /// done + all workers parked) is the fan-in.
+    scheduler: Option<Scheduler>,
     /// Admission ledger shared with every [`ClientSession`].
     shared: Arc<FrontendShared>,
     /// Registered client lanes, kept sorted by client id — the
@@ -574,7 +588,7 @@ impl Worker {
         let blocks_per_shard = cfg.blocks / cfg.shards;
         let executor = if cfg.use_artifacts {
             match Executor::from_default_dir() {
-                Ok(e) => Some(e),
+                Ok(e) => Some(Arc::new(e)),
                 Err(err) => {
                     eprintln!("[coordinator] artifacts unavailable, using host fallback: {err}");
                     None
@@ -603,9 +617,10 @@ impl Worker {
                 })
             })
             .collect();
-        // Executor pool: spawned once for the worker's lifetime (the
-        // tentpole invariant — threads are never created per batch).
-        let pool = if cfg.pooled_execution() { Some(ShardPool::new(cfg.shards)) } else { None };
+        // Scheduler workers: spawned once for the worker's lifetime
+        // (threads are never created per batch).
+        let scheduler =
+            if cfg.pooled_execution() { Some(Scheduler::new(cfg.executor_workers())) } else { None };
         Worker {
             shards,
             blocks_per_shard,
@@ -617,7 +632,7 @@ impl Worker {
             coord: Clock::new(),
             scratch: DispatchScratch::new(),
             flatten_pool: Vec::new(),
-            pool,
+            scheduler,
             shared,
             lanes: Vec::new(),
             cfg,
@@ -776,12 +791,12 @@ impl Worker {
         // and receives a contiguous `&values[..]` sub-slice. The
         // sub-batches execute concurrently — on the modeled device
         // (disjoint block ranges, so the ledger charges the slowest
-        // shard, not the sum — see `cost_since`) and, with the executor
-        // pool, on the host for real (wall ledger).
+        // shard, not the sum — see `cost_since`) and, with the
+        // scheduler, on the host for real (wall ledger).
         let wall0 = Instant::now();
-        let outcome = match &self.pool {
-            Some(pool) => dispatch_insert_pooled(
-                pool,
+        let outcome = match &self.scheduler {
+            Some(sched) => dispatch_insert_pooled(
+                sched,
                 &mut self.shards,
                 self.blocks_per_shard,
                 self.cfg.routing,
@@ -857,20 +872,22 @@ impl Worker {
                 self.barrier();
                 let marks = self.clock_marks();
                 let mut pjrt = 0u64;
-                // Fan out through the pool only on the host compute path:
-                // the PJRT client is not shared across executor threads,
-                // so when AOT artifacts are live the worker keeps the
-                // serial loop (the real kernels dominate there anyway).
-                let use_pool = self.executor.is_none() && self.pool.is_some();
                 let wall0 = Instant::now();
                 for _ in 0..calls {
                     self.charge_dispatch();
-                    if use_pool {
+                    if let Some(sched) = &self.scheduler {
                         // Real numeric update + modeled rw_b per shard,
-                        // concurrently on the executors (empty live
-                        // shards still skip the rw_b launch).
-                        let pool = self.pool.as_ref().expect("use_pool checked");
-                        pjrt += pool.run_work(&mut self.shards, self.cfg.work_iters);
+                        // concurrently on the workers (empty live shards
+                        // still skip the rw_b launch). The shared
+                        // executor handle rides along, so pooled Work
+                        // runs the AOT kernels whenever the serial path
+                        // would — there is no artifacts-live serial
+                        // special case anymore.
+                        pjrt += sched.run_work(
+                            &mut self.shards,
+                            self.executor.as_ref(),
+                            self.cfg.work_iters,
+                        );
                     } else {
                         // Real numeric update on the live epoch (PJRT
                         // when possible), then the modeled rw_b cost per
@@ -910,8 +927,8 @@ impl Worker {
                 // Sealed prefix is already flat; append a non-destructive
                 // flatten of the live epoch — per-shard gathers over
                 // disjoint block ranges, concurrent on the device (and,
-                // with the executor pool, on the host: each shard writes
-                // its disjoint sub-slice of the snapshot buffer). The
+                // with the scheduler, on the host: stealable range
+                // chunks write disjoint sub-slices of the buffer). The
                 // destination is the worker's pooled snapshot buffer
                 // (cleared per call, capacity retained), so steady-state
                 // snapshots reuse one gather buffer.
@@ -923,18 +940,18 @@ impl Worker {
                 }
                 let wall0 = Instant::now();
                 let mut failed = None;
-                if self.pool.is_some() && gather_demand_fits(&self.shards) {
+                if self.scheduler.is_some() && gather_demand_fits(&self.shards) {
                     let base = data.len();
                     let live: usize = self.shards.iter().map(|s| s.len()).sum();
-                    // The zero-fill is a serial pass the executors then
+                    // The zero-fill is a serial pass the workers then
                     // overwrite; unlike the seal (whose gather buffer
                     // supports an uncleared lease), the snapshot buffer
                     // interleaves a variable sealed-segment prefix, so
                     // the simple fill is kept on this ungated path.
                     data.resize(base + live, 0.0);
                     self.scratch.fill_gather_ranges(self.shards.iter().map(|s| s.len()));
-                    let pool = self.pool.as_ref().expect("pool checked");
-                    if let Err(e) = pool.run_flatten_temp(
+                    let sched = self.scheduler.as_ref().expect("scheduler checked");
+                    if let Err(e) = sched.run_flatten_temp(
                         &mut self.shards,
                         &mut data[base..],
                         &self.scratch.gather_ranges,
@@ -942,8 +959,9 @@ impl Worker {
                         failed = Some(e);
                     }
                 } else {
-                    // Serial path (no pool, or a fit is not guaranteed —
-                    // the appending loop aborts at the first OOM shard).
+                    // Serial path (no scheduler, or a fit is not
+                    // guaranteed — the appending loop aborts at the
+                    // first OOM shard).
                     for shard in &mut self.shards {
                         if let Err(e) = shard.flatten_temp_into(&mut data) {
                             failed = Some(e);
@@ -980,20 +998,21 @@ impl Worker {
                 // a fresh allocation in its own heap), then reserve
                 // epoch-store capacity for the whole seal. Any failure
                 // aborts the entire transaction before a single byte
-                // commits. With the executor pool (and a pre-screened
-                // guaranteed fit) the per-shard gathers run concurrently
-                // into disjoint sub-slices of the shared destination —
-                // the paper's per-block flatten kernels, for real.
+                // commits. With the scheduler (and a pre-screened
+                // guaranteed fit) the gathers run as stealable range
+                // chunks into disjoint sub-slices of the shared
+                // destination — the paper's per-block flatten kernels,
+                // for real.
                 let wall0 = Instant::now();
                 let mut parts: Vec<SealPart> = Vec::with_capacity(self.shards.len());
                 let mut failed = None;
-                let pooled_gather = self.pool.is_some() && gather_demand_fits(&self.shards);
+                let pooled_gather = self.scheduler.is_some() && gather_demand_fits(&self.shards);
                 let mut dst = if pooled_gather {
-                    // Uncleared lease: the executors overwrite exactly
+                    // Uncleared lease: the workers overwrite exactly
                     // [0, live), so stale banked elements never need the
                     // serial zero-fill memset a cleared `resize` would
                     // pay ahead of the parallel writes — only capacity
-                    // the pool has never reached gets initialized.
+                    // the buffer has never reached gets initialized.
                     self.epochs.take_gather_buffer_uncleared()
                 } else {
                     self.epochs.take_gather_buffer()
@@ -1005,9 +1024,9 @@ impl Worker {
                         dst.resize(live, 0.0);
                     }
                     self.scratch.fill_gather_ranges(self.shards.iter().map(|s| s.len()));
-                    let pool = self.pool.as_ref().expect("pool checked");
+                    let sched = self.scheduler.as_ref().expect("scheduler checked");
                     let mut results = Vec::with_capacity(self.shards.len());
-                    pool.run_seal(&mut self.shards, &mut dst, &self.scratch.gather_ranges, &mut results);
+                    sched.run_seal(&mut self.shards, &mut dst, &self.scratch.gather_ranges, &mut results);
                     if results.iter().any(|r| r.is_err()) {
                         // Cannot happen (pre-screened fit) — but unwind
                         // faithfully anyway: failed shards reopened
@@ -1147,7 +1166,10 @@ impl Worker {
                     )
                     .with_memory(self.epochs.sealed_bytes(), heap_used)
                     .with_batching(self.batcher.flushes(), self.batcher.coalesced_total())
-                    .with_executors(self.pool.as_ref().map(|p| p.threads()).unwrap_or(1))
+                    .with_executors(self.scheduler.as_ref().map(|s| s.threads()).unwrap_or(1))
+                    .with_scheduler(
+                        self.scheduler.as_ref().map(|s| s.counters()).unwrap_or_default(),
+                    )
                     .with_frontend(self.shared.sessions(), self.shared.shed_total());
                 Response::Stats(snap)
             }
@@ -1173,7 +1195,7 @@ impl Worker {
     /// through the AOT PJRT kernels when possible. Returns PJRT
     /// executions done.
     fn one_work_pass(&mut self) -> u64 {
-        let exec = self.executor.as_ref();
+        let exec = self.executor.as_deref();
         let iters = self.cfg.work_iters;
         let mut pjrt = 0u64;
         for shard in &mut self.shards {
@@ -1482,10 +1504,11 @@ mod tests {
     #[test]
     fn serial_and_pooled_executors_are_byte_identical() {
         // Unit-scale version of the property test: the same workload
-        // through executor_threads = 1 (serial worker) and = 2 (pooled,
-        // one executor thread per shard) must produce identical response
-        // payloads — checksums, lengths AND simulated times (per-shard
-        // clocks advance by the same charges in both modes).
+        // through executor_threads = 1 (serial worker) and = 2 (the
+        // work-stealing scheduler, 2 workers draining 4 shards' chunks)
+        // must produce identical response payloads — checksums, lengths
+        // AND simulated times (per-shard clocks advance by the same
+        // charges in both modes).
         let run = |threads: usize| {
             let cfg = CoordinatorConfig { executor_threads: threads, ..sharded_cfg(8, 4) };
             let c = Coordinator::start(cfg);
@@ -1514,7 +1537,10 @@ mod tests {
         assert_eq!(flat_s, flat_p, "Flattened payload must match exactly");
         assert_eq!(q_s, q_p);
         assert_eq!(snap_s.executors, 1);
-        assert_eq!(snap_p.executors, 4, "pooled mode runs one executor per shard");
+        assert_eq!(
+            snap_p.executors, 2,
+            "the scheduler runs exactly the configured worker count (decoupled from shards)"
+        );
         assert_eq!(snap_s.len, snap_p.len);
         assert_eq!(snap_s.sealed_len, snap_p.sealed_len);
         assert_eq!(snap_s.heap_used_bytes, snap_p.heap_used_bytes);
@@ -1526,10 +1552,35 @@ mod tests {
     }
 
     #[test]
+    fn stats_expose_the_scheduler_ledger() {
+        // Scheduled mode: the steal/park/chunk ledger is live and the
+        // finish barrier (all chunks done + all workers parked) means a
+        // post-op Stats always observes every park. Serial mode reports
+        // a zeroed ledger — no scheduler exists.
+        let run = |threads: usize| {
+            let cfg = CoordinatorConfig { executor_threads: threads, ..sharded_cfg(8, 4) };
+            let c = Coordinator::start(cfg);
+            c.call(Request::Insert { values: (0..500).map(|i| i as f32).collect() });
+            c.call(Request::Work { calls: 2 });
+            c.call(Request::Flatten);
+            let snap = c.call(Request::Stats).expect_stats();
+            c.shutdown();
+            snap
+        };
+        let pooled = run(2);
+        assert!(pooled.chunks_executed > 0, "fan-outs must be accounted as chunks");
+        assert!(pooled.parks >= 2, "both workers park at every finish barrier");
+        let serial = run(1);
+        assert_eq!(serial.chunks_executed, 0);
+        assert_eq!(serial.steals, 0);
+        assert_eq!(serial.parks, 0);
+    }
+
+    #[test]
     fn pooled_insert_falls_back_to_serial_prefix_semantics_on_tight_budget() {
         // A batch too big for the shard budgets must take the serial
-        // fallback (stop at the first OOMing shard) even with the pool
-        // enabled: the surviving prefix and error accounting must be
+        // fallback (stop at the first OOMing shard) even with the
+        // scheduler enabled: the surviving prefix and error accounting must be
         // identical to executor_threads = 1.
         let run = |threads: usize| {
             let cfg = CoordinatorConfig {

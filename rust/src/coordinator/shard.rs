@@ -32,6 +32,7 @@
 
 use crate::ggarray::array::{GgArray, GgConfig, OpReport};
 use crate::ggarray::flatten::{self, Flattened, ShardedFlattened};
+use crate::ggarray::lfvector::LfVector;
 use crate::insertion::{self, InsertionKind, InsertShape};
 use crate::runtime::Executor;
 use crate::sim::kernel::{self, KernelProfile};
@@ -137,10 +138,11 @@ impl Shard {
         self.gg.heap().used()
     }
 
-    /// Free bytes left in this shard's VRAM budget — the executor pool's
-    /// OOM pre-screen compares bucket/flatten demand against this before
-    /// fanning an op out (a guaranteed-fit op cannot OOM mid-flight, so
-    /// the parallel path never has to unwind a half-applied batch).
+    /// Free bytes left in this shard's VRAM budget — the shard
+    /// scheduler's OOM pre-screen compares bucket/flatten demand against
+    /// this before fanning an op out (a guaranteed-fit op cannot OOM
+    /// mid-flight, so the parallel path never has to unwind a
+    /// half-applied batch).
     pub fn heap_free(&self) -> u64 {
         self.gg.heap().free_bytes()
     }
@@ -167,6 +169,15 @@ impl Shard {
 
     pub fn gg(&self) -> &GgArray<f32> {
         &self.gg
+    }
+
+    /// Exclusive per-block access for the scheduler's insert-fill
+    /// chunks: the caller carves the slice into disjoint block ranges
+    /// (`split_at_mut`) so several chunks may fill one shard's tails
+    /// concurrently. Pure data movement only — all heap/clock charges
+    /// for the tails happened in [`Shard::prepare_counts`].
+    pub(crate) fn vectors_mut(&mut self) -> &mut [LfVector<f32>] {
+        self.gg.parts_mut().0
     }
 
     /// Read a shard-local global index (the shard's own block-major
@@ -218,6 +229,133 @@ impl Shard {
         ShardInsertOutcome { applied: off, sim_us: self.gg.clock().now_us() - sim0, error: None }
     }
 
+    /// Charge half of [`Shard::apply_counts`]: reserve buckets, extend
+    /// block lengths, charge the insertion kernel and the index rebuild
+    /// — everything that touches the simulated heap/clock — without
+    /// copying any batch values. The host-side copies are free in
+    /// simulated time, so the charges (and the returned `sim_us`) are
+    /// *identical* to `apply_counts` on the same state; the scheduler
+    /// runs this serially in shard order for deterministic clocks and
+    /// hands the pure fills to stealable chunks
+    /// ([`Shard::fill_counts`]). OOM semantics match exactly: blocks
+    /// before the failure stay extended (their fill is still owed),
+    /// the index is rebuilt, and `applied` is the prefix length.
+    pub fn prepare_counts(&mut self, counts: &[usize], total: usize) -> ShardInsertOutcome {
+        debug_assert_eq!(counts.len(), self.gg.num_blocks());
+        debug_assert_eq!(counts.iter().sum::<usize>(), total);
+        let sim0 = self.gg.clock().now_us();
+        let mut off = 0usize;
+        for (b, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if let Err(e) = self.gg.push_bulk_uninit_to_block(b, c) {
+                self.gg.rebuild_index_charged();
+                return ShardInsertOutcome {
+                    applied: off,
+                    sim_us: self.gg.clock().now_us() - sim0,
+                    error: Some(e),
+                };
+            }
+            off += c;
+        }
+        // Identical kernel charge to `apply_counts`: the uninit pushes
+        // already extended `len`, so `total.max(len)` sees the same
+        // post-insert size the copying path does.
+        let blocks = self.gg.num_blocks() as u64;
+        let shape = InsertShape {
+            threads: total.max(self.gg.len()) as u64,
+            inserts: total as u64,
+            elem_bytes: 4,
+            blocks,
+            threads_per_block: 1024,
+            counters: blocks,
+            write_eff: self.gg.spec().cost.ggarray_insert_eff,
+        };
+        let profile = insertion::profile(self.gg.spec(), self.insertion, &shape);
+        {
+            let (_, _, clock, spec, _, _) = self.gg.parts_mut();
+            kernel::launch(spec, clock, &profile);
+        }
+        self.gg.rebuild_index_charged();
+        ShardInsertOutcome { applied: off, sim_us: self.gg.clock().now_us() - sim0, error: None }
+    }
+
+    /// Pure data-movement half of the charge/copy split: write the
+    /// routed `values` into the tail slots [`Shard::prepare_counts`]
+    /// reserved (block order, values consumed in order). `applied` is
+    /// the prepare outcome's count — after a prepare OOM only the
+    /// fully-extended block prefix is filled, matching `apply_counts`'s
+    /// prefix semantics. Touches no heap/clock state.
+    pub fn fill_counts(&mut self, counts: &[usize], values: &[f32], applied: usize) {
+        let mut off = 0usize;
+        for (b, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if off + c > applied {
+                break;
+            }
+            self.gg.fill_block_tail(b, &values[off..off + c]);
+            off += c;
+        }
+        debug_assert_eq!(off, applied, "fill must cover exactly the prepared prefix");
+    }
+
+    /// Pure gather: copy this shard's elements
+    /// `start..start + dst.len()` (block-major flattened order — the
+    /// exact byte order of [`Shard::seal_flatten_to_slice`]) into
+    /// `dst`. `&self` only, so the scheduler may run several range
+    /// chunks of one large shard concurrently.
+    pub fn gather_copy_range(&self, mut start: usize, dst: &mut [f32]) {
+        let mut written = 0usize;
+        for v in self.gg.vectors() {
+            if written == dst.len() {
+                break;
+            }
+            let n = v.len();
+            if start >= n {
+                start -= n;
+                continue;
+            }
+            let take = (n - start).min(dst.len() - written);
+            v.copy_range_to_slice(start, &mut dst[written..written + take]);
+            written += take;
+            start = 0;
+        }
+        assert_eq!(written, dst.len(), "gather range past shard len");
+    }
+
+    /// Charge half of [`Shard::seal_flatten_to_slice`]: seal the epoch
+    /// and advance heap/clock exactly as the flatten would (destination
+    /// malloc + gather kernel) without moving bytes — the scheduler's
+    /// gather chunks owe the data via [`Shard::gather_copy_range`]. On
+    /// error the shard is reopened untouched, exactly like the copying
+    /// path.
+    pub fn seal_flatten_charge(&mut self) -> Result<SealPart, OomError> {
+        self.gg.seal();
+        let len = self.gg.len();
+        match flatten::flatten_charge_only(&mut self.gg) {
+            Ok((report, alloc)) => Ok(SealPart { len, report, alloc }),
+            Err(e) => {
+                self.gg.reopen();
+                Err(e)
+            }
+        }
+    }
+
+    /// Charge half of [`Shard::flatten_temp_to_slice`]: snapshot-flatten
+    /// charges with the temp destination released immediately, no data
+    /// movement. Returns the shard length the gather chunks must copy.
+    pub fn flatten_temp_charge(&mut self) -> Result<usize, OomError> {
+        let (_report, alloc) = flatten::flatten_charge_only(&mut self.gg)?;
+        if let Some(a) = alloc {
+            let (_, heap, clock, _, _, _) = self.gg.parts_mut();
+            heap.free(a, clock);
+        }
+        Ok(self.gg.len())
+    }
+
     /// Seal this shard's epoch and flatten its contents. The returned
     /// [`Flattened`] still carries its destination allocation: the
     /// caller decides the transaction's fate — [`Shard::commit_seal`]
@@ -257,7 +395,7 @@ impl Shard {
     /// Slice-target [`Shard::seal_flatten_into`]: gather this shard's
     /// contents into `dst` (exactly `len` slots, carved by the caller out
     /// of the shared seal destination) with identical simulated charges —
-    /// the executor pool's phase-1 seal gather runs one of these per
+    /// the scheduler's phase-1 seal gather runs one of these per
     /// shard concurrently, each into its disjoint sub-slice. On error
     /// nothing meaningful was written and this shard is reopened
     /// untouched, exactly like the appending path.
@@ -330,7 +468,7 @@ impl Shard {
         Ok(dst.len() - before)
     }
 
-    /// Slice-target [`Shard::flatten_temp_into`] for the executor pool's
+    /// Slice-target [`Shard::flatten_temp_into`] for the scheduler's
     /// parallel snapshot gather: write this shard's contents into `dst`
     /// (exactly `len` slots) and release the simulated destination
     /// immediately, with charges identical to the appending path.
@@ -520,7 +658,7 @@ impl EpochManager {
     /// Lease the pooled gather buffer **without clearing**: stale
     /// elements from the banked buffer are retained (they are
     /// initialized memory). For callers that overwrite an exact prefix
-    /// anyway — the executor pool's parallel seal gather writes every
+    /// anyway — the scheduler's parallel seal gather writes every
     /// slot of its carve — this skips the `resize` zero-fill a cleared
     /// lease would force, which would otherwise be a serial full-buffer
     /// memset ahead of the parallel writes.
@@ -824,6 +962,109 @@ mod tests {
             assert!(s.get(0).is_some());
         }
         assert_eq!(s.get(out.applied as u64), None);
+    }
+
+    #[test]
+    fn prepare_then_fill_matches_apply_counts_exactly() {
+        // The scheduler's charge/copy split must be indistinguishable
+        // from the fused path: bytes, length, heap residency and the
+        // exact simulated clock.
+        let mut fused = shard(4, 1 << 24);
+        let mut split = shard(4, 1 << 24);
+        for round in 0..4 {
+            let counts = [[3usize, 0, 2, 5], [0, 0, 0, 0], [40, 1, 0, 9], [7, 7, 7, 7]][round];
+            let total: usize = counts.iter().sum();
+            let values: Vec<f32> = (0..total).map(|i| (i * 13 + round) as f32).collect();
+            let a = fused.apply_counts(&counts, &values);
+            let b = split.prepare_counts(&counts, total);
+            split.fill_counts(&counts, &values, b.applied);
+            assert_eq!(a.applied, b.applied, "round {round}");
+            assert!((a.sim_us - b.sim_us).abs() < 1e-12, "round {round}");
+            assert!(a.error.is_none() && b.error.is_none());
+            assert_eq!(fused.len(), split.len());
+            assert_eq!(fused.heap_used(), split.heap_used(), "round {round}");
+            assert_eq!(fused.sim_now_us(), split.sim_now_us(), "round {round}: exact clock");
+        }
+        for i in 0..fused.len() as u64 {
+            assert_eq!(fused.get(i), split.get(i), "slot {i}");
+        }
+    }
+
+    #[test]
+    fn prepare_then_fill_oom_matches_apply_counts_prefix() {
+        let mut fused = shard(2, 2048);
+        let mut split = shard(2, 2048);
+        let values: Vec<f32> = (0..4000).map(|i| i as f32).collect();
+        let a = fused.apply_counts(&[2000, 2000], &values);
+        let b = split.prepare_counts(&[2000, 2000], 4000);
+        split.fill_counts(&[2000, 2000], &values, b.applied);
+        assert!(a.error.is_some() && b.error.is_some());
+        assert_eq!(a.applied, b.applied);
+        assert!((a.sim_us - b.sim_us).abs() < 1e-12);
+        assert_eq!(fused.len(), split.len());
+        assert_eq!(fused.heap_used(), split.heap_used());
+        assert_eq!(fused.sim_now_us(), split.sim_now_us());
+        for i in 0..fused.len() as u64 {
+            assert_eq!(fused.get(i), split.get(i), "slot {i}");
+        }
+    }
+
+    #[test]
+    fn seal_charge_plus_gather_chunks_match_seal_flatten_to_slice() {
+        let build = || {
+            let mut s = shard(4, 1 << 24);
+            let values: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+            s.apply_counts(&[100, 400, 250, 250], &values);
+            s
+        };
+        let mut copy = build();
+        let mut charge = build();
+        let mut dst_a = vec![0.0f32; 1000];
+        let mut pa = copy.seal_flatten_to_slice(&mut dst_a).unwrap();
+        let mut pb = charge.seal_flatten_charge().unwrap();
+        assert_eq!(pa.len, pb.len);
+        assert!((pa.report.us - pb.report.us).abs() < 1e-12);
+        assert_eq!(copy.heap_used(), charge.heap_used());
+        assert_eq!(copy.sim_now_us(), charge.sim_now_us(), "exact clock");
+        // The owed data movement, in three uneven range chunks (as the
+        // scheduler would steal them), reproduces the flatten bytes.
+        let mut dst_b = vec![0.0f32; 1000];
+        for (start, len) in [(0usize, 7usize), (7, 600), (607, 393)] {
+            charge.gather_copy_range(start, &mut dst_b[start..start + len]);
+        }
+        assert_eq!(dst_b, dst_a);
+        copy.abort_seal(pa.alloc.take());
+        charge.abort_seal(pb.alloc.take());
+        assert_eq!(copy.len(), charge.len());
+    }
+
+    #[test]
+    fn flatten_temp_charge_plus_gather_matches_flatten_temp_to_slice() {
+        let build = || {
+            let mut s = shard(2, 1 << 24);
+            s.apply_counts(&[30, 12], &(0..42).map(|i| i as f32).collect::<Vec<_>>());
+            s
+        };
+        let mut copy = build();
+        let mut charge = build();
+        let mut dst_a = vec![0.0f32; 42];
+        assert_eq!(copy.flatten_temp_to_slice(&mut dst_a).unwrap(), 42);
+        assert_eq!(charge.flatten_temp_charge().unwrap(), 42);
+        let mut dst_b = vec![0.0f32; 42];
+        charge.gather_copy_range(0, &mut dst_b);
+        assert_eq!(dst_b, dst_a);
+        assert_eq!(copy.heap_used(), charge.heap_used(), "temp destination released in both");
+        assert_eq!(copy.sim_now_us(), charge.sim_now_us(), "exact clock");
+        // Seal-charge OOM reopens untouched, like the copying path.
+        let mut tight = shard(2, 512);
+        tight.apply_counts(&[40, 40], &vec![1.0; 80]);
+        if tight.len() > 0 {
+            let before = tight.heap_used();
+            if tight.seal_flatten_charge().is_err() {
+                assert_eq!(tight.heap_used(), before);
+                assert!(!tight.gg().is_sealed(), "failed seal charge must reopen");
+            }
+        }
     }
 
     #[test]

@@ -443,6 +443,28 @@ impl<T: Copy + Default> GgArray<T> {
         assert!(!self.sealed, "push_bulk_to_block on a sealed GgArray (reopen the epoch first)");
         self.vectors[block].push_back_bulk(vs, &mut self.heap, &mut self.clock)
     }
+
+    /// Charge half of [`GgArray::push_bulk_to_block`]: reserve + extend
+    /// the block by `n` slots with identical heap/clock charges, no
+    /// data. The scheduler fills the slots later with the pure
+    /// [`GgArray::fill_block_tail`].
+    pub fn push_bulk_uninit_to_block(&mut self, block: usize, n: usize) -> Result<std::ops::Range<usize>, OomError> {
+        assert!(block < self.cfg.num_blocks);
+        assert!(!self.sealed, "push_bulk_uninit_to_block on a sealed GgArray (reopen the epoch first)");
+        self.vectors[block].push_bulk_uninit(n, &mut self.heap, &mut self.clock)
+    }
+
+    /// Pure data movement: write `vs` into the *last* `vs.len()` live
+    /// slots of `block` (previously extended by
+    /// [`GgArray::push_bulk_uninit_to_block`]). Touches no heap/clock
+    /// state, so scheduler workers may run it off the coordinator
+    /// thread.
+    pub fn fill_block_tail(&mut self, block: usize, vs: &[T]) {
+        assert!(block < self.cfg.num_blocks);
+        let v = &mut self.vectors[block];
+        let start = v.len().checked_sub(vs.len()).expect("fill_block_tail larger than block");
+        v.write_range(start, vs);
+    }
 }
 
 #[cfg(test)]

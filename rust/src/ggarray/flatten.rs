@@ -216,7 +216,7 @@ pub fn flatten_into<T: Copy + Default>(
 /// out of a larger pre-sized buffer. Simulated charges (one destination
 /// `cudaMalloc`, one gather kernel) are identical to the appending path;
 /// what changes is only where the host copy lands, which is what lets
-/// the executor pool run per-shard gathers concurrently into disjoint
+/// the shard scheduler run per-shard gathers concurrently into disjoint
 /// sub-slices of one seal destination.
 pub fn flatten_to_slice<T: Copy + Default>(
     gg: &mut GgArray<T>,
@@ -231,6 +231,20 @@ pub fn flatten_to_slice<T: Copy + Default>(
         }
         debug_assert_eq!(off, n);
     })
+}
+
+/// Charge-only [`flatten_to_slice`]: advance the heap/clock exactly as
+/// a flatten would — one destination `cudaMalloc`, one gather kernel —
+/// without moving any bytes. The host copy is free in simulated time,
+/// so the charges here are *identical* to the copying variants; the
+/// scheduler runs this serially per shard (deterministic `sim_us`) and
+/// hands the pure data movement to stealable gather chunks
+/// ([`crate::ggarray::lfvector::LfVector::copy_to_slice`] over
+/// disjoint destination sub-slices).
+pub fn flatten_charge_only<T: Copy + Default>(
+    gg: &mut GgArray<T>,
+) -> Result<(OpReport, Option<AllocId>), OomError> {
+    flatten_charged(gg, |_| {})
 }
 
 /// Shared core of [`flatten_into`] / [`flatten_to_slice`]: one
@@ -426,6 +440,33 @@ mod tests {
         assert_eq!(a.clock().now_us(), b.clock().now_us(), "identical clock advance");
         assert!(alloc_a.is_some() && alloc_b.is_some());
         assert_eq!(a.heap().used(), b.heap().used());
+    }
+
+    #[test]
+    fn flatten_charge_only_matches_copying_charges() {
+        let cfg = GgConfig { num_blocks: 4, threads_per_block: 256, first_bucket_size: 4, insertion: InsertionKind::WarpScan };
+        let build = || {
+            let mut g: GgArray<u32> = GgArray::new(cfg.clone(), DeviceSpec::a100());
+            g.insert_bulk(&(0..500).collect::<Vec<_>>(), InsertionKind::WarpScan).unwrap();
+            g
+        };
+        let mut a = build();
+        let mut b = build();
+        let mut dst = vec![0u32; 500];
+        let (ra, alloc_a) = flatten_to_slice(&mut a, &mut dst).unwrap();
+        let (rb, alloc_b) = flatten_charge_only(&mut b).unwrap();
+        assert!((ra.us - rb.us).abs() < 1e-12, "identical simulated charge");
+        assert_eq!(a.clock().now_us(), b.clock().now_us(), "identical clock advance");
+        assert_eq!(a.heap().used(), b.heap().used(), "identical destination allocation");
+        assert_eq!(ra.elements, rb.elements);
+        assert!(alloc_a.is_some() && alloc_b.is_some());
+        // And the data can still be gathered afterwards, pure-copy.
+        let mut late = vec![0u32; 500];
+        let mut off = 0usize;
+        for v in b.vectors() {
+            off += v.copy_to_slice(&mut late[off..]);
+        }
+        assert_eq!(late, dst, "late pure copy reproduces the flatten bytes");
     }
 
     #[test]

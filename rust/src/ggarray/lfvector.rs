@@ -25,7 +25,7 @@ struct Bucket<T> {
 
 /// Number of buckets needed to hold `n` elements with first-bucket size
 /// `fbs` (the smallest `k` with `fbs·(2^k − 1) ≥ n`). Free-standing so
-/// admission prechecks (e.g. the executor pool's OOM pre-screen) can
+/// admission prechecks (e.g. the shard scheduler's OOM pre-screen) can
 /// compute bucket demand without holding a vector.
 #[inline]
 pub fn buckets_for_len(fbs: usize, n: usize) -> usize {
@@ -222,6 +222,50 @@ impl<T: Copy + Default> LfVector<T> {
         Ok(start..end)
     }
 
+    /// The charge half of [`LfVector::push_back_bulk`]: reserve buckets
+    /// for `n` more elements and extend the logical length, without
+    /// copying any data (slots come up `T::default()` from bucket
+    /// allocation). Heap/clock charges are *identical* to
+    /// `push_back_bulk(&es[..n], ..)` — the copy is host-side and free
+    /// in simulated time — so a scheduler can run this serially for
+    /// deterministic charging and fill the reserved range later with
+    /// the pure [`LfVector::write_range`] on any thread.
+    pub fn push_bulk_uninit(
+        &mut self,
+        n: usize,
+        heap: &mut VramHeap,
+        clock: &mut Clock,
+    ) -> Result<std::ops::Range<usize>, OomError> {
+        let start = self.len;
+        let end = start + n;
+        self.reserve(end, heap, clock)?;
+        self.len = end;
+        Ok(start..end)
+    }
+
+    /// Pure data movement: write `es` into the live slots
+    /// `start..start + es.len()` (all must be `< len`, i.e. previously
+    /// extended by [`LfVector::push_bulk_uninit`] or an append). Touches
+    /// no heap or clock state — the scheduler's fill chunks call this
+    /// from worker threads after the coordinator has charged the
+    /// reserve.
+    pub fn write_range(&mut self, start: usize, es: &[T]) {
+        let end = start + es.len();
+        assert!(end <= self.len, "write_range({start}..{end}) past len {}", self.len);
+        // Same segment-wise copy as `push_back_bulk`.
+        let mut src = 0usize;
+        let mut idx = start;
+        while idx < end {
+            let (b, off) = self.locate(idx);
+            let cap = self.bucket_capacity(b);
+            let take = (cap - off).min(end - idx);
+            self.buckets[b].as_mut().expect("within len ⇒ allocated").data[off..off + take]
+                .copy_from_slice(&es[src..src + take]);
+            src += take;
+            idx += take;
+        }
+    }
+
     /// Read element `idx`.
     #[inline]
     pub fn get(&self, idx: usize) -> Option<T> {
@@ -278,8 +322,8 @@ impl<T: Copy + Default> LfVector<T> {
     /// Copy the live elements into the front of `out` (which must hold at
     /// least `len` slots) and return the count written — the slice-target
     /// twin of [`LfVector::copy_into`] for gathers whose destination
-    /// ranges are carved up front (the executor pool's parallel flatten
-    /// writes disjoint sub-slices of one buffer concurrently).
+    /// ranges are carved up front (the shard scheduler's parallel
+    /// flatten writes disjoint sub-slices of one buffer concurrently).
     pub fn copy_to_slice(&self, out: &mut [T]) -> usize {
         debug_assert!(out.len() >= self.len, "destination slice too small");
         let mut written = 0usize;
@@ -295,6 +339,28 @@ impl<T: Copy + Default> LfVector<T> {
             }
         }
         written
+    }
+
+    /// Pure sub-range read: copy the live elements
+    /// `start..start + out.len()` into `out` — the stealable-chunk twin
+    /// of [`LfVector::copy_to_slice`], so a large shard's gather can be
+    /// decomposed into range chunks that read the same vector
+    /// concurrently (`&self` only).
+    pub fn copy_range_to_slice(&self, start: usize, out: &mut [T]) {
+        let end = start + out.len();
+        assert!(end <= self.len, "copy_range_to_slice({start}..{end}) past len {}", self.len);
+        let mut dst = 0usize;
+        let mut idx = start;
+        while idx < end {
+            let (b, off) = self.locate(idx);
+            let cap = self.bucket_capacity(b);
+            let take = (cap - off).min(end - idx);
+            out[dst..dst + take].copy_from_slice(
+                &self.buckets[b].as_ref().expect("within len ⇒ allocated").data[off..off + take],
+            );
+            dst += take;
+            idx += take;
+        }
     }
 
     /// Drop all buckets, releasing simulated VRAM.
@@ -463,6 +529,49 @@ mod tests {
     }
 
     #[test]
+    fn uninit_then_write_range_matches_push_back_bulk_exactly() {
+        // The scheduler's charge/copy split: reserve-and-extend on the
+        // coordinator, pure write on a worker. Bytes, heap charges and
+        // clock must all equal the fused bulk append.
+        let spec = DeviceSpec::a100();
+        let mut heap_a = VramHeap::with_capacity(spec.clone(), 1 << 20);
+        let mut heap_b = VramHeap::with_capacity(spec, 1 << 20);
+        let (mut clock_a, mut clock_b) = (Clock::new(), Clock::new());
+        let mut a: LfVector<u32> = LfVector::new(4);
+        let mut b: LfVector<u32> = LfVector::new(4);
+        for (step, batch) in [7usize, 0, 30, 1, 200].into_iter().enumerate() {
+            let data: Vec<u32> = (0..batch as u32).map(|i| i * 5 + step as u32).collect();
+            let ra = a.push_back_bulk(&data, &mut heap_a, &mut clock_a).unwrap();
+            let rb = b.push_bulk_uninit(data.len(), &mut heap_b, &mut clock_b).unwrap();
+            b.write_range(rb.start, &data);
+            assert_eq!(ra, rb, "step {step}");
+            assert_eq!(heap_a.used(), heap_b.used(), "step {step}");
+            assert_eq!(clock_a.now_us(), clock_b.now_us(), "step {step}");
+            assert_eq!(a.cas_attempts(), b.cas_attempts(), "step {step}");
+        }
+        assert_eq!(a.len(), b.len());
+        for i in 0..a.len() {
+            assert_eq!(a.get(i), b.get(i), "slot {i}");
+        }
+        // OOM parity: both variants fail the same way and leave len alone.
+        let spec = DeviceSpec::a100();
+        let mut tiny = VramHeap::with_capacity(spec, 16);
+        let mut clock = Clock::new();
+        let mut v: LfVector<u64> = LfVector::new(8);
+        assert!(v.push_bulk_uninit(9, &mut tiny, &mut clock).is_err());
+        assert_eq!(v.len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "past len")]
+    fn write_range_rejects_unreserved_tail() {
+        let (mut heap, mut clock) = fixture();
+        let mut v: LfVector<u32> = LfVector::new(4);
+        v.push_bulk_uninit(3, &mut heap, &mut clock).unwrap();
+        v.write_range(2, &[1, 2]);
+    }
+
+    #[test]
     fn set_and_for_each_mut() {
         let (mut heap, mut clock) = fixture();
         let mut v: LfVector<i64> = LfVector::new(4);
@@ -493,6 +602,33 @@ mod tests {
         // Empty vector writes nothing.
         let e: LfVector<u32> = LfVector::new(4);
         assert_eq!(e.copy_to_slice(&mut via_slice), 0);
+    }
+
+    #[test]
+    fn copy_range_to_slice_matches_full_copy_for_every_split() {
+        let (mut heap, mut clock) = fixture();
+        let mut v: LfVector<u32> = LfVector::new(4);
+        let data: Vec<u32> = (0..61).map(|i| i * 3 + 2).collect();
+        v.push_back_bulk(&data, &mut heap, &mut clock).unwrap();
+        let mut full = vec![0u32; 61];
+        v.copy_to_slice(&mut full);
+        for start in 0..=61usize {
+            for end in start..=61usize {
+                let mut part = vec![u32::MAX; end - start];
+                v.copy_range_to_slice(start, &mut part);
+                assert_eq!(&part[..], &full[start..end], "range {start}..{end}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "past len")]
+    fn copy_range_to_slice_rejects_past_len() {
+        let (mut heap, mut clock) = fixture();
+        let mut v: LfVector<u32> = LfVector::new(4);
+        v.push_back_bulk(&[1, 2, 3], &mut heap, &mut clock).unwrap();
+        let mut out = vec![0u32; 2];
+        v.copy_range_to_slice(2, &mut out);
     }
 
     #[test]

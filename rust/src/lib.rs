@@ -76,20 +76,23 @@
 //!   also skips the `rw_b` launch on empty live shards, so a
 //!   fully-sealed store pays only the flat-path passes.
 //! * **Real shard parallelism** — the worker owns a persistent
-//!   [`coordinator::pool::ShardPool`]: one long-lived executor thread
-//!   per shard (spawned once at `Coordinator::start`, never per batch),
-//!   each parked on a pre-allocated Mutex+Condvar SPSC mailbox. Insert
-//!   dispatch, work passes, snapshot gathers and the seal's phase-1
-//!   gather fan out to all shards concurrently and fan back in at a
-//!   barrier — the host-side analogue of the paper's per-block
-//!   synchronization — so the *measured* wall ledger
+//!   work-stealing [`coordinator::scheduler::Scheduler`]: a group of
+//!   long-lived workers (spawned once at `Coordinator::start`, never
+//!   per batch) parked on one shared Mutex+Condvar monitor with
+//!   per-worker deques and steal-on-empty. Insert dispatch, work
+//!   passes, snapshot gathers and the seal's phase-1 gather decompose
+//!   into stealable per-shard (and sub-shard-range) chunks — the
+//!   host-side analogue of the paper's per-block synchronization, minus
+//!   the fork/join max-shard barrier: a hot shard's chunks are drained
+//!   by every worker, so the *measured* wall ledger
 //!   (`MetricsSnapshot::wall_*_ms`) tracks the modeled `sim_*` critical
 //!   path instead of the `device_*` sum. Ops that could OOM mid-flight
 //!   are pre-screened against exact VRAM demand and fall back to the
 //!   serial loop, keeping every trace byte-identical across executor
 //!   modes (`CoordinatorConfig::executor_threads` / `GG_THREADS`;
-//!   property-tested at 1/2/4 shards, zero-alloc across the mailbox
-//!   handoff, measured 4-vs-1 speedup gated in `bench_hotpath`).
+//!   property-tested at 1/2/4 shards, zero-alloc across the chunk
+//!   handoff, measured 4-vs-1 and skewed-routing speedups gated in
+//!   `bench_hotpath`).
 //! * **Zero-copy hot path** — the steady-state dispatch loop is
 //!   allocation-free and copy-minimal on the host side: a
 //!   [`coordinator::router::DispatchScratch`] arena owned by the worker
@@ -132,10 +135,11 @@
 //!   `--cfg ggcheck` the facade swaps in instrumented primitives
 //!   driven by the [`checker`] — a bounded exhaustive-interleaving
 //!   model checker (loom-style DFS over yield points, vendor-free)
-//!   that enumerates every schedule of the SPSC mailbox handoff, the
-//!   admission shed/rollback path, and the `AtBarrier` drain order,
-//!   printing a replayable schedule seed on failure
-//!   (`tests/model_check.rs`). Pointer hand-offs to executor threads
+//!   that enumerates every schedule of the scheduler's
+//!   park/steal/termination monitor protocol, the admission
+//!   shed/rollback path, and the `AtBarrier` drain order, printing a
+//!   replayable schedule seed on failure
+//!   (`tests/model_check.rs`). Pointer hand-offs to scheduler workers
 //!   use the provenance-preserving [`sync::SendPtr`] family instead of
 //!   `usize` laundering, and a repo lint (`cargo run --bin lint`)
 //!   gates `unsafe` hygiene, pointer casts, facade bypasses, and

@@ -8,7 +8,9 @@
 //! The `xla` crate's `PjRtClient` is `Rc`-based (neither `Send` nor
 //! `Sync`), so the client is **thread-local**: each thread that touches
 //! PJRT lazily creates its own CPU client. In this architecture that is
-//! exactly one thread — the coordinator worker — plus test threads.
+//! the coordinator worker plus the shard scheduler's workers (each
+//! compiles the shared `Executor`'s kernels into its own thread-local
+//! cache on first use), plus test threads.
 
 use std::cell::RefCell;
 use std::path::Path;

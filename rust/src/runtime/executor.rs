@@ -1,18 +1,45 @@
 //! Executable cache + typed execution over the AOT artifacts.
 //!
 //! The coordinator's hot path calls [`Executor::run_i32`] /
-//! [`Executor::run_f32`]; compilation happens once per artifact (cached),
-//! inputs are validated against the manifest's tensor specs, and padding
-//! to the artifact's fixed shape is handled here (XLA executables are
-//! shape-monomorphic; `aot.py` emits a small family of power-of-two
-//! sizes per kernel).
+//! [`Executor::run_f32`]; compilation happens once per artifact *per
+//! thread* (cached), inputs are validated against the manifest's tensor
+//! specs, and padding to the artifact's fixed shape is handled here
+//! (XLA executables are shape-monomorphic; `aot.py` emits a small
+//! family of power-of-two sizes per kernel).
+//!
+//! ## Sharing across scheduler workers
+//!
+//! The `xla` crate's PJRT types are `Rc`-based (`!Send`), and the CPU
+//! client itself is thread-local (see [`super::client`]). [`Executor`]
+//! is nevertheless `Send + Sync`: it owns only the manifest and an
+//! execution counter, while compiled executables live in a
+//! **thread-local** cache keyed by (executor instance, artifact name).
+//! An `Arc<Executor>` can therefore be handed to every scheduler
+//! worker; each worker lazily compiles its own copy of the artifacts it
+//! actually runs (once per thread lifetime — the workers are
+//! persistent). [`Executor::warm_up`] warms the *calling* thread's
+//! cache only.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::sync::Mutex;
+use std::rc::Rc;
 
 use super::artifact::{ArtifactManifest, ArtifactSpec};
 use super::client;
+
+/// Instance counter: keys the thread-local executable cache so two
+/// `Executor`s over different artifact dirs never share entries.
+static NEXT_EXECUTOR_ID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+thread_local! {
+    /// Per-thread compiled executables: (executor id, artifact name) →
+    /// loaded executable. Entries persist for the thread's lifetime
+    /// (scheduler workers are persistent, so each artifact compiles at
+    /// most once per worker).
+    static COMPILED: RefCell<HashMap<(u64, String), Rc<xla::PjRtLoadedExecutable>>> =
+        RefCell::new(HashMap::new());
+}
 
 /// A typed input for [`Executor::run_mixed`].
 #[derive(Debug, Clone, Copy)]
@@ -44,10 +71,12 @@ impl OutValue {
     }
 }
 
-/// Cached, compiled AOT artifacts.
+/// Cached, compiled AOT artifacts. `Send + Sync` (shareable across
+/// scheduler workers via `Arc`) because compiled executables live in a
+/// thread-local cache, not in this struct — see the module doc.
 pub struct Executor {
+    id: u64,
     manifest: ArtifactManifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
     executions: std::sync::atomic::AtomicU64,
 }
 
@@ -55,8 +84,8 @@ impl Executor {
     /// Load the manifest from `dir` (usually `artifacts/`).
     pub fn new(dir: &Path) -> anyhow::Result<Executor> {
         Ok(Executor {
+            id: NEXT_EXECUTOR_ID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
             manifest: ArtifactManifest::load(dir)?,
-            cache: Mutex::new(HashMap::new()),
             executions: std::sync::atomic::AtomicU64::new(0),
         })
     }
@@ -75,21 +104,22 @@ impl Executor {
         self.executions.load(std::sync::atomic::Ordering::Relaxed)
     }
 
-    fn compiled(&self, name: &str) -> anyhow::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
+    fn compiled(&self, name: &str) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = COMPILED.with(|c| c.borrow().get(&(self.id, name.to_string())).cloned()) {
+            return Ok(e);
         }
         let spec = self
             .manifest
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}' (have: {:?})", self.manifest.names().collect::<Vec<_>>()))?;
-        let exe = std::sync::Arc::new(client::compile_hlo_file(&self.manifest.path_of(spec))?);
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        let exe = Rc::new(client::compile_hlo_file(&self.manifest.path_of(spec))?);
+        COMPILED.with(|c| c.borrow_mut().insert((self.id, name.to_string()), exe.clone()));
         Ok(exe)
     }
 
-    /// Pre-compile every artifact (startup warm-up so the request path
-    /// never compiles).
+    /// Pre-compile every artifact on the *calling* thread (startup
+    /// warm-up so this thread's request path never compiles; scheduler
+    /// workers warm their own caches lazily on first use).
     pub fn warm_up(&self) -> anyhow::Result<usize> {
         let names: Vec<String> = self.manifest.names().map(|s| s.to_string()).collect();
         for n in &names {
@@ -299,5 +329,28 @@ mod tests {
     #[test]
     fn unknown_dir_fails() {
         assert!(Executor::new(Path::new("/definitely/not/here")).is_err());
+    }
+
+    #[test]
+    fn executor_is_shareable_across_threads() {
+        // The scheduler hands one Arc<Executor> to every worker; this
+        // pins the auto-trait obligation that makes that legal (the
+        // Rc-based PJRT executables live in thread-local caches, never
+        // in the struct).
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Executor>();
+        assert_send_sync::<std::sync::Arc<Executor>>();
+    }
+
+    #[test]
+    fn distinct_executors_get_distinct_cache_keys() {
+        let dir = std::env::temp_dir().join("ggarray_exec_id_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version":1,"entries":{}}"#).unwrap();
+        let a = Executor::new(&dir).unwrap();
+        let b = Executor::new(&dir).unwrap();
+        assert_ne!(a.id, b.id, "thread-local cache entries must never collide");
+        assert_eq!(a.executions(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

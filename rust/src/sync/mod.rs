@@ -16,7 +16,7 @@
 //! unchanged; inside one it becomes deterministic and schedulable.
 //!
 //! [`sendptr`] rides along in both flavors: the provenance-preserving
-//! `Send` wrappers the executor pool uses instead of pointer→`usize`
+//! `Send` wrappers the shard scheduler uses instead of pointer→`usize`
 //! laundering.
 
 pub mod sendptr;

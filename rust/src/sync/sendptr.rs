@@ -1,9 +1,9 @@
-//! Provenance-preserving `Send` pointer wrappers for the executor
-//! pool's lease discipline.
+//! Provenance-preserving `Send` pointer wrappers for the shard
+//! scheduler's lease discipline.
 //!
-//! The pool hands each executor thread raw pointers to shard state and
+//! The scheduler hands its workers raw pointers to shard state and
 //! batch slices that are guaranteed disjoint and outlive the job (the
-//! *lease*: submit → execute → join brackets every access). Before
+//! *lease*: inject → execute → finish brackets every access). Before
 //! this module the pointers were laundered through `usize` casts to
 //! make them `Send`, which destroys provenance under strict-provenance
 //! analysis (and Miri). These newtypes keep the pointer a pointer —
@@ -15,9 +15,10 @@
 //! * `new` captures the pointer (and length) from a live reference, so
 //!   the wrapper starts with valid provenance for the whole referent.
 //! * The creator must guarantee the referent outlives every dereference
-//!   and that no aliasing access happens concurrently — in the pool
-//!   this is the mailbox lease: the submitting thread blocks in
-//!   `join()` before touching the data again.
+//!   and that no aliasing access happens concurrently — in the
+//!   scheduler this is the phase lease: the submitting thread blocks in
+//!   `finish()` until every injected chunk has executed before touching
+//!   the data again.
 //! * The unsafe `as_*` methods re-materialise the reference with a
 //!   caller-chosen lifetime; the caller asserts the lease is still
 //!   open.
@@ -25,7 +26,8 @@
 use std::marker::PhantomData;
 
 /// A `Send`able raw `*mut T` with provenance intact. One exclusive
-/// referent — the pool sends exactly one per shard per job.
+/// referent — the scheduler sends exactly one per shard per chunk that
+/// mutates it.
 #[derive(Debug)]
 pub struct SendPtr<T> {
     ptr: *mut T,
@@ -56,6 +58,21 @@ impl<T> SendPtr<T> {
         // protocol; the pointer carries provenance from `new`'s source
         // reference.
         unsafe { &mut *self.ptr }
+    }
+
+    /// Re-materialise a *shared* reference. Several copies of the same
+    /// `SendPtr` may hold shared references concurrently (the scheduler
+    /// hands multiple gather chunks read access to one shard).
+    ///
+    /// # Safety
+    /// The referent must still be alive for `'a` and no exclusive
+    /// access to it (through this wrapper or otherwise) may be used
+    /// during `'a`.
+    pub unsafe fn deref_ref<'a>(self) -> &'a T {
+        // SAFETY: caller upholds liveness + no-writer per the module
+        // protocol; the pointer carries provenance from `new`'s source
+        // reference, and shared aliasing among readers is sound.
+        unsafe { &*self.ptr }
     }
 }
 
@@ -111,8 +128,9 @@ impl<T> Clone for SendSlice<T> {
 impl<T> Copy for SendSlice<T> {}
 
 /// A `Send`able exclusive slice (`&mut [T]` flattened to pointer +
-/// len). The pool carves gather destinations into disjoint wrappers
-/// with `split_at_mut` *before* wrapping, so two wrappers never alias.
+/// len). The scheduler carves gather destinations into disjoint
+/// wrappers with `split_at_mut` *before* wrapping, so two wrappers
+/// never alias.
 #[derive(Debug)]
 pub struct SendSliceMut<T> {
     ptr: *mut T,
@@ -171,6 +189,16 @@ mod tests {
         let r = unsafe { p.deref_mut() };
         *r += 1;
         assert_eq!(x, 42);
+    }
+
+    #[test]
+    fn sendptr_shared_reads_may_alias() {
+        let mut x = 7u32;
+        let p = SendPtr::new(&mut x);
+        // SAFETY: `x` is alive and nobody writes it while the two
+        // shared re-materialisations exist.
+        let (a, b) = unsafe { (p.deref_ref(), p.deref_ref()) };
+        assert_eq!(*a + *b, 14);
     }
 
     #[test]

@@ -12,7 +12,11 @@ use std::collections::BTreeMap;
 use super::json::Json;
 
 /// Schema tag of `BENCH_hotpath.json` (see `benches/bench_hotpath.rs`).
-pub const HOTPATH_SCHEMA: &str = "bench_hotpath/v2";
+/// v3 adds the skewed-routing columns (`skewed_insert_dispatch_us`,
+/// `skewed_insert_serial_us`, `speedup.skewed_insert_4v1`) — the
+/// work-stealing scheduler's payoff case; v2 baselines measured the
+/// fork/join pool and are re-baselined.
+pub const HOTPATH_SCHEMA: &str = "bench_hotpath/v3";
 /// Schema tag of `BENCH_frontend.json` (see `benches/bench_frontend.rs`).
 pub const FRONTEND_SCHEMA: &str = "bench_frontend/v1";
 
@@ -26,6 +30,13 @@ pub struct HotpathShardRow {
     /// — only recorded for multi-shard rows (the 1-shard dispatch *is*
     /// serial), `None` omits the field from the JSON.
     pub insert_dispatch_serial_us: Option<f64>,
+    /// Skewed-routing dispatch (one hot shard holding 3/4 of every
+    /// batch) through the scheduler — only measured on the multi-shard
+    /// row, `None` omits the field from the JSON.
+    pub skewed_insert_dispatch_us: Option<f64>,
+    /// The same skewed dispatch through the serial loop (the fork/join
+    /// bound's reference numerator), `None` omits the field.
+    pub skewed_insert_serial_us: Option<f64>,
     pub seal_us: f64,
     pub seal_us_median: f64,
     pub sealed_query_1k_us: f64,
@@ -42,6 +53,12 @@ impl HotpathShardRow {
         if let Some(serial) = self.insert_dispatch_serial_us {
             fields.push(("insert_dispatch_serial_us", Json::num(serial)));
         }
+        if let Some(skewed) = self.skewed_insert_dispatch_us {
+            fields.push(("skewed_insert_dispatch_us", Json::num(skewed)));
+        }
+        if let Some(skewed_serial) = self.skewed_insert_serial_us {
+            fields.push(("skewed_insert_serial_us", Json::num(skewed_serial)));
+        }
         Json::obj(fields)
     }
 }
@@ -51,10 +68,14 @@ impl HotpathShardRow {
 pub struct HotpathSpeedup {
     pub batch_elements: usize,
     pub insert_dispatch_large_batch_4v1: f64,
+    /// Skewed (3/4-hot-shard) dispatch speedup, scheduled vs serial on
+    /// the identical routing — the fork/join pool was bounded at 4/3×
+    /// here, the work-stealing gate requires beating that.
+    pub skewed_insert_4v1: f64,
     pub seal_4v1: f64,
 }
 
-/// Assemble a `bench_hotpath/v2` report (rows keyed by shard count:
+/// Assemble a `bench_hotpath/v3` report (rows keyed by shard count:
 /// `"1"`, `"4"`, …).
 pub fn hotpath_report(
     smoke: bool,
@@ -77,6 +98,7 @@ pub fn hotpath_report(
                     "insert_dispatch_large_batch_4v1",
                     Json::num(speedup.insert_dispatch_large_batch_4v1),
                 ),
+                ("skewed_insert_4v1", Json::num(speedup.skewed_insert_4v1)),
                 ("seal_4v1", Json::num(speedup.seal_4v1)),
             ]),
         ),
@@ -155,16 +177,18 @@ mod tests {
     use super::super::json;
     use super::*;
 
-    /// The CHANGES.md-flagged gap: the v2 nesting was desk-checked only.
-    /// Build a populated report, serialize, re-parse, and assert every
-    /// gate-relevant field survives the round trip.
+    /// The CHANGES.md-flagged gap: the nesting was once desk-checked
+    /// only. Build a populated report, serialize, re-parse, and assert
+    /// every gate-relevant field survives the round trip.
     #[test]
-    fn hotpath_v2_round_trips_gate_fields() {
+    fn hotpath_v3_round_trips_gate_fields() {
         let rows = [
             HotpathShardRow {
                 shards: 1,
                 insert_dispatch_us: 812.25,
                 insert_dispatch_serial_us: None,
+                skewed_insert_dispatch_us: None,
+                skewed_insert_serial_us: None,
                 seal_us: 1900.5,
                 seal_us_median: 1875.125,
                 sealed_query_1k_us: 42.75,
@@ -173,6 +197,8 @@ mod tests {
                 shards: 4,
                 insert_dispatch_us: 310.5,
                 insert_dispatch_serial_us: Some(905.25),
+                skewed_insert_dispatch_us: Some(402.125),
+                skewed_insert_serial_us: Some(880.5),
                 seal_us: 760.75,
                 seal_us_median: 741.5,
                 sealed_query_1k_us: 43.25,
@@ -181,6 +207,7 @@ mod tests {
         let speedup = HotpathSpeedup {
             batch_elements: 1 << 20,
             insert_dispatch_large_batch_4v1: 2.615,
+            skewed_insert_4v1: 2.19,
             seal_4v1: 2.53,
         };
         let report = hotpath_report(false, 1 << 22, &rows, &speedup);
@@ -191,12 +218,17 @@ mod tests {
         assert_eq!(shard_field(&parsed, "1", "insert_dispatch_us"), Some(812.25));
         assert_eq!(shard_field(&parsed, "4", "insert_dispatch_us"), Some(310.5));
         assert_eq!(shard_field(&parsed, "4", "seal_us_median"), Some(741.5));
-        // ...the absolute speedup gate...
+        // ...the skewed-routing regression column...
+        assert_eq!(shard_field(&parsed, "4", "skewed_insert_dispatch_us"), Some(402.125));
+        assert_eq!(shard_field(&parsed, "4", "skewed_insert_serial_us"), Some(880.5));
+        // ...the absolute speedup gates...
         assert_eq!(speedup_field(&parsed, "insert_dispatch_large_batch_4v1"), Some(2.615));
+        assert_eq!(speedup_field(&parsed, "skewed_insert_4v1"), Some(2.19));
         assert_eq!(speedup_field(&parsed, "seal_4v1"), Some(2.53));
-        // ...and the serial-loop column only where it was measured.
+        // ...and the per-mode columns only where they were measured.
         assert_eq!(shard_field(&parsed, "4", "insert_dispatch_serial_us"), Some(905.25));
         assert_eq!(shard_field(&parsed, "1", "insert_dispatch_serial_us"), None);
+        assert_eq!(shard_field(&parsed, "1", "skewed_insert_dispatch_us"), None);
     }
 
     #[test]

@@ -8,17 +8,21 @@
 //! path: every per-batch buffer lives in the `DispatchScratch` arena
 //! (cleared, never dropped) and routed values flow as sub-slices of the
 //! original batch. The 4-shard section extends the guarantee across the
-//! executor pool's mailbox handoff: fan-out, the concurrent per-shard
-//! applies on the executor threads, and the barrier join are all
-//! allocation-free too (the counter is global, so executor-thread
-//! allocations would break the zero delta just the same).
+//! work-stealing scheduler's chunk handoff: the serial charge pass, the
+//! chunk injections into the worker deques, the concurrent fills on the
+//! worker threads (steals included), and the drained+parked finish
+//! barrier are all allocation-free too (the counter is global, so
+//! worker-thread allocations would break the zero delta just the same).
+//! A work-pass section pins the same contract on `Scheduler::run_work`,
+//! which the old pool could not offer (its `run_work` snapshotted an
+//! activity vector per call).
 //!
 //! This file must stay a dedicated test binary with this single test:
 //! a sibling test running concurrently would allocate on another thread
-//! and break the zero-delta assertion. (The executor pool's own threads
-//! are part of the system under test, not bystanders.)
+//! and break the zero-delta assertion. (The scheduler's own workers are
+//! part of the system under test, not bystanders.)
 
-use ggarray::coordinator::pool::ShardPool;
+use ggarray::coordinator::scheduler::Scheduler;
 use ggarray::coordinator::router::{DispatchScratch, Policy};
 use ggarray::coordinator::service::{dispatch_insert, dispatch_insert_pooled};
 use ggarray::coordinator::shard::{Shard, ShardConfig};
@@ -97,35 +101,37 @@ fn steady_state_insert_dispatch_is_allocation_free() {
     assert_eq!(delta, 0, "LeastLoaded dispatch allocated {delta} times");
 
     // ------------------------------------------------------------------
-    // 4-shard dispatch with the executor pool: the zero-allocation
-    // invariant must hold across the mailbox handoff — job deposit,
-    // condvar wake, the concurrent per-shard applies on the executor
-    // threads, result deposit, and the barrier join. The global counter
+    // 4-shard dispatch with the work-stealing scheduler: the
+    // zero-allocation invariant must hold across the chunk handoff —
+    // the serial charge pass, chunk injection into the per-worker
+    // deques (capacity retained across phases), condvar wake, the
+    // concurrent fills on the worker threads (wherever steals land
+    // them), and the drained+parked finish barrier. The global counter
     // sees every thread, so this proves the whole fan-out round trip
     // never touches the allocator in steady state.
     // ------------------------------------------------------------------
     let bps = 1usize; // 4 shards × 1 block: every shard gets a sub-batch
     let mut shards = build_shards(4, bps);
-    let pool = ShardPool::new(4);
-    // Warm-up: spawns nothing (threads already live), but fills buckets,
-    // arena buffers, mailbox/condvar internals and the clock ledgers.
+    let sched = Scheduler::new(4);
+    // Warm-up: spawns nothing (workers already live), but fills buckets,
+    // arena buffers, deque capacity and the clock ledgers.
     for seq in 0..80u64 {
         let out =
-            dispatch_insert_pooled(&pool, &mut shards, bps, Policy::Even, seq, &values, &mut scratch);
+            dispatch_insert_pooled(&sched, &mut shards, bps, Policy::Even, seq, &values, &mut scratch);
         assert_eq!(out.applied, 1024);
         assert!(out.oom.is_none());
     }
     let before = CountingAlloc::allocations();
     for seq in 80..96u64 {
         let out =
-            dispatch_insert_pooled(&pool, &mut shards, bps, Policy::Even, seq, &values, &mut scratch);
+            dispatch_insert_pooled(&sched, &mut shards, bps, Policy::Even, seq, &values, &mut scratch);
         assert_eq!(out.applied, 1024);
     }
     let delta = CountingAlloc::allocations() - before;
     assert_eq!(
         delta, 0,
-        "steady-state pooled 4-shard dispatch performed {delta} heap allocations over 16 batches \
-         (the mailbox handoff must stay allocation-free)"
+        "steady-state scheduled 4-shard dispatch performed {delta} heap allocations over 16 \
+         batches (the chunk handoff must stay allocation-free)"
     );
     // The data landed across all four shards — a real concurrent loop.
     assert_eq!(shards.iter().map(|s| s.len()).sum::<usize>(), 96 * 1024);
@@ -133,4 +139,20 @@ fn steady_state_insert_dispatch_is_allocation_free() {
         assert_eq!(shard.len(), 24 * 1024);
     }
     assert_eq!(shards[0].get(0), Some(synth_f32(0)));
+
+    // ------------------------------------------------------------------
+    // Scheduled work passes are allocation-free too. The old pool's
+    // `run_work` snapshotted a per-call `Vec<bool>` activity mask; the
+    // scheduler decides per shard at injection time instead.
+    // ------------------------------------------------------------------
+    sched.run_work(&mut shards, None, 4); // warm the work chunk path
+    let before = CountingAlloc::allocations();
+    for _ in 0..16 {
+        assert_eq!(sched.run_work(&mut shards, None, 4), 0);
+    }
+    let delta = CountingAlloc::allocations() - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state scheduled work pass performed {delta} heap allocations over 16 calls"
+    );
 }

@@ -14,8 +14,10 @@
 //! Three protocols are checked, mirroring the crate's real
 //! concurrency surface:
 //!
-//! 1. the SPSC mailbox handoff/barrier/shutdown used by the executor
-//!    pool (no lost job, no result observed before the barrier),
+//! 1. the work-stealing scheduler's park/unpark/steal/termination
+//!    protocol on its shared monitor (no lost wakeup, termination only
+//!    when the bucket is drained AND every worker is parked, and
+//!    steal order never reorders per-slot results),
 //! 2. the admission window's shed path (a `Rejected` admission rolls
 //!    back the pooled-values gauge and consumes no sequence number
 //!    under every interleaving),
@@ -24,43 +26,107 @@
 
 use ggarray::checker::{self, Config};
 use ggarray::coordinator::frontend::{FrontendConfig, FrontendRig, MergePolicy};
-use ggarray::coordinator::pool::Mailbox;
 use ggarray::coordinator::request::Admission;
+use ggarray::coordinator::scheduler::WorkerGroup;
 use ggarray::sync::atomic::{AtomicUsize, Ordering};
-use ggarray::sync::{thread, Arc};
+use ggarray::sync::{thread, Arc, SendSliceMut};
 
-// ---------------- protocol 1: SPSC mailbox ----------------
+// ---------------- protocol 1: work-stealing scheduler ----------------
 
 #[test]
-fn mailbox_handoff_barrier_shutdown_all_interleavings() {
-    let report = checker::check("mailbox-handoff", &Config::default(), || {
-        let mb = Arc::new(Mailbox::<u32, u32>::new());
-        let exec = Arc::clone(&mb);
-        let handle = thread::spawn(move || exec.executor_loop(|job| job * 2));
-        // Two full submit → barrier-join cycles: join must return this
-        // job's result (not stale, not early) in every schedule.
-        mb.submit(21);
-        assert_eq!(mb.join(), 42, "lost job or result read before barrier");
-        mb.submit(7);
-        assert_eq!(mb.join(), 14, "second handoff corrupted");
-        mb.signal_shutdown();
-        handle.join().expect("executor must exit cleanly after shutdown");
+fn scheduler_monitor_has_no_lost_wakeups() {
+    // Two back-to-back phases against one worker: the second inject
+    // races the worker's park decision after the first phase drains.
+    // A lost wakeup (inject observed as pending but the epoch bump
+    // missed between the worker's rescan and its wait) would deadlock
+    // `finish`, which the checker reports as a hung schedule.
+    let report = checker::check("scheduler-lost-wakeup", &Config::default(), || {
+        let hits = Arc::new(AtomicUsize::new(0));
+        let sink = Arc::clone(&hits);
+        let group = WorkerGroup::new(1, move |j: usize| {
+            sink.fetch_add(j, Ordering::SeqCst);
+        });
+        for round in 1..=2usize {
+            let mut phase = group.phase();
+            phase.inject(round);
+            phase.finish();
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 3, "a phase lost its job");
+        drop(group);
     })
     .unwrap_or_else(|failure| panic!("{failure}"));
-    assert!(report.complete, "mailbox exploration must exhaust its schedules");
+    assert!(report.complete, "lost-wakeup exploration must exhaust its schedules");
     assert!(report.schedules >= 2, "protocol has real concurrency to explore");
 }
 
 #[test]
-fn mailbox_shutdown_while_idle_never_hangs() {
-    let report = checker::check("mailbox-idle-shutdown", &Config::default(), || {
-        let mb = Arc::new(Mailbox::<u32, u32>::new());
-        let exec = Arc::clone(&mb);
-        // Shutdown racing the executor's very first park: the executor
-        // must observe it whether it arrives before or after parking.
-        let handle = thread::spawn(move || exec.executor_loop(|job| job));
-        mb.signal_shutdown();
-        handle.join().expect("idle executor must exit on shutdown");
+fn scheduler_termination_needs_drained_bucket_and_parked_worker() {
+    // `finish` returns only once pending == 0 AND every worker is
+    // parked. If it ever returned with a job still queued or running,
+    // the counter below would read < 2 in some schedule.
+    let report = checker::check("scheduler-termination", &Config::default(), || {
+        let done = Arc::new(AtomicUsize::new(0));
+        let sink = Arc::clone(&done);
+        let group = WorkerGroup::new(1, move |_: usize| {
+            sink.fetch_add(1, Ordering::SeqCst);
+        });
+        let mut phase = group.phase();
+        phase.inject(0);
+        phase.inject(1);
+        phase.finish();
+        assert_eq!(done.load(Ordering::SeqCst), 2, "finish returned before the bucket drained");
+        let counters = group.counters();
+        assert_eq!(counters.executed, 2, "ledger must agree with the barrier");
+        assert!(counters.parks >= 1, "the worker must be parked when finish returns");
+        drop(group);
+    })
+    .unwrap_or_else(|failure| panic!("{failure}"));
+    assert!(report.complete, "termination exploration must exhaust its schedules");
+    assert!(report.schedules >= 2);
+}
+
+#[test]
+fn steal_order_never_reorders_per_slot_commits() {
+    // Two workers, two jobs, each writing its own disjoint slot (the
+    // scheduler's chunk commit discipline in miniature): whichever
+    // worker executes or steals which job, slot k must end up holding
+    // k's result — results are committed by position, never by
+    // completion order.
+    let report = checker::check(
+        "scheduler-steal-commit-order",
+        &Config { max_schedules: 500_000, ..Config::default() },
+        || {
+            let group = WorkerGroup::new(2, move |(slot, val): (SendSliceMut<usize>, usize)| {
+                // SAFETY: each job owns a disjoint split_at_mut carve of
+                // the phase-local buffer, and the submitter blocks in
+                // finish() until every job completes.
+                let slot = unsafe { slot.as_mut_slice() };
+                slot[0] = val;
+            });
+            let mut buf = [0usize; 2];
+            {
+                let (a, b) = buf.split_at_mut(1);
+                let mut phase = group.phase();
+                phase.inject((SendSliceMut::new(a), 10));
+                phase.inject((SendSliceMut::new(b), 20));
+                phase.finish();
+            }
+            assert_eq!(buf, [10, 20], "steal order must never reorder per-slot results");
+            drop(group);
+        },
+    )
+    .unwrap_or_else(|failure| panic!("{failure}"));
+    assert!(report.complete, "steal-order exploration must exhaust its schedules");
+    assert!(report.schedules >= 2);
+}
+
+#[test]
+fn scheduler_drop_while_idle_never_hangs() {
+    // Shutdown racing the workers' very first park: every worker must
+    // observe it whether the flag lands before or after parking.
+    let report = checker::check("scheduler-idle-shutdown", &Config::default(), || {
+        let group = WorkerGroup::new(2, |_: usize| {});
+        drop(group); // must join both workers in every schedule
     })
     .unwrap_or_else(|failure| panic!("{failure}"));
     assert!(report.complete);

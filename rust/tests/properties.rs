@@ -627,17 +627,19 @@ fn prop_heap_accounting_conserved_across_seal_compact_clear() {
 
 /// Executor-mode byte-identity: a random workload (insert / work / seal
 /// / flatten / clear / query) replayed at 1/2/4 shards through the
-/// serial worker (`executor_threads = 1`) and the persistent executor
-/// pool (`executor_threads = 2` → one thread per shard) must produce
-/// **identical response payloads** — checksums, lengths, and the
-/// simulated `sim_us`/`device_us` times exactly (per-shard clocks see
-/// the same charge sequence in both modes; only the host thread doing
-/// the work changes). Runs under a full-device budget and a tight one,
-/// so the OOM paths (which the pool pre-screens and routes down the
-/// serial fallback) are byte-identical too. The serial side is itself
-/// pinned to the copying reference by
+/// serial worker (`executor_threads = 1`) and the work-stealing
+/// scheduler (`executor_threads = 2` → two workers draining every
+/// shard's chunks, whatever the shard count) must produce **identical
+/// response payloads** — checksums, lengths, and the simulated
+/// `sim_us`/`device_us` times exactly (per-shard clocks see the same
+/// charge sequence in both modes; chunk results commit in deterministic
+/// shard/range order regardless of steal order). Runs under a
+/// full-device budget and a tight one, so the OOM paths (which the
+/// scheduler pre-screens and routes down the serial fallback) are
+/// byte-identical too. The serial side is itself pinned to the copying
+/// reference by
 /// [`prop_scratch_dispatch_byte_identical_to_copying_reference`], so
-/// this transitively anchors the pool to the original pipeline.
+/// this transitively anchors the scheduler to the original pipeline.
 #[test]
 fn prop_executor_modes_byte_identical_across_shard_counts() {
     use ggarray::workload::synth_f32;
@@ -720,8 +722,10 @@ fn prop_executor_modes_byte_identical_across_shard_counts() {
                         fields(&sb)
                     ));
                 }
-                if sb.executors != shards {
-                    return Err(format!("pooled run must report {shards} executors, got {}", sb.executors));
+                // `executors` now reports the scheduler's worker count,
+                // decoupled from the shard count.
+                if sb.executors != 2 {
+                    return Err(format!("scheduled run must report 2 workers, got {}", sb.executors));
                 }
                 serial.shutdown();
                 pooled.shutdown();
