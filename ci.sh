@@ -23,7 +23,11 @@ cargo run -q --bin lint -- --self-test
 cargo run -q --bin lint
 
 if [[ "${1:-}" == "--quick" ]]; then
-    echo "ci.sh --quick: tier-1 + lint green, skipping smoke runs"
+    echo "== chaos (quick): fault-injection smoke subset (--cfg ggfault) =="
+    # The smoke_ tests only: mid-chunk worker panic → typed error, byte-
+    # identical rollback, self-healing respawn, store keeps serving.
+    RUSTFLAGS='--cfg ggfault' cargo test -q --test chaos smoke_
+    echo "ci.sh --quick: tier-1 + lint + chaos smoke green, skipping full runs"
     exit 0
 fi
 
@@ -38,6 +42,17 @@ echo "== model check: exhaustive bounded interleavings (--cfg ggcheck) =="
 # failures print a replayable schedule seed. The distinct RUSTFLAGS
 # fingerprint makes this a one-off rebuild.
 RUSTFLAGS='--cfg ggcheck' cargo test -q --test model_check
+
+echo "== chaos: deterministic fault injection, full site matrix (--cfg ggfault) =="
+# Activates the registered fault sites (zero-cost no-ops in every other
+# build) and runs the chaos suite: every site in faults::SITES ×
+# first/second crossing × 1/4 shards × serial/scheduled execution,
+# checked against a fault-free oracle — typed errors only, byte-
+# identical ledger rollback, self-healing worker respawns, degraded
+# groups still byte-identical, dead service → ServiceDown/Closed
+# (never a hang). See EXPERIMENTS.md §Robustness for the contract.
+# The distinct RUSTFLAGS fingerprint makes this a one-off rebuild.
+RUSTFLAGS='--cfg ggfault' cargo test -q --test chaos
 
 echo "== clippy: -D warnings (curated allows) =="
 # Style-only lints that the codebase deliberately trips are allowed;

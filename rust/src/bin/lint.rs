@@ -2,7 +2,7 @@
 //! parts of the crate (`cargo run --bin lint`; wired into ci.sh,
 //! including `--quick`).
 //!
-//! Four textual rule classes over `src/**/*.rs`:
+//! Five textual rule classes over `src/**/*.rs`:
 //!
 //! * **U — unsafe hygiene**: every `unsafe {` block and `unsafe impl`
 //!   must carry a `// SAFETY:` justification on the same line or in the
@@ -27,14 +27,23 @@
 //!   code free of heap-allocating calls (`vec![`, `.to_vec()`,
 //!   `format!(`, `String::from(`, `.to_string()`, `Box::new(`,
 //!   `.to_owned()`) — the review-time twin of the alloc-counter test.
+//! * **X — panic-prone lock/recv**: `src/coordinator/**` must not call
+//!   bare `.unwrap()`/`.expect(` on a `.lock()` or `.recv(`-family
+//!   result. A panicking worker poisons a bare-unwrapped mutex and the
+//!   next lock attempt panics too, cascading one contained fault into a
+//!   dead coordinator — go through `crate::sync::lock_recover` (data
+//!   stays coherent: every monitor invariant is re-established before
+//!   the panic can propagate) or match the recv error into a typed
+//!   `ServiceDown`/`Closed`.
 //!
 //! Shared conventions: everything from the first `#[cfg(test)]` line to
 //! end-of-file is skipped (the repo keeps test modules last);
 //! `//`-comments are stripped before token matching (string literals
 //! are tracked, block comments are not — keep `/* */` out of linted
 //! code); a deliberate exception is waived inline with
-//! `// lint: allow(alloc|ptr-cast|std-sync) — <reason>`. This file is
-//! excluded from its own walk (its rule tables would self-match).
+//! `// lint: allow(alloc|ptr-cast|std-sync|unwrap) — <reason>`. This
+//! file is excluded from its own walk (its rule tables would
+//! self-match).
 //!
 //! Exit codes: 0 clean, 1 violations, 2 internal error.
 //! `--self-test` seeds one violation of each rule class (plus clean,
@@ -213,6 +222,22 @@ fn lint_file(rel: &str, contents: &str, hot_manifest: &[String], out: &mut Vec<V
                 });
             }
         }
+
+        // X — no bare unwrap/expect on lock/recv results in coordinator/.
+        if in_coordinator
+            && !has_waiver(raw, "unwrap")
+            && (code.contains(".lock()") || code.contains(".recv("))
+            && (code.contains(".unwrap()") || code.contains(".expect("))
+        {
+            out.push(Violation {
+                file: rel.into(),
+                line: lineno,
+                rule: 'X',
+                msg: "bare unwrap/expect on a lock/recv result in coordinator/ — use \
+                      sync::lock_recover or match the error into a typed response"
+                    .into(),
+            });
+        }
     }
 }
 
@@ -334,6 +359,24 @@ fn seed_and_check(root: &Path) -> Result<(), String> {
         "pub fn bypass() {\n    let _m = std::sync::Mutex::new(0u32); // seeded violation: rule F\n}\n",
     )?;
 
+    // Rule X seed + waived and recover-idiom twins that must not fire
+    // (named via the crate::sync facade so rule F stays out of the way).
+    write(
+        root,
+        "src/coordinator/bad_unwrap.rs",
+        concat!(
+            "pub fn stuck(m: &crate::sync::Mutex<u32>) -> u32 {\n",
+            "    *m.lock().unwrap() // seeded violation: rule X\n",
+            "}\n",
+            "pub fn waived(m: &crate::sync::Mutex<u32>) -> u32 {\n",
+            "    *m.lock().unwrap() // lint: allow(unwrap) — seeded waiver, must not fire\n",
+            "}\n",
+            "pub fn recovered(m: &crate::sync::Mutex<u32>) -> u32 {\n",
+            "    *m.lock().unwrap_or_else(|e| e.into_inner())\n",
+            "}\n",
+        ),
+    )?;
+
     // Rule U seed + SAFETY-commented twin that must not fire.
     write(
         root,
@@ -373,6 +416,7 @@ fn seed_and_check(root: &Path) -> Result<(), String> {
         ('P', "src/bad_cast.rs", 2),
         ('U', "src/bad_unsafe.rs", 2),
         ('F', "src/coordinator/bad_sync.rs", 2),
+        ('X', "src/coordinator/bad_unwrap.rs", 2),
         ('A', "src/coordinator/hot.rs", 2),
     ];
     if violations.len() != expected.len() {
@@ -419,7 +463,7 @@ fn main() -> ExitCode {
                 println!("{v}");
             }
             if violations.is_empty() {
-                println!("lint: clean ({} rules over src/)", 4);
+                println!("lint: clean ({} rules over src/)", 5);
                 ExitCode::from(0)
             } else {
                 eprintln!("lint: {} violation(s)", violations.len());

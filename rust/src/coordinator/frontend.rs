@@ -54,7 +54,7 @@ use crate::sync::thread;
 use crate::sync::Arc;
 use std::time::Duration;
 
-use super::request::{Admission, Request, Response};
+use super::request::{Admission, ExecError, Request, Response};
 use super::service::Envelope;
 
 /// When the worker merges admitted client pools into the batcher.
@@ -408,12 +408,17 @@ impl ClientSession {
     /// the worker drains every registered client pool before serving
     /// them, so this session's accepted inserts are always visible to
     /// its own subsequent sync calls.
+    ///
+    /// A dead worker — stopped, or crashed mid-request so the reply
+    /// sender dropped unanswered — surfaces as the typed
+    /// `Response::Failed(ServiceDown)`; a session never hangs on a
+    /// vanished coordinator.
     pub fn call(&self, req: Request) -> Response {
         let (rtx, rrx) = mpsc::channel();
         if self.tx.send(Envelope::Call(req, rtx)).is_err() {
-            return Response::Error("coordinator stopped".into());
+            return Response::Failed(ExecError::ServiceDown);
         }
-        rrx.recv().unwrap_or_else(|_| Response::Error("coordinator dropped reply".into()))
+        rrx.recv().unwrap_or_else(|_| Response::Failed(ExecError::ServiceDown))
     }
 }
 
@@ -496,7 +501,7 @@ mod tests {
             Admission::Closed { values } => assert_eq!(values, vec![1.0, 2.0, 3.0]),
             other => panic!("expected Closed, got {other:?}"),
         }
-        assert!(matches!(s.call(Request::Stats), Response::Error(_)));
+        assert!(matches!(s.call(Request::Stats), Response::Failed(ExecError::ServiceDown)));
     }
 
     /// The CHANGES.md "watch" item pinned as a test: a `Rejected`

@@ -233,6 +233,9 @@ impl Metrics {
             steals: 0,
             parks: 0,
             chunks_executed: 0,
+            spawn_failures: 0,
+            worker_respawns: 0,
+            degraded_workers: 0,
             // Frontend session/shed context defaults to "no sessions";
             // the worker attaches the shared admission ledger via
             // [`MetricsSnapshot::with_frontend`].
@@ -332,6 +335,15 @@ pub struct MetricsSnapshot {
     /// per-op chunk decomposition (fills + work + gather ranges), see
     /// the scheduler's conservation test.
     pub chunks_executed: u64,
+    /// Scheduler worker spawn attempts that failed (construction or
+    /// respawn) — the group degrades instead of aborting.
+    pub spawn_failures: u64,
+    /// Dead scheduler workers successfully respawned after a contained
+    /// chunk panic (the self-healing ledger).
+    pub worker_respawns: u64,
+    /// Scheduler workers permanently lost to failed spawns/respawns;
+    /// the group keeps serving down to inline (serial) draining.
+    pub degraded_workers: u64,
     /// Client sessions ever opened on the admission frontend.
     pub sessions: u64,
     /// Insert requests shed by admission (typed `Rejected` responses):
@@ -389,6 +401,9 @@ impl MetricsSnapshot {
         self.steals = counters.steals;
         self.parks = counters.parks;
         self.chunks_executed = counters.executed;
+        self.spawn_failures = counters.spawn_failures;
+        self.worker_respawns = counters.worker_respawns;
+        self.degraded_workers = counters.degraded_workers;
         self
     }
 
@@ -484,8 +499,13 @@ impl std::fmt::Display for MetricsSnapshot {
         )?;
         writeln!(
             f,
-            "scheduler ledger     {} chunks ({} steals, {} parks)",
-            self.chunks_executed, self.steals, self.parks
+            "scheduler ledger     {} chunks ({} steals, {} parks; {} respawns, {} degraded, {} spawn failures)",
+            self.chunks_executed,
+            self.steals,
+            self.parks,
+            self.worker_respawns,
+            self.degraded_workers,
+            self.spawn_failures
         )?;
         writeln!(f, "mean request latency {:.1} µs over {}", self.mean_latency_us, self.p_latency_count)?;
         writeln!(
@@ -605,11 +625,24 @@ mod tests {
         let s = m.snapshot(10, 20, 400);
         // Zeroed default: serial mode has no scheduler.
         assert_eq!((s.steals, s.parks, s.chunks_executed), (0, 0, 0));
-        let s = s.with_scheduler(GroupCounters { steals: 3, parks: 8, executed: 21 });
+        assert_eq!((s.spawn_failures, s.worker_respawns, s.degraded_workers), (0, 0, 0));
+        let s = s.with_scheduler(GroupCounters {
+            steals: 3,
+            parks: 8,
+            executed: 21,
+            worker_respawns: 2,
+            degraded_workers: 1,
+            ..Default::default()
+        });
         assert_eq!(s.steals, 3);
         assert_eq!(s.parks, 8);
         assert_eq!(s.chunks_executed, 21);
-        assert!(s.to_string().contains("21 chunks (3 steals, 8 parks)"), "{s}");
+        assert_eq!(s.worker_respawns, 2);
+        assert_eq!(s.degraded_workers, 1);
+        assert!(
+            s.to_string().contains("21 chunks (3 steals, 8 parks; 2 respawns, 1 degraded, 0 spawn failures)"),
+            "{s}"
+        );
     }
 
     #[test]

@@ -90,6 +90,49 @@ pub enum Response {
     Cleared,
     ShuttingDown,
     Error(String),
+    /// The op did not run to completion: a typed execution fault
+    /// (contained worker panic, handler panic, or a dead service). For
+    /// `ChunkPanic` the op was rolled back byte-identically — the store
+    /// is exactly as if the request had never been submitted, and
+    /// subsequent requests keep working.
+    Failed(ExecError),
+}
+
+/// Typed execution faults surfaced by the panic-safe coordinator. These
+/// are *contained* failures: the service (and, for `ChunkPanic`, the
+/// store's simulated ledger) survives them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecError {
+    /// A scheduler worker panicked while executing this op's chunks.
+    /// The coordinator rolled back the op's serial pre-charges, so the
+    /// shards are byte-identical to the op never running (`Work` partial
+    /// numeric updates excepted — f32 adds on completed shards cannot be
+    /// exactly undone; the simulated ledger still rewinds fully).
+    ChunkPanic {
+        /// Which phase died (`"insert"`, `"work"`, `"flatten"`, `"seal"`).
+        op: &'static str,
+        /// Chunks that panicked before the phase drained.
+        chunks: u64,
+    },
+    /// The service worker's request handler panicked outside a scheduler
+    /// phase. The request is lost; the worker and store keep serving.
+    HandlerPanic,
+    /// The service worker is gone (channel disconnected): the request
+    /// was not processed. Payload-carrying paths hand the data back via
+    /// [`Admission::Closed`] instead.
+    ServiceDown,
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::ChunkPanic { op, chunks } => {
+                write!(f, "worker panic aborted {op} op ({chunks} chunk(s) failed; rolled back)")
+            }
+            ExecError::HandlerPanic => write!(f, "request handler panicked (request lost)"),
+            ExecError::ServiceDown => write!(f, "coordinator service is down"),
+        }
+    }
 }
 
 impl Response {
@@ -190,6 +233,15 @@ mod tests {
     #[should_panic(expected = "expected Inserted")]
     fn expect_inserted_panics_on_error() {
         Response::Error("nope".into()).expect_inserted();
+    }
+
+    #[test]
+    fn exec_error_displays_each_variant() {
+        let e = ExecError::ChunkPanic { op: "insert", chunks: 2 };
+        assert!(e.to_string().contains("insert"));
+        assert!(e.to_string().contains("rolled back"));
+        assert!(ExecError::HandlerPanic.to_string().contains("handler"));
+        assert!(ExecError::ServiceDown.to_string().contains("down"));
     }
 
     #[test]

@@ -1,15 +1,18 @@
 //! Stealable work units for the scheduler's fan-out phases.
 //!
-//! A [`Chunk`] is pure *data movement* (plus, for `Work`, the shard's
-//! own clock): every simulated heap/clock charge that a phase owes was
-//! already paid serially, in shard order, by the coordinator before any
-//! chunk was injected (the charge/copy split — see
-//! [`crate::coordinator::shard::Shard::prepare_counts`] /
-//! `seal_flatten_charge` / `flatten_temp_charge`). Host-side copies are
-//! free in simulated time, so executing chunks in *any* steal order
-//! yields byte-identical array contents, heap residency, and exact
-//! `sim_us` — the property `tests/properties.rs` pins across executor
-//! modes.
+//! A [`Chunk`] is pure *data movement*: every simulated heap/clock
+//! charge that a phase owes was already paid serially, in shard order,
+//! by the coordinator before any chunk was injected (the charge/copy
+//! split — see [`crate::coordinator::shard::Shard::prepare_counts`] /
+//! `seal_flatten_charge` / `flatten_temp_charge` / the hoisted rw_b
+//! pre-charge in `Scheduler::run_work`). Host-side copies are free in
+//! simulated time, so executing chunks in *any* steal order yields
+//! byte-identical array contents, heap residency, and exact `sim_us` —
+//! the property `tests/properties.rs` pins across executor modes. The
+//! split also powers abort rollback: a chunk that panics (fault
+//! injection or a real bug) has mutated nothing but its own disjoint
+//! data range, so the coordinator can rewind the serial charges and
+//! surface a typed error.
 //!
 //! ## Lease discipline
 //!
@@ -43,11 +46,11 @@ pub(super) enum Chunk {
         counts: SendSlice<usize>,
         values: SendSlice<f32>,
     },
-    /// One work call on one shard: the real numeric update plus the
-    /// modeled `rw_b` charge on the shard's *own* clock (safe: work
-    /// chunks are per-shard, so no other chunk touches that clock).
-    /// The PJRT client handle is shared across workers — each worker
-    /// compiles into its own thread-local cache.
+    /// One work call on one shard: the real numeric update only — the
+    /// modeled `rw_b` charge was pre-paid serially by `run_work` so an
+    /// aborted phase can rewind it. The PJRT client handle is shared
+    /// across workers — each worker compiles into its own thread-local
+    /// cache.
     Work { shard: SendPtr<Shard>, exec: Option<Arc<Executor>>, iters: u32 },
     /// Copy shard elements `src_start..src_start + dst.len()`
     /// (block-major flatten order) into a disjoint destination range.
@@ -71,6 +74,10 @@ impl Chunk {
     pub(super) fn execute(self) -> u64 {
         match self {
             Chunk::InsertFill { blocks, counts, values } => {
+                // Fault site before any write: an injected panic here
+                // models a worker dying with the chunk consumed but the
+                // copy not yet started (ggfault builds only).
+                crate::faults::point("scheduler.worker.fill");
                 // SAFETY: lease contract above — this chunk is the sole
                 // owner of this block range for the phase.
                 let blocks = unsafe { blocks.as_mut_slice() };
@@ -93,20 +100,23 @@ impl Chunk {
                 0
             }
             Chunk::Work { shard, exec, iters } => {
+                // Fault site before the numeric update (ggfault builds
+                // only): the shard's rw_b charge was already paid
+                // serially by `run_work`, so an abort rewinds it there.
+                crate::faults::point("scheduler.worker.work");
                 // SAFETY: lease contract above — work chunks are
                 // per-shard, so this is the phase's only access path to
                 // this shard (clock included).
                 let shard = unsafe { shard.deref_mut() };
-                // Same per-shard sequence as the serial worker: real
-                // numeric update, then the modeled rw_b launch on
-                // non-empty shards.
-                let pjrt = shard.work_pass(exec.as_deref(), iters);
-                if !shard.is_empty() {
-                    shard.charge_rw_block(iters as f64);
-                }
-                pjrt
+                // Pure numeric update; the modeled rw_b launch is
+                // pre-charged serially by `run_work` so an aborted phase
+                // can rewind it (f64 addition of the same deltas in the
+                // same per-shard order keeps sim_us byte-identical).
+                shard.work_pass(exec.as_deref(), iters)
             }
             Chunk::GatherCopy { shard, src_start, dst } => {
+                // Fault site before the copy (ggfault builds only).
+                crate::faults::point("scheduler.worker.copy");
                 // SAFETY: lease contract above — gather phases never
                 // inject a writer for this shard, so shared reads may
                 // alias freely across its range chunks.

@@ -38,18 +38,41 @@
 //! scan, in which case the worker sees `epoch != seen` at the park
 //! check, or parks before the bump and is notified. All three suites
 //! are exhaustively model-checked in `tests/model_check.rs`.
+//!
+//! ## Panic containment and self-healing
+//!
+//! A job payload that panics must not take the group down. The worker
+//! wraps every `run(job)` in `catch_unwind`; on a contained panic it
+//! restores the monitor bookkeeping (`pending -= 1`, the job counts in
+//! `failed` instead of `executed`), deregisters itself from `live`,
+//! records its index for healing, signals the done condvar, and exits.
+//! The monitor is never poisoned — every mutation of `GroupState`
+//! happens either before the payload runs or after the unwind is
+//! caught, and readers recover from a stale poison flag via
+//! [`crate::sync::lock_recover`] anyway.
+//!
+//! Termination therefore compares `parked` against `live`, not the
+//! spawn-time thread count: `pending == 0 && parked == live`. A dead
+//! worker's in-flight job decremented `pending` on the containment
+//! path, and its deque is stealable by every survivor, so the drained+
+//! parked argument above carries over unchanged. If *every* worker is
+//! dead (`live == 0`) the coordinator drains the remaining chunks
+//! inline in [`WorkPhase::finish`] — the floor-1 ≡ serial guarantee.
+//! [`WorkPhase::finish`] returns a [`PhaseReport`] with the contained-
+//! failure count so the scheduler can abort + roll back the op, then
+//! respawns each dead worker (ledgered as `worker_respawns`) or, when
+//! the respawn itself fails — deterministically injectable via the
+//! `scheduler.spawn` fault site — permanently degrades the group
+//! (`degraded_workers`/`spawn_failures`). Construction takes the same
+//! path: a failed spawn degrades to however many workers came up
+//! instead of panicking `Coordinator::start`.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 
+use crate::sync::lock_recover as lock;
 use crate::sync::thread;
-use crate::sync::{Arc, Condvar, Mutex, MutexGuard};
-
-/// Poison-tolerant lock: teardown runs from `Drop` and must never
-/// double-panic; the protected state stays meaningful after a payload
-/// panic (counters and flags only).
-fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
+use crate::sync::{Arc, Condvar, Mutex};
 
 /// Everything the monitor protects. Counters live here too (not in
 /// atomics): every event that bumps one already holds the monitor, so
@@ -65,12 +88,30 @@ struct GroupState {
     parked: usize,
     /// Set once by `Drop`; workers exit at the next park decision.
     shutdown: bool,
+    /// Worker threads currently alive. Termination compares `parked`
+    /// against this; a contained panic decrements it.
+    live: usize,
+    /// Jobs whose payload panicked this phase (contained). Read and
+    /// reset by `finish`.
+    failed: u64,
+    /// Indices of workers that died this phase, awaiting healing.
+    dead: Vec<usize>,
     /// Ledger: jobs popped from a deque the worker does not own.
     steals: u64,
     /// Ledger: park events (condvar waits entered).
     parks: u64,
     /// Ledger: jobs executed to completion.
     executed: u64,
+    /// Ledger: worker spawn attempts that failed (construction or
+    /// respawn).
+    spawn_failures: u64,
+    /// Ledger: dead workers successfully respawned after a contained
+    /// panic.
+    worker_respawns: u64,
+    /// Ledger: workers permanently lost (their spawn or respawn
+    /// failed). The group keeps serving down to zero live workers —
+    /// `finish` drains inline, i.e. serial.
+    degraded_workers: u64,
 }
 
 /// Monotonic ledger snapshot, exported through
@@ -80,6 +121,26 @@ pub struct GroupCounters {
     pub steals: u64,
     pub parks: u64,
     pub executed: u64,
+    pub spawn_failures: u64,
+    pub worker_respawns: u64,
+    pub degraded_workers: u64,
+}
+
+/// What a phase's termination observed. Returned by
+/// [`WorkPhase::finish`] so the scheduler can abort the op when any
+/// chunk panicked.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseReport {
+    /// Chunks whose payload panicked (contained, consumed, not
+    /// executed). Zero in a healthy run.
+    pub failed: u64,
+}
+
+impl PhaseReport {
+    /// Did every chunk of the phase execute to completion?
+    pub fn ok(&self) -> bool {
+        self.failed == 0
+    }
 }
 
 struct Inner<J> {
@@ -117,7 +178,32 @@ impl<J> Inner<J> {
         let mut seen = 0u64;
         loop {
             if let Some((job, stolen)) = self.find_job(k) {
-                run(job);
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(|| run(job))) {
+                    // The model checker cancels losing branches by
+                    // unwinding a private token through every frame —
+                    // that unwind is scheduler machinery, not a payload
+                    // fault, and must pass through untouched.
+                    if crate::checker::rt::cancelled() {
+                        resume_unwind(payload);
+                    }
+                    // Contained payload panic: restore the monitor
+                    // bookkeeping (the job was admitted and consumed),
+                    // deregister from the live set, and die. Everything
+                    // the monitor guards is counters and flags mutated
+                    // only outside the payload, so the state stays
+                    // coherent; `lock_recover` covers the poison flag.
+                    let mut st = lock(&self.monitor);
+                    debug_assert!(st.pending > 0, "failed a job the monitor never admitted");
+                    st.pending -= 1;
+                    st.failed += 1;
+                    st.live -= 1;
+                    st.dead.push(k);
+                    // Both termination conditions may have just become
+                    // true: pending can be 0, and parked == live can
+                    // hold with one fewer live worker.
+                    self.done_cv.notify_all();
+                    return;
+                }
                 let mut st = lock(&self.monitor);
                 debug_assert!(st.pending > 0, "executed a job the monitor never admitted");
                 st.pending -= 1;
@@ -160,13 +246,21 @@ impl<J> Inner<J> {
 /// reused for every phase, joined on drop.
 pub struct WorkerGroup<J: Send + 'static> {
     inner: Arc<Inner<J>>,
-    handles: Vec<thread::JoinHandle<()>>,
+    /// Kept for healing: respawned workers run the same closure.
+    run: Arc<dyn Fn(J) + Send + Sync>,
+    /// Under a mutex so `finish` (which only holds `&WorkerGroup`) can
+    /// push respawned handles; uncontended everywhere (the coordinator
+    /// is single-threaded by contract).
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
 }
 
 impl<J: Send + 'static> WorkerGroup<J> {
     /// Spawn `workers` threads, each running injected jobs through
     /// `run`. Threads park on the shared monitor between phases — no
-    /// busy-waiting.
+    /// busy-waiting. A failed spawn does not panic: the group degrades
+    /// to however many workers came up (ledgered as `spawn_failures`/
+    /// `degraded_workers`), down to zero — `finish` then drains phases
+    /// inline, which is the serial floor.
     pub fn new(workers: usize, run: impl Fn(J) + Send + Sync + 'static) -> WorkerGroup<J> {
         assert!(workers > 0, "worker group needs at least one thread");
         let inner = Arc::new(Inner {
@@ -175,37 +269,136 @@ impl<J: Send + 'static> WorkerGroup<J> {
                 pending: 0,
                 parked: 0,
                 shutdown: false,
+                live: workers,
+                failed: 0,
+                dead: Vec::new(),
                 steals: 0,
                 parks: 0,
                 executed: 0,
+                spawn_failures: 0,
+                worker_respawns: 0,
+                degraded_workers: 0,
             }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
+            // Deques stay at the requested count even when fewer
+            // workers spawn: injection spreads round-robin over all of
+            // them and stealing covers unowned deques.
             deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
         });
         let run: Arc<dyn Fn(J) + Send + Sync> = Arc::new(run);
-        let handles = (0..workers)
-            .map(|k| {
-                let inner = Arc::clone(&inner);
-                let run = Arc::clone(&run);
-                thread::Builder::new()
-                    .name(format!("ggarray-sched-{k}")) // lint: allow(alloc) — once per group construction, never per batch
-                    .spawn(move || inner.worker_loop(k, run.as_ref()))
-                    .expect("spawn scheduler worker")
-            })
-            .collect();
-        WorkerGroup { inner, handles }
+        let mut handles = Vec::with_capacity(workers);
+        for k in 0..workers {
+            match Self::spawn_worker(&inner, &run, k) {
+                Ok(h) => handles.push(h),
+                Err(()) => {
+                    let mut st = lock(&inner.monitor);
+                    st.live -= 1;
+                    st.spawn_failures += 1;
+                    st.degraded_workers += 1;
+                }
+            }
+        }
+        WorkerGroup { inner, run, handles: Mutex::new(handles) }
     }
 
-    /// Number of worker threads.
+    /// One spawn attempt for worker `k`. The `scheduler.spawn` fault
+    /// site simulates the OS refusing the thread (ggfault builds
+    /// only); a real `Builder::spawn` error takes the same path.
+    fn spawn_worker(
+        inner: &Arc<Inner<J>>,
+        run: &Arc<dyn Fn(J) + Send + Sync>,
+        k: usize,
+    ) -> Result<thread::JoinHandle<()>, ()> {
+        if crate::faults::injected("scheduler.spawn") {
+            return Err(());
+        }
+        let inner = Arc::clone(inner);
+        let run = Arc::clone(run);
+        thread::Builder::new()
+            .name(format!("ggarray-sched-{k}")) // lint: allow(alloc) — once per spawn (construction/respawn), never per batch
+            .spawn(move || inner.worker_loop(k, run.as_ref()))
+            .map_err(|_| ())
+    }
+
+    /// Respawn the workers that died this phase (called by `finish`
+    /// after termination, so no phase is in flight). A worker whose
+    /// respawn fails is permanently lost — the group degrades instead
+    /// of retrying forever.
+    fn heal(&self, dead: Vec<usize>) {
+        for k in dead {
+            // Count the worker live *before* the spawn so a fast new
+            // worker parking early can never make `parked` exceed
+            // `live`.
+            {
+                let mut st = lock(&self.inner.monitor);
+                st.live += 1;
+            }
+            match Self::spawn_worker(&self.inner, &self.run, k) {
+                Ok(h) => {
+                    lock(&self.handles).push(h);
+                    let mut st = lock(&self.inner.monitor);
+                    st.worker_respawns += 1;
+                }
+                Err(()) => {
+                    let mut st = lock(&self.inner.monitor);
+                    st.live -= 1;
+                    st.spawn_failures += 1;
+                    st.degraded_workers += 1;
+                }
+            }
+        }
+    }
+
+    /// Floor-1 serial fallback: every worker is dead, so the phase's
+    /// remaining chunks run inline on the coordinator thread.
+    fn drain_inline(&self) {
+        let inner = &self.inner;
+        loop {
+            let job = inner.deques.iter().find_map(|d| lock(d).pop_front());
+            let Some(job) = job else { return };
+            let ok = match catch_unwind(AssertUnwindSafe(|| (self.run)(job))) {
+                Ok(()) => true,
+                Err(payload) => {
+                    if crate::checker::rt::cancelled() {
+                        resume_unwind(payload);
+                    }
+                    false
+                }
+            };
+            let mut st = lock(&inner.monitor);
+            st.pending -= 1;
+            if ok {
+                st.executed += 1;
+            } else {
+                st.failed += 1;
+            }
+        }
+    }
+
+    /// Number of worker threads the group was built for (deque count —
+    /// the round-robin injection width, even when degraded).
     pub fn threads(&self) -> usize {
         self.inner.deques.len()
+    }
+
+    /// Worker threads currently alive (≤ [`WorkerGroup::threads`] once
+    /// spawns have failed or respawns degraded).
+    pub fn live_workers(&self) -> usize {
+        lock(&self.inner.monitor).live
     }
 
     /// Ledger snapshot (monotonic over the group's lifetime).
     pub fn counters(&self) -> GroupCounters {
         let st = lock(&self.inner.monitor);
-        GroupCounters { steals: st.steals, parks: st.parks, executed: st.executed }
+        GroupCounters {
+            steals: st.steals,
+            parks: st.parks,
+            executed: st.executed,
+            spawn_failures: st.spawn_failures,
+            worker_respawns: st.worker_respawns,
+            degraded_workers: st.degraded_workers,
+        }
     }
 
     /// Open a phase: inject any number of jobs, then `finish` blocks
@@ -219,12 +412,12 @@ impl<J: Send + 'static> WorkerGroup<J> {
 
     /// Convenience for small call sites and the model suites: one phase
     /// containing `jobs`, run to termination.
-    pub fn run_phase(&self, jobs: impl IntoIterator<Item = J>) {
+    pub fn run_phase(&self, jobs: impl IntoIterator<Item = J>) -> PhaseReport {
         let mut phase = self.phase();
         for job in jobs {
             phase.inject(job);
         }
-        phase.finish();
+        phase.finish()
     }
 }
 
@@ -235,7 +428,8 @@ impl<J: Send + 'static> Drop for WorkerGroup<J> {
             st.shutdown = true;
             self.inner.work_cv.notify_all();
         }
-        for h in self.handles.drain(..) {
+        let handles = std::mem::take(&mut *lock(&self.handles));
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -267,21 +461,44 @@ impl<J: Send + 'static> WorkPhase<'_, J> {
     }
 
     /// Publish the phase (bump epoch, wake everyone) and block until
-    /// termination: bucket drained (`pending == 0`) and all workers
-    /// parked. An empty phase skips the wakeup entirely — parked
-    /// workers stay parked, exactly like the old pool skipping idle
-    /// shards.
-    pub fn finish(self) {
+    /// termination: bucket drained (`pending == 0`) and all *live*
+    /// workers parked. An empty phase skips the wakeup entirely —
+    /// parked workers stay parked, exactly like the old pool skipping
+    /// idle shards.
+    ///
+    /// Containment lives here too: if every worker died (`live == 0`)
+    /// the remaining chunks are drained inline on this thread (floor 1
+    /// ≡ serial), and after termination each worker that died this
+    /// phase is respawned or the group permanently degrades. The
+    /// returned [`PhaseReport`] carries the contained-failure count so
+    /// the caller can abort + roll back the op.
+    pub fn finish(self) -> PhaseReport {
         let inner = &self.group.inner;
-        let workers = inner.deques.len();
         let mut st = lock(&inner.monitor);
         if self.injected > 0 {
             st.epoch += 1;
             inner.work_cv.notify_all();
         }
-        while !(st.pending == 0 && st.parked == workers) {
+        loop {
+            if st.pending == 0 && st.parked == st.live {
+                break;
+            }
+            if st.live == 0 {
+                drop(st);
+                self.group.drain_inline();
+                st = lock(&inner.monitor);
+                continue;
+            }
             st = inner.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
+        let failed = st.failed;
+        st.failed = 0;
+        let dead = std::mem::take(&mut st.dead);
+        drop(st);
+        if !dead.is_empty() {
+            self.group.heal(dead);
+        }
+        PhaseReport { failed }
     }
 }
 
@@ -344,6 +561,47 @@ mod tests {
         for (i, &x) in buf.iter().enumerate() {
             assert_eq!(x, (i / 8) as u32 + 1, "slot {i} written by the wrong chunk");
         }
+    }
+
+    #[test]
+    fn contained_panic_respawns_and_keeps_serving() {
+        crate::faults::quiet_panic_hook();
+        let group: WorkerGroup<u32> = WorkerGroup::new(2, |j| {
+            if j == 13 {
+                panic!("{} chunk payload", crate::faults::EXPECTED_PANIC);
+            }
+        });
+        let report = group.run_phase([1u32, 2, 13, 4]);
+        assert_eq!(report.failed, 1);
+        assert!(!report.ok());
+        assert_eq!(group.live_workers(), 2, "dead worker respawned at phase end");
+        let c = group.counters();
+        assert_eq!(c.worker_respawns, 1);
+        assert_eq!(c.degraded_workers, 0);
+        assert_eq!(c.executed, 3, "the failed job counts in failed, not executed");
+        // The group keeps serving after the contained panic.
+        assert!(group.run_phase(0..100u32).ok());
+        assert_eq!(group.counters().executed, 103);
+    }
+
+    #[test]
+    fn all_workers_dead_mid_phase_drains_inline() {
+        crate::faults::quiet_panic_hook();
+        let group: WorkerGroup<u32> = WorkerGroup::new(1, |j| {
+            if j >= 100 {
+                panic!("{} every chunk", crate::faults::EXPECTED_PANIC);
+            }
+        });
+        // The lone worker dies on the first poison job it pops; the
+        // rest of the bucket drains inline on the coordinator thread
+        // (floor 1 ≡ serial), containing each panic in turn.
+        let report = group.run_phase([100u32, 101, 102, 103]);
+        assert_eq!(report.failed, 4);
+        assert_eq!(group.live_workers(), 1, "respawned after the phase");
+        assert_eq!(group.counters().worker_respawns, 1);
+        // Healthy phases still run on the respawned worker.
+        assert!(group.run_phase([1u32, 2, 3]).ok());
+        assert_eq!(group.counters().executed, 3);
     }
 
     #[test]

@@ -62,7 +62,7 @@
 pub mod group;
 mod chunk;
 
-pub use group::{GroupCounters, WorkerGroup, WorkPhase};
+pub use group::{GroupCounters, PhaseReport, WorkerGroup, WorkPhase};
 
 use crate::sync::atomic::{AtomicU64, Ordering};
 use crate::sync::{Arc, SendPtr, SendSlice, SendSliceMut};
@@ -71,11 +71,22 @@ use crate::ggarray::lfvector::LfVector;
 use crate::runtime::Executor;
 use crate::sim::memory::OomError;
 
+use super::request::ExecError;
 use super::router::DispatchScratch;
 use super::service::DispatchOutcome;
 use super::shard::{SealPart, Shard};
 
 use chunk::Chunk;
+
+/// Why a scheduled gather phase did not complete: a worker-panic abort
+/// (the op's serial charges were rolled back, the shards are
+/// byte-identical to the op never running) or the pre-screen-impossible
+/// OOM kept for parity with the serial path.
+#[derive(Debug)]
+pub enum PhaseAbort {
+    Panic(ExecError),
+    Oom(OomError),
+}
 
 /// Minimum batch values per insert-fill chunk. Fill chunks group whole
 /// blocks (one `&mut LfVector` lease each) until they hold at least
@@ -135,13 +146,20 @@ impl Scheduler {
     /// no shard can OOM; should one anyway (a pre-screen bug), the
     /// charge loop stops at the first failing shard exactly like the
     /// serial prefix path, and the outcome reports it.
+    ///
+    /// Abort safety: if a worker panics mid-phase (fault injection or a
+    /// real bug), the panic is contained by the worker group, the phase
+    /// drains, and every *prepared* shard is rolled back — fresh buckets
+    /// freed, length/index restored, clock ledger and heap counters
+    /// rewound to the pre-op marks — so `Err(ChunkPanic)` leaves the
+    /// shards byte-identical to the batch never having been dispatched.
     pub fn run_insert(
         &self,
         shards: &mut [Shard],
         blocks_per_shard: usize,
         values: &[f32],
         scratch: &DispatchScratch,
-    ) -> DispatchOutcome {
+    ) -> Result<DispatchOutcome, ExecError> {
         // Phase 1: serial charges, shard-id order.
         let mut applied = 0u64;
         let mut oom: Option<(usize, usize, OomError)> = None; // (shard pos, applied prefix, error)
@@ -150,6 +168,7 @@ impl Scheduler {
             if take == 0 {
                 continue;
             }
+            shard.save_abort_mark();
             let out = shard.prepare_counts(scratch.shard_counts(k, blocks_per_shard), take);
             applied += out.applied as u64;
             if let Some(e) = out.error {
@@ -177,19 +196,63 @@ impl Scheduler {
             let counts = scratch.shard_counts(k, blocks_per_shard);
             inject_fill(&mut phase, shard, counts, &values[off..off + applied_k]);
         }
-        phase.finish();
-        DispatchOutcome { applied, oom: oom.map(|(k, _, e)| (shards[k].id(), e)) }
+        let report = phase.finish();
+        if !report.ok() {
+            // Roll back every shard the charge loop prepared, walking the
+            // same prefix phase 2 did (the OOM shard, if any, rolls back
+            // its partial prefix — panic-abort supersedes the OOM
+            // outcome). Completed fill chunks only wrote tail slots the
+            // rollback truncates away, so no visible byte survives.
+            for (k, shard) in shards.iter_mut().enumerate() {
+                let (_, take) = scratch.ranges[k];
+                if take == 0 {
+                    continue;
+                }
+                let applied_k = match stop {
+                    Some((ok, _)) if k > ok => break, // never prepared
+                    Some((ok, a)) if k == ok => a,
+                    _ => take,
+                };
+                shard.rollback_insert(scratch.shard_counts(k, blocks_per_shard), applied_k);
+            }
+            return Err(ExecError::ChunkPanic { op: "insert", chunks: report.failed });
+        }
+        Ok(DispatchOutcome { applied, oom: oom.map(|(k, _, e)| (shards[k].id(), e)) })
     }
 
     /// One work call fanned across non-empty shards: per-shard numeric
-    /// update plus the modeled `rw_b` charge, concurrently. Empty live
-    /// shards get neither chunk nor charge — the serial loop does
-    /// nothing to them either. `exec` is the shared PJRT handle: pooled
-    /// Work runs the AOT kernels whenever the serial path would (each
-    /// worker compiles into its own thread-local cache). Returns PJRT
-    /// executions performed.
-    pub fn run_work(&self, shards: &mut [Shard], exec: Option<&Arc<Executor>>, iters: u32) -> u64 {
+    /// update concurrently, with the modeled `rw_b` charge pre-paid
+    /// serially in shard order. Empty live shards get neither chunk nor
+    /// charge — the serial loop does nothing to them either. `exec` is
+    /// the shared PJRT handle: pooled Work runs the AOT kernels whenever
+    /// the serial path would (each worker compiles into its own
+    /// thread-local cache). Returns PJRT executions performed.
+    ///
+    /// The serial path charges *after* its numeric pass; pre-charging is
+    /// still byte-identical because `charge_rw_block`'s cost depends
+    /// only on shard length and device spec (work never changes length)
+    /// and each shard's clock sees the same single delta. The hoist
+    /// exists so an aborted phase can rewind the charges: on
+    /// `Err(ChunkPanic)` the simulated ledger is exactly as if the call
+    /// never ran. Real f32 updates on shards whose chunk completed
+    /// before the panic are NOT undone (sequential f32 adds cannot be
+    /// exactly reversed) — the documented exception to abort
+    /// byte-identity, covering only `Work` numerics.
+    pub fn run_work(
+        &self,
+        shards: &mut [Shard],
+        exec: Option<&Arc<Executor>>,
+        iters: u32,
+    ) -> Result<u64, ExecError> {
         self.pjrt.store(0, Ordering::Relaxed);
+        // Serial pre-charge, shard-id order (the charge/copy split).
+        for shard in shards.iter_mut() {
+            if shard.is_empty() {
+                continue;
+            }
+            shard.save_abort_mark();
+            shard.charge_rw_block(iters as f64);
+        }
         let mut phase = self.group.phase();
         for shard in shards.iter_mut() {
             // Read before this shard's chunk exists; work never changes
@@ -203,8 +266,17 @@ impl Scheduler {
                 iters,
             });
         }
-        phase.finish();
-        self.pjrt.load(Ordering::Relaxed)
+        let report = phase.finish();
+        if !report.ok() {
+            for shard in shards.iter_mut() {
+                if shard.is_empty() {
+                    continue;
+                }
+                shard.rewind_abort();
+            }
+            return Err(ExecError::ChunkPanic { op: "work", chunks: report.failed });
+        }
+        Ok(self.pjrt.load(Ordering::Relaxed))
     }
 
     /// Parallel snapshot gather: serial per-shard charges (destination
@@ -217,11 +289,12 @@ impl Scheduler {
         shards: &mut [Shard],
         dst: &mut [f32],
         ranges: &[(usize, usize)],
-    ) -> Result<(), OomError> {
+    ) -> Result<(), PhaseAbort> {
         debug_assert_eq!(shards.len(), ranges.len());
         debug_assert_eq!(ranges.iter().map(|r| r.1).sum::<usize>(), dst.len());
         let mut failed: Option<OomError> = None;
         for (k, shard) in shards.iter_mut().enumerate() {
+            shard.save_abort_mark();
             match shard.flatten_temp_charge() {
                 Ok(len) => debug_assert_eq!(len, ranges[k].1, "stale gather range for shard {k}"),
                 Err(e) => {
@@ -233,7 +306,7 @@ impl Scheduler {
             }
         }
         if let Some(e) = failed {
-            return Err(e);
+            return Err(PhaseAbort::Oom(e));
         }
         let mut phase = self.group.phase();
         let mut rest: &mut [f32] = dst;
@@ -246,7 +319,19 @@ impl Scheduler {
             covered += len;
             inject_gather(&mut phase, shard, head);
         }
-        phase.finish();
+        let report = phase.finish();
+        if !report.ok() {
+            // The snapshot destination is caller-discarded on error and
+            // the gather chunks never touch shard state, so rewinding
+            // the charge marks is the whole rollback.
+            for shard in shards.iter_mut() {
+                shard.rewind_abort();
+            }
+            return Err(PhaseAbort::Panic(ExecError::ChunkPanic {
+                op: "flatten",
+                chunks: report.failed,
+            }));
+        }
         Ok(())
     }
 
@@ -256,17 +341,25 @@ impl Scheduler {
     /// or the shard's `Err`, the shard having already reopened itself),
     /// then range chunks copy every successfully charged shard into its
     /// disjoint carve of `dst`.
+    ///
+    /// On a worker-panic abort the unwind happens *here* (the caller's
+    /// two-phase commit never starts): every charged shard releases its
+    /// fresh flatten destination and reopens, all costs rewind to the
+    /// pre-seal marks, and this seal's entries are dropped from `out` —
+    /// `Err(ChunkPanic)` leaves the store byte-identical to the seal
+    /// never having been requested.
     pub fn run_seal(
         &self,
         shards: &mut [Shard],
         dst: &mut [f32],
         ranges: &[(usize, usize)],
         out: &mut Vec<Result<SealPart, OomError>>,
-    ) {
+    ) -> Result<(), ExecError> {
         debug_assert_eq!(shards.len(), ranges.len());
         debug_assert_eq!(ranges.iter().map(|r| r.1).sum::<usize>(), dst.len());
         let base = out.len();
         for shard in shards.iter_mut() {
+            shard.save_abort_mark();
             out.push(shard.seal_flatten_charge());
         }
         let mut phase = self.group.phase();
@@ -282,7 +375,21 @@ impl Scheduler {
                 inject_gather(&mut phase, shard, head);
             }
         }
-        phase.finish();
+        let report = phase.finish();
+        if !report.ok() {
+            for (k, shard) in shards.iter_mut().enumerate() {
+                if let Ok(part) = &mut out[base + k] {
+                    shard.abort_seal(part.alloc.take());
+                }
+                // Err shards already reopened themselves; the rewind
+                // erases whatever partial charges their failed attempt
+                // (or the abort_seal free above) left behind.
+                shard.rewind_abort();
+            }
+            out.truncate(base);
+            return Err(ExecError::ChunkPanic { op: "seal", chunks: report.failed });
+        }
+        Ok(())
     }
 }
 
@@ -398,7 +505,7 @@ mod tests {
         let sched = Scheduler::new(4);
         let mut pooled = build_shards(4, bps);
         routed(&pooled, bps, values.len(), &mut scratch);
-        let out = sched.run_insert(&mut pooled, bps, &values, &scratch);
+        let out = sched.run_insert(&mut pooled, bps, &values, &scratch).unwrap();
         assert_eq!(out.applied, applied_serial);
         assert!(out.oom.is_none());
         for (s, p) in serial.iter().zip(&pooled) {
@@ -434,7 +541,7 @@ mod tests {
         let sched = Scheduler::new(2);
         let mut pooled = build_shards(4, bps);
         routed(&pooled, bps, values.len(), &mut scratch);
-        sched.run_insert(&mut pooled, bps, &values, &scratch);
+        sched.run_insert(&mut pooled, bps, &values, &scratch).unwrap();
         for (s, p) in serial.iter().zip(&pooled) {
             assert_eq!(s.sim_now_us(), p.sim_now_us());
             for i in 0..s.len() as u64 {
@@ -457,7 +564,7 @@ mod tests {
         let sched = Scheduler::new(2);
         let mut pooled = build_shards(2, bps);
         routed(&pooled, bps, values.len(), &mut scratch);
-        sched.run_insert(&mut pooled, bps, &values, &scratch);
+        sched.run_insert(&mut pooled, bps, &values, &scratch).unwrap();
 
         for shard in serial.iter_mut() {
             shard.work_pass(None, 30);
@@ -465,7 +572,7 @@ mod tests {
                 shard.charge_rw_block(30.0);
             }
         }
-        assert_eq!(sched.run_work(&mut pooled, None, 30), 0);
+        assert_eq!(sched.run_work(&mut pooled, None, 30).unwrap(), 0);
         for (s, p) in serial.iter().zip(&pooled) {
             assert_eq!(s.get(0), p.get(0));
             assert_eq!(s.sim_now_us(), p.sim_now_us());
@@ -498,7 +605,7 @@ mod tests {
         let sched = Scheduler::new(4);
         let mut pooled = build_shards(4, bps);
         routed(&pooled, bps, values.len(), &mut scratch);
-        sched.run_insert(&mut pooled, bps, &values, &scratch);
+        sched.run_insert(&mut pooled, bps, &values, &scratch).unwrap();
 
         for shard in serial.iter_mut() {
             shard.work_pass(Some(&*exec), 7);
@@ -506,7 +613,7 @@ mod tests {
                 shard.charge_rw_block(7.0);
             }
         }
-        let pjrt = sched.run_work(&mut pooled, Some(&exec), 7);
+        let pjrt = sched.run_work(&mut pooled, Some(&exec), 7).unwrap();
         assert_eq!(pjrt, exec.executions(), "tally must equal the handle's own counter");
         for (s, p) in serial.iter().zip(&pooled) {
             assert_eq!(s.sim_now_us(), p.sim_now_us());
@@ -524,7 +631,7 @@ mod tests {
         let sched = Scheduler::new(3);
         let mut shards = build_shards(3, bps);
         routed(&shards, bps, values.len(), &mut scratch);
-        sched.run_insert(&mut shards, bps, &values, &scratch);
+        sched.run_insert(&mut shards, bps, &values, &scratch).unwrap();
 
         // Reference: serial appending flatten.
         let mut reference = Vec::new();
@@ -547,7 +654,7 @@ mod tests {
         // Seal gather: parts in shard order, destination allocs live.
         let mut seal_dst = vec![0.0f32; values.len()];
         let mut parts = Vec::new();
-        sched.run_seal(&mut shards, &mut seal_dst, &ranges, &mut parts);
+        sched.run_seal(&mut shards, &mut seal_dst, &ranges, &mut parts).unwrap();
         assert_eq!(seal_dst, reference);
         assert_eq!(parts.len(), 3);
         for (k, (part, shard)) in parts.into_iter().zip(shards.iter_mut()).enumerate() {
@@ -570,7 +677,7 @@ mod tests {
         let sched = Scheduler::new(2);
         let mut shards = build_shards(1, bps);
         routed(&shards, bps, values.len(), &mut scratch);
-        let out = sched.run_insert(&mut shards, bps, &values, &scratch);
+        let out = sched.run_insert(&mut shards, bps, &values, &scratch).unwrap();
         assert!(out.oom.is_none());
         let fills = sched.counters().executed;
         assert!(fills > 1, "hot-shard fill must split (got {fills} chunks)");
@@ -599,11 +706,11 @@ mod tests {
         let mut shards = build_shards(3, bps);
         routed(&shards, bps, values.len(), &mut scratch);
         let fills = scratch.ranges.iter().filter(|r| r.1 > 0).count() as u64;
-        sched.run_insert(&mut shards, bps, &values, &scratch);
+        sched.run_insert(&mut shards, bps, &values, &scratch).unwrap();
         assert_eq!(sched.counters().executed, fills);
 
         let works = shards.iter().filter(|s| !s.is_empty()).count() as u64;
-        sched.run_work(&mut shards, None, 5);
+        sched.run_work(&mut shards, None, 5).unwrap();
         assert_eq!(sched.counters().executed, fills + works);
 
         let gathers: u64 = shards.iter().map(|s| s.len().div_ceil(GATHER_CHUNK_ELEMS) as u64).sum();

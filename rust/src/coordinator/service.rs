@@ -52,6 +52,7 @@
 //! in-process service is equivalent to (and simpler than) a tokio
 //! single-worker runtime.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::{Duration, Instant};
 
 use crate::sync::mpsc::{self, Receiver};
@@ -73,9 +74,9 @@ use super::frontend::{
     SessionInsert,
 };
 use super::metrics::{Metrics, ParallelCost};
-use super::request::{checksum, Request, Response};
+use super::request::{checksum, ExecError, Request, Response};
 use super::router::{DispatchScratch, Policy};
-use super::scheduler::Scheduler;
+use super::scheduler::{PhaseAbort, Scheduler};
 use super::shard::{concat_parts, EpochManager, SealPart, Shard, ShardConfig};
 
 /// Service configuration.
@@ -306,6 +307,10 @@ pub fn dispatch_insert(
 /// else falls back to the serial loop — whose stop-at-first-OOM prefix
 /// semantics the parallel path could not honour — so outcomes are
 /// byte-identical across executor modes.
+///
+/// `Err(ChunkPanic)` means a scheduler worker died mid-phase: the batch
+/// was rolled back byte-identically and none of it was applied (the
+/// serial fallback path cannot fail this way).
 pub fn dispatch_insert_pooled(
     sched: &Scheduler,
     shards: &mut [Shard],
@@ -314,10 +319,10 @@ pub fn dispatch_insert_pooled(
     batch_seq: u64,
     values: &[f32],
     scratch: &mut DispatchScratch,
-) -> DispatchOutcome {
+) -> Result<DispatchOutcome, ExecError> {
     route_batch(shards, blocks_per_shard, policy, batch_seq, values.len(), scratch);
     if !insert_demand_fits(shards, blocks_per_shard, scratch) {
-        return apply_routed_serial(shards, blocks_per_shard, values, scratch);
+        return Ok(apply_routed_serial(shards, blocks_per_shard, values, scratch));
     }
     sched.run_insert(shards, blocks_per_shard, values, scratch)
 }
@@ -529,13 +534,17 @@ pub struct Client {
 }
 
 impl Client {
-    /// Synchronous call (same contract as [`Coordinator::call`]).
+    /// Synchronous call (same contract as [`Coordinator::call`]). A dead
+    /// worker — request channel closed, or the reply sender dropped
+    /// without answering — surfaces as the typed
+    /// `Response::Failed(ServiceDown)` instead of hanging or panicking,
+    /// so callers can distinguish "service gone" from an op-level error.
     pub fn call(&self, req: Request) -> Response {
         let (rtx, rrx) = mpsc::channel();
         if self.tx.send(Envelope::Call(req, rtx)).is_err() {
-            return Response::Error("coordinator stopped".into());
+            return Response::Failed(ExecError::ServiceDown);
         }
-        rrx.recv().unwrap_or_else(|_| Response::Error("coordinator dropped reply".into()))
+        rrx.recv().unwrap_or_else(|_| Response::Failed(ExecError::ServiceDown))
     }
 
     /// Fire-and-forget insert (no response wait) — throughput path.
@@ -656,9 +665,28 @@ impl Worker {
                     if needs_frontend_barrier(&req) && !self.lanes.is_empty() {
                         self.drain_frontend(true);
                     }
+                    // Fatal-fault site: an injected panic *here* (before
+                    // the catch_unwind below) kills the worker thread
+                    // outright, modelling an uncontainable crash — the
+                    // path the ServiceDown/Closed contracts cover.
+                    crate::faults::point("service.worker.fatal");
                     let t0 = Instant::now();
                     let stop = matches!(req, Request::Shutdown);
-                    let resp = self.handle(req);
+                    // Contain handler panics: the request is lost (typed
+                    // `HandlerPanic`) but the worker, shards and sessions
+                    // keep serving. Checker cancellation tokens must pass
+                    // through, or a model-checked schedule could not be
+                    // abandoned.
+                    let resp = match catch_unwind(AssertUnwindSafe(|| self.handle(req))) {
+                        Ok(resp) => resp,
+                        Err(payload) => {
+                            if crate::checker::rt::cancelled() {
+                                std::panic::resume_unwind(payload);
+                            }
+                            self.metrics.errors += 1;
+                            Response::Failed(ExecError::HandlerPanic)
+                        }
+                    };
                     self.metrics.observe_latency_us(t0.elapsed().as_secs_f64() * 1e6);
                     let _ = reply.send(resp);
                     if stop {
@@ -780,10 +808,16 @@ impl Worker {
         self.lanes = lanes;
     }
 
-    fn apply_batch(&mut self, values: Vec<f32>, requests: usize) {
+    /// Dispatch one flushed batch. Returns the typed abort if a
+    /// scheduler worker panicked mid-dispatch: the batch was rolled back
+    /// byte-identically (none of it landed) and the worker keeps
+    /// serving. Only the synchronous `Request::Insert` path propagates
+    /// the error to a caller; fire-and-forget drains observe it through
+    /// the `errors` metric.
+    fn apply_batch(&mut self, values: Vec<f32>, requests: usize) -> Option<ExecError> {
         if values.is_empty() {
             self.batcher.recycle(values);
-            return;
+            return None;
         }
         let marks = self.clock_marks();
         self.charge_dispatch();
@@ -804,17 +838,33 @@ impl Worker {
                 &values,
                 &mut self.scratch,
             ),
-            None => dispatch_insert(
+            None => Ok(dispatch_insert(
                 &mut self.shards,
                 self.blocks_per_shard,
                 self.cfg.routing,
                 self.batch_seq,
                 &values,
                 &mut self.scratch,
-            ),
+            )),
         };
         self.metrics.wall_insert_us += wall0.elapsed().as_secs_f64() * 1e6;
         self.batch_seq += 1;
+        let outcome = match outcome {
+            Ok(outcome) => outcome,
+            Err(err) => {
+                // Panic abort: the dispatch rolled every shard back, so
+                // the only charges standing are the serial dispatch term
+                // — ledger them (the host sync really happened) and keep
+                // the batch accounting consistent for later batches.
+                eprintln!("[coordinator] {err}");
+                self.metrics.errors += 1;
+                let cost = self.cost_since(&marks);
+                self.metrics.charge_insert(cost);
+                self.metrics.batches += 1;
+                self.batcher.recycle(values);
+                return Some(err);
+            }
+        };
         #[cfg(debug_assertions)]
         self.cross_check_scan_offsets(values.len());
         if let Some((shard, e)) = &outcome.oom {
@@ -829,6 +879,7 @@ impl Worker {
         // The consumed batch buffer returns to the batcher: steady-state
         // flushes ping-pong two buffers instead of allocating.
         self.batcher.recycle(values);
+        None
     }
 
     /// Debug-build-only self-check: cross-check the routed per-block
@@ -855,12 +906,18 @@ impl Worker {
     }
 
     fn handle(&mut self, req: Request) -> Response {
+        // Contained-fault site: an injected panic here unwinds into the
+        // run loop's catch_unwind — the request is lost (HandlerPanic)
+        // but the worker keeps serving.
+        crate::faults::point("service.worker.handle");
         match req {
             Request::Insert { values } => {
                 self.metrics.inserts_requested += 1;
                 let count = values.len() as u64;
                 if let Some(batch) = self.batcher.push(&values) {
-                    self.apply_batch(batch.values, batch.requests);
+                    if let Some(err) = self.apply_batch(batch.values, batch.requests) {
+                        return Response::Failed(err);
+                    }
                 }
                 Response::Inserted {
                     count,
@@ -883,11 +940,23 @@ impl Worker {
                         // runs the AOT kernels whenever the serial path
                         // would — there is no artifacts-live serial
                         // special case anymore.
-                        pjrt += sched.run_work(
+                        match sched.run_work(
                             &mut self.shards,
                             self.executor.as_ref(),
                             self.cfg.work_iters,
-                        );
+                        ) {
+                            Ok(p) => pjrt += p,
+                            Err(err) => {
+                                // Abort: the pre-charged rw_b launches
+                                // were rewound; completed calls of this
+                                // request stand (each was fully ledgered).
+                                eprintln!("[coordinator] {err}");
+                                self.metrics.errors += 1;
+                                self.metrics.wall_work_us +=
+                                    wall0.elapsed().as_secs_f64() * 1e6;
+                                return Response::Failed(err);
+                            }
+                        }
                     } else {
                         // Real numeric update on the live epoch (PJRT
                         // when possible), then the modeled rw_b cost per
@@ -951,12 +1020,24 @@ impl Worker {
                     data.resize(base + live, 0.0);
                     self.scratch.fill_gather_ranges(self.shards.iter().map(|s| s.len()));
                     let sched = self.scheduler.as_ref().expect("scheduler checked");
-                    if let Err(e) = sched.run_flatten_temp(
+                    match sched.run_flatten_temp(
                         &mut self.shards,
                         &mut data[base..],
                         &self.scratch.gather_ranges,
                     ) {
-                        failed = Some(e);
+                        Ok(()) => {}
+                        Err(PhaseAbort::Oom(e)) => failed = Some(e),
+                        Err(PhaseAbort::Panic(err)) => {
+                            // Worker-panic abort: the gather charges were
+                            // rewound and the half-written snapshot is
+                            // discarded — the store is untouched.
+                            eprintln!("[coordinator] {err}");
+                            self.metrics.errors += 1;
+                            self.metrics.wall_flatten_us +=
+                                wall0.elapsed().as_secs_f64() * 1e6;
+                            self.flatten_pool = data;
+                            return Response::Failed(err);
+                        }
                     }
                 } else {
                     // Serial path (no scheduler, or a fit is not
@@ -1026,7 +1107,21 @@ impl Worker {
                     self.scratch.fill_gather_ranges(self.shards.iter().map(|s| s.len()));
                     let sched = self.scheduler.as_ref().expect("scheduler checked");
                     let mut results = Vec::with_capacity(self.shards.len());
-                    sched.run_seal(&mut self.shards, &mut dst, &self.scratch.gather_ranges, &mut results);
+                    if let Err(err) = sched.run_seal(
+                        &mut self.shards,
+                        &mut dst,
+                        &self.scratch.gather_ranges,
+                        &mut results,
+                    ) {
+                        // Worker-panic abort: run_seal already unwound —
+                        // every shard reopened with its costs rewound —
+                        // so banking the gather buffer is all that's left.
+                        eprintln!("[coordinator] {err}");
+                        self.epochs.bank_gather_buffer(dst);
+                        self.metrics.errors += 1;
+                        self.metrics.wall_flatten_us += wall0.elapsed().as_secs_f64() * 1e6;
+                        return Response::Failed(err);
+                    }
                     if results.iter().any(|r| r.is_err()) {
                         // Cannot happen (pre-screened fit) — but unwind
                         // faithfully anyway: failed shards reopened

@@ -35,8 +35,9 @@ use crate::ggarray::flatten::{self, Flattened, ShardedFlattened};
 use crate::ggarray::lfvector::LfVector;
 use crate::insertion::{self, InsertionKind, InsertShape};
 use crate::runtime::Executor;
+use crate::sim::clock::ClockMark;
 use crate::sim::kernel::{self, KernelProfile};
-use crate::sim::memory::{AllocId, OomError, VramHeap};
+use crate::sim::memory::{AllocId, HeapMark, OomError, VramHeap};
 use crate::sim::spec::DeviceSpec;
 
 /// Construction parameters for one shard.
@@ -100,6 +101,11 @@ pub struct Shard {
     id: usize,
     gg: GgArray<f32>,
     insertion: InsertionKind,
+    /// Pre-op cost snapshot for abort rollback ([`Shard::save_abort_mark`]):
+    /// `Copy` marks, so arming one is allocation-free on the dispatch hot
+    /// path. Ops never nest, so a single slot suffices.
+    abort_clock: ClockMark,
+    abort_heap: HeapMark,
 }
 
 impl Shard {
@@ -111,7 +117,13 @@ impl Shard {
             insertion: cfg.insertion,
         };
         let heap = VramHeap::with_capacity(cfg.device.clone(), cfg.heap_bytes);
-        Shard { id: cfg.id, gg: GgArray::with_heap(gg_cfg, cfg.device, heap), insertion: cfg.insertion }
+        Shard {
+            id: cfg.id,
+            gg: GgArray::with_heap(gg_cfg, cfg.device, heap),
+            insertion: cfg.insertion,
+            abort_clock: ClockMark::default(),
+            abort_heap: HeapMark::default(),
+        }
     }
 
     pub fn id(&self) -> usize {
@@ -502,6 +514,51 @@ impl Shard {
     /// data (the real numeric update goes through [`Shard::work_pass`]).
     pub fn charge_rw_block(&mut self, flops_per_elem: f64) -> f64 {
         self.gg.read_write_block(flops_per_elem, |_| {}).us
+    }
+
+    /// Snapshot this shard's simulated costs (clock ledger + heap
+    /// counters) so a mid-phase worker panic can abort the op
+    /// byte-identically. Called by the scheduler at the start of each
+    /// serial charge pass; `Copy` marks, so allocation-free.
+    pub fn save_abort_mark(&mut self) {
+        let (cm, hm) = self.gg.cost_marks();
+        self.abort_clock = cm;
+        self.abort_heap = hm;
+    }
+
+    /// Rewind this shard's clock ledger and heap counters to the last
+    /// [`Shard::save_abort_mark`]. The caller must first undo any real
+    /// heap traffic the op performed (e.g. free the op's fresh buckets
+    /// or destination allocation) so `used` matches the mark again.
+    pub fn rewind_abort(&mut self) {
+        self.gg.rewind_costs(self.abort_clock, self.abort_heap);
+    }
+
+    /// Abort half of the insert charge/copy split: undo a
+    /// [`Shard::prepare_counts`] whose phase died before the fills ran.
+    /// `counts`/`applied` are exactly the prepare's inputs/outcome — the
+    /// extended block prefix is recomputed from them, each block is
+    /// shrunk back (freeing the op's fresh buckets), and the costs are
+    /// rewound to the [`Shard::save_abort_mark`] taken before the
+    /// prepare. Afterwards the shard is byte-identical to the op never
+    /// having started: length, bucket layout, CAS ledger, heap
+    /// residency/counters and the exact clock all match.
+    pub fn rollback_insert(&mut self, counts: &[usize], applied: usize) {
+        let mut remaining = applied;
+        let old_lens: Vec<usize> = self
+            .gg
+            .vectors()
+            .iter()
+            .zip(counts)
+            .map(|(v, &c)| {
+                let take = c.min(remaining);
+                remaining -= take;
+                v.len() - take
+            })
+            .collect();
+        debug_assert_eq!(remaining, 0, "prepare outcome must be a block-count prefix");
+        self.gg.rollback_growth(&old_lens);
+        self.rewind_abort();
     }
 
     /// Apply the real +1×`iters` numeric update to this shard's data,
@@ -1185,6 +1242,45 @@ mod tests {
         let f = s.flatten_temp().unwrap();
         assert_eq!(f.data.len(), 20);
         assert_eq!(s.heap_used(), used, "temp flatten must not retain VRAM");
+    }
+
+    #[test]
+    fn rollback_insert_restores_pre_op_state_byte_identically() {
+        let mut s = shard(4, 1 << 24);
+        s.apply_counts(&[3, 3, 2, 2], &(0..10).map(|i| i as f32).collect::<Vec<_>>());
+        let (len0, cap0, used0, t0) = (s.len(), s.capacity(), s.heap_used(), s.sim_now_us());
+        // A batch big enough to force fresh buckets in several blocks.
+        let counts = [40usize, 1, 0, 9];
+        let total: usize = counts.iter().sum();
+        s.save_abort_mark();
+        let out = s.prepare_counts(&counts, total);
+        assert!(out.error.is_none());
+        assert_eq!(s.len(), len0 + total);
+        assert!(s.heap_used() > used0);
+        s.rollback_insert(&counts, out.applied);
+        assert_eq!(s.len(), len0);
+        assert_eq!(s.capacity(), cap0, "fresh buckets freed");
+        assert_eq!(s.heap_used(), used0);
+        assert_eq!(s.sim_now_us(), t0, "abort must be byte-identical in sim time");
+        for i in 0..10u64 {
+            assert_eq!(s.get(i), Some(i as f32), "pre-op data survives the rollback");
+        }
+        // The shard keeps serving after the abort.
+        let out2 = s.apply_counts(&[1, 1, 1, 1], &[50.0, 51.0, 52.0, 53.0]);
+        assert!(out2.error.is_none());
+        assert_eq!(s.len(), len0 + 4);
+    }
+
+    #[test]
+    fn work_charge_rewinds_to_abort_mark() {
+        let mut s = shard(2, 1 << 24);
+        s.apply_counts(&[2, 1], &[1.0, 2.0, 3.0]);
+        let t0 = s.sim_now_us();
+        s.save_abort_mark();
+        assert!(s.charge_rw_block(30.0) > 0.0);
+        assert!(s.sim_now_us() > t0);
+        s.rewind_abort();
+        assert_eq!(s.sim_now_us(), t0, "rw_b pre-charge rewinds exactly");
     }
 
     #[test]

@@ -1,0 +1,303 @@
+//! Deterministic fault injection (`--cfg ggfault`).
+//!
+//! Mirrors the `ggcheck` pattern: named fault sites are sprinkled
+//! through the coordinator (`faults::point("scheduler.worker.copy")`)
+//! and compile to **nothing** in normal builds — `point`/`injected`
+//! are `#[inline(always)]` empty functions unless the crate is built
+//! with `RUSTFLAGS='--cfg ggfault'`. Under `ggfault`, a test arms a
+//! [`FaultPlan`] naming a site and the Nth crossing that should blow
+//! up; the crossing then panics with a typed [`InjectedFault`] payload
+//! (for [`SiteKind::Abort`]/[`SiteKind::Fatal`] sites, via
+//! [`point`]) or reports `true` (for [`SiteKind::Degrade`] sites, via
+//! [`injected`] — e.g. a simulated thread-spawn failure). Every
+//! registered site is listed in [`SITES`] so the chaos suite
+//! (`tests/chaos.rs`) can enumerate the full matrix mechanically; see
+//! EXPERIMENTS.md §Robustness for the registry table and the
+//! abort-byte-identity contract each site's containment must satisfy.
+//!
+//! Exactly one plan may be armed at a time (the injector state is a
+//! process-wide slot); [`FaultPlan::arm`] blocks until the slot frees,
+//! so concurrently running `#[test]`s serialize instead of corrupting
+//! each other's plans, and the returned [`FaultGuard`] disarms on drop
+//! and answers whether the fault actually fired.
+
+/// What a site does when its plan fires — determines which arm of the
+/// chaos contract applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SiteKind {
+    /// The in-flight op aborts with a typed error; state rolls back
+    /// byte-identically and the store keeps serving.
+    Abort,
+    /// No error escapes: the component permanently degrades (fewer
+    /// scheduler workers, floor 1) and results stay byte-identical to
+    /// the fault-free run.
+    Degrade,
+    /// The service worker thread dies: every subsequent call observes
+    /// a typed `ServiceDown` / `Admission::Closed`, never a hang.
+    Fatal,
+}
+
+/// One registered fault site.
+#[derive(Debug, Clone, Copy)]
+pub struct Site {
+    /// Dotted path passed to [`point`]/[`injected`] at the site.
+    pub name: &'static str,
+    pub kind: SiteKind,
+    /// Where the site sits and what failing there simulates.
+    pub what: &'static str,
+}
+
+/// Every fault site compiled into the crate. The chaos suite iterates
+/// this — adding a `point()` call without registering it here leaves
+/// the new site untested, so keep them in lockstep.
+pub const SITES: &[Site] = &[
+    Site {
+        name: "scheduler.worker.fill",
+        kind: SiteKind::Abort,
+        what: "worker panic at the top of an insert fill chunk (before any write)",
+    },
+    Site {
+        name: "scheduler.worker.work",
+        kind: SiteKind::Abort,
+        what: "worker panic at the top of a work-pass chunk",
+    },
+    Site {
+        name: "scheduler.worker.copy",
+        kind: SiteKind::Abort,
+        what: "worker panic at the top of a gather-copy chunk (flatten/seal/snapshot)",
+    },
+    Site {
+        name: "scheduler.spawn",
+        kind: SiteKind::Degrade,
+        what: "thread::Builder::spawn failure while building or respawning the worker group",
+    },
+    Site {
+        name: "service.worker.handle",
+        kind: SiteKind::Abort,
+        what: "coordinator worker panic at the top of request handling (before any mutation)",
+    },
+    Site {
+        name: "service.worker.fatal",
+        kind: SiteKind::Fatal,
+        what: "coordinator worker death outside the containment net (loop-level panic)",
+    },
+];
+
+#[cfg(ggfault)]
+mod active {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+
+    /// Panic payload of a fired [`super::point`] — typed so contained
+    /// injections are distinguishable from genuine bugs in test
+    /// assertions and the quiet panic hook.
+    #[derive(Debug)]
+    pub struct InjectedFault {
+        pub site: &'static str,
+    }
+
+    struct Armed {
+        site: &'static str,
+        /// 1-based crossing index that fires.
+        nth: u64,
+        seen: u64,
+        fired: Arc<AtomicBool>,
+    }
+
+    static ARMED: Mutex<Option<Armed>> = Mutex::new(None);
+
+    /// A deterministic fault: blow up the `nth` crossing of `site`
+    /// (1-based). Inert until [`FaultPlan::arm`].
+    #[derive(Debug, Clone, Copy)]
+    pub struct FaultPlan {
+        pub site: &'static str,
+        pub nth: u64,
+    }
+
+    impl FaultPlan {
+        /// Fire the first crossing of `site`.
+        pub fn first(site: &'static str) -> FaultPlan {
+            FaultPlan { site, nth: 1 }
+        }
+
+        /// Install the plan. Blocks until no other plan is armed (so
+        /// parallel tests serialize), and disarms when the returned
+        /// guard drops.
+        pub fn arm(self) -> FaultGuard {
+            assert!(self.nth >= 1, "FaultPlan.nth is 1-based");
+            let fired = Arc::new(AtomicBool::new(false));
+            loop {
+                let mut slot = ARMED.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                if slot.is_none() {
+                    *slot = Some(Armed {
+                        site: self.site,
+                        nth: self.nth,
+                        seen: 0,
+                        fired: Arc::clone(&fired),
+                    });
+                    return FaultGuard { fired };
+                }
+                drop(slot);
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    /// Disarms the armed plan on drop; reports whether it fired.
+    pub struct FaultGuard {
+        fired: Arc<AtomicBool>,
+    }
+
+    impl FaultGuard {
+        /// Did the armed crossing actually happen? A plan targeting the
+        /// second crossing of a site the run only crosses once never
+        /// fires — the chaos contract then demands byte-identity with
+        /// the fault-free run.
+        pub fn fired(&self) -> bool {
+            self.fired.load(Ordering::SeqCst)
+        }
+    }
+
+    impl Drop for FaultGuard {
+        fn drop(&mut self) {
+            *ARMED.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = None;
+        }
+    }
+
+    /// Count a crossing of `site`; true iff the armed plan fires here.
+    pub fn crossing(site: &'static str) -> bool {
+        let mut slot = ARMED.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(armed) = slot.as_mut() {
+            if armed.site == site {
+                armed.seen += 1;
+                if armed.seen == armed.nth {
+                    armed.fired.store(true, Ordering::SeqCst);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+#[cfg(ggfault)]
+pub use active::{FaultGuard, FaultPlan, InjectedFault};
+
+/// A fault site that *panics* when its plan fires (Abort/Fatal sites).
+/// Zero-cost no-op unless built with `--cfg ggfault`.
+#[inline(always)]
+pub fn point(site: &'static str) {
+    #[cfg(ggfault)]
+    if active::crossing(site) {
+        std::panic::panic_any(active::InjectedFault { site });
+    }
+    #[cfg(not(ggfault))]
+    let _ = site;
+}
+
+/// A fault site that *reports* when its plan fires (Degrade sites —
+/// the caller turns `true` into the failure it simulates, e.g. a
+/// spawn error). Always `false` unless built with `--cfg ggfault`.
+#[inline(always)]
+#[must_use]
+pub fn injected(site: &'static str) -> bool {
+    #[cfg(ggfault)]
+    {
+        active::crossing(site)
+    }
+    #[cfg(not(ggfault))]
+    {
+        let _ = site;
+        false
+    }
+}
+
+/// Marker prefix for deliberate test panics (model-check / unit suites
+/// that panic inside contained jobs): payloads carrying it are
+/// silenced by [`quiet_panic_hook`].
+pub const EXPECTED_PANIC: &str = "[expected-test-panic]";
+
+/// Install (once) a panic hook that suppresses the default
+/// stderr-spew for *expected* panics — injected faults and payloads
+/// tagged [`EXPECTED_PANIC`] — while delegating everything else to
+/// the previous hook. Chaos and containment tests cross panics by the
+/// hundred; without this every one prints a backtrace banner.
+pub fn quiet_panic_hook() {
+    use std::sync::Once;
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            #[cfg(ggfault)]
+            if info.payload().downcast_ref::<active::InjectedFault>().is_some() {
+                return;
+            }
+            let expected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.contains(EXPECTED_PANIC))
+                .or_else(|| {
+                    info.payload().downcast_ref::<String>().map(|s| s.contains(EXPECTED_PANIC))
+                })
+                .unwrap_or(false);
+            if !expected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_dotted() {
+        for (i, s) in SITES.iter().enumerate() {
+            assert!(s.name.contains('.'), "{} is not a dotted path", s.name);
+            assert!(!s.what.is_empty());
+            for other in &SITES[i + 1..] {
+                assert_ne!(s.name, other.name, "duplicate site");
+            }
+        }
+    }
+
+    #[test]
+    fn sites_are_inert_without_a_plan() {
+        // In non-ggfault builds this is the whole story; under ggfault
+        // it checks the unarmed path.
+        for s in SITES {
+            point(s.name);
+            assert!(!injected(s.name));
+        }
+    }
+
+    #[cfg(ggfault)]
+    #[test]
+    fn plan_fires_exactly_the_nth_crossing() {
+        quiet_panic_hook();
+        let guard = FaultPlan { site: "scheduler.worker.copy", nth: 3 }.arm();
+        assert!(!injected("scheduler.worker.copy")); // crossing 1
+        point("scheduler.worker.work"); // other sites don't count
+        assert!(!injected("scheduler.worker.copy")); // crossing 2
+        assert!(!guard.fired());
+        let err = std::panic::catch_unwind(|| point("scheduler.worker.copy")).unwrap_err();
+        let fault = err.downcast_ref::<InjectedFault>().expect("typed payload");
+        assert_eq!(fault.site, "scheduler.worker.copy");
+        assert!(guard.fired());
+        // Crossings after the shot are clean again.
+        point("scheduler.worker.copy");
+        drop(guard);
+        // And a dropped guard fully disarms.
+        point("scheduler.worker.copy");
+    }
+
+    #[cfg(ggfault)]
+    #[test]
+    fn degrade_sites_report_instead_of_panicking() {
+        let guard = FaultPlan::first("scheduler.spawn").arm();
+        assert!(injected("scheduler.spawn"));
+        assert!(guard.fired());
+        assert!(!injected("scheduler.spawn"), "one-shot");
+    }
+}

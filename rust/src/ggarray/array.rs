@@ -17,9 +17,9 @@
 //! accrues on the owned simulation [`Clock`].
 
 use crate::insertion::{self, InsertionKind, InsertShape};
-use crate::sim::clock::{Category, Clock, Phase};
+use crate::sim::clock::{Category, Clock, ClockMark, Phase};
 use crate::sim::kernel::{self, KernelProfile};
-use crate::sim::memory::{OomError, VramHeap};
+use crate::sim::memory::{HeapMark, OomError, VramHeap};
 use crate::sim::spec::DeviceSpec;
 
 use super::index::PrefixIndex;
@@ -424,6 +424,38 @@ impl<T: Copy + Default> GgArray<T> {
         self.index.rebuild(std::iter::empty());
     }
 
+    // ---------- op-abort rollback (fault containment) ----------
+
+    /// Capture the cost state (clock + heap counters) before an op that
+    /// may abort. Pair with [`GgArray::rewind_costs`].
+    pub fn cost_marks(&self) -> (ClockMark, HeapMark) {
+        (self.clock.mark(), self.heap.mark())
+    }
+
+    /// Rewind the clock and heap counters to marks captured by
+    /// [`GgArray::cost_marks`]. Every allocation made since the marks
+    /// must already be freed (see [`VramHeap::restore_mark`]).
+    pub fn rewind_costs(&mut self, clock_mark: ClockMark, heap_mark: HeapMark) {
+        self.clock.rewind(clock_mark);
+        self.heap.restore_mark(heap_mark);
+    }
+
+    /// Abort path of a growth op: roll every block back to
+    /// `old_lens[b]`, freeing the buckets the op allocated and erasing
+    /// their CAS bookkeeping, then rebuild the prefix index *without*
+    /// charging — the caller rewinds to its pre-op cost marks right
+    /// after, which erases both the op's charges and the transient
+    /// `free` charges this method makes.
+    pub fn rollback_growth(&mut self, old_lens: &[usize]) {
+        assert_eq!(old_lens.len(), self.cfg.num_blocks, "rollback_growth lens mismatch");
+        for (v, &old) in self.vectors.iter_mut().zip(old_lens) {
+            if old < v.len() {
+                v.rollback_growth(old, &mut self.heap, &mut self.clock);
+            }
+        }
+        self.index.rebuild(self.vectors.iter().map(|v| v.len() as u64));
+    }
+
     /// Direct access for the flatten module / coordinator.
     pub(crate) fn parts_mut(&mut self) -> (&mut Vec<LfVector<T>>, &mut VramHeap, &mut Clock, &DeviceSpec, &GgConfig, &PrefixIndex) {
         (&mut self.vectors, &mut self.heap, &mut self.clock, &self.spec, &self.cfg, &self.index)
@@ -630,6 +662,33 @@ mod tests {
         let mut g = small();
         g.seal();
         let _ = g.insert_bulk(&[1u32], InsertionKind::WarpScan);
+    }
+
+    #[test]
+    fn rollback_growth_restores_array_byte_identically() {
+        let mut g = small();
+        g.insert_bulk(&(0..100u32).collect::<Vec<_>>(), InsertionKind::WarpScan).unwrap();
+        let old_lens: Vec<usize> = g.vectors().iter().map(|v| v.len()).collect();
+        let (len0, cap0, used0, t0) = (g.len(), g.capacity(), g.heap().used(), g.clock().now_us());
+        let (cm, hm) = g.cost_marks();
+        // A growth op that aborts mid-flight: some blocks extended.
+        for b in 0..4 {
+            g.push_bulk_uninit_to_block(b, 300).unwrap();
+        }
+        assert!(g.capacity() > cap0);
+        g.rollback_growth(&old_lens);
+        g.rewind_costs(cm, hm);
+        assert_eq!(g.len(), len0);
+        assert_eq!(g.capacity(), cap0);
+        assert_eq!(g.heap().used(), used0);
+        assert_eq!(g.clock().now_us(), t0);
+        for i in 0..len0 as u64 {
+            assert!(g.get(i).is_some(), "index coherent after rollback, i={i}");
+        }
+        assert_eq!(g.get(len0 as u64), None);
+        // The array keeps serving inserts after the abort.
+        g.insert_bulk(&vec![5u32; 50], InsertionKind::WarpScan).unwrap();
+        assert_eq!(g.len(), len0 + 50);
     }
 
     #[test]

@@ -407,6 +407,35 @@ impl<T: Copy + Default> LfVector<T> {
     pub fn cas_attempts(&self) -> u64 {
         self.cas_attempts
     }
+
+    /// Undo a single growth operation: truncate back to `old_len`, free
+    /// every bucket past `buckets_for(old_len)` and erase the CAS
+    /// bookkeeping those allocations charged, leaving the vector
+    /// byte-identical to before the growth.
+    ///
+    /// Sound because the coordinator keeps buckets exactly matched to
+    /// the length at op boundaries (`reserve` allocates precisely the
+    /// missing suffix, one CAS attempt per bucket; nothing pre-grows
+    /// excess buckets), so the freed tail *is* the set of buckets the
+    /// aborted op allocated. The `heap.free` clock charges this makes
+    /// are transient: the caller rewinds the clock to its op mark right
+    /// after (see `Shard::rollback_insert`).
+    pub fn rollback_growth(&mut self, old_len: usize, heap: &mut VramHeap, clock: &mut Clock) {
+        debug_assert!(old_len <= self.len, "rollback_growth to a longer length");
+        self.len = old_len;
+        let keep = self.buckets_for(old_len);
+        let mut freed = 0u64;
+        for b in keep..self.buckets.len() {
+            if let Some(bucket) = self.buckets[b].take() {
+                heap.free(bucket.alloc, clock);
+                self.isbucket[b] = false;
+                freed += 1;
+            }
+        }
+        self.buckets.truncate(keep);
+        self.isbucket.truncate(keep);
+        self.cas_attempts -= freed;
+    }
 }
 
 #[cfg(test)]
@@ -724,6 +753,39 @@ mod tests {
             e
         };
         drop(empty);
+    }
+
+    #[test]
+    fn rollback_growth_is_byte_identical() {
+        let (mut heap, mut clock) = fixture();
+        let mut v: LfVector<u32> = LfVector::new(4);
+        v.push_back_bulk(&(0..50).collect::<Vec<_>>(), &mut heap, &mut clock).unwrap();
+        let (len0, cap0, cas0, used0) = (v.len(), v.capacity(), v.cas_attempts(), heap.used());
+        let heap_mark = heap.mark();
+        let clock_mark = clock.mark();
+        let t0 = clock.now_us();
+        // A growth op that then aborts.
+        let r = v.push_bulk_uninit(500, &mut heap, &mut clock).unwrap();
+        v.write_range(r.start, &vec![9u32; 500]);
+        assert!(v.cas_attempts() > cas0);
+        v.rollback_growth(len0, &mut heap, &mut clock);
+        clock.rewind(clock_mark);
+        heap.restore_mark(heap_mark);
+        assert_eq!(v.len(), len0);
+        assert_eq!(v.capacity(), cap0);
+        assert_eq!(v.cas_attempts(), cas0, "op CAS bookkeeping erased");
+        assert_eq!(heap.used(), used0);
+        assert_eq!(clock.now_us(), t0);
+        for i in 0..50 {
+            assert_eq!(v.get(i), Some(i as u32), "pre-op data survives");
+        }
+        // Zero-growth rollback is a no-op.
+        let cas1 = v.cas_attempts();
+        v.rollback_growth(v.len(), &mut heap, &mut clock);
+        assert_eq!(v.cas_attempts(), cas1);
+        // The vector grows again cleanly after a rollback.
+        v.push_back_bulk(&[100, 101], &mut heap, &mut clock).unwrap();
+        assert_eq!(v.get(51), Some(101));
     }
 
     #[test]

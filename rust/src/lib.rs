@@ -129,6 +129,27 @@
 //!   `BENCH_frontend.json` via `benches/bench_frontend.rs`; see
 //!   EXPERIMENTS.md §Frontend).
 //!
+//! * **Panic-safe, self-healing coordinator** — every failure a
+//!   participant can suffer mid-operation becomes either a typed,
+//!   ledger-conserving abort or an invisible recovery. Scheduler
+//!   workers contain chunk panics with `catch_unwind` (monitor
+//!   counters restored, never poisoned), the in-flight op aborts with
+//!   a typed [`coordinator::request::ExecError`] and rolls back its
+//!   serially pre-charged sim/heap deltas byte-identically (clock and
+//!   heap marks + bucket-growth rollback — the PR 3 seal-abort
+//!   discipline extended to insert/work/flatten), and the group
+//!   respawns dead workers or permanently degrades (floor 1 ≡ serial,
+//!   ledgered as `worker_respawns`/`degraded_workers`/
+//!   `spawn_failures`). A coordinator-worker panic is caught at the
+//!   request boundary (`Response::Failed`), and a dead worker thread
+//!   surfaces as `ExecError::ServiceDown` / `Admission::Closed` on
+//!   every session — never a hang. All of it is driven by the
+//!   deterministic fault-injection framework in [`faults`]
+//!   (`--cfg ggfault`, zero-cost in release builds): named sites, a
+//!   per-test `FaultPlan` firing the Nth crossing, and a chaos suite
+//!   (`tests/chaos.rs`) enumerating every registered site × occurrence
+//!   × shard count × executor mode against the abort-or-byte-identical
+//!   contract. See EXPERIMENTS.md §Robustness.
 //! * **Machine-checked concurrency** — the coordinator's locks,
 //!   condvars, atomics, channels and threads all come from the
 //!   [`sync`] facade (std re-exports in normal builds). Under
@@ -165,6 +186,7 @@ pub mod baselines;
 pub mod checker;
 pub mod coordinator;
 pub mod experiments;
+pub mod faults;
 pub mod ggarray;
 pub mod insertion;
 pub mod runtime;

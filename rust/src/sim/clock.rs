@@ -98,6 +98,47 @@ impl Clock {
         self.now_us = 0.0;
         self.ledger.clear();
     }
+
+    /// Capture the full clock state (time + per-category totals) into a
+    /// `Copy` mark. Paired with [`Clock::rewind`] this gives aborted
+    /// operations a way to erase their pre-charged costs so the abort
+    /// is byte-identical to the operation never running.
+    pub fn mark(&self) -> ClockMark {
+        let mut totals = [0.0; Category::ALL.len()];
+        for (slot, cat) in totals.iter_mut().zip(Category::ALL) {
+            *slot = self.total(cat);
+        }
+        ClockMark { now_us: self.now_us, totals }
+    }
+
+    /// Rewind to a previously captured mark, erasing every charge made
+    /// since. Categories whose restored total is zero are removed from
+    /// the ledger entirely, so [`Clock::snapshot`] compares equal to a
+    /// clock that never charged them.
+    pub fn rewind(&mut self, mark: ClockMark) {
+        debug_assert!(self.now_us >= mark.now_us, "rewind to a future mark");
+        self.now_us = mark.now_us;
+        for (cat, &total) in Category::ALL.iter().zip(mark.totals.iter()) {
+            if total == 0.0 {
+                self.ledger.remove(cat);
+            } else {
+                self.ledger.insert(*cat, total);
+            }
+        }
+    }
+}
+
+/// A `Copy` snapshot of the full clock state, for op-abort rollback.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClockMark {
+    now_us: f64,
+    totals: [f64; Category::ALL.len()],
+}
+
+impl Default for ClockMark {
+    fn default() -> ClockMark {
+        ClockMark { now_us: 0.0, totals: [0.0; Category::ALL.len()] }
+    }
 }
 
 /// A scoped phase measurement: captures the clock at construction and
@@ -155,6 +196,24 @@ mod tests {
         c.reset();
         assert_eq!(c.now_us(), 0.0);
         assert_eq!(c.total(Category::Host), 0.0);
+    }
+
+    #[test]
+    fn mark_rewind_is_byte_identical() {
+        let mut c = Clock::new();
+        c.charge(Category::Memory, 10.0);
+        let baseline = c.clone();
+        let mark = c.mark();
+        c.charge(Category::Memory, 7.0);
+        c.charge(Category::Vmm, 3.0); // a category the baseline never charged
+        c.rewind(mark);
+        assert_eq!(c.now_us(), baseline.now_us());
+        assert_eq!(c.snapshot(), baseline.snapshot());
+        // The Vmm entry must be gone, not present-as-zero.
+        assert!(!c.snapshot().contains_key(&Category::Vmm));
+        // The clock stays usable after a rewind.
+        c.charge(Category::Launch, 1.0);
+        assert_eq!(c.now_us(), 11.0);
     }
 
     #[test]

@@ -182,6 +182,46 @@ impl VramHeap {
     pub fn reset_peak(&mut self) {
         self.peak = self.used;
     }
+
+    /// Capture the observable heap counters into a `Copy` mark for
+    /// op-abort rollback. `next_id` is deliberately *not* captured: it
+    /// is internal allocator state invisible to every accessor, and
+    /// never reusing ids keeps stale [`AllocId`]s detectably dead.
+    pub fn mark(&self) -> HeapMark {
+        HeapMark {
+            used: self.used,
+            peak: self.peak,
+            alloc_calls: self.alloc_calls,
+            free_calls: self.free_calls,
+        }
+    }
+
+    /// Restore the counters captured by [`VramHeap::mark`]. The caller
+    /// must already have freed every allocation made since the mark
+    /// (the `allocs` map is keyed state that cannot be blindly reset);
+    /// this then erases the alloc/free call traffic and the peak
+    /// excursion so the abort is byte-identical to the op never
+    /// running.
+    pub fn restore_mark(&mut self, mark: HeapMark) {
+        debug_assert_eq!(
+            self.used, mark.used,
+            "restore_mark with live bytes differing from the mark — free op allocations first"
+        );
+        self.used = mark.used;
+        self.peak = mark.peak;
+        self.alloc_calls = mark.alloc_calls;
+        self.free_calls = mark.free_calls;
+    }
+}
+
+/// A `Copy` snapshot of a heap's observable counters, for op-abort
+/// rollback (see [`VramHeap::mark`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HeapMark {
+    used: u64,
+    peak: u64,
+    alloc_calls: u64,
+    free_calls: u64,
 }
 
 #[cfg(test)]
@@ -309,6 +349,29 @@ mod tests {
         assert_eq!(src.size_of(id), Some(400));
         assert_eq!(dst.used(), 300);
         assert_eq!(dst.size_of(resident), Some(300));
+    }
+
+    #[test]
+    fn mark_restore_erases_op_traffic() {
+        let (mut h, mut c) = heap();
+        let keep = h.alloc(700, &mut c).unwrap();
+        let mark = h.mark();
+        // Simulated op: allocate, then abort by freeing and restoring.
+        let a = h.alloc(500, &mut c).unwrap();
+        let b = h.alloc(900, &mut c).unwrap();
+        h.free(a, &mut c);
+        h.free(b, &mut c);
+        h.restore_mark(mark);
+        assert_eq!(h.used(), 700);
+        assert_eq!(h.peak(), 700);
+        assert_eq!(h.alloc_calls(), 1);
+        assert_eq!(h.free_calls(), 0);
+        assert_eq!(h.size_of(keep), Some(700));
+        // The heap stays usable, and stale op ids stay dead.
+        let later = h.alloc(100, &mut c).unwrap();
+        assert_ne!(later, a);
+        assert_ne!(later, b);
+        assert_eq!(h.used(), 800);
     }
 
     #[test]

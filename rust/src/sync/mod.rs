@@ -27,6 +27,17 @@ pub use sendptr::{SendPtr, SendSlice, SendSliceMut};
 /// flavors use `std`'s.
 pub use std::sync::Arc;
 
+/// Poison-tolerant lock: take the mutex, recovering the guard when a
+/// previous holder panicked. The coordinator contains worker panics
+/// with `catch_unwind` and restores its monitor invariants on the
+/// containment path, so a poisoned flag carries no extra information —
+/// propagating it would only cascade one contained panic into every
+/// later metrics/frontend read. All non-test `lock()` calls in
+/// `coordinator/` go through this (lint rule X enforces it).
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 #[cfg(ggcheck)]
 pub mod model;
 

@@ -117,14 +117,16 @@ fn steady_state_insert_dispatch_is_allocation_free() {
     // arena buffers, deque capacity and the clock ledgers.
     for seq in 0..80u64 {
         let out =
-            dispatch_insert_pooled(&sched, &mut shards, bps, Policy::Even, seq, &values, &mut scratch);
+            dispatch_insert_pooled(&sched, &mut shards, bps, Policy::Even, seq, &values, &mut scratch)
+                .unwrap();
         assert_eq!(out.applied, 1024);
         assert!(out.oom.is_none());
     }
     let before = CountingAlloc::allocations();
     for seq in 80..96u64 {
         let out =
-            dispatch_insert_pooled(&sched, &mut shards, bps, Policy::Even, seq, &values, &mut scratch);
+            dispatch_insert_pooled(&sched, &mut shards, bps, Policy::Even, seq, &values, &mut scratch)
+                .unwrap();
         assert_eq!(out.applied, 1024);
     }
     let delta = CountingAlloc::allocations() - before;
@@ -145,10 +147,10 @@ fn steady_state_insert_dispatch_is_allocation_free() {
     // `run_work` snapshotted a per-call `Vec<bool>` activity mask; the
     // scheduler decides per shard at injection time instead.
     // ------------------------------------------------------------------
-    sched.run_work(&mut shards, None, 4); // warm the work chunk path
+    sched.run_work(&mut shards, None, 4).unwrap(); // warm the work chunk path
     let before = CountingAlloc::allocations();
     for _ in 0..16 {
-        assert_eq!(sched.run_work(&mut shards, None, 4), 0);
+        assert_eq!(sched.run_work(&mut shards, None, 4).unwrap(), 0);
     }
     let delta = CountingAlloc::allocations() - before;
     assert_eq!(

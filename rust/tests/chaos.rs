@@ -1,0 +1,480 @@
+//! Chaos suite: deterministic fault injection across every registered
+//! fault site (`ggarray::faults::SITES`).
+//!
+//! Build-gated: the whole file compiles to nothing without
+//! `RUSTFLAGS='--cfg ggfault'` (ci.sh's chaos stage sets it — the
+//! distinct flags fingerprint makes this a one-off rebuild, exactly
+//! like the `ggcheck` model-check stage).
+//!
+//! The contract, per site × firing (see EXPERIMENTS.md §Robustness):
+//!
+//! * **Abort** sites — the in-flight op fails with a typed
+//!   [`ExecError`] (or is silently absorbed by a fire-and-forget
+//!   drain), the simulated ledger rolls back byte-identically, the
+//!   conservation invariant `len == elements_inserted` holds, and every
+//!   subsequent request succeeds. The one documented exception to byte
+//!   identity is `Work` numerics on shards whose chunk completed before
+//!   the panic (sequential f32 adds cannot be exactly reversed); the
+//!   ledger still rewinds fully.
+//! * **Degrade** sites — no error surfaces at all: the scheduler group
+//!   runs with fewer workers (floor 1) and every observable result is
+//!   byte-identical to the fault-free run, with the loss recorded in
+//!   the `degraded_workers` / `spawn_failures` ledger.
+//! * **Fatal** sites — the service worker dies; every subsequent call
+//!   observes the typed `Failed(ServiceDown)` and sessions observe
+//!   `Admission::Closed` with the payload handed back. Never a hang.
+//! * A plan that never fires (nth beyond the run's crossings, or a
+//!   scheduler site under serial execution) must leave the run
+//!   byte-identical to the fault-free oracle.
+//!
+//! Fault plans are process-wide one-at-a-time slots, and an armed
+//! plan's crossing counter would be perturbed by *any* concurrently
+//! running coordinator — so every test body holds the file-local
+//! `EXCLUSIVE` mutex, making the suite deterministic at any
+//! `--test-threads` setting.
+//!
+//! Tests named `smoke_*` form the quick subset run by `ci.sh --quick`.
+#![cfg(ggfault)]
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use ggarray::coordinator::request::{checksum, Admission, ExecError, Request, Response};
+use ggarray::coordinator::router::{DispatchScratch, Policy};
+use ggarray::coordinator::scheduler::{PhaseAbort, Scheduler};
+use ggarray::coordinator::service::{
+    dispatch_insert_pooled, Coordinator, CoordinatorConfig,
+};
+use ggarray::coordinator::shard::{Shard, ShardConfig};
+use ggarray::coordinator::batcher::BatchConfig;
+use ggarray::coordinator::metrics::MetricsSnapshot;
+use ggarray::faults::{self, FaultPlan, SiteKind, SITES};
+use ggarray::insertion::InsertionKind;
+use ggarray::sim::spec::DeviceSpec;
+use ggarray::workload::synth_f32;
+
+/// Serialises test bodies: the fault injector is a process-wide slot
+/// and crossing counts must not see another test's coordinators.
+static EXCLUSIVE: Mutex<()> = Mutex::new(());
+
+fn exclusive() -> MutexGuard<'static, ()> {
+    EXCLUSIVE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------
+// Scheduler-level byte-identity: a panic-aborted phase must leave the
+// shards indistinguishable from the op never having been dispatched.
+// ---------------------------------------------------------------------
+
+fn build_shards(shard_count: usize, blocks_per_shard: usize) -> Vec<Shard> {
+    (0..shard_count)
+        .map(|id| {
+            Shard::new(ShardConfig {
+                id,
+                blocks: blocks_per_shard,
+                first_bucket_size: 1 << 10,
+                insertion: InsertionKind::WarpScan,
+                device: DeviceSpec::a100(),
+                heap_bytes: 1 << 30,
+            })
+        })
+        .collect()
+}
+
+/// Full per-shard fingerprint: length, allocation accounting, heap
+/// residency, simulated-clock bit pattern and a content checksum.
+fn fingerprint(shards: &[Shard]) -> Vec<(usize, u64, u64, u64, u64)> {
+    shards
+        .iter()
+        .map(|s| {
+            let data: Vec<f32> = (0..s.len() as u64).map(|i| s.get(i).unwrap()).collect();
+            (s.len(), s.allocated_bytes(), s.heap_used(), s.sim_now_us().to_bits(), checksum(&data))
+        })
+        .collect()
+}
+
+/// Ledger-only fingerprint (no content): what `Work`'s abort contract
+/// guarantees — completed chunks' f32 updates are the documented
+/// byte-identity exception.
+fn ledger_fingerprint(shards: &[Shard]) -> Vec<(usize, u64, u64, u64)> {
+    shards
+        .iter()
+        .map(|s| (s.len(), s.allocated_bytes(), s.heap_used(), s.sim_now_us().to_bits()))
+        .collect()
+}
+
+fn batch(seed: u64) -> Vec<f32> {
+    (0..256u64).map(|i| synth_f32(seed * 256 + i)).collect()
+}
+
+#[test]
+fn smoke_insert_abort_rolls_back_byte_identically() {
+    let _x = exclusive();
+    faults::quiet_panic_hook();
+    let values: Vec<f32> = (0..1024u64).map(synth_f32).collect();
+    let mut a = build_shards(4, 1);
+    let mut b = build_shards(4, 1);
+    let sched_a = Scheduler::new(2);
+    let sched_b = Scheduler::new(2);
+    let mut scr_a = DispatchScratch::new();
+    let mut scr_b = DispatchScratch::new();
+    for seq in 0..8u64 {
+        dispatch_insert_pooled(&sched_a, &mut a, 1, Policy::Even, seq, &values, &mut scr_a)
+            .unwrap();
+        dispatch_insert_pooled(&sched_b, &mut b, 1, Policy::Even, seq, &values, &mut scr_b)
+            .unwrap();
+    }
+    assert_eq!(fingerprint(&a), fingerprint(&b), "twins diverged before any fault");
+
+    // Kill the first fill chunk of the next batch on the faulted twin.
+    let pre = fingerprint(&b);
+    let guard = FaultPlan::first("scheduler.worker.fill").arm();
+    let err = dispatch_insert_pooled(&sched_b, &mut b, 1, Policy::Even, 8, &values, &mut scr_b)
+        .unwrap_err();
+    assert!(guard.fired(), "pooled dispatch must cross the fill site");
+    drop(guard);
+    assert!(
+        matches!(err, ExecError::ChunkPanic { op: "insert", chunks } if chunks >= 1),
+        "unexpected abort error: {err:?}"
+    );
+    assert_eq!(
+        fingerprint(&b),
+        pre,
+        "panic-aborted insert must roll back byte-identically (len, heap, clock, content)"
+    );
+    // The dead worker was healed (respawned), not leaked.
+    assert!(sched_b.counters().worker_respawns >= 1, "panicked worker was not respawned");
+
+    // Replaying the same batch fault-free reconverges the twins exactly.
+    dispatch_insert_pooled(&sched_a, &mut a, 1, Policy::Even, 8, &values, &mut scr_a).unwrap();
+    dispatch_insert_pooled(&sched_b, &mut b, 1, Policy::Even, 8, &values, &mut scr_b).unwrap();
+    assert_eq!(fingerprint(&a), fingerprint(&b), "retry after abort must be byte-identical");
+    assert_eq!(a[0].get(0), Some(synth_f32(0)));
+}
+
+#[test]
+fn work_abort_rewinds_the_precharged_ledger() {
+    let _x = exclusive();
+    faults::quiet_panic_hook();
+    let values: Vec<f32> = (0..1024u64).map(synth_f32).collect();
+    let mut shards = build_shards(4, 1);
+    let sched = Scheduler::new(2);
+    let mut scr = DispatchScratch::new();
+    for seq in 0..4u64 {
+        dispatch_insert_pooled(&sched, &mut shards, 1, Policy::Even, seq, &values, &mut scr)
+            .unwrap();
+    }
+    let pre = ledger_fingerprint(&shards);
+    let guard = FaultPlan::first("scheduler.worker.work").arm();
+    let err = sched.run_work(&mut shards, None, 8).unwrap_err();
+    assert!(guard.fired());
+    drop(guard);
+    assert!(matches!(err, ExecError::ChunkPanic { op: "work", .. }));
+    // The serial pre-charge was rewound on every shard: the simulated
+    // ledger reads as if the call never ran. (Content is exempt —
+    // completed chunks' f32 updates are not reversible.)
+    assert_eq!(ledger_fingerprint(&shards), pre, "work abort must rewind the rw_b pre-charges");
+    // And the next call goes through.
+    sched.run_work(&mut shards, None, 8).unwrap();
+}
+
+#[test]
+fn gather_abort_leaves_the_store_untouched() {
+    let _x = exclusive();
+    faults::quiet_panic_hook();
+    let values: Vec<f32> = (0..1024u64).map(synth_f32).collect();
+    let mut shards = build_shards(4, 1);
+    let sched = Scheduler::new(2);
+    let mut scr = DispatchScratch::new();
+    for seq in 0..4u64 {
+        dispatch_insert_pooled(&sched, &mut shards, 1, Policy::Even, seq, &values, &mut scr)
+            .unwrap();
+    }
+    let live: usize = shards.iter().map(|s| s.len()).sum();
+    let mut dst = vec![0.0f32; live];
+    scr.fill_gather_ranges(shards.iter().map(|s| s.len()));
+
+    let pre = fingerprint(&shards);
+    let guard = FaultPlan::first("scheduler.worker.copy").arm();
+    let err = sched.run_flatten_temp(&mut shards, &mut dst, &scr.gather_ranges).unwrap_err();
+    assert!(guard.fired());
+    drop(guard);
+    assert!(matches!(err, PhaseAbort::Panic(ExecError::ChunkPanic { op: "flatten", .. })));
+    // Gather chunks only read shard state; the charge marks were
+    // rewound, so the full fingerprint (content included) is intact.
+    assert_eq!(fingerprint(&shards), pre, "gather abort must leave the store byte-identical");
+
+    // The fault-free retry fills the snapshot completely.
+    sched.run_flatten_temp(&mut shards, &mut dst, &scr.gather_ranges).unwrap();
+    let mut expect = Vec::with_capacity(live);
+    for s in &shards {
+        expect.extend((0..s.len() as u64).map(|i| s.get(i).unwrap()));
+    }
+    assert_eq!(checksum(&dst), checksum(&expect), "retried gather produced wrong bytes");
+}
+
+// ---------------------------------------------------------------------
+// Service-level chaos matrix: every registered site × first/second
+// crossing × 1/4 shards × serial/scheduled execution, driven through
+// the public request API against a fault-free oracle.
+// ---------------------------------------------------------------------
+
+fn cfg(shards: usize, executor_threads: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        device: DeviceSpec::a100(),
+        blocks: 8,
+        first_bucket_size: 1 << 10,
+        insertion: InsertionKind::WarpScan,
+        routing: Policy::Even,
+        // One synchronous Insert == one flushed batch: faults inside the
+        // dispatch surface on the very request that carried the values.
+        batch: BatchConfig { max_values: 256, max_delay: Duration::from_secs(3600) },
+        use_artifacts: false,
+        work_iters: 8,
+        heap_capacity: Some(16 << 20),
+        epoch_heap: Some(8 << 20),
+        shards,
+        compact_segments: 4,
+        executor_threads,
+        frontend: Default::default(),
+    }
+}
+
+/// One observable step outcome, reduced to its deterministic fields
+/// (f64 costs compared as bit patterns; wall-clock fields dropped).
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Step {
+    Inserted { count: u64, len: u64 },
+    Worked { calls: u32, sim: u64, device: u64, pjrt: u64 },
+    Flattened { len: u64, sim: u64, device: u64, checksum: u64 },
+    Sealed { epoch: u64, epoch_len: u64, sealed_len: u64, segments: usize, sim: u64, checksum: u64 },
+    Value(Option<u32>),
+    Stats { len: u64, inserted: u64, seals: u64, flattens: u64, queries: u64, errors: u64, sim_insert: u64, sim_work: u64, sim_flatten: u64 },
+    Failed(ExecError),
+    Error(String),
+    Other,
+}
+
+fn reduce(resp: Response) -> Step {
+    match resp {
+        Response::Inserted { count, len, .. } => Step::Inserted { count, len },
+        Response::Worked { calls, sim_us, device_us, pjrt_executions } => Step::Worked {
+            calls,
+            sim: sim_us.to_bits(),
+            device: device_us.to_bits(),
+            pjrt: pjrt_executions,
+        },
+        Response::Flattened { len, sim_us, device_us, checksum } => {
+            Step::Flattened { len, sim: sim_us.to_bits(), device: device_us.to_bits(), checksum }
+        }
+        Response::Sealed { epoch, epoch_len, sealed_len, sealed_segments, sim_us, checksum, .. } => {
+            Step::Sealed {
+                epoch,
+                epoch_len,
+                sealed_len,
+                segments: sealed_segments,
+                sim: sim_us.to_bits(),
+                checksum,
+            }
+        }
+        Response::Value(v) => Step::Value(v.map(f32::to_bits)),
+        Response::Stats(s) => Step::Stats {
+            len: s.len,
+            inserted: s.elements_inserted,
+            seals: s.seals,
+            flattens: s.flattens,
+            queries: s.queries,
+            errors: s.errors,
+            sim_insert: s.sim_insert_ms.to_bits(),
+            sim_work: s.sim_work_ms.to_bits(),
+            sim_flatten: s.sim_flatten_ms.to_bits(),
+        },
+        Response::Failed(e) => Step::Failed(e),
+        Response::Error(msg) => Step::Error(msg),
+        _ => Step::Other,
+    }
+}
+
+/// The fixed request script every matrix cell runs: inserts, work, two
+/// seals (copy chunks cross twice), a flatten snapshot, point queries
+/// and a stats read — 12 calls, all synchronous.
+fn run_script(c: &Coordinator) -> Vec<Step> {
+    let mut trace = Vec::new();
+    for seed in 0..4u64 {
+        trace.push(reduce(c.call(Request::Insert { values: batch(seed) })));
+    }
+    trace.push(reduce(c.call(Request::Work { calls: 2 })));
+    trace.push(reduce(c.call(Request::Seal)));
+    for seed in 4..6u64 {
+        trace.push(reduce(c.call(Request::Insert { values: batch(seed) })));
+    }
+    trace.push(reduce(c.call(Request::Flatten)));
+    trace.push(reduce(c.call(Request::Seal)));
+    trace.push(reduce(c.call(Request::Query { index: 0 })));
+    trace.push(reduce(c.call(Request::Query { index: 700 })));
+    trace.push(reduce(c.call(Request::Stats)));
+    trace
+}
+
+/// Post-fault probes: the store must keep serving after any contained
+/// fault. Returns the final snapshot for ledger assertions.
+fn probe_recovery(c: &Coordinator, site: &'static str, nth: u64) -> MetricsSnapshot {
+    let r = c.call(Request::Insert { values: batch(99) });
+    assert!(
+        matches!(r, Response::Inserted { count: 256, .. }),
+        "[{site} nth={nth}] post-fault insert failed: {r:?}"
+    );
+    let r = c.call(Request::Seal);
+    assert!(matches!(r, Response::Sealed { .. }), "[{site} nth={nth}] post-fault seal failed: {r:?}");
+    let r = c.call(Request::Query { index: 0 });
+    assert!(
+        matches!(r, Response::Value(Some(_))),
+        "[{site} nth={nth}] post-fault query failed: {r:?}"
+    );
+    match c.call(Request::Stats) {
+        Response::Stats(s) => s,
+        other => panic!("[{site} nth={nth}] post-fault stats failed: {other:?}"),
+    }
+}
+
+#[test]
+fn chaos_matrix_every_site_upholds_its_contract() {
+    let _x = exclusive();
+    faults::quiet_panic_hook();
+    for &(shards, execs) in &[(1usize, 1usize), (1, 4), (4, 1), (4, 4)] {
+        let config = cfg(shards, execs);
+        // Fault-free oracle for this geometry (no plan armed).
+        let oracle = {
+            let c = Coordinator::start(config.clone());
+            let t = run_script(&c);
+            c.shutdown();
+            t
+        };
+        assert!(
+            !oracle.iter().any(|s| matches!(s, Step::Failed(_) | Step::Error(_))),
+            "oracle run must be clean ({shards} shards, {execs} executors): {oracle:?}"
+        );
+
+        for site in SITES {
+            for nth in [1u64, 2] {
+                // Arm before construction: Degrade sites cross during the
+                // scheduler's startup spawns.
+                let guard = FaultPlan { site: site.name, nth }.arm();
+                let c = Coordinator::start(config.clone());
+                let trace = run_script(&c);
+                let fired = guard.fired();
+                drop(guard); // disarm before the recovery probes
+
+                let tag = format!(
+                    "site={} nth={nth} shards={shards} execs={execs} fired={fired}",
+                    site.name
+                );
+                match (fired, site.kind) {
+                    (false, _) => {
+                        // Arm (b): an unfired plan must not perturb a bit.
+                        assert_eq!(trace, oracle, "[{tag}] unfired plan changed the trace");
+                    }
+                    (true, SiteKind::Degrade) => {
+                        // No error surfaces; results byte-identical; the
+                        // lost worker is ledgered.
+                        assert_eq!(trace, oracle, "[{tag}] degraded run diverged from oracle");
+                        let s = probe_recovery(&c, site.name, nth);
+                        assert!(
+                            s.degraded_workers >= 1 && s.spawn_failures >= 1,
+                            "[{tag}] degrade not ledgered: {} degraded, {} spawn failures",
+                            s.degraded_workers,
+                            s.spawn_failures
+                        );
+                    }
+                    (true, SiteKind::Abort) => {
+                        // At most one request observes the typed error
+                        // (a fault inside a barrier drain is absorbed and
+                        // only ledgered); everything else must succeed.
+                        let failed = trace
+                            .iter()
+                            .filter(|s| matches!(s, Step::Failed(_)))
+                            .count();
+                        assert!(failed <= 1, "[{tag}] more than one failed step: {trace:?}");
+                        assert!(
+                            !trace.iter().any(|s| matches!(s, Step::Error(_))),
+                            "[{tag}] untyped error leaked: {trace:?}"
+                        );
+                        let s = probe_recovery(&c, site.name, nth);
+                        assert!(s.errors >= 1, "[{tag}] abort not ledgered in errors");
+                        // Conservation: every resident element was counted
+                        // applied, every aborted batch fully rolled back.
+                        assert_eq!(
+                            s.len, s.elements_inserted,
+                            "[{tag}] ledger conservation broken: len {} vs inserted {}",
+                            s.len, s.elements_inserted
+                        );
+                    }
+                    (true, SiteKind::Fatal) => {
+                        // The worker died mid-script: from the first
+                        // ServiceDown on, every call reports it (never a
+                        // hang — `Client::call` is probed by the script
+                        // itself) and sessions close with payload back.
+                        let first_down = trace
+                            .iter()
+                            .position(|s| matches!(s, Step::Failed(ExecError::ServiceDown)))
+                            .unwrap_or_else(|| panic!("[{tag}] no ServiceDown in {trace:?}"));
+                        for (i, step) in trace.iter().enumerate().skip(first_down) {
+                            assert!(
+                                matches!(step, Step::Failed(ExecError::ServiceDown)),
+                                "[{tag}] step {i} after worker death was {step:?}"
+                            );
+                        }
+                        assert!(
+                            matches!(c.call(Request::Stats), Response::Failed(ExecError::ServiceDown)),
+                            "[{tag}] dead service answered stats"
+                        );
+                        let mut sess = c.session();
+                        let payload = batch(7);
+                        match sess.try_insert(payload.clone()) {
+                            Admission::Closed { values } => assert_eq!(values, payload),
+                            other => panic!("[{tag}] session on dead service: {other:?}"),
+                        }
+                    }
+                }
+                c.shutdown();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Acceptance criterion, end to end: a mid-chunk worker panic aborts the
+// in-flight op with a typed error and the store keeps serving.
+// ---------------------------------------------------------------------
+
+#[test]
+fn smoke_mid_chunk_panic_store_keeps_serving() {
+    let _x = exclusive();
+    faults::quiet_panic_hook();
+    let c = Coordinator::start(cfg(4, 4));
+    for seed in 0..4u64 {
+        let r = c.call(Request::Insert { values: batch(seed) });
+        assert!(matches!(r, Response::Inserted { count: 256, .. }), "warm insert failed: {r:?}");
+    }
+
+    let guard = FaultPlan::first("scheduler.worker.fill").arm();
+    let r = c.call(Request::Insert { values: batch(4) });
+    assert!(guard.fired(), "scheduled insert dispatch must cross the fill site");
+    drop(guard);
+    assert!(
+        matches!(r, Response::Failed(ExecError::ChunkPanic { op: "insert", .. })),
+        "faulted insert response: {r:?}"
+    );
+
+    // Subsequent Insert / Seal / Query all succeed, and the ledger shows
+    // exactly one aborted batch: 5 batches accepted, 4 + 1 post-fault
+    // applied, len == elements_inserted.
+    let s = probe_recovery(&c, "scheduler.worker.fill", 1);
+    assert_eq!(s.len, 5 * 256, "one batch aborted, five landed");
+    assert_eq!(s.len, s.elements_inserted);
+    assert_eq!(s.errors, 1);
+    assert!(s.worker_respawns >= 1, "panicked scheduler worker was not respawned");
+    let r = c.call(Request::Query { index: s.len - 1 });
+    assert!(matches!(r, Response::Value(Some(_))));
+    c.shutdown();
+}

@@ -11,17 +11,23 @@
 //! replayable seed; `failure_seed_replays_deterministically` proves the
 //! seed → schedule round trip on a deliberately racy model.
 //!
-//! Three protocols are checked, mirroring the crate's real
+//! Four protocols are checked, mirroring the crate's real
 //! concurrency surface:
 //!
 //! 1. the work-stealing scheduler's park/unpark/steal/termination
 //!    protocol on its shared monitor (no lost wakeup, termination only
 //!    when the bucket is drained AND every worker is parked, and
 //!    steal order never reorders per-slot results),
-//! 2. the admission window's shed path (a `Rejected` admission rolls
+//! 2. the scheduler's panic containment: a job payload that panics
+//!    kills its worker but never the phase — termination re-anchors on
+//!    the shrunk live set (`parked == live`), the survivors (or the
+//!    coordinator's inline floor-1 drain) finish the bucket, `finish`
+//!    heals the group, and the respawned worker still receives the
+//!    next phase's wakeup — in every interleaving,
+//! 3. the admission window's shed path (a `Rejected` admission rolls
 //!    back the pooled-values gauge and consumes no sequence number
 //!    under every interleaving),
-//! 3. the `AtBarrier` drain order (client-id ascending, per-client
+//! 4. the `AtBarrier` drain order (client-id ascending, per-client
 //!    FIFO, independent of admission timing).
 
 use ggarray::checker::{self, Config};
@@ -132,7 +138,88 @@ fn scheduler_drop_while_idle_never_hangs() {
     assert!(report.complete);
 }
 
-// ---------------- protocol 2: admission shed rollback ----------------
+// ------------ protocol 2: panic containment and healing ------------
+
+#[test]
+fn contained_panic_drains_inline_and_heals_lone_worker() {
+    // The lone worker dies on the poison job, so the group hits the
+    // floor-1 case mid-phase: `finish` must observe `live == 0`, drain
+    // the surviving chunk inline on the coordinator thread, terminate,
+    // and heal. A termination check still comparing `parked` against
+    // the spawn-time worker count (instead of `live`) would hang here,
+    // which the checker reports as a stuck schedule.
+    let report = checker::check("scheduler-panic-inline-drain", &Config::default(), || {
+        ggarray::faults::quiet_panic_hook();
+        let good = Arc::new(AtomicUsize::new(0));
+        let sink = Arc::clone(&good);
+        let group = WorkerGroup::new(1, move |j: usize| {
+            if j == 0 {
+                panic!("{} poison chunk", ggarray::faults::EXPECTED_PANIC);
+            }
+            sink.fetch_add(j, Ordering::SeqCst);
+        });
+        let mut phase = group.phase();
+        phase.inject(0);
+        phase.inject(7);
+        let report = phase.finish();
+        assert_eq!(report.failed, 1, "exactly the poison chunk fails");
+        assert_eq!(good.load(Ordering::SeqCst), 7, "surviving chunk must still execute");
+        // Healed: the respawned worker serves the next phase, so its
+        // park/wakeup handshake must be live again.
+        let mut phase = group.phase();
+        phase.inject(5);
+        assert!(phase.finish().ok());
+        assert_eq!(good.load(Ordering::SeqCst), 12);
+        drop(group);
+    })
+    .unwrap_or_else(|failure| panic!("{failure}"));
+    assert!(report.complete, "inline-drain exploration must exhaust its schedules");
+    assert!(report.schedules >= 2);
+}
+
+#[test]
+fn contained_panic_with_survivor_terminates_and_heals() {
+    // Two workers, one poison job: whichever worker pops (or steals) it
+    // dies mid-phase. Termination must re-anchor on the shrunk live set
+    // (`pending == 0 && parked == live`) — against the spawn count the
+    // phase could never end; against a stale pending the phase could
+    // end with the good job still queued. Both are schedule-dependent
+    // bugs, so the assertion must hold in EVERY interleaving of pops,
+    // steals, the death, and the survivor's park.
+    let report = checker::check(
+        "scheduler-panic-survivor",
+        &Config { max_schedules: 500_000, ..Config::default() },
+        || {
+            ggarray::faults::quiet_panic_hook();
+            let good = Arc::new(AtomicUsize::new(0));
+            let sink = Arc::clone(&good);
+            let group = WorkerGroup::new(2, move |j: usize| {
+                if j == 0 {
+                    panic!("{} poison chunk", ggarray::faults::EXPECTED_PANIC);
+                }
+                sink.fetch_add(j, Ordering::SeqCst);
+            });
+            let mut phase = group.phase();
+            phase.inject(0);
+            phase.inject(3);
+            let report = phase.finish();
+            assert_eq!(report.failed, 1, "exactly the poison chunk fails");
+            assert_eq!(good.load(Ordering::SeqCst), 3, "the good chunk always lands");
+            // `finish` healed the group: the next phase's wakeup must
+            // reach the respawned worker as well as the survivor.
+            let mut phase = group.phase();
+            phase.inject(4);
+            assert!(phase.finish().ok());
+            assert_eq!(good.load(Ordering::SeqCst), 7);
+            drop(group);
+        },
+    )
+    .unwrap_or_else(|failure| panic!("{failure}"));
+    assert!(report.complete, "survivor-containment exploration must exhaust its schedules");
+    assert!(report.schedules >= 2);
+}
+
+// ---------------- protocol 3: admission shed rollback ----------------
 
 #[test]
 fn admission_shed_rollback_under_all_interleavings() {
@@ -190,7 +277,7 @@ fn admission_shed_rollback_under_all_interleavings() {
     assert!(report.schedules >= 2);
 }
 
-// ---------------- protocol 3: AtBarrier drain order ----------------
+// ---------------- protocol 4: AtBarrier drain order ----------------
 
 #[test]
 fn at_barrier_drain_orders_clients_ascending_fifo() {
