@@ -25,7 +25,12 @@ cargo run -q --bin lint
 if [[ "${1:-}" == "--quick" ]]; then
     echo "== chaos (quick): fault-injection smoke subset (--cfg ggfault) =="
     # The smoke_ tests only: mid-chunk worker panic → typed error, byte-
-    # identical rollback, self-healing respawn, store keeps serving.
+    # identical rollback, self-healing respawn, store keeps serving —
+    # plus the supervisor failover (worker loop death → respawn + exactly-
+    # once replay, session never sees Closed), the straggler steal-around
+    # (25ms Delay stall on one worker → siblings steal its chunks,
+    # steal ledger grows), and the composed-fault smokes (panic during
+    # heal, fault during degraded inline drain).
     RUSTFLAGS='--cfg ggfault' cargo test -q --test chaos smoke_
     echo "ci.sh --quick: tier-1 + lint + chaos smoke green, skipping full runs"
     exit 0
@@ -38,9 +43,12 @@ echo "== model check: exhaustive bounded interleavings (--cfg ggcheck) =="
 # (no lost wakeups on the shared monitor, termination only when the
 # bucket is drained AND every worker is parked, steal order never
 # reordering per-slot commits, shutdown racing first park), the
-# admission shed/rollback path, and the AtBarrier drain order;
-# failures print a replayable schedule seed. The distinct RUSTFLAGS
-# fingerprint makes this a one-off rebuild.
+# admission shed/rollback path, the AtBarrier drain order, and the
+# service supervisor's detect→respawn→replay handshake (every request
+# acked exactly once across a loop death, no matter how the clients'
+# sends interleave with the failover); failures print a replayable
+# schedule seed. The distinct RUSTFLAGS fingerprint makes this a
+# one-off rebuild.
 RUSTFLAGS='--cfg ggcheck' cargo test -q --test model_check
 
 echo "== chaos: deterministic fault injection, full site matrix (--cfg ggfault) =="
@@ -49,9 +57,13 @@ echo "== chaos: deterministic fault injection, full site matrix (--cfg ggfault) 
 # first/second crossing × 1/4 shards × serial/scheduled execution,
 # checked against a fault-free oracle — typed errors only, byte-
 # identical ledger rollback, self-healing worker respawns, degraded
-# groups still byte-identical, dead service → ServiceDown/Closed
-# (never a hang). See EXPERIMENTS.md §Robustness for the contract.
-# The distinct RUSTFLAGS fingerprint makes this a one-off rebuild.
+# groups still byte-identical, supervised service failover (restart +
+# exactly-once replay, never ServiceDown for live sessions), Delay
+# stalls surfacing in the p99/max latency ledger while stragglers are
+# stolen around, and composed multi-step plans (FaultPlan::then) —
+# panic-during-heal, fault-during-degraded-drain, double failover.
+# See EXPERIMENTS.md §Robustness for the contract. The distinct
+# RUSTFLAGS fingerprint makes this a one-off rebuild.
 RUSTFLAGS='--cfg ggfault' cargo test -q --test chaos
 
 echo "== clippy: -D warnings (curated allows) =="
@@ -124,7 +136,10 @@ echo "== smoke: hot-path bench (BENCH_hotpath.json + wall-clock gates) =="
 #     (needs no baseline),
 #   * the skewed-routing speedup fails to beat the old fork/join pool's
 #     max-shard bound of 4/3× (the work-stealing payoff gate — needs no
-#     baseline, demoted to a notice below 4 cores).
+#     baseline, demoted to a notice below 4 cores),
+#   * the skewed scheduled run records zero steals in the scheduler
+#     ledger (the work-stealing path must actually engage — needs no
+#     baseline or parallelism).
 # Regression gates are skipped gracefully when no v3 baseline exists
 # (first run / schema migration). Bypass everything with
 # GG_BENCH_GATE=off on noisy machines.

@@ -173,7 +173,9 @@ fn push_range(sess: &mut ClientSession, from: u64, to: u64) -> u64 {
     while at < to {
         let take = CHUNK.min((to - at) as usize);
         let values: Vec<f32> = (0..take as u64).map(|i| synth_f32(at + i)).collect();
-        let (adm, retries) = sess.insert_retrying(values);
+        // Live worker draining at sync points: a generous bound — hitting
+        // it would be a livelock, not overload.
+        let (adm, retries) = sess.insert_retrying(values, 10_000);
         assert!(adm.is_accepted(), "insert [{at}..{}) not admitted: {adm:?}", at + take as u64);
         sheds += retries;
         at += take as u64;

@@ -19,7 +19,12 @@
 //! * the skewed-routing case (one hot shard holding 3/4 of every batch)
 //!   fails to beat [`FORKJOIN_SKEW_BOUND`] — the old fork/join pool's
 //!   max-shard barrier bound, which the work-stealing scheduler exists
-//!   to break (absolute, needs no baseline, ≥ 4 cores).
+//!   to break (absolute, needs no baseline, ≥ 4 cores);
+//! * the skewed scheduled run records **zero steals** in the scheduler's
+//!   ledger — wall-clock can pass by luck on a fast machine, but a zero
+//!   steal count means the work-stealing path is not engaging at all
+//!   (absolute, needs no baseline or parallelism: an empty-deque worker
+//!   steals under time-slicing too).
 //!
 //! See EXPERIMENTS.md §Perf for the field definitions and how to
 //! re-baseline (v1/v2 baselines measured a different executor and are
@@ -537,11 +542,13 @@ fn main() {
         None,
         "skewed insert dispatch 1e6 f32, 3/4-hot shard (4 shards, serial)",
     );
+    let steals_before_skew = sched4.counters().steals;
     let (skew_sched, skew_sched_median) = bench_skewed_insert(
         &mut suite,
         Some(&sched4),
         "skewed insert dispatch 1e6 f32, 3/4-hot shard (4 shards, scheduled)",
     );
+    let skew_steals = sched4.counters().steals - steals_before_skew;
     drop(sched4);
 
     let insert_speedup = large1_median / large4_median;
@@ -614,7 +621,23 @@ fn main() {
             None
         }
     };
-    let failures = gate_results(baseline.as_ref(), &fresh);
+    let mut failures = gate_results(baseline.as_ref(), &fresh);
+    // Steal-ledger gate: the skewed run only clears the fork/join bound
+    // *because* idle workers steal the hot shard's chunks. A zero steal
+    // count means the work-stealing path silently stopped engaging
+    // (single-deque regression, chunk carving gone coarse, …) even when
+    // wall-clock happens to pass on a fast machine. Stealing needs no
+    // real parallelism — a worker whose own deque drains steals under
+    // time-slicing too — so this holds on any core count.
+    if skew_steals == 0 {
+        failures.push(
+            "skewed scheduled run recorded 0 steals in the scheduler ledger — \
+             the work-stealing path is not engaging on the hot shard's chunks"
+                .to_string(),
+        );
+    } else {
+        eprintln!("  skewed scheduled run: {skew_steals} chunk steals (work-stealing engaged)");
+    }
 
     // Full runs re-baseline; smoke runs only bootstrap a missing (or
     // schema-mismatched) file. Overwriting the committed baseline with

@@ -380,28 +380,48 @@ impl ClientSession {
         }
     }
 
-    /// Admission with bounded-sleep retries until accepted (or the
-    /// coordinator closes). Returns the final admission plus how many
-    /// times this request was shed along the way.
+    /// Admission with **bounded** sleep-and-retry: up to `max_attempts`
+    /// admission tries, honouring the worker's `retry_after_hint`
+    /// between them (capped at [`Self::RETRY_SLEEP_CAP`] so a
+    /// misconfigured hint cannot park the caller indefinitely). Returns
+    /// the final admission plus how many times this request was shed
+    /// along the way. Terminal outcomes:
+    ///
+    /// * `Accepted` — admitted within the bound;
+    /// * `Closed` — the coordinator stopped (payload handed back);
+    /// * [`Admission::Exhausted`] — every one of `max_attempts` tries
+    ///   was shed; the payload is handed back untouched and every shed
+    ///   is ledgered. The loop can never spin forever.
     ///
     /// Under [`MergePolicy::AtBarrier`] a full channel only drains at a
     /// sync point, so callers must size `queue_requests` to cover a full
-    /// between-barriers burst — this helper cannot unstick an
-    /// under-provisioned window on its own.
-    pub fn insert_retrying(&mut self, values: Vec<f32>) -> (Admission, u64) {
+    /// between-barriers burst — this helper surfaces an
+    /// under-provisioned window as `Exhausted` rather than unsticking
+    /// (or livelocking on) it.
+    pub fn insert_retrying(&mut self, values: Vec<f32>, max_attempts: u32) -> (Admission, u64) {
+        let max_attempts = max_attempts.max(1);
         let mut sheds = 0u64;
         let mut payload = values;
         loop {
             match self.try_insert(payload) {
                 Admission::Rejected { retry_after_hint, values } => {
                     sheds += 1;
+                    if sheds >= u64::from(max_attempts) {
+                        return (Admission::Exhausted { attempts: max_attempts, values }, sheds);
+                    }
                     payload = values;
-                    thread::sleep(retry_after_hint.min(Duration::from_millis(1)));
+                    thread::sleep(retry_after_hint.min(Self::RETRY_SLEEP_CAP));
                 }
                 done => return (done, sheds),
             }
         }
     }
+
+    /// Upper bound on one retry back-off sleep in
+    /// [`ClientSession::insert_retrying`]: the configured hint is
+    /// honoured up to this cap, which only guards against a pathological
+    /// `retry_after` configuration stalling the caller for seconds.
+    pub const RETRY_SLEEP_CAP: Duration = Duration::from_millis(50);
 
     /// Synchronous request on the control channel (same contract as
     /// `Client::call`). Seal/flatten/work/stats/clear are sync points:
@@ -551,5 +571,69 @@ mod tests {
         let (seq, _) = s.try_insert(vec![4.0; 2]).expect_accepted();
         assert_eq!(seq, 2);
         assert_eq!(rig.shared().shed_total(), 1);
+    }
+
+    /// The retry helper must terminate: against a window nobody drains
+    /// (worker-less rig, no `drain` call), `insert_retrying` performs
+    /// exactly `max_attempts` admissions, ledgers every shed, and hands
+    /// the payload back as the typed `Exhausted` outcome — no unbounded
+    /// spin, no silent drop, no consumed sequence number.
+    #[test]
+    fn insert_retrying_exhausts_with_payload_after_the_bound() {
+        let cfg = FrontendConfig {
+            queue_requests: 1,
+            retry_after: Duration::from_micros(50),
+            merge: MergePolicy::AtBarrier,
+        };
+        let rig = FrontendRig::new(cfg);
+        let mut s = rig.session();
+        assert!(s.try_insert(vec![1.0; 4]).is_accepted());
+
+        let (adm, sheds) = s.insert_retrying(vec![2.0; 3], 5);
+        match adm {
+            Admission::Exhausted { attempts, values } => {
+                assert_eq!(attempts, 5);
+                assert_eq!(values, vec![2.0; 3], "exhaustion hands the payload back");
+            }
+            other => panic!("expected Exhausted, got {other:?}"),
+        }
+        assert_eq!(sheds, 5, "every attempt was shed");
+        assert_eq!(rig.shared().shed_total(), 5, "each shed is ledgered");
+        assert_eq!(s.next_seq(), 1, "exhaustion consumes no sequence number");
+        assert_eq!(rig.shared().pooled_values(), 4, "only the accepted payload stays pooled");
+
+        // A zero bound still performs one admission (the bound is an
+        // attempt count, not a retry count).
+        let (adm, sheds) = s.insert_retrying(vec![3.0; 2], 0);
+        assert!(matches!(adm, Admission::Exhausted { attempts: 1, .. }));
+        assert_eq!(sheds, 1);
+    }
+
+    /// Once capacity exists, a bounded retry succeeds without burning
+    /// the whole budget and reports how many sheds it survived.
+    #[test]
+    fn insert_retrying_accepts_within_the_bound() {
+        let cfg = FrontendConfig {
+            queue_requests: 2,
+            retry_after: Duration::from_micros(50),
+            merge: MergePolicy::AtBarrier,
+        };
+        let mut rig = FrontendRig::new(cfg);
+        let mut s = rig.session();
+        let (adm, sheds) = s.insert_retrying(vec![1.0; 4], 3);
+        assert!(adm.is_accepted());
+        assert_eq!(sheds, 0);
+
+        // Fill the window, then free it and verify the next bounded
+        // retry lands on the recovered capacity.
+        assert!(s.try_insert(vec![2.0; 4]).is_accepted());
+        let mut moved = 0u64;
+        let stats = rig.drain(true, |_, _| moved += 1);
+        assert_eq!(stats.moved_requests, 2);
+        assert_eq!(moved, 2);
+        let (adm, sheds) = s.insert_retrying(vec![3.0; 4], 3);
+        let (seq, _) = adm.expect_accepted();
+        assert_eq!(seq, 2);
+        assert_eq!(sheds, 0);
     }
 }

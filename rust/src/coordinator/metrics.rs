@@ -74,6 +74,60 @@ impl ParallelCost {
     }
 }
 
+/// Fixed-footprint log2 latency histogram: 64 power-of-two microsecond
+/// buckets plus the exact observed max. Bucket `i ≥ 1` holds
+/// observations in `[2^(i-1), 2^i)` µs (bucket 0 holds exact zeros), so
+/// a percentile query returns the upper edge of the rank's bucket —
+/// clamped to the true max — and therefore never *under*-reports a
+/// tail. That one-sided error is what lets chaos runs assert hard
+/// lower bounds ("p99 ≥ the injected stall") without a full reservoir.
+#[derive(Debug, Clone)]
+struct LatencyHistogram {
+    buckets: [u64; 64],
+    count: u64,
+    max_us: u64,
+}
+
+impl LatencyHistogram {
+    fn new() -> LatencyHistogram {
+        LatencyHistogram { buckets: [0; 64], count: 0, max_us: 0 }
+    }
+
+    fn bucket(us: u64) -> usize {
+        if us == 0 {
+            0
+        } else {
+            (64 - us.leading_zeros() as usize).min(63)
+        }
+    }
+
+    fn push(&mut self, us: f64) {
+        let us = us.max(0.0) as u64;
+        self.buckets[Self::bucket(us)] += 1;
+        self.count += 1;
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Upper-bound estimate of the `p`-quantile (0 < p ≤ 1): the upper
+    /// edge of the bucket holding the rank-⌈p·count⌉ observation,
+    /// clamped to the exact observed max. Zero before any observation.
+    fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                let edge = if i == 0 { 0 } else { (1u64 << i) - 1 };
+                return edge.min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+}
+
 /// Live metrics owned by the service worker.
 #[derive(Debug)]
 pub struct Metrics {
@@ -123,8 +177,18 @@ pub struct Metrics {
     pub wall_insert_us: f64,
     pub wall_work_us: f64,
     pub wall_flatten_us: f64,
-    /// Wall-clock per-request latency (µs).
+    /// Service-worker restarts performed by the supervisor after a
+    /// loop-level panic (each one respawned the handler loop over the
+    /// surviving store state).
+    pub worker_restarts: u64,
+    /// Un-acked requests the supervisor replayed exactly once after a
+    /// worker restart.
+    pub replayed_requests: u64,
+    /// Wall-clock per-request latency (µs): mean via Welford, tail via
+    /// the log2 histogram (p50/p99/max) — the straggler-injection
+    /// contract asserts against the tail ledger.
     latency: Welford,
+    latency_hist: LatencyHistogram,
 }
 
 impl Metrics {
@@ -154,12 +218,16 @@ impl Metrics {
             wall_insert_us: 0.0,
             wall_work_us: 0.0,
             wall_flatten_us: 0.0,
+            worker_restarts: 0,
+            replayed_requests: 0,
             latency: Welford::new(),
+            latency_hist: LatencyHistogram::new(),
         }
     }
 
     pub fn observe_latency_us(&mut self, us: f64) {
         self.latency.push(us);
+        self.latency_hist.push(us);
     }
 
     /// Charge one op's [`ParallelCost`] to the insert ledger.
@@ -208,6 +276,11 @@ impl Metrics {
             wall_flatten_ms: self.wall_flatten_us / 1e3,
             mean_latency_us: self.latency.mean(),
             p_latency_count: self.latency.count(),
+            p50_latency_us: self.latency_hist.percentile(0.50),
+            p99_latency_us: self.latency_hist.percentile(0.99),
+            max_latency_us: self.latency_hist.max_us,
+            worker_restarts: self.worker_restarts,
+            replayed_requests: self.replayed_requests,
             len,
             capacity,
             allocated_bytes,
@@ -293,6 +366,18 @@ pub struct MetricsSnapshot {
     pub wall_flatten_ms: f64,
     pub mean_latency_us: f64,
     pub p_latency_count: u64,
+    /// Tail-latency ledger from the worker's log2 histogram (µs).
+    /// Percentiles are bucket-upper-edge estimates clamped to the true
+    /// max — never under the real quantile — so chaos runs can assert
+    /// "p99 ≥ injected stall" deterministically.
+    pub p50_latency_us: u64,
+    pub p99_latency_us: u64,
+    pub max_latency_us: u64,
+    /// Service-worker restarts performed by the supervisor (transparent
+    /// failover after a loop-level panic).
+    pub worker_restarts: u64,
+    /// Un-acked requests replayed exactly once across those restarts.
+    pub replayed_requests: u64,
     pub len: u64,
     pub capacity: u64,
     pub allocated_bytes: u64,
@@ -507,7 +592,16 @@ impl std::fmt::Display for MetricsSnapshot {
             self.degraded_workers,
             self.spawn_failures
         )?;
-        writeln!(f, "mean request latency {:.1} µs over {}", self.mean_latency_us, self.p_latency_count)?;
+        writeln!(
+            f,
+            "mean request latency {:.1} µs over {} (p50 {} / p99 {} / max {} µs)",
+            self.mean_latency_us, self.p_latency_count, self.p50_latency_us, self.p99_latency_us, self.max_latency_us
+        )?;
+        writeln!(
+            f,
+            "supervisor           {} worker restarts, {} replayed requests",
+            self.worker_restarts, self.replayed_requests
+        )?;
         writeln!(
             f,
             "shards / epoch       {} / {} (sealed prefix {} elements in {} segments, {} compactions, {} compaction OOMs)",
@@ -664,6 +758,43 @@ mod tests {
         assert_eq!(s.shed_requests, 5);
         assert!(s.to_string().contains("frontend sessions"), "{s}");
         assert!(s.to_string().contains("5 shed"), "{s}");
+    }
+
+    #[test]
+    fn latency_histogram_percentiles_bound_the_tail() {
+        let mut m = Metrics::new();
+        // 99 fast requests and one 30 ms straggler: p50 stays in the
+        // fast band, p99 and max must cover the straggler.
+        for _ in 0..99 {
+            m.observe_latency_us(100.0);
+        }
+        m.observe_latency_us(30_000.0);
+        let s = m.snapshot(0, 0, 0);
+        assert_eq!(s.p_latency_count, 100);
+        assert!(s.p50_latency_us >= 100, "p50 must cover the fast band: {}", s.p50_latency_us);
+        assert!(s.p50_latency_us < 1_000, "p50 must not leak into the tail: {}", s.p50_latency_us);
+        assert!(s.p99_latency_us >= 30_000, "p99 must cover the straggler: {}", s.p99_latency_us);
+        assert_eq!(s.max_latency_us, 30_000);
+        // The percentile estimate never exceeds the observed max.
+        assert!(s.p99_latency_us <= s.max_latency_us);
+        assert!(s.to_string().contains("p50"), "{s}");
+    }
+
+    #[test]
+    fn latency_histogram_is_zero_before_observations() {
+        let s = Metrics::new().snapshot(0, 0, 0);
+        assert_eq!((s.p50_latency_us, s.p99_latency_us, s.max_latency_us), (0, 0, 0));
+    }
+
+    #[test]
+    fn supervisor_counters_flow_into_snapshot() {
+        let mut m = Metrics::new();
+        m.worker_restarts = 2;
+        m.replayed_requests = 1;
+        let s = m.snapshot(0, 0, 0);
+        assert_eq!(s.worker_restarts, 2);
+        assert_eq!(s.replayed_requests, 1);
+        assert!(s.to_string().contains("2 worker restarts, 1 replayed requests"), "{s}");
     }
 
     #[test]

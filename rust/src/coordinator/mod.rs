@@ -41,3 +41,4 @@ pub mod router;
 pub mod scheduler;
 pub mod service;
 pub mod shard;
+pub(crate) mod supervisor;

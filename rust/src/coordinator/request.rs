@@ -189,6 +189,13 @@ pub enum Admission {
     /// The session's channel is full: load was shed. Retry after the
     /// hint (advisory); the payload is returned untouched.
     Rejected { retry_after_hint: Duration, values: Vec<f32> },
+    /// A bounded retry loop (`ClientSession::insert_retrying`) gave up:
+    /// every one of its `attempts` admissions was shed. The payload is
+    /// returned untouched — the caller decides whether to back off
+    /// further, reroute, or drop. Distinct from `Rejected` (one shed,
+    /// immediate retry advised) so exhaustion is a *typed* outcome
+    /// rather than an invisible livelock.
+    Exhausted { attempts: u32, values: Vec<f32> },
     /// The coordinator has stopped; the payload is returned untouched.
     Closed { values: Vec<f32> },
 }
@@ -258,6 +265,19 @@ mod tests {
             Admission::Rejected { retry_after_hint, values } => {
                 assert_eq!(retry_after_hint, Duration::from_micros(200));
                 assert_eq!(values, vec![1.0, 2.0]);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn exhausted_verdict_hands_the_payload_back() {
+        let exhausted = Admission::Exhausted { attempts: 8, values: vec![3.0, 4.0] };
+        assert!(!exhausted.is_accepted());
+        match exhausted {
+            Admission::Exhausted { attempts, values } => {
+                assert_eq!(attempts, 8);
+                assert_eq!(values, vec![3.0, 4.0]);
             }
             _ => unreachable!(),
         }

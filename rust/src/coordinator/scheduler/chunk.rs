@@ -76,8 +76,11 @@ impl Chunk {
             Chunk::InsertFill { blocks, counts, values } => {
                 // Fault site before any write: an injected panic here
                 // models a worker dying with the chunk consumed but the
-                // copy not yet started (ggfault builds only).
+                // copy not yet started (ggfault builds only). The
+                // `.slow` twin stalls instead of dying — a straggler
+                // the other workers must steal around.
                 crate::faults::point("scheduler.worker.fill");
+                crate::faults::stall("scheduler.worker.fill.slow");
                 // SAFETY: lease contract above — this chunk is the sole
                 // owner of this block range for the phase.
                 let blocks = unsafe { blocks.as_mut_slice() };
@@ -103,7 +106,9 @@ impl Chunk {
                 // Fault site before the numeric update (ggfault builds
                 // only): the shard's rw_b charge was already paid
                 // serially by `run_work`, so an abort rewinds it there.
+                // The `.slow` twin simulates a straggling shard.
                 crate::faults::point("scheduler.worker.work");
+                crate::faults::stall("scheduler.worker.work.slow");
                 // SAFETY: lease contract above — work chunks are
                 // per-shard, so this is the phase's only access path to
                 // this shard (clock included).
@@ -115,8 +120,10 @@ impl Chunk {
                 shard.work_pass(exec.as_deref(), iters)
             }
             Chunk::GatherCopy { shard, src_start, dst } => {
-                // Fault site before the copy (ggfault builds only).
+                // Fault site before the copy (ggfault builds only);
+                // the `.slow` twin stalls the gather instead.
                 crate::faults::point("scheduler.worker.copy");
+                crate::faults::stall("scheduler.worker.copy.slow");
                 // SAFETY: lease contract above — gather phases never
                 // inject a writer for this shard, so shared reads may
                 // alias freely across its range chunks.

@@ -476,7 +476,7 @@ impl Coordinator {
         let worker_shared = Arc::clone(&shared);
         let worker = thread::Builder::new()
             .name("ggarray-coordinator".into())
-            .spawn(move || Worker::new(cfg, worker_shared).run(rx))
+            .spawn(move || super::supervisor::supervise(Worker::new(cfg, worker_shared), rx))
             .expect("spawn coordinator worker");
         Ok(Coordinator { tx, worker: Some(worker), shared, frontend_cfg })
     }
@@ -554,7 +554,17 @@ impl Client {
     }
 }
 
-struct Worker {
+/// The `Envelope::Call` the worker is currently serving, recorded by
+/// [`Worker::serve`] *before* the fatal-fault site (and before any
+/// mutation the call performs) so the supervisor can replay it exactly
+/// once after a worker death: a request is either fully handled and
+/// acked, or died un-acked before touching anything — never half-done.
+pub(crate) struct InFlight {
+    pub(crate) req: Request,
+    pub(crate) reply: mpsc::Sender<Response>,
+}
+
+pub(crate) struct Worker {
     cfg: CoordinatorConfig,
     shards: Vec<Shard>,
     blocks_per_shard: usize,
@@ -592,7 +602,7 @@ struct Worker {
 impl Worker {
     /// Build the worker state. The config was validated by
     /// [`Coordinator::try_start`], so the geometry divides evenly here.
-    fn new(cfg: CoordinatorConfig, shared: Arc<FrontendShared>) -> Worker {
+    pub(crate) fn new(cfg: CoordinatorConfig, shared: Arc<FrontendShared>) -> Worker {
         debug_assert!(cfg.validate().is_ok());
         let blocks_per_shard = cfg.blocks / cfg.shards;
         let executor = if cfg.use_artifacts {
@@ -648,7 +658,15 @@ impl Worker {
         }
     }
 
-    fn run(mut self, rx: mpsc::Receiver<Envelope>) {
+    /// The event loop, run under the supervisor's containment net
+    /// ([`super::supervisor::supervise`]). Returns on graceful shutdown
+    /// (the Shutdown request was handled and acked) or when every
+    /// request sender is gone. A panic escaping this frame is a worker
+    /// *death*: the supervisor catches it, respawns the loop over the
+    /// surviving `self`, and replays `inflight` — which this loop
+    /// records before the fatal site and before any mutation, so the
+    /// replay is exactly-once.
+    pub(crate) fn serve(&mut self, rx: &Receiver<Envelope>, inflight: &mut Option<InFlight>) {
         loop {
             let wait = self
                 .batcher
@@ -657,38 +675,18 @@ impl Worker {
                 .max(Duration::from_micros(100));
             match rx.recv_timeout(wait) {
                 Ok(Envelope::Call(req, reply)) => {
-                    // Sync points merge every client pool first (the
-                    // barrier drain), so a session's accepted inserts are
-                    // always visible to the sync ops that follow them —
-                    // and so the AtBarrier merge order is exactly
-                    // client-id ascending, per-client FIFO.
-                    if needs_frontend_barrier(&req) && !self.lanes.is_empty() {
-                        self.drain_frontend(true);
-                    }
-                    // Fatal-fault site: an injected panic *here* (before
-                    // the catch_unwind below) kills the worker thread
-                    // outright, modelling an uncontainable crash — the
-                    // path the ServiceDown/Closed contracts cover.
+                    // Record the call for the supervisor *before* the
+                    // fatal site: nothing of the request has run yet, so
+                    // a death between here and the ack leaves a replay
+                    // that is indistinguishable from a fresh execution.
+                    *inflight = Some(InFlight { req: req.clone(), reply: reply.clone() });
+                    // Fatal-fault site: an injected panic here kills the
+                    // handler loop outright, modelling an uncontainable
+                    // crash — the path the supervisor's detect→respawn→
+                    // replay handshake covers.
                     crate::faults::point("service.worker.fatal");
-                    let t0 = Instant::now();
-                    let stop = matches!(req, Request::Shutdown);
-                    // Contain handler panics: the request is lost (typed
-                    // `HandlerPanic`) but the worker, shards and sessions
-                    // keep serving. Checker cancellation tokens must pass
-                    // through, or a model-checked schedule could not be
-                    // abandoned.
-                    let resp = match catch_unwind(AssertUnwindSafe(|| self.handle(req))) {
-                        Ok(resp) => resp,
-                        Err(payload) => {
-                            if crate::checker::rt::cancelled() {
-                                std::panic::resume_unwind(payload);
-                            }
-                            self.metrics.errors += 1;
-                            Response::Failed(ExecError::HandlerPanic)
-                        }
-                    };
-                    self.metrics.observe_latency_us(t0.elapsed().as_secs_f64() * 1e6);
-                    let _ = reply.send(resp);
+                    let stop = self.complete_call(req, reply);
+                    *inflight = None;
                     if stop {
                         return;
                     }
@@ -713,6 +711,63 @@ impl Worker {
                 Err(mpsc::RecvTimeoutError::Disconnected) => return,
             }
         }
+    }
+
+    /// Serve one `Envelope::Call` to completion: barrier-drain the
+    /// client pools if the request is a sync point, handle it under the
+    /// panic-containment net, ledger the latency, ack the reply.
+    /// Returns `true` when the request was Shutdown (the loop must
+    /// stop). Also the supervisor's replay entry point — everything a
+    /// call mutates happens inside this frame, which is what makes the
+    /// record-before / clear-after protocol in [`Worker::serve`] sound.
+    pub(crate) fn complete_call(&mut self, req: Request, reply: mpsc::Sender<Response>) -> bool {
+        // Sync points merge every client pool first (the barrier
+        // drain), so a session's accepted inserts are always visible to
+        // the sync ops that follow them — and so the AtBarrier merge
+        // order is exactly client-id ascending, per-client FIFO.
+        if needs_frontend_barrier(&req) && !self.lanes.is_empty() {
+            self.drain_frontend(true);
+        }
+        let t0 = Instant::now();
+        let stop = matches!(req, Request::Shutdown);
+        // Contain handler panics: the request is lost (typed
+        // `HandlerPanic`) but the worker, shards and sessions keep
+        // serving. Checker cancellation tokens must pass through, or a
+        // model-checked schedule could not be abandoned.
+        let resp = match catch_unwind(AssertUnwindSafe(|| self.handle(req))) {
+            Ok(resp) => resp,
+            Err(payload) => {
+                if crate::checker::rt::cancelled() {
+                    std::panic::resume_unwind(payload);
+                }
+                self.metrics.errors += 1;
+                Response::Failed(ExecError::HandlerPanic)
+            }
+        };
+        self.metrics.observe_latency_us(t0.elapsed().as_secs_f64() * 1e6);
+        let _ = reply.send(resp);
+        stop
+    }
+
+    /// Supervisor ledger: the handler loop died and was respawned over
+    /// this surviving state. Not an `errors` bump — the failover is
+    /// transparent (the un-acked request is replayed and acked), so the
+    /// client-observable trace stays identical to the fault-free run.
+    pub(crate) fn note_restart(&mut self) {
+        self.metrics.worker_restarts += 1;
+    }
+
+    /// Supervisor ledger: the un-acked request recorded at death was
+    /// replayed (exactly once).
+    pub(crate) fn note_replay(&mut self) {
+        self.metrics.replayed_requests += 1;
+    }
+
+    /// Supervisor ledger: a replay itself died — the request is lost
+    /// (its reply sender dropped, so the caller gets a typed
+    /// `ServiceDown`) and that IS client-observable.
+    pub(crate) fn note_failed_replay(&mut self) {
+        self.metrics.errors += 1;
     }
 
     // ---------- aggregate views ----------
@@ -906,10 +961,12 @@ impl Worker {
     }
 
     fn handle(&mut self, req: Request) -> Response {
-        // Contained-fault site: an injected panic here unwinds into the
-        // run loop's catch_unwind — the request is lost (HandlerPanic)
-        // but the worker keeps serving.
+        // Contained-fault site: an injected panic here unwinds into
+        // `complete_call`'s catch_unwind — the request is lost
+        // (HandlerPanic) but the worker keeps serving. The `.slow` twin
+        // stalls the whole request instead, for tail-latency chaos.
         crate::faults::point("service.worker.handle");
+        crate::faults::stall("service.worker.handle.slow");
         match req {
             Request::Insert { values } => {
                 self.metrics.inserts_requested += 1;

@@ -1,0 +1,164 @@
+//! Service-worker supervisor: detect → respawn → replay.
+//!
+//! [`Coordinator::try_start`](super::service::Coordinator::try_start)
+//! spawns ONE OS thread, and that thread runs [`supervise`] — not the
+//! worker loop directly. The supervisor owns the [`Worker`] state and
+//! the request receiver, and drives the handler loop
+//! ([`Worker::serve`]) under a containment net:
+//!
+//! ```text
+//!            ┌────────────────────────────────────────────┐
+//!            ▼                                            │
+//!   SERVING: catch_unwind(worker.serve(rx, &mut inflight))│
+//!      │ Ok(())                  │ Err(payload)           │
+//!      ▼                         ▼                        │
+//!   STOPPED                   DETECTED: worker died       │
+//!   (graceful shutdown,          │ note_restart()         │
+//!    or every sender gone)       ▼                        │
+//!                             REPLAY: inflight.take()     │
+//!                                │ Some(f): replay f      │
+//!                                │   exactly once         │
+//!                                │   (note_replay)        │
+//!                                │ None: nothing un-acked │
+//!                                └── RESPAWN: loop ───────┘
+//! ```
+//!
+//! The worker *state* — shards, sealed epochs, batcher, metrics,
+//! scheduler, client lanes — survives the death untouched: the "respawn"
+//! re-enters the handler loop over the same `Worker` value on the same
+//! OS thread, so every channel stays connected and no session ever
+//! observes `Closed`. What makes the replay **exactly-once** is the
+//! record/clear protocol in [`Worker::serve`]: the in-flight call is
+//! recorded *before* the fatal-fault site (before any mutation the call
+//! performs) and cleared only *after* it was fully handled and acked.
+//! A death therefore finds either `None` (the last call completed — its
+//! effects and ack stand, nothing to redo) or `Some` of a call that has
+//! mutated nothing — replaying it is indistinguishable from a fresh
+//! execution. There is no state in which a half-applied call could be
+//! replayed. The `tests/model_check.rs` supervisor suite pins this
+//! (no lost and no doubled replay in any interleaving), and the chaos
+//! matrix's Fatal tier asserts the client-observable consequence:
+//! byte-identical traces vs the fault-free oracle with sessions open.
+//!
+//! A panic escaping the *replay* itself is the one non-transparent
+//! case: the request's reply sender is dropped un-acked, so the caller
+//! gets a typed `ServiceDown` (never a hang) and the loss is ledgered
+//! (`errors`); the supervisor then resumes serving. Model-checker
+//! cancellation tokens pass through both nets untouched, as everywhere.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
+use crate::sync::mpsc::Receiver;
+
+use super::service::{Envelope, InFlight, Worker};
+
+/// Run the worker's handler loop to completion, surviving loop-level
+/// panics by respawning the loop over the same state and replaying the
+/// un-acked request exactly once. Restarts and replays are ledgered in
+/// the worker's metrics (`worker_restarts` / `replayed_requests`).
+pub(crate) fn supervise(mut worker: Worker, rx: Receiver<Envelope>) {
+    let mut inflight: Option<InFlight> = None;
+    loop {
+        match catch_unwind(AssertUnwindSafe(|| worker.serve(&rx, &mut inflight))) {
+            // Clean exit: Shutdown handled+acked, or all senders gone.
+            Ok(()) => return,
+            Err(payload) => {
+                // The model checker cancels losing branches by unwinding
+                // a private token through every frame — scheduler
+                // machinery, not a worker fault; pass it through.
+                if crate::checker::rt::cancelled() {
+                    resume_unwind(payload);
+                }
+                worker.note_restart();
+                if let Some(f) = inflight.take() {
+                    worker.note_replay();
+                    // The replay runs the full call path (barrier drain
+                    // + handle + ack) but NOT the fatal-fault site —
+                    // that lives in `serve`'s receive arm — so one armed
+                    // fatal plan cannot re-kill its own replay; chaos
+                    // composes a second step for that instead.
+                    match catch_unwind(AssertUnwindSafe(|| {
+                        worker.complete_call(f.req, f.reply)
+                    })) {
+                        Ok(stop) => {
+                            if stop {
+                                return;
+                            }
+                        }
+                        Err(payload) => {
+                            if crate::checker::rt::cancelled() {
+                                resume_unwind(payload);
+                            }
+                            // Replay died too: the reply sender is gone
+                            // (caller sees typed ServiceDown), the loss
+                            // is ledgered, and serving resumes.
+                            worker.note_failed_replay();
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::frontend::FrontendShared;
+    use crate::coordinator::request::{Request, Response};
+    use crate::coordinator::service::CoordinatorConfig;
+    use crate::sync::mpsc;
+    use crate::sync::thread;
+    use crate::sync::Arc;
+
+    fn cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            blocks: 4,
+            first_bucket_size: 16,
+            use_artifacts: false,
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    /// Drive `supervise` directly (no `Coordinator` wrapper): the
+    /// fault-free path must behave exactly like the plain worker loop —
+    /// serve calls, ack them, stop on Shutdown, zero restarts.
+    #[test]
+    fn supervisor_is_transparent_without_faults() {
+        let (tx, rx) = mpsc::channel();
+        let shared = Arc::new(FrontendShared::default());
+        let worker = Worker::new(cfg(), shared);
+        let h = thread::Builder::new()
+            .name("supervise-test".into())
+            .spawn(move || supervise(worker, rx))
+            .expect("spawn");
+        let call = |req: Request| {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Envelope::Call(req, rtx)).expect("send");
+            rrx.recv().expect("reply")
+        };
+        let (count, _, _) = call(Request::Insert { values: vec![1.0, 2.0, 3.0] }).expect_inserted();
+        assert_eq!(count, 3);
+        let snap = call(Request::Stats).expect_stats();
+        assert_eq!(snap.len, 3);
+        assert_eq!(snap.worker_restarts, 0);
+        assert_eq!(snap.replayed_requests, 0);
+        assert!(matches!(call(Request::Shutdown), Response::ShuttingDown));
+        h.join().expect("clean join after shutdown");
+    }
+
+    /// Dropping every sender (no Shutdown request) must also end the
+    /// supervisor loop — the Disconnected exit is a clean one.
+    #[test]
+    fn supervisor_exits_when_all_senders_drop() {
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let shared = Arc::new(FrontendShared::default());
+        let worker = Worker::new(cfg(), shared);
+        let h = thread::Builder::new()
+            .name("supervise-drop".into())
+            .spawn(move || supervise(worker, rx))
+            .expect("spawn");
+        drop(tx);
+        h.join().expect("clean join after disconnect");
+    }
+}

@@ -2,24 +2,41 @@
 //!
 //! Mirrors the `ggcheck` pattern: named fault sites are sprinkled
 //! through the coordinator (`faults::point("scheduler.worker.copy")`)
-//! and compile to **nothing** in normal builds — `point`/`injected`
-//! are `#[inline(always)]` empty functions unless the crate is built
-//! with `RUSTFLAGS='--cfg ggfault'`. Under `ggfault`, a test arms a
-//! [`FaultPlan`] naming a site and the Nth crossing that should blow
+//! and compile to **nothing** in normal builds — `point`/`injected`/
+//! `stall` are `#[inline(always)]` empty functions unless the crate is
+//! built with `RUSTFLAGS='--cfg ggfault'`. Under `ggfault`, a test arms
+//! a [`FaultPlan`] naming a site and the Nth crossing that should blow
 //! up; the crossing then panics with a typed [`InjectedFault`] payload
 //! (for [`SiteKind::Abort`]/[`SiteKind::Fatal`] sites, via
-//! [`point`]) or reports `true` (for [`SiteKind::Degrade`] sites, via
-//! [`injected`] — e.g. a simulated thread-spawn failure). Every
-//! registered site is listed in [`SITES`] so the chaos suite
+//! [`point`]), reports `true` (for [`SiteKind::Degrade`] sites, via
+//! [`injected`] — e.g. a simulated thread-spawn failure), or stalls
+//! the executing thread for [`DELAY_STALL`] wall-clock (for
+//! [`SiteKind::Delay`] sites, via [`stall`] — a simulated straggler).
+//! Every registered site is listed in [`SITES`] so the chaos suite
 //! (`tests/chaos.rs`) can enumerate the full matrix mechanically; see
 //! EXPERIMENTS.md §Robustness for the registry table and the
 //! abort-byte-identity contract each site's containment must satisfy.
+//!
+//! Plans compose into an **ordered multi-plan** with [`FaultPlan::then`]:
+//! each step counts crossings of its own site only after every earlier
+//! step has fired, so chaos runs can express second-order failures —
+//! a panic during the *heal* respawn, a fault while a degraded group
+//! drains inline — deterministically.
 //!
 //! Exactly one plan may be armed at a time (the injector state is a
 //! process-wide slot); [`FaultPlan::arm`] blocks until the slot frees,
 //! so concurrently running `#[test]`s serialize instead of corrupting
 //! each other's plans, and the returned [`FaultGuard`] disarms on drop
-//! and answers whether the fault actually fired.
+//! and answers whether the fault (every step of it) actually fired.
+
+use std::time::Duration;
+
+/// How long a fired [`SiteKind::Delay`] crossing stalls the executing
+/// thread. Wall-clock, not sim-clock: a straggled chunk is pure data
+/// movement whose charges were pre-paid serially, so the stall changes
+/// nothing observable except latency — which is exactly what the
+/// tail-latency ledger and the steal gate assert against.
+pub const DELAY_STALL: Duration = Duration::from_millis(25);
 
 /// What a site does when its plan fires — determines which arm of the
 /// chaos contract applies.
@@ -32,15 +49,25 @@ pub enum SiteKind {
     /// scheduler workers, floor 1) and results stay byte-identical to
     /// the fault-free run.
     Degrade,
-    /// The service worker thread dies: every subsequent call observes
-    /// a typed `ServiceDown` / `Admission::Closed`, never a hang.
+    /// The service worker thread dies: the supervisor respawns the
+    /// handler loop over the surviving store state and replays the
+    /// un-acked request exactly once — sessions observe at most a
+    /// latency blip, never `Closed`, and results stay byte-identical
+    /// to the fault-free run.
     Fatal,
+    /// No error at all: the executing thread stalls for [`DELAY_STALL`]
+    /// wall-clock (a simulated straggler). Results stay byte-identical;
+    /// the contract is on the latency ledger — and, for scheduler
+    /// sites, that survivors steal around the straggler instead of
+    /// waiting on it.
+    Delay,
 }
 
 /// One registered fault site.
 #[derive(Debug, Clone, Copy)]
 pub struct Site {
-    /// Dotted path passed to [`point`]/[`injected`] at the site.
+    /// Dotted path passed to [`point`]/[`injected`]/[`stall`] at the
+    /// site.
     pub name: &'static str,
     pub kind: SiteKind,
     /// Where the site sits and what failing there simulates.
@@ -81,11 +108,31 @@ pub const SITES: &[Site] = &[
         kind: SiteKind::Fatal,
         what: "coordinator worker death outside the containment net (loop-level panic)",
     },
+    Site {
+        name: "scheduler.worker.fill.slow",
+        kind: SiteKind::Delay,
+        what: "straggling worker: wall-clock stall at the top of an insert fill chunk",
+    },
+    Site {
+        name: "scheduler.worker.work.slow",
+        kind: SiteKind::Delay,
+        what: "straggling worker: wall-clock stall at the top of a work-pass chunk",
+    },
+    Site {
+        name: "scheduler.worker.copy.slow",
+        kind: SiteKind::Delay,
+        what: "straggling worker: wall-clock stall at the top of a gather-copy chunk",
+    },
+    Site {
+        name: "service.worker.handle.slow",
+        kind: SiteKind::Delay,
+        what: "slow coordinator worker: wall-clock stall at the top of request handling",
+    },
 ];
 
 #[cfg(ggfault)]
 mod active {
-    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::atomic::{AtomicU64, Ordering};
     use std::sync::{Arc, Mutex};
 
     /// Panic payload of a fired [`super::point`] — typed so contained
@@ -96,18 +143,24 @@ mod active {
         pub site: &'static str,
     }
 
+    /// The armed multi-plan: `steps[idx]` is the live step; a crossing
+    /// of its site bumps `seen`, and at `seen == nth` the step fires
+    /// (ledgered in `fired`) and the next step goes live. Crossings of
+    /// a later step's site before its turn do not count — that ordering
+    /// is what lets a composed plan target "the first spawn crossing
+    /// *after* the fill panic" deterministically.
     struct Armed {
-        site: &'static str,
-        /// 1-based crossing index that fires.
-        nth: u64,
+        steps: Vec<FaultPlan>,
+        idx: usize,
         seen: u64,
-        fired: Arc<AtomicBool>,
+        fired: Arc<AtomicU64>,
     }
 
     static ARMED: Mutex<Option<Armed>> = Mutex::new(None);
 
     /// A deterministic fault: blow up the `nth` crossing of `site`
-    /// (1-based). Inert until [`FaultPlan::arm`].
+    /// (1-based). Inert until [`FaultPlan::arm`]; chains into an
+    /// ordered multi-plan with [`FaultPlan::then`].
     #[derive(Debug, Clone, Copy)]
     pub struct FaultPlan {
         pub site: &'static str,
@@ -120,22 +173,53 @@ mod active {
             FaultPlan { site, nth: 1 }
         }
 
+        /// Compose: after this plan fires, start counting crossings for
+        /// `next`. Chains — `a.then(b).then(c)` fires a, then b, then c.
+        pub fn then(self, next: FaultPlan) -> ComposedPlan {
+            ComposedPlan { steps: vec![self, next] }
+        }
+
         /// Install the plan. Blocks until no other plan is armed (so
         /// parallel tests serialize), and disarms when the returned
         /// guard drops.
         pub fn arm(self) -> FaultGuard {
-            assert!(self.nth >= 1, "FaultPlan.nth is 1-based");
-            let fired = Arc::new(AtomicBool::new(false));
+            ComposedPlan { steps: vec![self] }.arm()
+        }
+    }
+
+    /// An ordered sequence of [`FaultPlan`] steps, armed as one unit.
+    /// Step `k+1` starts counting its site's crossings only after step
+    /// `k` fired.
+    #[derive(Debug, Clone)]
+    pub struct ComposedPlan {
+        pub steps: Vec<FaultPlan>,
+    }
+
+    impl ComposedPlan {
+        /// Append another step to the sequence.
+        pub fn then(mut self, next: FaultPlan) -> ComposedPlan {
+            self.steps.push(next);
+            self
+        }
+
+        /// Install the multi-plan (see [`FaultPlan::arm`]).
+        pub fn arm(self) -> FaultGuard {
+            assert!(!self.steps.is_empty(), "a composed plan needs at least one step");
+            for step in &self.steps {
+                assert!(step.nth >= 1, "FaultPlan.nth is 1-based");
+            }
+            let total_steps = self.steps.len() as u64;
+            let fired = Arc::new(AtomicU64::new(0));
             loop {
                 let mut slot = ARMED.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                 if slot.is_none() {
                     *slot = Some(Armed {
-                        site: self.site,
-                        nth: self.nth,
+                        steps: self.steps,
+                        idx: 0,
                         seen: 0,
                         fired: Arc::clone(&fired),
                     });
-                    return FaultGuard { fired };
+                    return FaultGuard { fired, total_steps };
                 }
                 drop(slot);
                 std::thread::yield_now();
@@ -145,15 +229,22 @@ mod active {
 
     /// Disarms the armed plan on drop; reports whether it fired.
     pub struct FaultGuard {
-        fired: Arc<AtomicBool>,
+        fired: Arc<AtomicU64>,
+        total_steps: u64,
     }
 
     impl FaultGuard {
-        /// Did the armed crossing actually happen? A plan targeting the
+        /// Did every armed step actually fire? A plan targeting the
         /// second crossing of a site the run only crosses once never
         /// fires — the chaos contract then demands byte-identity with
         /// the fault-free run.
         pub fn fired(&self) -> bool {
+            self.fired_steps() == self.total_steps
+        }
+
+        /// How many steps of the armed sequence fired (in order, from
+        /// the front). Equals 1 on a fired single plan.
+        pub fn fired_steps(&self) -> u64 {
             self.fired.load(Ordering::SeqCst)
         }
     }
@@ -164,15 +255,20 @@ mod active {
         }
     }
 
-    /// Count a crossing of `site`; true iff the armed plan fires here.
+    /// Count a crossing of `site`; true iff the armed plan's *live*
+    /// step fires here.
     pub fn crossing(site: &'static str) -> bool {
         let mut slot = ARMED.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         if let Some(armed) = slot.as_mut() {
-            if armed.site == site {
-                armed.seen += 1;
-                if armed.seen == armed.nth {
-                    armed.fired.store(true, Ordering::SeqCst);
-                    return true;
+            if let Some(step) = armed.steps.get(armed.idx) {
+                if step.site == site {
+                    armed.seen += 1;
+                    if armed.seen == step.nth {
+                        armed.idx += 1;
+                        armed.seen = 0;
+                        armed.fired.fetch_add(1, Ordering::SeqCst);
+                        return true;
+                    }
                 }
             }
         }
@@ -181,7 +277,7 @@ mod active {
 }
 
 #[cfg(ggfault)]
-pub use active::{FaultGuard, FaultPlan, InjectedFault};
+pub use active::{ComposedPlan, FaultGuard, FaultPlan, InjectedFault};
 
 /// A fault site that *panics* when its plan fires (Abort/Fatal sites).
 /// Zero-cost no-op unless built with `--cfg ggfault`.
@@ -204,6 +300,27 @@ pub fn injected(site: &'static str) -> bool {
     #[cfg(ggfault)]
     {
         active::crossing(site)
+    }
+    #[cfg(not(ggfault))]
+    {
+        let _ = site;
+        false
+    }
+}
+
+/// A fault site that *stalls* when its plan fires (Delay sites): the
+/// executing thread sleeps [`DELAY_STALL`] wall-clock, simulating a
+/// straggler. Returns whether it stalled. Zero-cost no-op (always
+/// `false`) unless built with `--cfg ggfault`.
+#[inline(always)]
+pub fn stall(site: &'static str) -> bool {
+    #[cfg(ggfault)]
+    {
+        if active::crossing(site) {
+            std::thread::sleep(DELAY_STALL);
+            return true;
+        }
+        false
     }
     #[cfg(not(ggfault))]
     {
@@ -263,12 +380,28 @@ mod tests {
     }
 
     #[test]
+    fn delay_twins_shadow_registered_sites() {
+        // Every `*.slow` site must be the Delay twin of a registered
+        // non-Delay site, so the chaos matrix can pair each straggler
+        // with the panic contract it shadows.
+        for s in SITES.iter().filter(|s| s.kind == SiteKind::Delay) {
+            let base = s.name.strip_suffix(".slow").expect("Delay sites are named <base>.slow");
+            assert!(
+                SITES.iter().any(|b| b.name == base && b.kind != SiteKind::Delay),
+                "{} has no registered base site",
+                s.name
+            );
+        }
+    }
+
+    #[test]
     fn sites_are_inert_without_a_plan() {
         // In non-ggfault builds this is the whole story; under ggfault
         // it checks the unarmed path.
         for s in SITES {
             point(s.name);
             assert!(!injected(s.name));
+            assert!(!stall(s.name));
         }
     }
 
@@ -281,10 +414,12 @@ mod tests {
         point("scheduler.worker.work"); // other sites don't count
         assert!(!injected("scheduler.worker.copy")); // crossing 2
         assert!(!guard.fired());
+        assert_eq!(guard.fired_steps(), 0);
         let err = std::panic::catch_unwind(|| point("scheduler.worker.copy")).unwrap_err();
         let fault = err.downcast_ref::<InjectedFault>().expect("typed payload");
         assert_eq!(fault.site, "scheduler.worker.copy");
         assert!(guard.fired());
+        assert_eq!(guard.fired_steps(), 1);
         // Crossings after the shot are clean again.
         point("scheduler.worker.copy");
         drop(guard);
@@ -299,5 +434,53 @@ mod tests {
         assert!(injected("scheduler.spawn"));
         assert!(guard.fired());
         assert!(!injected("scheduler.spawn"), "one-shot");
+    }
+
+    #[cfg(ggfault)]
+    #[test]
+    fn delay_sites_stall_for_the_contracted_duration() {
+        let guard = FaultPlan::first("scheduler.worker.fill.slow").arm();
+        let t0 = std::time::Instant::now();
+        assert!(stall("scheduler.worker.fill.slow"));
+        assert!(t0.elapsed() >= DELAY_STALL, "stall must sleep the full DELAY_STALL");
+        assert!(guard.fired());
+        assert!(!stall("scheduler.worker.fill.slow"), "one-shot");
+    }
+
+    #[cfg(ggfault)]
+    #[test]
+    fn composed_plan_fires_steps_in_order() {
+        // Step 2's site does not count crossings until step 1 fired.
+        let guard = FaultPlan::first("scheduler.spawn")
+            .then(FaultPlan { site: "scheduler.worker.fill.slow", nth: 2 })
+            .arm();
+        assert!(!stall("scheduler.worker.fill.slow"), "step 2 is not live yet");
+        assert!(injected("scheduler.spawn"), "step 1 fires");
+        assert_eq!(guard.fired_steps(), 1);
+        assert!(!guard.fired(), "one of two steps is not 'fired'");
+        assert!(!stall("scheduler.worker.fill.slow"), "crossing 1 of 2 for step 2");
+        assert!(stall("scheduler.worker.fill.slow"), "crossing 2 fires step 2");
+        assert_eq!(guard.fired_steps(), 2);
+        assert!(guard.fired());
+        // A fully-fired plan is inert.
+        assert!(!injected("scheduler.spawn"));
+        assert!(!stall("scheduler.worker.fill.slow"));
+    }
+
+    #[cfg(ggfault)]
+    #[test]
+    fn three_step_chains_compose() {
+        quiet_panic_hook();
+        let guard = FaultPlan::first("scheduler.spawn")
+            .then(FaultPlan::first("scheduler.spawn"))
+            .then(FaultPlan::first("scheduler.worker.work"))
+            .arm();
+        assert!(injected("scheduler.spawn"));
+        assert!(injected("scheduler.spawn"));
+        assert_eq!(guard.fired_steps(), 2);
+        let err = std::panic::catch_unwind(|| point("scheduler.worker.work")).unwrap_err();
+        assert!(err.downcast_ref::<InjectedFault>().is_some());
+        assert_eq!(guard.fired_steps(), 3);
+        assert!(guard.fired());
     }
 }

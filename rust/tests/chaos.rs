@@ -20,12 +20,30 @@
 //!   runs with fewer workers (floor 1) and every observable result is
 //!   byte-identical to the fault-free run, with the loss recorded in
 //!   the `degraded_workers` / `spawn_failures` ledger.
-//! * **Fatal** sites — the service worker dies; every subsequent call
-//!   observes the typed `Failed(ServiceDown)` and sessions observe
-//!   `Admission::Closed` with the payload handed back. Never a hang.
+//! * **Fatal** sites — the service worker's handler loop dies, and the
+//!   supervisor (`coordinator::supervisor`) catches it: the loop
+//!   respawns over the surviving store state and the un-acked request
+//!   replays exactly once, so the observable trace is byte-identical
+//!   to the fault-free oracle, sessions never observe `Closed`, and
+//!   the failover is ledgered (`worker_restarts` / `replayed_requests`
+//!   in the metrics snapshot). Never a hang, never a lost or doubled
+//!   request.
+//! * **Delay** sites (the `*.slow` twins) — a deterministic 25 ms stall
+//!   instead of a panic: a straggling chunk is stolen around (the
+//!   work-stealing gate) rather than waited on, nothing observable
+//!   changes except latency — the trace stays byte-identical to the
+//!   oracle — and the straggler surfaces in the tail-latency ledger
+//!   (`p99_latency_us` / `max_latency_us` ≥ the injected stall).
 //! * A plan that never fires (nth beyond the run's crossings, or a
 //!   scheduler site under serial execution) must leave the run
 //!   byte-identical to the fault-free oracle.
+//!
+//! **Composed plans** (`FaultPlan::then`) chain ordered steps so a
+//! second fault can fire *inside* the recovery from the first — a panic
+//! during the heal respawn, or an abort while a fully-degraded group
+//! drains inline. Each composed scenario is checked against the same
+//! tier contracts: typed errors only, ledger conserved, byte-identical
+//! recovery.
 //!
 //! Fault plans are process-wide one-at-a-time slots, and an armed
 //! plan's crossing counter would be perturbed by *any* concurrently
@@ -48,7 +66,7 @@ use ggarray::coordinator::service::{
 use ggarray::coordinator::shard::{Shard, ShardConfig};
 use ggarray::coordinator::batcher::BatchConfig;
 use ggarray::coordinator::metrics::MetricsSnapshot;
-use ggarray::faults::{self, FaultPlan, SiteKind, SITES};
+use ggarray::faults::{self, FaultPlan, SiteKind, DELAY_STALL, SITES};
 use ggarray::insertion::InsertionKind;
 use ggarray::sim::spec::DeviceSpec;
 use ggarray::workload::synth_f32;
@@ -59,6 +77,11 @@ static EXCLUSIVE: Mutex<()> = Mutex::new(());
 
 fn exclusive() -> MutexGuard<'static, ()> {
     EXCLUSIVE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The injected stall, in the unit the latency ledger reports.
+fn stall_us() -> u64 {
+    DELAY_STALL.as_micros() as u64
 }
 
 // ---------------------------------------------------------------------
@@ -214,6 +237,59 @@ fn gather_abort_leaves_the_store_untouched() {
 }
 
 // ---------------------------------------------------------------------
+// Straggler skew: a stalled chunk must be stolen around, not waited on.
+// ---------------------------------------------------------------------
+
+/// The work-stealing gate under latency faults: stall the first fill
+/// chunk a worker picks up for 25 ms. Round-robin injection gave that
+/// worker more queued chunks, and its sibling drains its own deque in
+/// microseconds — so the sibling MUST steal the straggler's backlog
+/// (steal ledger grows), and because chunks are pure pre-charged data
+/// movement, the stall changes not a single observable byte vs the
+/// fault-free twin.
+#[test]
+fn smoke_straggler_is_stolen_around() {
+    let _x = exclusive();
+    faults::quiet_panic_hook();
+    let values: Vec<f32> = (0..1024u64).map(synth_f32).collect();
+    let mut a = build_shards(4, 1);
+    let mut b = build_shards(4, 1);
+    let sched_a = Scheduler::new(2);
+    let sched_b = Scheduler::new(2);
+    let mut scr_a = DispatchScratch::new();
+    let mut scr_b = DispatchScratch::new();
+    for seq in 0..2u64 {
+        dispatch_insert_pooled(&sched_a, &mut a, 1, Policy::Even, seq, &values, &mut scr_a)
+            .unwrap();
+        dispatch_insert_pooled(&sched_b, &mut b, 1, Policy::Even, seq, &values, &mut scr_b)
+            .unwrap();
+    }
+    let steals_before = sched_b.counters().steals;
+
+    // 4 shards → 4 fill chunks round-robin over 2 deques (2 each): the
+    // stalled worker still owes one queued chunk, which its idle
+    // sibling must steal long before the 25 ms stall ends.
+    let guard = FaultPlan::first("scheduler.worker.fill.slow").arm();
+    dispatch_insert_pooled(&sched_b, &mut b, 1, Policy::Even, 2, &values, &mut scr_b).unwrap();
+    assert!(guard.fired(), "scheduled dispatch must cross the fill.slow site");
+    drop(guard);
+
+    dispatch_insert_pooled(&sched_a, &mut a, 1, Policy::Even, 2, &values, &mut scr_a).unwrap();
+    assert_eq!(
+        fingerprint(&a),
+        fingerprint(&b),
+        "a straggler stall must not change a byte (len, heap, clock, content)"
+    );
+    assert!(
+        sched_b.counters().steals > steals_before,
+        "the straggler's queued chunk must be stolen around, not waited on \
+         (steals {} -> {})",
+        steals_before,
+        sched_b.counters().steals
+    );
+}
+
+// ---------------------------------------------------------------------
 // Service-level chaos matrix: every registered site × first/second
 // crossing × 1/4 shards × serial/scheduled execution, driven through
 // the public request API against a fault-free oracle.
@@ -297,7 +373,7 @@ fn reduce(resp: Response) -> Step {
 
 /// The fixed request script every matrix cell runs: inserts, work, two
 /// seals (copy chunks cross twice), a flatten snapshot, point queries
-/// and a stats read — 12 calls, all synchronous.
+/// and a stats read — 13 calls, all synchronous.
 fn run_script(c: &Coordinator) -> Vec<Step> {
     let mut trace = Vec::new();
     for seed in 0..4u64 {
@@ -410,36 +486,290 @@ fn chaos_matrix_every_site_upholds_its_contract() {
                         );
                     }
                     (true, SiteKind::Fatal) => {
-                        // The worker died mid-script: from the first
-                        // ServiceDown on, every call reports it (never a
-                        // hang — `Client::call` is probed by the script
-                        // itself) and sessions close with payload back.
-                        let first_down = trace
-                            .iter()
-                            .position(|s| matches!(s, Step::Failed(ExecError::ServiceDown)))
-                            .unwrap_or_else(|| panic!("[{tag}] no ServiceDown in {trace:?}"));
-                        for (i, step) in trace.iter().enumerate().skip(first_down) {
-                            assert!(
-                                matches!(step, Step::Failed(ExecError::ServiceDown)),
-                                "[{tag}] step {i} after worker death was {step:?}"
-                            );
-                        }
-                        assert!(
-                            matches!(c.call(Request::Stats), Response::Failed(ExecError::ServiceDown)),
-                            "[{tag}] dead service answered stats"
+                        // The handler loop died mid-script — and the
+                        // supervisor made it invisible: respawned loop,
+                        // un-acked request replayed exactly once, trace
+                        // byte-identical to the oracle, failover
+                        // ledgered, sessions open.
+                        assert_eq!(
+                            trace, oracle,
+                            "[{tag}] supervised restart diverged from the oracle"
                         );
                         let mut sess = c.session();
-                        let payload = batch(7);
-                        match sess.try_insert(payload.clone()) {
-                            Admission::Closed { values } => assert_eq!(values, payload),
-                            other => panic!("[{tag}] session on dead service: {other:?}"),
-                        }
+                        let adm = sess.try_insert(vec![1.0; 8]);
+                        assert!(
+                            adm.is_accepted(),
+                            "[{tag}] session on a supervised service must stay open: {adm:?}"
+                        );
+                        let s = probe_recovery(&c, site.name, nth);
+                        assert!(
+                            s.worker_restarts >= 1,
+                            "[{tag}] restart not ledgered: {} worker restarts",
+                            s.worker_restarts
+                        );
+                        assert!(
+                            s.replayed_requests >= 1,
+                            "[{tag}] replay not ledgered: {} replayed requests",
+                            s.replayed_requests
+                        );
+                        assert_eq!(
+                            s.len, s.elements_inserted,
+                            "[{tag}] replay broke conservation: len {} vs inserted {}",
+                            s.len, s.elements_inserted
+                        );
+                    }
+                    (true, SiteKind::Delay) => {
+                        // A stall is not a fault: byte-identical trace,
+                        // no error, and the straggler surfaces only in
+                        // the tail-latency ledger.
+                        assert_eq!(trace, oracle, "[{tag}] stalled run diverged from oracle");
+                        let s = probe_recovery(&c, site.name, nth);
+                        assert!(
+                            s.max_latency_us >= stall_us(),
+                            "[{tag}] stall missing from the latency ledger: max {} µs < {} µs",
+                            s.max_latency_us,
+                            stall_us()
+                        );
+                        // Few enough requests that p99 is the max bucket:
+                        // the tail percentile must expose the straggler.
+                        assert!(
+                            s.p99_latency_us >= stall_us(),
+                            "[{tag}] p99 {} µs under-reports the {} µs stall",
+                            s.p99_latency_us,
+                            stall_us()
+                        );
                     }
                 }
                 c.shutdown();
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Supervisor tier: transparent failover of the service worker, replay
+// idempotence across every op arm, and graceful shutdown replay.
+// ---------------------------------------------------------------------
+
+/// Acceptance smoke for the supervisor: kill the handler loop under a
+/// live request — the caller still gets its success response (replayed
+/// exactly once over the surviving store), sessions stay open, and the
+/// failover is ledgered without counting as an error.
+#[test]
+fn smoke_supervisor_restarts_and_replays_exactly_once() {
+    let _x = exclusive();
+    faults::quiet_panic_hook();
+    let c = Coordinator::start(cfg(4, 4));
+    for seed in 0..2u64 {
+        let r = c.call(Request::Insert { values: batch(seed) });
+        assert!(matches!(r, Response::Inserted { count: 256, .. }), "warm insert failed: {r:?}");
+    }
+
+    let guard = FaultPlan::first("service.worker.fatal").arm();
+    let r = c.call(Request::Insert { values: batch(2) });
+    assert!(guard.fired(), "the next call must cross the fatal site");
+    drop(guard);
+    assert!(
+        matches!(r, Response::Inserted { count: 256, len: 768 }),
+        "the killed request must be replayed to success, got {r:?}"
+    );
+
+    // Sessions never observe the failover.
+    let mut sess = c.session();
+    assert!(sess.try_insert(vec![7.0; 8]).is_accepted(), "session must stay open");
+
+    let s = probe_recovery(&c, "service.worker.fatal", 1);
+    assert_eq!(s.worker_restarts, 1, "exactly one supervised restart");
+    assert_eq!(s.replayed_requests, 1, "exactly one replayed request");
+    assert_eq!(s.errors, 0, "a successful replay is not an error");
+    assert_eq!(s.len, s.elements_inserted, "replay must not lose or double values");
+    c.shutdown();
+}
+
+/// Replay idempotence, one op arm at a time: a script touching every
+/// request kind, killed at each successive call, must produce a trace
+/// byte-identical to the fault-free oracle with exactly one restart and
+/// one replay — no op arm loses, doubles, or corrupts its request when
+/// it is the one replayed.
+#[test]
+fn supervisor_replay_is_idempotent_for_every_op_arm() {
+    let _x = exclusive();
+    faults::quiet_panic_hook();
+    let config = cfg(4, 4);
+    let script = |c: &Coordinator| -> Vec<Step> {
+        vec![
+            reduce(c.call(Request::Insert { values: batch(0) })),
+            reduce(c.call(Request::Work { calls: 2 })),
+            reduce(c.call(Request::Seal)),
+            reduce(c.call(Request::Insert { values: batch(1) })),
+            reduce(c.call(Request::Flatten)),
+            reduce(c.call(Request::Query { index: 10 })),
+            reduce(c.call(Request::Stats)),
+            reduce(c.call(Request::Clear)),
+            reduce(c.call(Request::Insert { values: batch(2) })),
+            reduce(c.call(Request::Stats)),
+        ]
+    };
+    let oracle = {
+        let c = Coordinator::start(config.clone());
+        let t = script(&c);
+        c.shutdown();
+        t
+    };
+    assert!(
+        !oracle.iter().any(|s| matches!(s, Step::Failed(_) | Step::Error(_))),
+        "oracle run must be clean: {oracle:?}"
+    );
+
+    let calls = oracle.len() as u64;
+    for nth in 1..=calls {
+        let guard = FaultPlan { site: "service.worker.fatal", nth }.arm();
+        let c = Coordinator::start(config.clone());
+        let trace = script(&c);
+        assert!(guard.fired(), "[nth={nth}] the script's {calls} calls must cross the site");
+        drop(guard);
+        assert_eq!(trace, oracle, "[nth={nth}] replayed op arm diverged from the oracle");
+        let s = c.call(Request::Stats).expect_stats();
+        assert_eq!(s.worker_restarts, 1, "[nth={nth}] exactly one restart");
+        assert_eq!(s.replayed_requests, 1, "[nth={nth}] exactly one replay");
+        assert_eq!(s.errors, 0, "[nth={nth}] a successful replay is not an error");
+        c.shutdown();
+    }
+}
+
+/// A fatal fault on the Shutdown request itself: the supervisor replays
+/// it, the caller gets its ack, and the worker thread still stops
+/// cleanly — failover must not turn a graceful stop into a zombie loop.
+#[test]
+fn supervisor_replays_shutdown_and_still_stops() {
+    let _x = exclusive();
+    faults::quiet_panic_hook();
+    let c = Coordinator::start(cfg(1, 1));
+    let r = c.call(Request::Insert { values: batch(0) });
+    assert!(matches!(r, Response::Inserted { count: 256, .. }));
+
+    // nth=1 from here: the very next call — Shutdown — crosses first.
+    let guard = FaultPlan::first("service.worker.fatal").arm();
+    let r = c.call(Request::Shutdown);
+    assert!(guard.fired(), "shutdown must cross the fatal site");
+    drop(guard);
+    assert!(
+        matches!(r, Response::ShuttingDown),
+        "replayed shutdown must still be acked, got {r:?}"
+    );
+    // Drop joins the worker thread: a hang here means the replayed
+    // Shutdown failed to stop the supervisor loop.
+    drop(c);
+}
+
+// ---------------------------------------------------------------------
+// Composed faults: a second fault firing inside the recovery from the
+// first. Same contracts — typed errors only, ledger conserved,
+// byte-identical rollback, service keeps serving.
+// ---------------------------------------------------------------------
+
+/// Chunk panic, then a fault during the heal: the fill abort kills a
+/// scheduler worker, and the respawn that `finish` attempts for it is
+/// itself refused. The op still aborts typed-and-rolled-back, and the
+/// group degrades (permanently smaller) instead of leaking or hanging.
+#[test]
+fn smoke_composed_abort_then_failed_heal_degrades() {
+    let _x = exclusive();
+    faults::quiet_panic_hook();
+    let c = Coordinator::start(cfg(4, 4));
+    for seed in 0..2u64 {
+        let r = c.call(Request::Insert { values: batch(seed) });
+        assert!(matches!(r, Response::Inserted { count: 256, .. }), "warm insert failed: {r:?}");
+    }
+
+    let guard = FaultPlan::first("scheduler.worker.fill")
+        .then(FaultPlan::first("scheduler.spawn"))
+        .arm();
+    let r = c.call(Request::Insert { values: batch(2) });
+    assert_eq!(guard.fired_steps(), 2, "both steps must fire: the abort, then the heal spawn");
+    assert!(guard.fired());
+    drop(guard);
+    assert!(
+        matches!(r, Response::Failed(ExecError::ChunkPanic { op: "insert", .. })),
+        "composed fault must still surface the typed abort, got {r:?}"
+    );
+
+    let s = probe_recovery(&c, "scheduler.worker.fill+scheduler.spawn", 1);
+    assert!(s.degraded_workers >= 1, "failed heal must be ledgered as degradation");
+    assert!(s.spawn_failures >= 1, "refused respawn must be ledgered");
+    assert_eq!(s.errors, 1, "exactly the aborted insert is an error");
+    assert_eq!(s.len, s.elements_inserted, "conservation across composed faults");
+    assert_eq!(s.len, 3 * 256, "two warm batches + the recovery probe batch");
+    c.shutdown();
+}
+
+/// Every construction spawn refused, then an abort while the fully
+/// degraded group drains inline: with zero live workers the phase falls
+/// back to the coordinator thread, where the fill panic must still be
+/// contained, rolled back, and typed — the floor-1 path honours the
+/// same abort contract as the scheduled path.
+#[test]
+fn smoke_composed_degraded_inline_drain_still_aborts_typed() {
+    let _x = exclusive();
+    faults::quiet_panic_hook();
+    // Armed BEFORE start: steps 1 and 2 refuse both construction
+    // spawns, leaving the group fully degraded from birth.
+    let guard = FaultPlan::first("scheduler.spawn")
+        .then(FaultPlan::first("scheduler.spawn"))
+        .then(FaultPlan::first("scheduler.worker.fill"))
+        .arm();
+    let c = Coordinator::start(cfg(4, 2));
+    let r = c.call(Request::Insert { values: batch(0) });
+    assert_eq!(guard.fired_steps(), 3, "two refused spawns, then the inline-drain abort");
+    drop(guard);
+    assert!(
+        matches!(r, Response::Failed(ExecError::ChunkPanic { op: "insert", .. })),
+        "inline-drain abort must be typed, got {r:?}"
+    );
+
+    let s = probe_recovery(&c, "scheduler.spawn×2+scheduler.worker.fill", 1);
+    assert_eq!(s.degraded_workers, 2, "both construction spawns degraded");
+    assert_eq!(s.spawn_failures, 2);
+    assert_eq!(s.errors, 1, "exactly the aborted insert is an error");
+    assert_eq!(s.len, s.elements_inserted, "inline abort must roll back exactly");
+    assert_eq!(s.len, 256, "only the recovery probe batch landed");
+    c.shutdown();
+}
+
+/// Composed fatal faults: kill the handler loop, then kill the *next*
+/// serve pass too (the replay itself never crosses the fatal site, so
+/// step 2 fires on the first fresh call after the failover). Both
+/// failovers are transparent and both are ledgered.
+#[test]
+fn composed_double_fatal_survives_two_failovers() {
+    let _x = exclusive();
+    faults::quiet_panic_hook();
+    let c = Coordinator::start(cfg(4, 4));
+    let r = c.call(Request::Insert { values: batch(0) });
+    assert!(matches!(r, Response::Inserted { count: 256, .. }));
+
+    let guard = FaultPlan::first("service.worker.fatal")
+        .then(FaultPlan::first("service.worker.fatal"))
+        .arm();
+    let r = c.call(Request::Insert { values: batch(1) });
+    assert!(
+        matches!(r, Response::Inserted { count: 256, len: 512 }),
+        "first killed request must replay to success, got {r:?}"
+    );
+    let r = c.call(Request::Work { calls: 2 });
+    assert!(
+        matches!(r, Response::Worked { calls: 2, .. }),
+        "second killed request must replay to success, got {r:?}"
+    );
+    assert_eq!(guard.fired_steps(), 2, "both fatal steps must fire");
+    drop(guard);
+
+    let s = probe_recovery(&c, "service.worker.fatal×2", 1);
+    assert_eq!(s.worker_restarts, 2, "two supervised restarts");
+    assert_eq!(s.replayed_requests, 2, "two replays, one per failover");
+    assert_eq!(s.errors, 0);
+    assert_eq!(s.len, s.elements_inserted);
+    c.shutdown();
 }
 
 // ---------------------------------------------------------------------
@@ -476,5 +806,39 @@ fn smoke_mid_chunk_panic_store_keeps_serving() {
     assert!(s.worker_respawns >= 1, "panicked scheduler worker was not respawned");
     let r = c.call(Request::Query { index: s.len - 1 });
     assert!(matches!(r, Response::Value(Some(_))));
+    c.shutdown();
+}
+
+/// Delay tier smoke: a stalled service handler must show up in the
+/// tail-latency ledger while leaving every byte and every ledger
+/// (errors included) untouched.
+#[test]
+fn smoke_stalled_handler_reports_in_the_tail() {
+    let _x = exclusive();
+    faults::quiet_panic_hook();
+    let c = Coordinator::start(cfg(1, 1));
+    let r = c.call(Request::Insert { values: batch(0) });
+    assert!(matches!(r, Response::Inserted { count: 256, .. }));
+
+    let guard = FaultPlan::first("service.worker.handle.slow").arm();
+    let r = c.call(Request::Insert { values: batch(1) });
+    assert!(guard.fired(), "the next handled request must cross the stall site");
+    drop(guard);
+    assert!(
+        matches!(r, Response::Inserted { count: 256, len: 512 }),
+        "a stall must not fail the request, got {r:?}"
+    );
+
+    let s = probe_recovery(&c, "service.worker.handle.slow", 1);
+    assert!(
+        s.max_latency_us >= stall_us() && s.p99_latency_us >= stall_us(),
+        "stall missing from the tail ledger: p99 {} µs, max {} µs (stall {} µs)",
+        s.p99_latency_us,
+        s.max_latency_us,
+        stall_us()
+    );
+    assert_eq!(s.errors, 0, "a stall is not an error");
+    assert_eq!(s.worker_restarts, 0, "a stall is not a failover");
+    assert_eq!(s.len, s.elements_inserted);
     c.shutdown();
 }

@@ -11,7 +11,7 @@
 //! replayable seed; `failure_seed_replays_deterministically` proves the
 //! seed → schedule round trip on a deliberately racy model.
 //!
-//! Four protocols are checked, mirroring the crate's real
+//! Five protocols are checked, mirroring the crate's real
 //! concurrency surface:
 //!
 //! 1. the work-stealing scheduler's park/unpark/steal/termination
@@ -28,14 +28,19 @@
 //!    back the pooled-values gauge and consumes no sequence number
 //!    under every interleaving),
 //! 4. the `AtBarrier` drain order (client-id ascending, per-client
-//!    FIFO, independent of admission timing).
+//!    FIFO, independent of admission timing),
+//! 5. the service supervisor's detect → respawn → replay handshake
+//!    (`coordinator::supervisor`): the record-before-fault /
+//!    clear-after-ack discipline yields exactly-once replay — no lost
+//!    and no doubled request, every caller acked — in every
+//!    interleaving of client sends, the loop death, and the failover.
 
 use ggarray::checker::{self, Config};
 use ggarray::coordinator::frontend::{FrontendConfig, FrontendRig, MergePolicy};
 use ggarray::coordinator::request::Admission;
 use ggarray::coordinator::scheduler::WorkerGroup;
 use ggarray::sync::atomic::{AtomicUsize, Ordering};
-use ggarray::sync::{thread, Arc, SendSliceMut};
+use ggarray::sync::{mpsc, thread, Arc, SendSliceMut};
 
 // ---------------- protocol 1: work-stealing scheduler ----------------
 
@@ -321,6 +326,93 @@ fn at_barrier_drain_orders_clients_ascending_fifo() {
     .unwrap_or_else(|failure| panic!("{failure}"));
     assert!(report.complete, "drain-order exploration must exhaust its schedules");
     assert!(report.schedules >= 2);
+}
+
+// -------- protocol 5: supervisor detect → respawn → replay --------
+
+/// The supervisor handshake in miniature, under every bounded
+/// interleaving. Faults compile to no-ops under `ggcheck`, so the loop
+/// death is modelled directly (one injected panic on the first
+/// request's first attempt), while the protocol under test is the real
+/// one from `coordinator::supervisor` / `service::Worker::serve`:
+///
+/// * the in-flight request is recorded BEFORE the fault point (before
+///   any effect), and cleared only AFTER apply + ack;
+/// * the supervisor catches the death (checker cancellation tokens
+///   pass through), replays the recorded request exactly once over the
+///   surviving state, and resumes serving.
+///
+/// Exactly-once is asserted from both sides: each request is applied
+/// exactly once (no lost, no doubled replay) and each caller receives
+/// exactly its own ack — whichever way the client's sends interleave
+/// with the worker's receives, the death, and the failover.
+#[test]
+fn supervisor_replay_is_exactly_once_under_all_interleavings() {
+    let report = checker::check("supervisor-detect-respawn-replay", &Config::default(), || {
+        ggarray::faults::quiet_panic_hook();
+        let applied = Arc::new([AtomicUsize::new(0), AtomicUsize::new(0)]);
+        let log = Arc::clone(&applied);
+        let (tx, rx) = mpsc::channel::<(usize, mpsc::Sender<usize>)>();
+
+        let supervisor = thread::spawn(move || {
+            let mut inflight: Option<(usize, mpsc::Sender<usize>)> = None;
+            let mut armed = true; // the first handled request dies, once
+            let (mut restarts, mut replays) = (0usize, 0usize);
+            loop {
+                let serve = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    while let Ok((req, reply)) = rx.recv() {
+                        // Record before the fault point / any effect.
+                        inflight = Some((req, reply.clone()));
+                        if armed {
+                            armed = false;
+                            panic!("{} injected loop death", ggarray::faults::EXPECTED_PANIC);
+                        }
+                        log[req].fetch_add(1, Ordering::SeqCst);
+                        let _ = reply.send(req);
+                        // Clear only after apply + ack.
+                        inflight = None;
+                    }
+                }));
+                match serve {
+                    Ok(()) => return (restarts, replays), // all senders gone
+                    Err(payload) => {
+                        if ggarray::checker::rt::cancelled() {
+                            std::panic::resume_unwind(payload);
+                        }
+                        restarts += 1;
+                        if let Some((req, reply)) = inflight.take() {
+                            // Replay exactly once: the recorded request
+                            // mutated nothing before the death.
+                            replays += 1;
+                            log[req].fetch_add(1, Ordering::SeqCst);
+                            let _ = reply.send(req);
+                        }
+                    }
+                }
+            }
+        });
+
+        // Client: two requests racing the worker's receive/death/replay.
+        let (ack0_tx, ack0_rx) = mpsc::channel();
+        let (ack1_tx, ack1_rx) = mpsc::channel();
+        tx.send((0, ack0_tx)).expect("send 0");
+        tx.send((1, ack1_tx)).expect("send 1");
+        drop(tx); // quiesce: the serve loop exits once drained
+
+        // The caller is never left hanging and never mis-acked —
+        // a dropped reply sender (lost request) would error here.
+        assert_eq!(ack0_rx.recv().expect("request 0 lost"), 0, "mis-acked despite the death");
+        assert_eq!(ack1_rx.recv().expect("request 1 lost"), 1, "mis-acked after the failover");
+
+        let (restarts, replays) = supervisor.join().expect("supervisor panicked");
+        assert_eq!(restarts, 1, "exactly one loop death");
+        assert_eq!(replays, 1, "the un-acked request is replayed exactly once");
+        assert_eq!(applied[0].load(Ordering::SeqCst), 1, "request 0: no lost, no doubled apply");
+        assert_eq!(applied[1].load(Ordering::SeqCst), 1, "request 1: applied exactly once");
+    })
+    .unwrap_or_else(|failure| panic!("{failure}"));
+    assert!(report.complete, "supervisor-handshake exploration must exhaust its schedules");
+    assert!(report.schedules >= 2, "the handshake has real concurrency to explore");
 }
 
 // ---------------- meta: failure seeds replay ----------------
